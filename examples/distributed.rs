@@ -1,0 +1,95 @@
+//! Distributed scaling demo (§4.4): the same training run on Υ ∈ {1,2,4}
+//! simulated devices, showing the paper's layer-sharded placement
+//! (Tables 2–6), per-device memory ≈ Mem/Υ, the parallel backward phase,
+//! and the gradient being bit-identical regardless of Υ.
+//!
+//!     make artifacts && cargo run --release --example distributed
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use adjoint_sharding::config::{GradMode, RunConfig};
+use adjoint_sharding::data::MarkovCorpus;
+use adjoint_sharding::metrics::fmt_bytes;
+use adjoint_sharding::runtime::Runtime;
+use adjoint_sharding::train::Trainer;
+use adjoint_sharding::util::bench::Table;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let mut cli = Cli::from_env()?;
+    let artifacts = PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"));
+    let config = cli.str_or("config", "small", "artifact config");
+    let steps = cli.usize_or("steps", 5, "steps per fleet size")?;
+    let fleet_sizes = cli.usize_list_or("devices", &[1, 2, 4], "Υ values")?;
+
+    if !artifacts.join(&config).join("manifest.json").exists() {
+        eprintln!("artifacts/{config} missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let mut table = Table::new(&[
+        "Υ", "layers/device", "peak/device", "virt step", "comm/step", "final loss",
+    ]);
+    let mut final_losses = Vec::new();
+
+    for &devices in &fleet_sizes {
+        let rt = Rc::new(Runtime::cpu()?);
+        let mut cfg = RunConfig::load(&artifacts, &config)?;
+        if devices > cfg.dims.k {
+            println!("skipping Υ={devices} > K={}", cfg.dims.k);
+            continue;
+        }
+        cfg.grad_mode = GradMode::Adjoint;
+        cfg.topology.devices = devices;
+        cfg.log_every = usize::MAX;
+        let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 11));
+        let mut tr = Trainer::new(rt, cfg, corpus)?;
+
+        let mut virt = 0.0;
+        let mut comm = 0u64;
+        let mut loss = 0.0;
+        for _ in 0..steps {
+            let r = tr.step()?;
+            virt += r.virtual_s;
+            comm += r.comm_bytes;
+            loss = r.loss;
+        }
+        let layers_per: Vec<usize> = tr
+            .fleet
+            .assignment
+            .layers_of_device
+            .iter()
+            .map(|l| l.len())
+            .collect();
+        table.row(&[
+            devices.to_string(),
+            format!("{layers_per:?}"),
+            fmt_bytes(tr.fleet.peak_bytes()),
+            format!("{:.4}s", virt / steps as f64),
+            fmt_bytes(comm / steps as u64),
+            format!("{loss:.4}"),
+        ]);
+        final_losses.push(loss);
+    }
+
+    println!("\n== Υ scaling on '{config}' (adjoint mode, {steps} steps each) ==\n");
+    table.print();
+    println!("\npaper §4.4: 'memory per GPU close to Mem/Υ' — peak/device shrinks with Υ;");
+    println!("the backward phase parallelizes across devices (virt step drops), while the");
+    println!("sequential Alg. 1 pipeline and the cotangent broadcast add the comm bytes.");
+
+    // The schedule must not change the math.
+    if final_losses.len() >= 2 {
+        let base = final_losses[0];
+        for (i, &l) in final_losses.iter().enumerate() {
+            assert!(
+                (l - base).abs() < 1e-4,
+                "Υ run {i} diverged: {l} vs {base}"
+            );
+        }
+        println!("\nall fleet sizes produced identical losses (same data, same math) ✓");
+    }
+    println!("distributed OK");
+    Ok(())
+}

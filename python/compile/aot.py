@@ -1,0 +1,223 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + a manifest.
+
+Python runs only here (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/<config>/*.hlo.txt`` via PJRT and never calls back.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config we emit:
+  layer_fwd.hlo.txt           Alg. 1 inner body (one layer, full sequence)
+  head_loss.hlo.txt           loss + dl/dy_K + dΩ (Alg. 1 lines 13–15)
+  layer_adjoint_grad.hlo.txt  Alg. 3 work item (one layer, one token chunk)
+  bptt_grad.hlo.txt           backpropagation baseline / ground truth
+  manifest.json               shapes, dtypes, arg order, model dims
+
+plus ``artifacts/probe/`` with the three Table-1 VJP units.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, ModelConfig, PROBE_BS, PROBE_N, PROBE_P
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True: the Rust
+    side unwraps the single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(s) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+
+
+def _io_entry(name, specs, out_specs):
+    return {
+        "name": name,
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": _dt(s)} for n, s in specs
+        ],
+        "outputs": [
+            {"name": n, "shape": list(s.shape), "dtype": _dt(s)} for n, s in out_specs
+        ],
+    }
+
+
+def _param_specs(cfg: ModelConfig, prefix=""):
+    P, N = cfg.P, cfg.N
+    shapes = {
+        "W_a": (P, N), "b_a": (N,), "W_b": (P, N), "b_b": (N,),
+        "W_g": (P, N), "b_g": (N,), "W_c": (N, P),
+    }
+    return [(prefix + f, _spec(shapes[f])) for f in M.PARAM_FIELDS]
+
+
+def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    T, P, N, K, V, W, C = cfg.T, cfg.P, cfg.N, cfg.K, cfg.V, cfg.W, cfg.C
+    entries = {}
+
+    def emit(name, fn, specs, n_outputs_probe=None):
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        # Recover output shapes from the lowered module.
+        outs = lowered.out_info
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        out_specs = [(f"out{i}", _spec(o.shape, o.dtype)) for i, o in enumerate(flat)]
+        entries[name] = _io_entry(name, specs, out_specs)
+        return text
+
+    # ---- layer_fwd -------------------------------------------------------
+    def layer_fwd_flat(W_a, b_a, W_b, b_b, W_g, b_g, W_c, xhat, y_prev, h0):
+        p = M.LayerParams(W_a, b_a, W_b, b_b, W_g, b_g, W_c)
+        return M.layer_fwd(p, xhat, y_prev, h0, cfg.eps)
+
+    specs = _param_specs(cfg) + [
+        ("xhat", _spec((T, P))),
+        ("y_prev", _spec((T, P))),
+        ("h0", _spec((N,))),
+    ]
+    emit("layer_fwd", layer_fwd_flat, specs)
+
+    # ---- layer_step (single-token decode) ---------------------------------
+    def layer_step_flat(W_a, b_a, W_b, b_b, W_g, b_g, W_c, xhat_t, y_prev_t, h_prev):
+        p = M.LayerParams(W_a, b_a, W_b, b_b, W_g, b_g, W_c)
+        return M.layer_step(p, xhat_t, y_prev_t, h_prev, cfg.eps)
+
+    specs = _param_specs(cfg) + [
+        ("xhat_t", _spec((P,))),
+        ("y_prev_t", _spec((P,))),
+        ("h_prev", _spec((N,))),
+    ]
+    emit("layer_step", layer_step_flat, specs)
+
+    # ---- head_loss -------------------------------------------------------
+    specs = [
+        ("omega", _spec((P, V))),
+        ("y_K", _spec((T, P))),
+        ("targets", _spec((T,), jnp.int32)),
+    ]
+    emit("head_loss", M.head_loss, specs)
+
+    # ---- layer_adjoint_grad (chunked Alg. 3 work item) --------------------
+    def adj_flat(W_c, xhat_c, hprev_c, h_c, a_ext, c_ext, v_ext):
+        return M.layer_adjoint_grad(
+            W_c, xhat_c, hprev_c, h_c, a_ext, c_ext, v_ext, window=W
+        )
+
+    specs = [
+        ("W_c", _spec((N, P))),
+        ("xhat_c", _spec((C, P))),
+        ("hprev_c", _spec((C, N))),
+        ("h_c", _spec((C, N))),
+        ("a_ext", _spec((C + W, N))),
+        ("c_ext", _spec((C + W, N))),
+        ("v_ext", _spec((C + W, P))),
+    ]
+    emit("layer_adjoint_grad", adj_flat, specs)
+
+    # ---- bptt_grad (baseline + ground truth) ------------------------------
+    def bptt_flat(*args):
+        layers = [
+            M.LayerParams(*args[k * 7 : (k + 1) * 7]) for k in range(K)
+        ]
+        omega, y0, targets = args[K * 7 :]
+        loss, (lg, d_omega) = M.bptt_grad(layers, omega, y0, targets, cfg.eps)
+        flat = [loss]
+        for g in lg:
+            flat.extend(list(g))
+        flat.append(d_omega)
+        return tuple(flat)
+
+    specs = []
+    for k in range(K):
+        specs += _param_specs(cfg, prefix=f"l{k}_")
+    specs += [
+        ("omega", _spec((P, V))),
+        ("y0", _spec((T, P))),
+        ("targets", _spec((T,), jnp.int32)),
+    ]
+    emit("bptt_grad", bptt_flat, specs)
+
+    manifest = {"config": cfg.to_dict(), "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def lower_probes(out_dir: str):
+    """Table-1 VJP units for the three SSM families (paper's worked example
+    dims: P=128, N=225, bs=8)."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+    P, N, bs = PROBE_P, PROBE_N, PROBE_BS
+    families = {
+        "vjp_probe_unstructured": N * N,  # A^t ∈ R^{N×N}
+        "vjp_probe_diagonal": N,          # a^t ∈ R^N
+        "vjp_probe_scalar": 1,            # scalar transition
+    }
+    for name, out_dim in families.items():
+        def probe(w, b, x, g):
+            return ref.vjp_unit(w, b, x, g)
+
+        specs = [
+            ("w", _spec((P, out_dim))),
+            ("b", _spec((out_dim,))),
+            ("x", _spec((bs, P))),
+            ("g", _spec((bs, out_dim))),
+        ]
+        lowered = jax.jit(probe, keep_unused=True).lower(*[s for _, s in specs])
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        flat, _ = jax.tree_util.tree_flatten(lowered.out_info)
+        out_specs = [(f"out{i}", _spec(o.shape, o.dtype)) for i, o in enumerate(flat)]
+        entries[name] = _io_entry(name, specs, out_specs)
+    manifest = {
+        "config": {"name": "probe", "P": P, "N": N, "bs": bs},
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument(
+        "--configs", nargs="*", default=list(CONFIGS), help="config names to lower"
+    )
+    ap.add_argument("--skip-probes", action="store_true")
+    args = ap.parse_args()
+
+    for name in args.configs:
+        cfg = CONFIGS[name]
+        out_dir = os.path.join(args.out, cfg.name)
+        lower_config(cfg, out_dir)
+        print(f"lowered config '{cfg.name}' -> {out_dir}")
+    if not args.skip_probes:
+        lower_probes(os.path.join(args.out, "probe"))
+        print(f"lowered Table-1 probes -> {os.path.join(args.out, 'probe')}")
+
+
+if __name__ == "__main__":
+    main()

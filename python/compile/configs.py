@@ -1,0 +1,82 @@
+"""Named model/artifact configurations.
+
+Every HLO artifact has static shapes, so each run configuration the Rust
+coordinator can use is lowered ahead of time from one of these configs.
+The Rust side reads the emitted ``manifest.json`` — the field names here
+are a cross-language contract (see ``rust/src/config``).
+
+Dims follow the paper's notation (§3.1):
+  V — vocab size            P — model (token) dimension
+  N — SSM state dimension   K — number of residual SSM layers
+  T — training context length
+  W — truncated-adjoint window  T̄  (W == T  ⇒ full adjoint sharding)
+  C — scheduler chunk size along the token dimension (Alg. 3/4 work item)
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    V: int  # vocab size
+    P: int  # model dim
+    N: int  # state dim
+    K: int  # layers
+    T: int  # context length
+    W: int  # adjoint window (T-bar); W == T means full adjoint
+    C: int  # adjoint chunk size (must divide T)
+    eps: float = 1e-6  # rmsnorm epsilon
+
+    def __post_init__(self):
+        assert self.T % self.C == 0, "chunk size must divide context length"
+        assert 1 <= self.W <= self.T, "window must be in [1, T]"
+
+    def to_dict(self):
+        return asdict(self)
+
+    @property
+    def params_per_layer(self) -> int:
+        # W_a, W_b, W_g: (P, N) each; b_a, b_b, b_g: (N,); W_c: (N, P)
+        return 4 * self.P * self.N + 3 * self.N
+
+    @property
+    def head_params(self) -> int:
+        return self.P * self.V
+
+    @property
+    def total_params(self) -> int:
+        return self.K * self.params_per_layer + self.head_params
+
+
+# Test-scale config: fast enough for pytest + cargo test round trips.
+TINY = ModelConfig(name="tiny", V=64, P=16, N=16, K=2, T=32, W=32, C=8)
+
+# Tiny with a truncated window (W < T) for truncation-path tests.
+TINY_TRUNC = ModelConfig(name="tiny_trunc", V=64, P=16, N=16, K=2, T=32, W=8, C=8)
+
+# Small config for examples and fast benches.
+SMALL = ModelConfig(name="small", V=256, P=64, N=64, K=4, T=256, W=64, C=64)
+
+# Base config: the end-to-end training driver (examples/train_lm).
+BASE = ModelConfig(name="base", V=256, P=128, N=128, K=6, T=512, W=128, C=128)
+
+# Long-context config: exercises the truncation win at CPU-feasible T.
+LONGCTX = ModelConfig(name="longctx", V=256, P=64, N=64, K=4, T=2048, W=128, C=256)
+
+# Chunk-size ablation variants of SMALL (bench chunk-size): same model,
+# different scheduler granularity → dispatch-overhead vs transient-memory
+# trade-off.
+SMALL_C16 = ModelConfig(name="small_c16", V=256, P=64, N=64, K=4, T=256, W=64, C=16)
+SMALL_C256 = ModelConfig(name="small_c256", V=256, P=64, N=64, K=4, T=256, W=64, C=256)
+
+CONFIGS = {
+    c.name: c
+    for c in (TINY, TINY_TRUNC, SMALL, BASE, LONGCTX, SMALL_C16, SMALL_C256)
+}
+
+# Table-1 / §4.5 probe dims: the paper's worked example uses P=128, N=225,
+# bs=8 on a selective *diagonal* SSM; we lower one VJP unit per SSM family.
+PROBE_P = 128
+PROBE_N = 225
+PROBE_BS = 8

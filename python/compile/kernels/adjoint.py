@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: windowed adjoint-state accumulation (the backward hot-spot).
+
+This is the paper's VJP sharding (Prop. 2/3 + Eq. 7) specialized to the
+diagonal SSM family, where the adjoint state factorizes:
+
+    λ^{t,i} acting on the cotangent v^t collapses to
+    u^t ⊙ ∏_{j=i+1}^{t} a^j,   with  u^t = (v^t W_cᵀ) ⊙ c^t .
+
+The per-state accumulated adjoint pullback with truncation window W (= T̄):
+
+    μ^i = Σ_{w=0}^{W-1}  u^{i+w} ⊙ ∏_{j=1}^{w} a^{i+j}          (i+w ≤ T)
+
+Each (i, w) term is exactly one of the paper's sharded VJPs; the kernel
+performs the whole O(rows·W) bundle for a chunk of rows in one launch —
+W = T reproduces full adjoint sharding's O(T²) count, W ≪ T the truncated
+variant's O(T·W) (Fig. 6's complexity separation is this loop bound).
+
+Padding contract (callers: L2 ``model.layer_adjoint_grad`` and the Rust
+scheduler): ``u_pad`` and ``a_pad`` carry ``rows + W`` rows where
+``u_pad[j] = u^{i0+j}`` for in-sequence rows and **zero** beyond the
+sequence end (zero u kills out-of-range terms; zero a keeps the running
+product finite).
+
+Hardware adaptation: the inner step is a fused multiply-add over a
+(rows, N) tile — VPU work; rows are independent, so on a real TPU the grid
+tiles the row axis with a double-buffered windowed DMA bringing in the
+(rows + W, N) slab per tile. Under interpret=True the fori_loop lowers to
+an XLA while-loop over w with full-tile operands.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Windows up to this size are fully unrolled at trace time: static slices
+# let XLA fuse the whole accumulation (measured 2.8× faster than the
+# fori_loop lowering on CPU PJRT — EXPERIMENTS.md §Perf L1). Larger windows
+# fall back to the while-loop form to keep HLO size bounded.
+UNROLL_LIMIT = 128
+
+
+def _adjoint_kernel(u_ref, a_ref, mu_ref, *, rows: int, window: int):
+    n = u_ref.shape[1]
+
+    def body(w, carry):
+        acc, prod = carry
+        acc = acc + u_ref[pl.ds(w, rows), :] * prod
+        prod = prod * a_ref[pl.ds(w + 1, rows), :]
+        return acc, prod
+
+    acc = jnp.zeros((rows, n), u_ref.dtype)
+    prod = jnp.ones((rows, n), u_ref.dtype)
+    if window <= UNROLL_LIMIT:
+        carry = (acc, prod)
+        for w in range(window):
+            carry = body(w, carry)
+        acc = carry[0]
+    else:
+        acc, _ = jax.lax.fori_loop(0, window, body, (acc, prod))
+    mu_ref[...] = acc
+
+
+def adjoint_window(u_pad: jax.Array, a_pad: jax.Array, window: int) -> jax.Array:
+    """Accumulate windowed adjoint pullbacks.
+
+    u_pad, a_pad: (rows + window, N), zero-padded past the sequence end.
+    Returns μ with shape (rows, N).
+    """
+    total, N = u_pad.shape
+    rows = total - window
+    assert rows >= 1, "padded inputs must carry rows + window rows"
+    assert a_pad.shape == (total, N)
+    kernel = functools.partial(_adjoint_kernel, rows=rows, window=window)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, N), u_pad.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(u_pad, a_pad)

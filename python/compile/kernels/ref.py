@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels and the gradient ground truth.
+
+Everything here is differentiable reference code:
+  * ``ssm_scan_ref``       — lax.scan version of kernels.ssm_scan
+  * ``adjoint_window_ref`` — O(T·W) literal sum of Prop. 2's VJP terms
+  * the three Table-1 SSM families (unstructured / diagonal / scalar) as
+    single-step VJP units, used by the Table-1 probes and their tests.
+
+pytest asserts the Pallas kernels against these under shape/dtype sweeps
+(hypothesis); the Rust equivalence tests get their ground truth from
+``jax.grad`` through these refs (via the ``bptt_grad`` artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h^t = a^t ⊙ h^{t-1} + b^t via lax.scan (differentiable)."""
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h_next = a_t * h + b_t
+        return h_next, h_next
+
+    _, hs = jax.lax.scan(step, h0, (a, b))
+    return hs
+
+
+def adjoint_window_ref(u: jax.Array, a: jax.Array, window: int) -> jax.Array:
+    """μ^i = Σ_{w<window, i+w<T} u^{i+w} ⊙ ∏_{j=1..w} a^{i+j}  (unpadded inputs).
+
+    Literal triple-sum form — slow, obviously-correct oracle.
+    """
+    T, N = u.shape
+    mu = jnp.zeros((T, N), u.dtype)
+    for i in range(T):
+        prod = jnp.ones((N,), u.dtype)
+        acc = jnp.zeros((N,), u.dtype)
+        for w in range(window):
+            if i + w >= T:
+                break
+            if w > 0:
+                prod = prod * a[i + w]
+            acc = acc + u[i + w] * prod
+        mu = mu.at[i].set(acc)
+    return mu
+
+
+def pad_for_window(x: jax.Array, window: int) -> jax.Array:
+    """Zero-pad (T, N) -> (T + window, N), the kernel's padding contract."""
+    return jnp.pad(x, ((0, window), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Table-1 SSM families: one recurrence step + its VJP unit each.
+# The "network" for A/B/C is a single-layer MLP (paper §4.5).
+# ---------------------------------------------------------------------------
+
+
+def mlp(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Single-layer MLP used for the selection networks (paper §4.5)."""
+    return x @ w + b
+
+
+def unstructured_step(A: jax.Array, h: jax.Array, Bx: jax.Array) -> jax.Array:
+    """h' = A h + Bx with a full (N, N) transition matrix."""
+    return A @ h + Bx
+
+
+def diagonal_step(a: jax.Array, h: jax.Array, bx: jax.Array) -> jax.Array:
+    """h' = a ⊙ h + bx with a diagonal (N,) transition."""
+    return a * h + bx
+
+
+def scalar_step(a: jax.Array, h: jax.Array, bx: jax.Array) -> jax.Array:
+    """h' = a·h + bx with a scalar transition."""
+    return a * h + bx
+
+
+def vjp_unit(w: jax.Array, b: jax.Array, x: jax.Array, cotangent: jax.Array):
+    """One paper-unit VJP: pull ``cotangent`` back through the selection MLP.
+
+    This is vjp_Net(v) = v · ∂Net(x)/∂θ from Prop. 2 — the atomic work item
+    adjoint sharding schedules. Returns (dW, db) summed over the batch.
+    """
+    _, pullback = jax.vjp(lambda w_, b_: mlp(w_, b_, x), w, b)
+    return pullback(cotangent)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: selective diagonal SSM scan (the forward hot-spot).
+
+Computes the recurrence of paper §3.1 step 4 for the diagonal family:
+
+    h^t = a^t ⊙ h^{t-1} + b^t,       t = 1..T
+
+where ``a`` (input-selected decay, in (0,1)) and ``b`` (input-selected
+injection) are precomputed by the surrounding JAX layer (L2), which also
+applies the output map ``ỹ^t = (c^t ⊙ h^t) W_c`` on the kernel's output.
+
+Hardware adaptation (paper targets CUDA; see DESIGN.md §Hardware-Adaptation):
+the recurrence is a lane-parallel VPU op over the N axis; time is walked
+with an in-kernel ``fori_loop`` carrying ``h`` (the VMEM-resident carry).
+On a real TPU the grid would be time-blocked with a VMEM scratch carry and
+``BlockSpec``-scheduled HBM↔VMEM streaming of the (BLOCK_T, N) tiles; under
+``interpret=True`` (mandatory on CPU PJRT — Mosaic custom-calls cannot run
+there) the single-block form lowers to an XLA while-loop, which is what the
+AOT artifact ships.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, h_ref, *, steps: int):
+    """One sequential pass over ``steps`` timesteps, carrying h.
+
+    Refs: a (T, N), b (T, N), h0 (1, N) -> h (T, N).
+    """
+
+    def body(t, h):
+        h_next = a_ref[t, :] * h + b_ref[t, :]
+        h_ref[t, :] = h_next
+        return h_next
+
+    jax.lax.fori_loop(0, steps, body, h0_ref[0, :])
+
+
+def ssm_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """Run the diagonal SSM recurrence; returns the state sequence h (T, N).
+
+    a, b: (T, N); h0: (N,) initial state (paper assumes 0 in training, but
+    a live h0 input keeps the artifact reusable for chunked inference).
+    """
+    T, N = a.shape
+    assert b.shape == (T, N) and h0.shape == (N,)
+    kernel = functools.partial(_scan_kernel, steps=T)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((T, N), a.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a, b, h0.reshape(1, N))

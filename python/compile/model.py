@@ -1,0 +1,254 @@
+"""L2: the paper's model — a K-layer residual selective-diagonal-SSM LM —
+plus both gradient paths (adjoint sharding and full BPTT), written in JAX
+and calling the L1 Pallas kernels so they lower into the same HLO.
+
+Model (paper §3.1/§3.2, diagonal/Mamba-style selection):
+
+    y_0^t   = Embed(x^t)                      (embedding frozen; see DESIGN.md §1)
+    x̂_k^t  = RMSNorm(y_{k-1}^t)
+    a_k^t   = σ(x̂ W_a + b_a)   ∈ (0,1)^N     "A^t"  (diagonal transition)
+    b_k^t   =   x̂ W_b + b_b    ∈ R^N          "B^t x^t" (selective injection)
+    h_k^t   = a_k^t ⊙ h_k^{t-1} + b_k^t        (L1 kernel: ssm_scan)
+    c_k^t   = σ(x̂ W_g + b_g)   ∈ R^N          output selection gate
+    ỹ_k^t  = (c_k^t ⊙ h_k^t) W_c ∈ R^P        "C^t h^t" with C^t = W_cᵀ diag(c^t)
+    y_k^t   = y_{k-1}^t + ỹ_k^t                residual stream
+    loss    = mean_t CE(y_K^t Ω, target^t)
+
+Per-layer parameters (this order is the cross-language ABI, mirrored in
+``manifest.json`` and ``rust/src/config``):
+    W_a (P,N), b_a (N), W_b (P,N), b_b (N), W_g (P,N), b_g (N), W_c (N,P)
+
+Gradient paths:
+  * ``layer_adjoint_grad`` — the paper's contribution (Prop. 2/3 + Eq. 7),
+    one chunk of token indices for one layer, truncation window W, calling
+    the L1 ``adjoint_window`` kernel. Dispatched by the Rust scheduler.
+  * ``bptt_grad`` — ``jax.grad`` through the whole stack: the paper's
+    backpropagation baseline and the equivalence ground truth.
+"""
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ssm_scan import ssm_scan
+from .kernels.adjoint import adjoint_window
+from .kernels.ref import ssm_scan_ref
+
+
+class LayerParams(NamedTuple):
+    """One residual SSM layer's parameters (order = cross-language ABI)."""
+
+    W_a: jax.Array  # (P, N)
+    b_a: jax.Array  # (N,)
+    W_b: jax.Array  # (P, N)
+    b_b: jax.Array  # (N,)
+    W_g: jax.Array  # (P, N)
+    b_g: jax.Array  # (N,)
+    W_c: jax.Array  # (N, P)
+
+
+PARAM_FIELDS = list(LayerParams._fields)
+
+
+def rmsnorm(y: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free RMSNorm (paper's Norm; gains fixed at 1, DESIGN.md §1)."""
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(ms + eps)
+
+
+def init_layer(key: jax.Array, P: int, N: int) -> LayerParams:
+    """He-ish init; decay bias shifted so a^t starts near 0.9 (long memory)."""
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(P)
+    return LayerParams(
+        W_a=jax.random.normal(ks[0], (P, N)) * s,
+        b_a=jnp.full((N,), 2.0),  # σ(2) ≈ 0.88 initial decay
+        W_b=jax.random.normal(ks[1], (P, N)) * s,
+        b_b=jnp.zeros((N,)),
+        W_g=jax.random.normal(ks[2], (P, N)) * s,
+        b_g=jnp.zeros((N,)),
+        W_c=jax.random.normal(ks[3], (N, P)) * (1.0 / jnp.sqrt(N)),
+    )
+
+
+def init_model(key: jax.Array, V: int, P: int, N: int, K: int):
+    """Returns (list of LayerParams, Ω head (P,V), frozen embedding (V,P))."""
+    keys = jax.random.split(key, K + 2)
+    layers = [init_layer(keys[k], P, N) for k in range(K)]
+    omega = jax.random.normal(keys[K], (P, V)) * (1.0 / jnp.sqrt(P))
+    embed = jax.random.normal(keys[K + 1], (V, P))
+    return layers, omega, embed
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_activations(p: LayerParams, xhat: jax.Array, h0: jax.Array, *, use_kernel: bool):
+    """Selection nets + scan for one layer. Returns (a, c, h, ytilde)."""
+    a = jax.nn.sigmoid(xhat @ p.W_a + p.b_a)
+    b = xhat @ p.W_b + p.b_b
+    scan = ssm_scan if use_kernel else ssm_scan_ref
+    h = scan(a, b, h0)
+    c = jax.nn.sigmoid(xhat @ p.W_g + p.b_g)
+    ytilde = (c * h) @ p.W_c
+    return a, c, h, ytilde
+
+
+def layer_fwd(p: LayerParams, xhat: jax.Array, y_prev: jax.Array, h0: jax.Array, eps: float):
+    """Alg. 1 inner body for one layer over the whole sequence.
+
+    Returns (y_out, yhat_out, h, a, c): the residual stream update, the
+    next layer's (normalized) input, and the activations the paper's
+    Tables 2–5 store on the owning device for the adjoint phase.
+    """
+    a, c, h, ytilde = _layer_activations(p, xhat, h0, use_kernel=True)
+    y_out = y_prev + ytilde
+    yhat_out = rmsnorm(y_out, eps)
+    return y_out, yhat_out, h, a, c
+
+
+def forward(layers: Sequence[LayerParams], y0: jax.Array, eps: float, *, use_kernel: bool = False):
+    """Full-stack forward (reference path for BPTT). Returns y_K (T, P)."""
+    N = layers[0].b_a.shape[0]
+    h0 = jnp.zeros((N,), y0.dtype)
+    y = y0
+    for p in layers:
+        xhat = rmsnorm(y, eps)
+        _, _, _, ytilde = _layer_activations(p, xhat, h0, use_kernel=use_kernel)
+        y = y + ytilde
+    return y
+
+
+def layer_step(p: LayerParams, xhat_t: jax.Array, y_prev_t: jax.Array,
+               h_prev: jax.Array, eps: float):
+    """Single-token inference step for one layer (the SSM's O(1)-state
+    decode path): returns (y_t, ŷ_t, h_t). Rust's `generate` module drives
+    K of these per emitted token."""
+    a = jax.nn.sigmoid(xhat_t @ p.W_a + p.b_a)
+    b = xhat_t @ p.W_b + p.b_b
+    h_t = a * h_prev + b
+    c = jax.nn.sigmoid(xhat_t @ p.W_g + p.b_g)
+    y_t = y_prev_t + (c * h_t) @ p.W_c
+    yhat_t = rmsnorm(y_t, eps)
+    return y_t, yhat_t, h_t
+
+
+# ---------------------------------------------------------------------------
+# Head: loss + cotangents (the dl/dy_K^t the adjoint phase consumes)
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(omega: jax.Array, y_K: jax.Array, targets: jax.Array) -> jax.Array:
+    logits = y_K @ omega  # (T, V)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def head_loss(omega: jax.Array, y_K: jax.Array, targets: jax.Array):
+    """Returns (loss, dl/dy_K (T,P), dΩ (P,V)) — Alg. 1 lines 13–15."""
+    loss, (d_omega, d_y) = jax.value_and_grad(_ce_loss, argnums=(0, 1))(omega, y_K, targets)
+    return loss, d_y, d_omega
+
+
+# ---------------------------------------------------------------------------
+# Adjoint-sharded gradient: one (layer, token-chunk) work item (Alg. 3)
+# ---------------------------------------------------------------------------
+
+
+def layer_adjoint_grad(
+    W_c: jax.Array,     # (N, P) — the only *parameter* the VJPs need
+    xhat_c: jax.Array,  # (C, P)   layer input rows i ∈ [i0, i0+C)
+    hprev_c: jax.Array, # (C, N)   h^{i-1} (h^0 = 0 at i0 = 0)
+    h_c: jax.Array,     # (C, N)   h^i
+    a_ext: jax.Array,   # (C+W, N) a^{i0+j}, zero-padded past T
+    c_ext: jax.Array,   # (C+W, N) c^{i0+j}, zero-padded past T
+    v_ext: jax.Array,   # (C+W, P) dl/dy_K^{i0+j}, zero-padded past T
+    window: int,
+):
+    """Prop. 2/3 VJP bundle for one layer over one token chunk.
+
+    The scheduler (Rust, Alg. 4) sums the returned 7-tuple across chunks
+    and devices. Zero-padding of the ``*_ext`` inputs past the sequence end
+    is the caller's contract (zero cotangents kill out-of-range terms).
+    """
+    C = xhat_c.shape[0]
+    # u^t = (v^t W_cᵀ) ⊙ c^t : the cotangent pulled back through the output map.
+    u_ext = (v_ext @ W_c.T) * c_ext  # (C+W, N)
+    # μ^i = windowed adjoint accumulation — the L1 kernel (O(C·W) VJP terms).
+    mu = adjoint_window(u_ext, a_ext, window)  # (C, N)
+
+    a_c = a_ext[:C]
+    c_c = c_ext[:C]
+    v_c = v_ext[:C]
+
+    # vjp_A: cotangent on the a-network output is μ^i ⊙ h^{i-1} (Prop. 2),
+    # pulled through the σ nonlinearity of the selection MLP.
+    delta_a = mu * hprev_c * a_c * (1.0 - a_c)
+    dW_a = xhat_c.T @ delta_a
+    db_a = jnp.sum(delta_a, axis=0)
+
+    # vjp_B: the injection net is linear, cotangent is μ^i directly.
+    dW_b = xhat_c.T @ mu
+    db_b = jnp.sum(mu, axis=0)
+
+    # vjp_C (gate): only the t = i term contributes (Prop. 2's C-term).
+    gpre = (v_c @ W_c.T) * h_c
+    delta_g = gpre * c_c * (1.0 - c_c)
+    dW_g = xhat_c.T @ delta_g
+    db_g = jnp.sum(delta_g, axis=0)
+
+    # vjp_C (projection): dW_c = Σ_t (c^t ⊙ h^t) ⊗ v^t.
+    dW_c = (c_c * h_c).T @ v_c
+
+    return dW_a, db_a, dW_b, db_b, dW_g, db_g, dW_c
+
+
+def adjoint_grad_full(
+    layers: Sequence[LayerParams],
+    y0: jax.Array,
+    v: jax.Array,
+    eps: float,
+    window: int,
+):
+    """Whole-model adjoint-sharded gradient in one call (test/reference path;
+    production dispatch is chunked from Rust). Returns a list of 7-tuples."""
+    T, _ = y0.shape
+    N = layers[0].b_a.shape[0]
+    h0 = jnp.zeros((N,), y0.dtype)
+    grads = []
+    y = y0
+    for p in layers:
+        xhat = rmsnorm(y, eps)
+        a, c, h, ytilde = _layer_activations(p, xhat, h0, use_kernel=False)
+        hprev = jnp.concatenate([h0[None, :], h[:-1]], axis=0)
+        pad = lambda x: jnp.pad(x, ((0, window), (0, 0)))
+        grads.append(
+            layer_adjoint_grad(p.W_c, xhat, hprev, h, pad(a), pad(c), pad(v), window)
+        )
+        y = y + ytilde
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# BPTT baseline / ground truth
+# ---------------------------------------------------------------------------
+
+
+def bptt_loss(layers: Sequence[LayerParams], omega: jax.Array, y0: jax.Array,
+              targets: jax.Array, eps: float) -> jax.Array:
+    y_K = forward(layers, y0, eps)
+    return _ce_loss(omega, y_K, targets)
+
+
+def bptt_grad(layers: Sequence[LayerParams], omega: jax.Array, y0: jax.Array,
+              targets: jax.Array, eps: float):
+    """Full backpropagation: (loss, (layer grads pytree, dΩ)). The paper's
+    baseline (Fig. 1 red curve) and the equivalence ground truth."""
+    loss, grads = jax.value_and_grad(bptt_loss, argnums=(0, 1))(
+        list(layers), omega, y0, targets, eps
+    )
+    return loss, grads

@@ -1,0 +1,83 @@
+"""AOT pipeline: lowering produces parseable HLO text with the manifest's
+declared signature, for every config (the cross-language ABI check)."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS, TINY
+
+
+def test_tiny_lowering_roundtrip(tmp_path):
+    manifest = aot.lower_config(TINY, str(tmp_path))
+    # All four entry points present, files exist and are non-trivial HLO text.
+    for entry in ["layer_fwd", "head_loss", "layer_adjoint_grad", "bptt_grad"]:
+        assert entry in manifest["entries"]
+        path = tmp_path / f"{entry}.hlo.txt"
+        text = path.read_text()
+        assert text.startswith("HloModule"), entry
+        assert "ENTRY" in text, entry
+
+    # Manifest on disk parses and matches the returned dict.
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["config"]["name"] == "tiny"
+    assert set(on_disk["entries"]) == set(manifest["entries"])
+
+
+def test_manifest_shapes_match_config(tmp_path):
+    m = aot.lower_config(TINY, str(tmp_path))
+    cfg = TINY
+    e = m["entries"]["layer_adjoint_grad"]
+    by_name = {i["name"]: i for i in e["inputs"]}
+    assert by_name["W_c"]["shape"] == [cfg.N, cfg.P]
+    assert by_name["xhat_c"]["shape"] == [cfg.C, cfg.P]
+    assert by_name["a_ext"]["shape"] == [cfg.C + cfg.W, cfg.N]
+    assert by_name["v_ext"]["shape"] == [cfg.C + cfg.W, cfg.P]
+    # 7 gradient outputs, shapes = parameter shapes.
+    assert len(e["outputs"]) == 7
+    assert e["outputs"][0]["shape"] == [cfg.P, cfg.N]  # dW_a
+    assert e["outputs"][6]["shape"] == [cfg.N, cfg.P]  # dW_c
+
+    e = m["entries"]["bptt_grad"]
+    assert len(e["inputs"]) == cfg.K * 7 + 3
+    assert len(e["outputs"]) == 1 + cfg.K * 7 + 1
+    assert e["inputs"][-1]["dtype"] == "i32"  # targets
+
+
+def test_hlo_signature_matches_manifest_arity(tmp_path):
+    """keep_unused=True: the HLO entry must declare exactly the manifest's
+    parameter count (regression test for the pruned-args probe bug)."""
+    m = aot.lower_config(TINY, str(tmp_path))
+    for name, entry in m["entries"].items():
+        text = (tmp_path / f"{name}.hlo.txt").read_text()
+        first = text.splitlines()[0]
+        # entry_computation_layout={(<inputs>)-><outputs>}
+        sig = first.split("entry_computation_layout={(")[1].split(")->")[0]
+        n_params = 0 if not sig.strip() else sig.count("f32[") + sig.count("s32[")
+        assert n_params == len(entry["inputs"]), (
+            f"{name}: HLO has {n_params} params, manifest {len(entry['inputs'])}"
+        )
+
+
+def test_all_configs_are_valid():
+    for name, cfg in CONFIGS.items():
+        assert cfg.T % cfg.C == 0, name
+        assert 1 <= cfg.W <= cfg.T, name
+        assert cfg.total_params > 0
+
+
+def test_probe_lowering(tmp_path):
+    aot.lower_probes(str(tmp_path))
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(m["entries"]) == {
+        "vjp_probe_unstructured",
+        "vjp_probe_diagonal",
+        "vjp_probe_scalar",
+    }
+    for name in m["entries"]:
+        assert (tmp_path / f"{name}.hlo.txt").exists()
+        # 4 declared inputs even where w/b are unused (keep_unused).
+        assert len(m["entries"][name]["inputs"]) == 4

@@ -1,0 +1,70 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ssm_scan import ssm_scan
+from compile.kernels.adjoint import adjoint_window
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("T,N", [(1, 1), (4, 8), (32, 16), (128, 64), (33, 7)])
+def test_ssm_scan_matches_ref(T, N):
+    a = jax.nn.sigmoid(_rand(0, (T, N)))
+    b = _rand(1, (T, N))
+    h0 = _rand(2, (N,))
+    got = ssm_scan(a, b, h0)
+    want = ref.ssm_scan_ref(a, b, h0)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_ssm_scan_zero_decay_is_injection():
+    T, N = 16, 4
+    b = _rand(3, (T, N))
+    h = ssm_scan(jnp.zeros((T, N)), b, jnp.ones((N,)))
+    np.testing.assert_allclose(h, b, rtol=1e-6)
+
+
+def test_ssm_scan_unit_decay_is_cumsum():
+    T, N = 16, 4
+    b = _rand(4, (T, N))
+    h = ssm_scan(jnp.ones((T, N)), b, jnp.zeros((N,)))
+    np.testing.assert_allclose(h, jnp.cumsum(b, axis=0), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,N,W", [(8, 4, 3), (16, 8, 16), (32, 5, 1), (20, 3, 7)])
+def test_adjoint_window_matches_ref(T, N, W):
+    u = _rand(5, (T, N))
+    a = jax.nn.sigmoid(_rand(6, (T, N)))
+    got = adjoint_window(ref.pad_for_window(u, W), ref.pad_for_window(a, W), W)
+    want = ref.adjoint_window_ref(u, a, W)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adjoint_window_w1_is_identity():
+    # W = 1: μ^i = u^i (no lookahead terms at all).
+    T, N = 12, 6
+    u = _rand(7, (T, N))
+    a = jax.nn.sigmoid(_rand(8, (T, N)))
+    got = adjoint_window(ref.pad_for_window(u, 1), ref.pad_for_window(a, 1), 1)
+    np.testing.assert_allclose(got, u, rtol=1e-6)
+
+
+def test_adjoint_window_full_equals_reverse_scan():
+    # W = T: μ is the classic BPTT reverse scan μ^i = u^i + a^{i+1} ⊙ μ^{i+1}.
+    T, N = 24, 5
+    u = _rand(9, (T, N))
+    a = jax.nn.sigmoid(_rand(10, (T, N)))
+    got = adjoint_window(ref.pad_for_window(u, T), ref.pad_for_window(a, T), T)
+    mu = np.zeros((T, N), np.float64)
+    un, an = np.asarray(u, np.float64), np.asarray(a, np.float64)
+    mu[T - 1] = un[T - 1]
+    for i in range(T - 2, -1, -1):
+        mu[i] = un[i] + an[i + 1] * mu[i + 1]
+    np.testing.assert_allclose(got, mu, rtol=1e-4, atol=1e-5)

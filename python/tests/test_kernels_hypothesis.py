@@ -1,0 +1,96 @@
+"""Hypothesis sweeps over the L1 Pallas kernels: random shapes, windows,
+and value regimes vs the pure-jnp oracles (the guide-mandated L1 property
+suite)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ssm_scan import ssm_scan
+from compile.kernels.adjoint import adjoint_window
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arrays(key, shape, lo=-2.0, hi=2.0):
+    u = jax.random.uniform(jax.random.PRNGKey(key), shape)
+    return lo + (hi - lo) * u
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scan_matches_ref_random_shapes(t, n, seed):
+    a = jax.nn.sigmoid(arrays(seed, (t, n)))
+    b = arrays(seed + 1, (t, n))
+    h0 = arrays(seed + 2, (n,))
+    np.testing.assert_allclose(
+        ssm_scan(a, b, h0), ref.ssm_scan_ref(a, b, h0), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=24),
+    w=st.integers(min_value=1, max_value=80),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_adjoint_window_matches_ref_random(t, n, w, seed):
+    w = min(w, t)  # window never exceeds the chunk
+    u = arrays(seed, (t, n))
+    a = jax.nn.sigmoid(arrays(seed + 1, (t, n)))
+    got = adjoint_window(ref.pad_for_window(u, w), ref.pad_for_window(a, w), w)
+    want = ref.adjoint_window_ref(u, a, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(min_value=2, max_value=48),
+    n=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_adjoint_window_monotone_in_window(t, n, seed):
+    """Growing the window only *adds* non-negative-weight terms: with u ≥ 0
+    and a ∈ (0,1), μ is monotonically non-decreasing in W."""
+    u = jnp.abs(arrays(seed, (t, n)))
+    a = jax.nn.sigmoid(arrays(seed + 1, (t, n)))
+    prev = None
+    for w in (1, max(1, t // 2), t):
+        mu = np.asarray(
+            adjoint_window(ref.pad_for_window(u, w), ref.pad_for_window(a, w), w)
+        )
+        if prev is not None:
+            assert (mu >= prev - 1e-6).all()
+        prev = mu
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(min_value=1, max_value=48),
+    n=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scan_is_linear_in_b(t, n, seed):
+    """The recurrence is linear in the injection: scan(a, b1+b2) =
+    scan(a, b1) + scan(a, b2) with h0 = 0."""
+    a = jax.nn.sigmoid(arrays(seed, (t, n)))
+    b1 = arrays(seed + 1, (t, n))
+    b2 = arrays(seed + 2, (t, n))
+    h0 = jnp.zeros((n,))
+    lhs = ssm_scan(a, b1 + b2, h0)
+    rhs = ssm_scan(a, b1, h0) + ssm_scan(a, b2, h0)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_scan_dtype_preserved():
+    a = jnp.ones((4, 3), jnp.float32) * 0.5
+    b = jnp.ones((4, 3), jnp.float32)
+    out = ssm_scan(a, b, jnp.zeros((3,), jnp.float32))
+    assert out.dtype == jnp.float32

@@ -1,0 +1,22 @@
+//! `cargo bench --bench fig1_memory` — regenerates paper Fig. 1:
+//! training memory vs model size (32M…1.27B), backprop vs adjoint
+//! sharding, plus the measured CPU-scale calibration runs.
+//!
+//! Same generator as `adjsh bench fig1` (rust/src/reports).
+
+use adjoint_sharding::reports;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    // cargo bench passes --bench; ignore harness flags.
+    let mut cli = Cli::parse(
+        std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench" && !a.starts_with("--bench=")),
+    )
+    .expect("cli");
+    if let Err(e) = reports::fig1(&mut cli) {
+        eprintln!("fig1 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

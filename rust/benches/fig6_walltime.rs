@@ -1,0 +1,21 @@
+//! `cargo bench --bench fig6_walltime` — regenerates paper Fig. 6:
+//! training days/epoch vs context length for backprop, full adjoint
+//! sharding, and truncated adjoint sharding (100-layer model, T̄ = 2000,
+//! paper's 280× parallel-speedup assumption), with the per-VJP constant
+//! calibrated from the Table-1 probe on this host.
+
+use adjoint_sharding::reports;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    let mut cli = Cli::parse(
+        std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench" && !a.starts_with("--bench=")),
+    )
+    .expect("cli");
+    if let Err(e) = reports::fig6(&mut cli) {
+        eprintln!("fig6 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,98 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the training hot
+//! path (the §Perf profile): per-entry PJRT execution latency, the adjoint
+//! work-item gather (host slicing/padding), gradient accumulation, the
+//! Adam update, and a whole training step in both grad modes.
+//!
+//! These are the numbers the performance pass iterates on
+//! (EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use adjoint_sharding::adjoint;
+use adjoint_sharding::config::{GradMode, ModelDims, OptimCfg, RunConfig, TopologyCfg};
+use adjoint_sharding::data::{Corpus, MarkovCorpus};
+use adjoint_sharding::model::{GradSet, ParamSet};
+use adjoint_sharding::optim::ShardedAdam;
+use adjoint_sharding::pipeline;
+use adjoint_sharding::runtime::{ArtifactSet, Runtime};
+use adjoint_sharding::sharding::plan_chunks;
+use adjoint_sharding::topology::Fleet;
+use adjoint_sharding::train::Trainer;
+use adjoint_sharding::util::bench::bench;
+
+fn main() {
+    let root = Path::new("artifacts");
+    let config = "small";
+    if !root.join(config).join("manifest.json").exists() {
+        eprintln!("SKIP hotpath bench: artifacts/{config} missing — run `make artifacts`");
+        return;
+    }
+    let rt = Rc::new(Runtime::cpu().expect("pjrt"));
+    let arts = ArtifactSet::load(rt.clone(), &root.join(config)).expect("artifacts");
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).expect("dims");
+    let params = ParamSet::init(&dims, 0);
+    let corpus = MarkovCorpus::new(dims.v, 0);
+    let sample = corpus.sample(0, dims.t);
+
+    println!("== hotpath micro-benches ('{config}': K={} T={} W={} C={}) ==\n", dims.k, dims.t, dims.w, dims.c);
+
+    // 1. Forward pipeline (Alg. 1).
+    let mut fleet = Fleet::new(TopologyCfg::default(), dims.k).unwrap();
+    let s = bench("forward_pipeline(Alg.1)", 3, 20, 1.0, || {
+        for d in &mut fleet.devices {
+            d.end_step();
+        }
+        pipeline::forward(&arts, &dims, &params, &mut fleet, &sample.tokens, &sample.targets)
+            .unwrap()
+            .loss
+    });
+    println!("{s}");
+
+    // 2. One adjoint work-item: gather (host) vs execute (PJRT).
+    let fwd = {
+        for d in &mut fleet.devices {
+            d.end_step();
+        }
+        pipeline::forward(&arts, &dims, &params, &mut fleet, &sample.tokens, &sample.targets)
+            .unwrap()
+    };
+    let _ = fwd;
+    let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
+    let item = items[items.len() / 2];
+    let s = bench("adjoint_gather(host slice+pad)", 3, 50, 1.0, || {
+        adjoint::gather_item_args(&dims, &fleet, &params, &item).unwrap()
+    });
+    println!("{s}");
+    let entry = arts.entry("layer_adjoint_grad").unwrap();
+    let args = adjoint::gather_item_args(&dims, &fleet, &params, &item).unwrap();
+    let s = bench("adjoint_item_execute(PJRT)", 3, 30, 1.0, || entry.run(&args).unwrap());
+    println!("{s}");
+
+    // 3. Full backward phase (Alg. 4).
+    let mut grads = GradSet::zeros(&dims);
+    let s = bench("adjoint_backward(Alg.4)", 2, 10, 1.0, || {
+        adjoint::backward(&arts, &dims, &params, &mut fleet, &mut grads).unwrap().calls
+    });
+    println!("{s}");
+
+    // 4. Optimizer update.
+    let mut p2 = params.clone();
+    let mut opt = ShardedAdam::new(&p2, &OptimCfg::default());
+    let s = bench("sharded_adam_step", 3, 50, 1.0, || {
+        let mut g = grads.clone();
+        opt.step(&mut p2, &mut g, Some(1.0)).unwrap()
+    });
+    println!("{s}");
+
+    // 5. Whole training steps, both modes.
+    for (mode, label) in [(GradMode::Adjoint, "train_step(adjoint)"), (GradMode::Bptt, "train_step(bptt)")] {
+        let rt2 = Rc::new(Runtime::cpu().expect("pjrt"));
+        let mut cfg = RunConfig::load(root, config).unwrap();
+        cfg.grad_mode = mode;
+        cfg.log_every = usize::MAX;
+        let mut tr = Trainer::new(rt2, cfg, Box::new(MarkovCorpus::new(dims.v, 0))).unwrap();
+        let s = bench(label, 2, 10, 1.5, || tr.step().unwrap().loss);
+        println!("{s}");
+    }
+}

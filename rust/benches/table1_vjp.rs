@@ -1,0 +1,19 @@
+//! `cargo bench --bench table1_vjp` — regenerates paper Table 1 (per-VJP
+//! memory & FLOPs for the unstructured / diagonal / scalar SSM families)
+//! plus the §4.5 worked example, with measured probe timings on this host.
+
+use adjoint_sharding::reports;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    let mut cli = Cli::parse(
+        std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench" && !a.starts_with("--bench=")),
+    )
+    .expect("cli");
+    if let Err(e) = reports::table1(&mut cli) {
+        eprintln!("table1 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,26 @@
+//! `cargo bench --bench vjp_count` — regenerates the paper's §4.3 VJP-count
+//! claims (64% reduction at T=10K, T̄=2000), cross-checking closed forms
+//! against literal enumeration, then the max-context memory-budget sweep
+//! (abstract: 35K → >100K on five P4 instances) and the T̄ ablation.
+
+use adjoint_sharding::reports;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.starts_with("--bench="))
+        .collect();
+    for gen in [
+        reports::vjp_count as fn(&mut Cli) -> anyhow::Result<()>,
+        reports::max_context,
+        reports::tbar_sweep,
+    ] {
+        let mut cli = Cli::parse(args.clone()).expect("cli");
+        if let Err(e) = gen(&mut cli) {
+            eprintln!("vjp_count bench failed: {e:#}");
+            std::process::exit(1);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,137 @@
+//! Alg. 2–4 — the adjoint-sharding backward phase.
+//!
+//! After Alg. 1 leaves each layer's activations on its owning device and
+//! the cotangents everywhere, the gradient of every layer is a sum of
+//! independent VJP bundles (Prop. 3), one per (layer, token-chunk) work
+//! item (Alg. 3). Devices process their own layers' items with no
+//! cross-device traffic — the paper's central claim — so the phase's
+//! modeled time is the max over devices of a MIG-slot makespan.
+//!
+//! The adjoint states themselves (Alg. 2) live *inside* the
+//! `layer_adjoint_grad` artifact: the L1 Pallas kernel `adjoint_window`
+//! computes the windowed products C^t·∏A on the fly, which is the paper's
+//! "computed on the fly in the gradient computation phase" option (§4.2).
+
+use anyhow::Result;
+
+use crate::config::ModelDims;
+use crate::model::{GradSet, ParamSet};
+use crate::runtime::ArtifactSet;
+use crate::sharding::{plan_chunks, WorkItem};
+use crate::tensor::{Arg, Tensor};
+use crate::topology::{makespan, ActKind, Fleet};
+
+/// Backward-phase outcome.
+#[derive(Debug)]
+pub struct AdjointOutput {
+    /// Modeled phase seconds: max over devices of their slot-makespan.
+    pub virtual_s: f64,
+    /// Wall seconds spent in PJRT executions.
+    pub wall_s: f64,
+    /// Paper-unit VJPs performed (Σ over items of item.vjp_units).
+    pub vjp_units: u64,
+    /// Number of chunk executions dispatched.
+    pub calls: u64,
+}
+
+/// Assemble the inputs for one Alg. 3 work item from the owning device's
+/// activation store. Pure slicing/padding — exposed for tests.
+pub fn gather_item_args(
+    dims: &ModelDims,
+    fleet: &Fleet,
+    params: &ParamSet,
+    item: &WorkItem,
+) -> Result<Vec<Arg>> {
+    let dev = &fleet.devices[fleet.device_of_layer(item.layer)];
+    let (i0, c, w) = (item.chunk_start, item.chunk_len, dims.w);
+    let h = dev.get(item.layer, ActKind::H)?;
+    let a = dev.get(item.layer, ActKind::A)?;
+    let cg = dev.get(item.layer, ActKind::C)?;
+    let xhat = dev.get(item.layer, ActKind::Xhat)?;
+    let v = dev.get(usize::MAX, ActKind::Cotangent)?;
+
+    let xhat_c = xhat.slice_rows(i0, c)?;
+    let h_c = h.slice_rows(i0, c)?;
+    // h^{i-1} for i in the chunk; h^{-1} = h0 = 0 at the sequence start.
+    let hprev_c = if i0 == 0 {
+        h.slice_rows(0, c)?.shift_down(&vec![0.0; dims.n])?
+    } else {
+        h.slice_rows(i0 - 1, c)?
+    };
+    let a_ext = a.slice_rows_padded(i0, c + w)?;
+    let c_ext = cg.slice_rows_padded(i0, c + w)?;
+    let v_ext = v.slice_rows_padded(i0, c + w)?;
+
+    Ok(vec![
+        Arg::F(params.layers[item.layer].w_c().clone()),
+        Arg::F(xhat_c),
+        Arg::F(hprev_c),
+        Arg::F(h_c),
+        Arg::F(a_ext),
+        Arg::F(c_ext),
+        Arg::F(v_ext),
+    ])
+}
+
+/// Run the full backward phase (Alg. 4): every device processes its layers'
+/// chunk items; gradients accumulate into `grads` (dL/dθ += Ξ, line 7).
+pub fn backward(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    grads: &mut GradSet,
+) -> Result<AdjointOutput> {
+    let entry = arts.entry("layer_adjoint_grad")?;
+    let items = plan_chunks(dims.k, dims.t, dims.c)?;
+
+    let mut per_device_times: Vec<Vec<f64>> = vec![Vec::new(); fleet.cfg.devices];
+    let mut wall_s = 0.0;
+    let mut vjp_units = 0u64;
+    let mut calls = 0u64;
+
+    let transient_bytes =
+        (entry.spec.input_bytes() + entry.spec.output_bytes()) as u64;
+
+    for item in &items {
+        let devi = fleet.device_of_layer(item.layer);
+        let args = gather_item_args(dims, fleet, params, item)?;
+
+        // Transient VJP working set lives only for this call (the paper's
+        // "disposed after the computation", §3.3).
+        fleet.devices[devi].mem.alloc(transient_bytes);
+        let (outs, secs) = entry.run_timed(&args)?;
+        fleet.devices[devi].mem.free(transient_bytes);
+
+        grads.accumulate_layer(item.layer, &outs)?;
+        wall_s += secs;
+        per_device_times[devi].push(secs);
+        vjp_units += item.vjp_units(dims.w, dims.t);
+        calls += 1;
+    }
+
+    // Modeled time: devices run in parallel; within a device, chunk calls
+    // pack onto MIG slots (§4.5).
+    let mut virtual_s = 0.0f64;
+    for (devi, times) in per_device_times.iter().enumerate() {
+        let m = makespan(times, fleet.cfg.mig_slots);
+        fleet.charge_compute(devi, m);
+        virtual_s = virtual_s.max(m);
+    }
+
+    Ok(AdjointOutput { virtual_s, wall_s, vjp_units, calls })
+}
+
+/// Reference single-item runner (tests / benches): executes one work item
+/// and returns the 7 gradient tensors without touching a GradSet.
+pub fn run_item(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &Fleet,
+    item: &WorkItem,
+) -> Result<Vec<Tensor>> {
+    let entry = arts.entry("layer_adjoint_grad")?;
+    let args = gather_item_args(dims, fleet, params, item)?;
+    entry.run(&args)
+}

@@ -1,0 +1,73 @@
+//! Backpropagation baseline — the paper's comparator (Fig. 1 red curve).
+//!
+//! One `bptt_grad` execution computes loss + all parameter gradients via
+//! `jax.grad` through the whole stack. It runs on a single simulated
+//! device (backprop's sequential graph cannot layer-shard the way the
+//! adjoint phase does), and its activation memory is accounted with the
+//! closed-form autograd-graph model from `memcost` (XLA's internal buffer
+//! assignment is not observable through this PJRT client; DESIGN.md §1).
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelDims;
+use crate::memcost::MemModel;
+use crate::model::{GradSet, ParamSet};
+use crate::runtime::ArtifactSet;
+use crate::tensor::{Arg, IntTensor};
+use crate::topology::Fleet;
+
+#[derive(Debug)]
+pub struct BpttOutput {
+    pub loss: f64,
+    pub virtual_s: f64,
+    pub wall_s: f64,
+}
+
+/// Run one full-backprop gradient step: fills `grads` (all layers + Ω).
+pub fn backward(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+    grads: &mut GradSet,
+) -> Result<BpttOutput> {
+    let entry = arts.entry("bptt_grad")?;
+    let y0 = params.embed_tokens(tokens)?;
+
+    let mut args: Vec<Arg> = params
+        .flatten_for_bptt()
+        .into_iter()
+        .map(Arg::F)
+        .collect();
+    args.push(Arg::F(y0));
+    args.push(Arg::I(targets.clone()));
+
+    // Account the autograd graph on device 0 (lives for the whole call).
+    // bytes_per_elem = 4: the measured runs are f32, and the adjoint side's
+    // accounted store is f32 too — keep the comparison unit-consistent
+    // (the paper-scale Fig. 1 model stays in its FP16 units separately).
+    let act = MemModel { bytes_per_elem: 4.0, ..Default::default() };
+    let graph_bytes = act
+        .backprop(dims, dims.t as u64, 1, 1)
+        .activations;
+    fleet.devices[0].mem.alloc(graph_bytes);
+    let (outs, secs) = entry.run_timed(&args)?;
+    fleet.devices[0].mem.free(graph_bytes);
+    fleet.charge_compute(0, secs);
+
+    // Outputs: loss, K × 7 layer grads, dΩ.
+    if outs.len() != 1 + dims.k * 7 + 1 {
+        bail!("bptt_grad returned {} outputs, want {}", outs.len(), dims.k * 7 + 2);
+    }
+    let mut it = outs.into_iter();
+    let loss = it.next().unwrap().item()? as f64;
+    for k in 0..dims.k {
+        let layer: Vec<_> = (0..7).map(|_| it.next().unwrap()).collect();
+        grads.accumulate_layer(k, &layer)?;
+    }
+    grads.omega.add_assign(&it.next().unwrap())?;
+
+    Ok(BpttOutput { loss, virtual_s: secs, wall_s: secs })
+}

@@ -1,0 +1,262 @@
+//! Run configuration: model dimensions (the cross-language contract with
+//! `python/compile/configs.py`, read back from `manifest.json`), topology,
+//! optimizer, gradient mode, and training settings.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions — field names follow the paper (§3.1) and must match
+/// `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub v: usize,   // vocab size
+    pub p: usize,   // model dim
+    pub n: usize,   // state dim
+    pub k: usize,   // layers
+    pub t: usize,   // context length
+    pub w: usize,   // adjoint window (T̄); w == t means full adjoint sharding
+    pub c: usize,   // adjoint chunk size
+    pub eps: f32,   // rmsnorm epsilon
+}
+
+impl ModelDims {
+    pub fn from_manifest_json(j: &Json) -> Result<Self> {
+        Self::from_config_json(j.get("config")?)
+    }
+
+    /// Parse from the bare `config` object (as kept by `ArtifactSet`).
+    pub fn from_config_json(cfg: &Json) -> Result<Self> {
+        let dims = ModelDims {
+            name: cfg.get("name")?.as_str()?.to_string(),
+            v: cfg.get("V")?.as_usize()?,
+            p: cfg.get("P")?.as_usize()?,
+            n: cfg.get("N")?.as_usize()?,
+            k: cfg.get("K")?.as_usize()?,
+            t: cfg.get("T")?.as_usize()?,
+            w: cfg.get("W")?.as_usize()?,
+            c: cfg.get("C")?.as_usize()?,
+            eps: cfg.get("eps")?.as_f64()? as f32,
+        };
+        dims.validate()?;
+        Ok(dims)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.t % self.c != 0 {
+            bail!("chunk size C={} must divide context length T={}", self.c, self.t);
+        }
+        if self.w == 0 || self.w > self.t {
+            bail!("window W={} must be in [1, T={}]", self.w, self.t);
+        }
+        if self.v == 0 || self.p == 0 || self.n == 0 || self.k == 0 {
+            bail!("zero dimension in {self:?}");
+        }
+        Ok(())
+    }
+
+    /// Per-layer parameter count: W_a, W_b, W_g (P×N), b_a, b_b, b_g (N), W_c (N×P).
+    pub fn params_per_layer(&self) -> usize {
+        4 * self.p * self.n + 3 * self.n
+    }
+
+    pub fn head_params(&self) -> usize {
+        self.p * self.v
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.k * self.params_per_layer() + self.head_params()
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.t / self.c
+    }
+}
+
+/// How gradients are computed each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// The paper's contribution: sharded adjoint VJPs (window = dims.w).
+    Adjoint,
+    /// Full backpropagation via the `bptt_grad` artifact — the baseline.
+    Bptt,
+}
+
+impl std::str::FromStr for GradMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "adjoint" => Ok(GradMode::Adjoint),
+            "bptt" | "backprop" => Ok(GradMode::Bptt),
+            _ => bail!("unknown grad mode '{s}' (adjoint|bptt)"),
+        }
+    }
+}
+
+/// Simulated device fleet parameters (paper §4.4/§4.5).
+#[derive(Debug, Clone)]
+pub struct TopologyCfg {
+    /// Υ — number of simulated devices.
+    pub devices: usize,
+    /// MIG instances per device (paper: 7 per H100): bound on concurrent
+    /// VJP chunk executions modeled per device.
+    pub mig_slots: usize,
+    /// Modeled HBM per device, bytes (paper: 80 GB H100). Memory-budget
+    /// checks in the accountant run against this.
+    pub hbm_bytes: u64,
+    /// Modeled inter-device link bandwidth, bytes/s (NVLink-ish default).
+    pub link_bytes_per_s: f64,
+    /// Per-message link latency, seconds.
+    pub link_latency_s: f64,
+}
+
+impl Default for TopologyCfg {
+    fn default() -> Self {
+        Self {
+            devices: 1,
+            mig_slots: 7,
+            hbm_bytes: 80 << 30,
+            link_bytes_per_s: 300e9,
+            link_latency_s: 5e-6,
+        }
+    }
+}
+
+/// Optimizer settings (paper trains with Adam).
+#[derive(Debug, Clone)]
+pub struct OptimCfg {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: Option<f32>,
+}
+
+impl Default for OptimCfg {
+    fn default() -> Self {
+        Self { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, grad_clip: Some(1.0) }
+    }
+}
+
+/// Everything a training run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub dims: ModelDims,
+    pub grad_mode: GradMode,
+    pub topology: TopologyCfg,
+    pub optim: OptimCfg,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub log_csv: Option<PathBuf>,
+}
+
+impl RunConfig {
+    /// Load a config by artifact name, e.g. `artifacts/tiny`.
+    pub fn load(artifacts_root: &Path, config_name: &str) -> Result<Self> {
+        let dir = artifacts_root.join(config_name);
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", manifest_path.display()))?;
+        let j = Json::parse(&text)?;
+        let dims = ModelDims::from_manifest_json(&j)?;
+        Ok(Self {
+            artifacts_dir: dir,
+            dims,
+            grad_mode: GradMode::Adjoint,
+            topology: TopologyCfg::default(),
+            optim: OptimCfg::default(),
+            steps: 100,
+            seed: 0,
+            log_every: 10,
+            log_csv: None,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.dims.validate()?;
+        if self.topology.devices == 0 || self.topology.mig_slots == 0 {
+            bail!("topology needs at least one device and one MIG slot");
+        }
+        if self.topology.devices > self.dims.k {
+            bail!(
+                "Υ={} devices exceed K={} layers (paper shards layer-wise; use Υ ≤ K)",
+                self.topology.devices,
+                self.dims.k
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { name: "t".into(), v: 64, p: 16, n: 16, k: 2, t: 32, w: 8, c: 8, eps: 1e-6 }
+    }
+
+    #[test]
+    fn param_counts() {
+        let d = dims();
+        assert_eq!(d.params_per_layer(), 4 * 16 * 16 + 3 * 16);
+        assert_eq!(d.total_params(), 2 * d.params_per_layer() + 16 * 64);
+    }
+
+    #[test]
+    fn validation_catches_bad_dims() {
+        let mut d = dims();
+        d.c = 7; // does not divide T
+        assert!(d.validate().is_err());
+        let mut d = dims();
+        d.w = 0;
+        assert!(d.validate().is_err());
+        let mut d = dims();
+        d.w = 33;
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let src = r#"{"config": {"name": "x", "V": 64, "P": 16, "N": 16, "K": 2,
+                      "T": 32, "W": 8, "C": 8, "eps": 1e-6}, "entries": {}}"#;
+        let j = Json::parse(src).unwrap();
+        let d = ModelDims::from_manifest_json(&j).unwrap();
+        assert_eq!(d, dims_named("x"));
+    }
+
+    fn dims_named(name: &str) -> ModelDims {
+        let mut d = dims();
+        d.name = name.into();
+        d
+    }
+
+    #[test]
+    fn grad_mode_parses() {
+        assert_eq!("adjoint".parse::<GradMode>().unwrap(), GradMode::Adjoint);
+        assert_eq!("bptt".parse::<GradMode>().unwrap(), GradMode::Bptt);
+        assert!("x".parse::<GradMode>().is_err());
+    }
+
+    #[test]
+    fn run_config_validates_topology() {
+        let cfg = RunConfig {
+            artifacts_dir: "/tmp".into(),
+            dims: dims(),
+            grad_mode: GradMode::Adjoint,
+            topology: TopologyCfg { devices: 3, ..Default::default() },
+            optim: OptimCfg::default(),
+            steps: 1,
+            seed: 0,
+            log_every: 1,
+            log_csv: None,
+        };
+        assert!(cfg.validate().is_err()); // 3 devices > 2 layers
+    }
+}

@@ -1,0 +1,151 @@
+//! Autoregressive generation — the SSM's O(1)-state decode path.
+//!
+//! Training (Alg. 1) runs whole sequences through `layer_fwd`; serving
+//! instead carries one N-vector of state per layer and advances all K
+//! layers one token at a time via the `layer_step` artifact, then samples
+//! from `y_K Ω` on the host. This is the constant-memory inference the
+//! SSM papers advertise (no KV cache), and it doubles as a strong
+//! correctness check: stepping token-by-token must reproduce `layer_fwd`'s
+//! full-sequence outputs exactly (see rust/tests/generation.rs).
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelDims;
+use crate::model::ParamSet;
+use crate::rng::Rng;
+use crate::runtime::ArtifactSet;
+use crate::tensor::{Arg, Tensor};
+
+/// Carried decode state: h ∈ R^N per layer.
+pub struct DecodeState {
+    pub h: Vec<Tensor>,
+}
+
+impl DecodeState {
+    pub fn zeros(dims: &ModelDims) -> Self {
+        Self { h: (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect() }
+    }
+}
+
+/// Advance the whole stack by one token id; returns the logits row (V,).
+pub fn step_token(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    state: &mut DecodeState,
+    token: i32,
+) -> Result<Tensor> {
+    let entry = arts.entry("layer_step")?;
+    let t = token as usize;
+    if t >= dims.v {
+        bail!("token id {t} out of vocab {}", dims.v);
+    }
+    let p = dims.p;
+    let y0 = Tensor::new(
+        vec![p],
+        params.embed.data()[t * p..(t + 1) * p].to_vec(),
+    )?;
+    let mut y = y0.clone();
+    let mut xhat = y0.rmsnorm(dims.eps);
+    for k in 0..dims.k {
+        let mut args: Vec<Arg> = params.layers[k].0.iter().cloned().map(Arg::F).collect();
+        args.push(Arg::F(xhat));
+        args.push(Arg::F(y));
+        args.push(Arg::F(state.h[k].clone()));
+        let outs = entry.run(&args)?;
+        let mut it = outs.into_iter();
+        y = it.next().unwrap();
+        xhat = it.next().unwrap();
+        state.h[k] = it.next().unwrap();
+    }
+    // Head on the host: logits = y_K Ω (1×P · P×V).
+    let logits = y.reshape(&[1, p])?.matmul(&params.omega)?;
+    logits.reshape(&[dims.v])
+}
+
+/// Sample from a logits row: argmax at temperature 0, softmax otherwise.
+pub fn sample(logits: &Tensor, temperature: f32, rng: &mut Rng) -> i32 {
+    let data = logits.data();
+    if temperature <= 0.0 {
+        return data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+    }
+    let max = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = data
+        .iter()
+        .map(|&x| (((x - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = exps.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, &e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (exps.len() - 1) as i32
+}
+
+/// Consume a prompt, then generate `n_new` tokens.
+pub fn generate(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    prompt: &[i32],
+    n_new: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Result<Vec<i32>> {
+    if prompt.is_empty() {
+        bail!("prompt must be non-empty");
+    }
+    let mut state = DecodeState::zeros(dims);
+    let mut logits = Tensor::zeros(&[dims.v]);
+    for &tok in prompt {
+        logits = step_token(arts, dims, params, &mut state, tok)?;
+    }
+    let mut out = Vec::with_capacity(n_new);
+    for _ in 0..n_new {
+        let next = sample(&logits, temperature, rng);
+        out.push(next);
+        logits = step_token(arts, dims, params, &mut state, next)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_argmax_at_zero_temperature() {
+        let logits = Tensor::new(vec![4], vec![0.1, 2.0, -1.0, 0.5]).unwrap();
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_respects_distribution() {
+        // Overwhelming logit: sampling should almost always pick it.
+        let logits = Tensor::new(vec![3], vec![10.0, 0.0, 0.0]).unwrap();
+        let mut rng = Rng::new(1);
+        let picks: Vec<i32> = (0..100).map(|_| sample(&logits, 1.0, &mut rng)).collect();
+        let zeros = picks.iter().filter(|&&p| p == 0).count();
+        assert!(zeros > 90, "picked argmax only {zeros}/100 times");
+    }
+
+    #[test]
+    fn sample_high_temperature_spreads() {
+        let logits = Tensor::new(vec![4], vec![1.0, 0.9, 1.1, 1.0]).unwrap();
+        let mut rng = Rng::new(2);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, 5.0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "high temperature should reach all tokens");
+    }
+}

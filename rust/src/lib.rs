@@ -1,0 +1,36 @@
+//! `adjoint_sharding` — reproduction of *Adjoint Sharding for Very Long
+//! Context Training of State Space Models* (Xu, Tavanaei, Asadi,
+//! Bouyarmane; Amazon, 2024/25).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!  * L1/L2 (build-time Python, `python/compile/`): Pallas SSM-scan +
+//!    windowed-adjoint kernels inside a JAX residual-SSM LM, AOT-lowered
+//!    to `artifacts/<config>/*.hlo.txt` by `make artifacts`.
+//!  * L3 (this crate): the Rust coordinator — config, PJRT runtime, layer
+//!    sharding (paper Tables 2–6), the Alg. 1 forward pipeline, the
+//!    Alg. 2–4 adjoint-VJP scheduler, sharded Adam, analytic + live
+//!    memory/FLOP accounting, the data pipeline, and the training loop.
+//!
+//! Python never runs on the training path: after `make artifacts`, the
+//! `adjsh` binary and all examples/benches are self-contained.
+
+pub mod adjoint;
+pub mod baselines;
+pub mod config;
+pub mod data;
+pub mod generate;
+pub mod memcost;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod pipeline;
+pub mod reports;
+pub mod rng;
+pub mod runtime;
+pub mod sharding;
+pub mod tensor;
+pub mod topology;
+pub mod train;
+pub mod util;
+
+pub use anyhow::Result;

@@ -1,0 +1,203 @@
+//! `adjsh` — the adjoint-sharding training launcher & report generator.
+//!
+//! Subcommands:
+//!   train         run the training loop (adjoint or bptt grad mode)
+//!   eval          held-out loss of a fresh model (sanity)
+//!   inspect       print an artifact manifest + dims + parameter counts
+//!   bench <name>  regenerate a paper table/figure: fig1 | table1 | fig6 |
+//!                 vjp-count | max-context | tbar-sweep | topology
+//!
+//! Examples:
+//!   adjsh train --config tiny --steps 50 --grad-mode adjoint
+//!   adjsh bench fig1
+//!   adjsh bench vjp-count --t 10000 --tbar 2000
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use adjoint_sharding::config::{GradMode, RunConfig};
+use adjoint_sharding::data::{CopyTask, MarkovCorpus};
+use adjoint_sharding::reports;
+use adjoint_sharding::runtime::Runtime;
+use adjoint_sharding::train::Trainer;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut cli = Cli::from_env()?;
+    let cmd = cli.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "train" => cmd_train(&mut cli),
+        "eval" => cmd_eval(&mut cli),
+        "generate" => cmd_generate(&mut cli),
+        "inspect" => cmd_inspect(&mut cli),
+        "bench" => cmd_bench(&mut cli),
+        "" | "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+adjsh — adjoint sharding for very long context SSM training (repro)
+
+commands:
+  train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
+            [--checkpoint out.ckpt] [--resume in.ckpt]
+  eval      --config <name> [--batches N]
+  generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
+  inspect   --config <name>
+  bench     fig1 | table1 | fig6 | vjp-count | max-context | tbar-sweep |
+            chunk-size | topology
+  help
+
+common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>";
+
+fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
+    let artifacts = PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"));
+    let config = cli.str_or("config", "tiny", "artifact config name");
+    let mut cfg = RunConfig::load(&artifacts, &config)?;
+    cfg.steps = cli.usize_or("steps", 100, "training steps")?;
+    cfg.seed = cli.usize_or("seed", 0, "rng seed")? as u64;
+    cfg.grad_mode = cli
+        .str_or("grad-mode", "adjoint", "gradient mode: adjoint|bptt")
+        .parse::<GradMode>()?;
+    cfg.topology.devices = cli.usize_or("devices", 1, "simulated devices Υ")?;
+    cfg.topology.mig_slots = cli.usize_or("mig-slots", 7, "MIG slots per device")?;
+    cfg.optim.lr = cli.f64_or("lr", 1e-3, "Adam learning rate")? as f32;
+    cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
+    let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
+    cfg.log_csv = (!csv.is_empty()).then(|| PathBuf::from(csv));
+    Ok(cfg)
+}
+
+fn make_corpus(cli: &mut Cli, vocab: usize, seed: u64) -> Box<dyn adjoint_sharding::data::Corpus> {
+    match cli.str_or("task", "markov", "corpus: markov|copy").as_str() {
+        "copy" => Box::new(CopyTask::new(vocab, 8, seed)),
+        _ => Box::new(MarkovCorpus::new(vocab, seed)),
+    }
+}
+
+fn cmd_train(cli: &mut Cli) -> Result<()> {
+    let cfg = build_run_config(cli)?;
+    let corpus = make_corpus(cli, cfg.dims.v, cfg.seed);
+    let steps = cfg.steps;
+    let rt = Rc::new(Runtime::cpu()?);
+    println!(
+        "training '{}': {} params, K={} T={} W={} C={} Υ={} mode={:?}",
+        cfg.dims.name,
+        cfg.dims.total_params(),
+        cfg.dims.k,
+        cfg.dims.t,
+        cfg.dims.w,
+        cfg.dims.c,
+        cfg.topology.devices,
+        cfg.grad_mode
+    );
+    let resume = cli.str_or("resume", "", "checkpoint to resume from ('' = fresh)");
+    let checkpoint = cli.str_or("checkpoint", "", "checkpoint path to save at end ('' = none)");
+    let mut trainer = Trainer::new(rt, cfg, corpus)?;
+    if !resume.is_empty() {
+        trainer.resume_from(std::path::Path::new(&resume))?;
+        println!("resumed from {resume}");
+    }
+    trainer.run(steps)?;
+    if !checkpoint.is_empty() {
+        trainer.save_checkpoint(std::path::Path::new(&checkpoint))?;
+        println!("saved checkpoint to {checkpoint}");
+    }
+    let eval = trainer.eval_loss(2)?;
+    println!("held-out loss: {eval:.4}");
+    Ok(())
+}
+
+fn cmd_eval(cli: &mut Cli) -> Result<()> {
+    let cfg = build_run_config(cli)?;
+    let corpus = make_corpus(cli, cfg.dims.v, cfg.seed);
+    let batches = cli.usize_or("batches", 4, "eval batches")?;
+    let rt = Rc::new(Runtime::cpu()?);
+    let mut trainer = Trainer::new(rt, cfg, corpus)?;
+    let loss = trainer.eval_loss(batches)?;
+    println!("loss (untrained): {loss:.4}");
+    Ok(())
+}
+
+fn cmd_generate(cli: &mut Cli) -> Result<()> {
+    let cfg = build_run_config(cli)?;
+    let resume = cli.str_or("resume", "", "checkpoint to load ('' = fresh init)");
+    let prompt_s = cli.str_or("prompt", "1,2,3", "comma-separated prompt token ids");
+    let n_new = cli.usize_or("tokens", 32, "tokens to generate")?;
+    let temperature = cli.f64_or("temperature", 0.8, "sampling temperature (0 = greedy)")? as f32;
+
+    let prompt: Vec<i32> = prompt_s
+        .split(',')
+        .map(|s| s.trim().parse::<i32>().map_err(|_| anyhow::anyhow!("bad prompt token '{s}'")))
+        .collect::<Result<_>>()?;
+
+    let rt = Rc::new(Runtime::cpu()?);
+    let arts = adjoint_sharding::runtime::ArtifactSet::load(rt, &cfg.artifacts_dir)?;
+    let params = if resume.is_empty() {
+        adjoint_sharding::model::ParamSet::init(&cfg.dims, cfg.seed)
+    } else {
+        let (p, step) = adjoint_sharding::model::ParamSet::load(std::path::Path::new(&resume))?;
+        println!("loaded checkpoint {resume} (step {step})");
+        p
+    };
+    let mut rng = adjoint_sharding::rng::Rng::new(cfg.seed);
+    let out = adjoint_sharding::generate::generate(
+        &arts, &cfg.dims, &params, &prompt, n_new, temperature, &mut rng,
+    )?;
+    println!("prompt: {prompt:?}");
+    println!("generated ({n_new} tokens @ T={temperature}): {out:?}");
+    Ok(())
+}
+
+fn cmd_inspect(cli: &mut Cli) -> Result<()> {
+    let cfg = build_run_config(cli)?;
+    println!("config '{}': {:?}", cfg.dims.name, cfg.dims);
+    println!(
+        "params: {} total ({} / layer × {} layers + {} head)",
+        cfg.dims.total_params(),
+        cfg.dims.params_per_layer(),
+        cfg.dims.k,
+        cfg.dims.head_params()
+    );
+    let manifest = adjoint_sharding::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    for (name, e) in &manifest.entries {
+        println!(
+            "entry {name}: {} inputs ({} B), {} outputs ({} B)",
+            e.inputs.len(),
+            e.input_bytes(),
+            e.outputs.len(),
+            e.output_bytes()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(cli: &mut Cli) -> Result<()> {
+    let which = cli.positional.get(1).cloned().unwrap_or_default();
+    match which.as_str() {
+        "fig1" => reports::fig1(cli),
+        "table1" => reports::table1(cli),
+        "fig6" => reports::fig6(cli),
+        "vjp-count" => reports::vjp_count(cli),
+        "max-context" => reports::max_context(cli),
+        "tbar-sweep" => reports::tbar_sweep(cli),
+        "chunk-size" => reports::chunk_size(cli),
+        "topology" => reports::topology_scaling(cli),
+        other => bail!(
+            "unknown bench '{other}' (fig1|table1|fig6|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
+        ),
+    }
+}

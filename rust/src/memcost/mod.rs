@@ -1,0 +1,371 @@
+//! Analytic memory/FLOP cost models — the quantitative backbone for the
+//! paper's evaluation artifacts:
+//!   * Table 1: per-VJP memory & FLOPs for unstructured/diagonal/scalar SSMs
+//!   * Fig. 1: training memory vs model size, backprop vs adjoint sharding
+//!   * Fig. 6: training days/epoch vs context length
+//!   * abstract claims: 3× memory @ 1M ctx, max-context 35K → >100K
+//!
+//! The paper computes these in FP16 units with closed forms (§4.5 states
+//! its Fig. 6 "assumed a 280× acceleration"); we reproduce the same closed
+//! forms, and *calibrate* the per-element constants against live byte
+//! accounting from the simulated fleet at CPU scale (EXPERIMENTS.md §Fig1).
+
+use crate::config::ModelDims;
+
+/// Bytes per number in the paper's accounting (FP16).
+pub const FP16: u64 = 2;
+
+// ---------------------------------------------------------------------------
+// Table 1 — per-VJP cost for the three SSM families.
+// The selection network is a single-layer MLP: P inputs → `out` outputs,
+// |θ| = P·out + out, biggest parameter vector |θ|* = P·out.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SsmFamily {
+    Unstructured,
+    Diagonal,
+    Scalar,
+}
+
+impl SsmFamily {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SsmFamily::Unstructured => "Unstructured",
+            SsmFamily::Diagonal => "Diagonal",
+            SsmFamily::Scalar => "Scalar",
+        }
+    }
+
+    /// Output dimension of the A-network for hidden size N.
+    pub fn a_out(&self, n: u64) -> u64 {
+        match self {
+            SsmFamily::Unstructured => n * n,
+            SsmFamily::Diagonal => n,
+            SsmFamily::Scalar => 1,
+        }
+    }
+}
+
+/// Per-VJP cost of pulling a cotangent through one selection MLP
+/// (Table 1 row): memory elements bs·(out + |θ|*) + |θ|, FLOPs bs·out·(2P+1).
+#[derive(Debug, Clone, Copy)]
+pub struct VjpCost {
+    pub mem_elems: u64,
+    pub flops: u64,
+}
+
+pub fn vjp_cost(p: u64, out: u64, bs: u64) -> VjpCost {
+    let theta = p * out + out;
+    let theta_star = p * out;
+    VjpCost {
+        mem_elems: bs * (out + theta_star) + theta,
+        flops: bs * out * (2 * p + 1),
+    }
+}
+
+/// Full Table-1 row for a family: (vjp_A, vjp_B, vjp_C) costs.
+/// B and C networks output N elements in all three families (Table 1).
+pub fn table1_row(fam: SsmFamily, p: u64, n: u64, bs: u64) -> [VjpCost; 3] {
+    [
+        vjp_cost(p, fam.a_out(n), bs),
+        vjp_cost(p, n, bs),
+        vjp_cost(p, n, bs),
+    ]
+}
+
+/// §4.5 worked example: "computing vjp_A, vjp_B, vjp_C each takes around
+/// 0.6 MB memory and 1798144 FLOPs" at P=128, N=225, bs=8 (diagonal, FP16).
+/// The paper also states each VJP takes bs(7NP + 3N) FLOPs once the
+/// amortized adjoint-state cost (NP per state) is folded in.
+pub fn paper_4_5_example() -> (f64, u64) {
+    let (p, n, bs) = (128u64, 225u64, 8u64);
+    let mem_bytes = table1_row(SsmFamily::Diagonal, p, n, bs)[0].mem_elems * FP16;
+    let flops_with_adjoint = bs * (7 * n * p + 3 * n);
+    (mem_bytes as f64 / 1e6, flops_with_adjoint)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — training memory vs model size.
+// ---------------------------------------------------------------------------
+
+/// The five model sizes of Fig. 1 mapped to (P, N, K) with our layer
+/// parameterization (4PN + 3N per layer; labels are the paper's).
+pub fn fig1_models() -> Vec<(&'static str, ModelDims)> {
+    let mk = |name: &'static str, p: usize, n: usize, k: usize| {
+        (
+            name,
+            ModelDims {
+                name: name.to_string(),
+                v: 256,
+                p,
+                n,
+                k,
+                t: 1,
+                w: 1,
+                c: 1,
+                eps: 1e-6,
+            },
+        )
+    };
+    vec![
+        mk("32M", 512, 512, 30),
+        mk("63M", 512, 512, 60),
+        mk("127M", 1024, 1024, 30),
+        mk("225M", 1024, 1024, 53),
+        mk("1.27B", 2048, 2048, 75),
+    ]
+}
+
+/// Calibration constants measured from the live byte accountant at CPU
+/// scale (defaults = pure closed-form; `calibrate` overwrites).
+#[derive(Debug, Clone, Copy)]
+pub struct MemModel {
+    /// Numbers stored per (token, layer) by backprop's autograd graph,
+    /// in units of N and P: act = an·N + ap·P elements.
+    pub bp_act_n: f64,
+    pub bp_act_p: f64,
+    /// Numbers stored per (token, layer) by adjoint sharding (paper
+    /// Tables 2–5: h, a, c → N each; ŷ → P).
+    pub as_act_n: f64,
+    pub as_act_p: f64,
+    /// Bytes per stored number.
+    pub bytes_per_elem: f64,
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        // Closed-form defaults from the layer math: backprop's autograd
+        // graph keeps x̂(P), the two σ pre-activations (2N), a,b,h,c,c⊙h
+        // (5N), ỹ,y (2P) per (t,k) → 7N + 3P; adjoint sharding keeps only
+        // h,a,c (3N) + ŷ(P) (paper Tables 2–5).
+        Self { bp_act_n: 7.0, bp_act_p: 3.0, as_act_n: 3.0, as_act_p: 1.0, bytes_per_elem: FP16 as f64 }
+    }
+}
+
+/// Training-memory estimate, bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct MemEstimate {
+    pub params: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub logits: u64,
+}
+
+impl MemEstimate {
+    pub fn total(&self) -> u64 {
+        self.params + self.grads + self.optimizer + self.activations + self.logits
+    }
+}
+
+impl MemModel {
+    /// Backprop on `devices` data-parallel-free devices (the paper's Fig. 1
+    /// is one GPU): the whole autograd graph is live at once.
+    pub fn backprop(&self, d: &ModelDims, t: u64, bs: u64, devices: u64) -> MemEstimate {
+        let theta = d.total_params() as u64;
+        let be = self.bytes_per_elem;
+        let act_per_tk = self.bp_act_n * d.n as f64 + self.bp_act_p * d.p as f64;
+        MemEstimate {
+            params: (theta as f64 * be) as u64,
+            grads: (theta as f64 * be) as u64,
+            optimizer: (2.0 * theta as f64 * be) as u64,
+            activations: (bs as f64 * t as f64 * d.k as f64 * act_per_tk * be / devices as f64)
+                as u64,
+            logits: (2.0 * bs as f64 * t as f64 * d.v as f64 * be) as u64,
+        }
+    }
+
+    /// Adjoint sharding on Υ devices (paper §4.4): activations, params,
+    /// grads, and optimizer state all shard by layer; the dl/dy cotangents
+    /// (T·P) replicate; VJP transients are bounded by chunk size × slots.
+    pub fn adjoint(
+        &self,
+        d: &ModelDims,
+        t: u64,
+        bs: u64,
+        devices: u64,
+        chunk: u64,
+        window: u64,
+        mig_slots: u64,
+    ) -> MemEstimate {
+        let theta = d.total_params() as u64;
+        let be = self.bytes_per_elem;
+        let act_per_tk = self.as_act_n * d.n as f64 + self.as_act_p * d.p as f64;
+        let stored = bs as f64 * t as f64 * d.k as f64 * act_per_tk * be / devices as f64
+            + bs as f64 * t as f64 * d.p as f64 * be; // cotangents, replicated
+        // Transient per in-flight chunk call: ext inputs + per-layer grads.
+        let ext = (chunk + window) as f64 * (2.0 * d.n as f64 + d.p as f64)
+            + chunk as f64 * (2.0 * d.n as f64 + d.p as f64);
+        let transient =
+            mig_slots as f64 * (bs as f64 * ext * be + d.params_per_layer() as f64 * be);
+        MemEstimate {
+            params: (theta as f64 * be / devices as f64) as u64,
+            grads: (theta as f64 * be / devices as f64) as u64,
+            optimizer: (2.0 * theta as f64 * be / devices as f64) as u64,
+            activations: (stored + transient) as u64,
+            logits: (2.0 * bs as f64 * chunk as f64 * d.v as f64 * be) as u64,
+        }
+    }
+
+    /// Largest context length trainable under `budget_bytes`, by bisection.
+    pub fn max_context(
+        &self,
+        d: &ModelDims,
+        bs: u64,
+        devices: u64,
+        budget_bytes: u64,
+        adjoint: bool,
+        window: u64,
+        mig_slots: u64,
+    ) -> u64 {
+        let fits = |t: u64| {
+            let est = if adjoint {
+                self.adjoint(d, t, bs, devices, (t / 8).max(1), window.min(t), mig_slots)
+            } else {
+                self.backprop(d, t, bs, devices)
+            };
+            est.total() <= budget_bytes
+        };
+        if !fits(1) {
+            return 0;
+        }
+        let (mut lo, mut hi) = (1u64, 1u64 << 32);
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — training time per epoch vs context length.
+// ---------------------------------------------------------------------------
+
+/// Time model inputs: measured per-VJP seconds (from the Table-1 probe
+/// bench on this host) and the paper's parallelism assumptions.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeModel {
+    /// Seconds per paper-unit VJP (single stream, this host or H100).
+    pub vjp_s: f64,
+    /// Parallel speedup factor (paper Fig. 6: 280× from five P4s).
+    pub parallel: f64,
+    /// Seconds per token per layer of a sequential backprop scan step.
+    pub bp_step_s: f64,
+    /// Sequences per epoch.
+    pub seqs_per_epoch: f64,
+}
+
+impl TimeModel {
+    /// Days per epoch at context length T for a K-layer model.
+    pub fn days_adjoint(&self, t: u64, k: u64, tbar: Option<u64>) -> f64 {
+        let per_net = match tbar {
+            None => crate::sharding::vjp_count_full(t),
+            Some(w) => crate::sharding::vjp_count_truncated(t, w),
+        };
+        // A and B nets: per_net each; C net: T. All layers.
+        let vjps = (2 * per_net + t) as f64 * k as f64;
+        vjps * self.vjp_s / self.parallel * self.seqs_per_epoch / 86_400.0
+    }
+
+    /// Backprop is sequential over T (cannot use the VJP-level parallelism).
+    pub fn days_backprop(&self, t: u64, k: u64) -> f64 {
+        (t as f64) * (k as f64) * self.bp_step_s * self.seqs_per_epoch / 86_400.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_formulas_match_paper_shapes() {
+        let (p, n, bs) = (128, 225, 8);
+        let row = table1_row(SsmFamily::Diagonal, p, n, bs);
+        // Diagonal: all three nets output N → identical cost.
+        assert_eq!(row[0].mem_elems, row[1].mem_elems);
+        assert_eq!(row[0].flops, bs * n * (2 * p + 1));
+        let u = table1_row(SsmFamily::Unstructured, p, n, bs);
+        assert_eq!(u[0].flops, bs * n * n * (2 * p + 1));
+        let s = table1_row(SsmFamily::Scalar, p, n, bs);
+        assert_eq!(s[0].flops, bs * (2 * p + 1));
+    }
+
+    #[test]
+    fn paper_worked_example_magnitudes() {
+        // §4.5: ≈0.6 MB and 1,798,144 FLOPs per VJP.
+        let (mb, flops) = paper_4_5_example();
+        assert!(mb > 0.3 && mb < 1.0, "mem {mb} MB");
+        // bs(7NP+3N) = 8·(7·225·128 + 675) = 1,618,200 — the paper's
+        // 1,798,144 is the same order; both recorded in EXPERIMENTS.md.
+        assert!(flops > 1_000_000 && flops < 2_500_000, "flops {flops}");
+    }
+
+    #[test]
+    fn fig1_model_sizes_are_close_to_labels() {
+        for (label, d) in fig1_models() {
+            let want: f64 = match label {
+                "32M" => 32e6,
+                "63M" => 63e6,
+                "127M" => 127e6,
+                "225M" => 225e6,
+                "1.27B" => 1.27e9,
+                _ => unreachable!(),
+            };
+            let got = d.total_params() as f64;
+            let ratio = got / want;
+            assert!(ratio > 0.9 && ratio < 1.1, "{label}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn adjoint_beats_backprop_at_long_context() {
+        let m = MemModel::default();
+        let (_, d) = &fig1_models()[4]; // 1.27B
+        let bp = m.backprop(d, 1_000_000, 2, 1).total();
+        let as_ = m.adjoint(d, 1_000_000, 2, 1, 2048, 2048, 7).total();
+        assert!(
+            bp as f64 / as_ as f64 > 2.0,
+            "expected ≥2× reduction, got {}",
+            bp as f64 / as_ as f64
+        );
+    }
+
+    #[test]
+    fn memory_monotone_in_context() {
+        let m = MemModel::default();
+        let (_, d) = &fig1_models()[0];
+        let a = m.backprop(d, 1_000, 2, 1).total();
+        let b = m.backprop(d, 10_000, 2, 1).total();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn max_context_bisection_consistent() {
+        let m = MemModel::default();
+        let (_, d) = &fig1_models()[1];
+        let budget = 40u64 << 30;
+        let t_bp = m.max_context(d, 2, 1, budget, false, 0, 7);
+        let t_as = m.max_context(d, 2, 1, budget, true, 2048, 7);
+        assert!(t_as > t_bp, "adjoint max ctx {t_as} ≤ backprop {t_bp}");
+        // Boundary: fits at t, not at t+1.
+        let at = m.backprop(d, t_bp, 2, 1).total();
+        let above = m.backprop(d, t_bp + 1, 2, 1).total();
+        assert!(at <= budget && above > budget);
+    }
+
+    #[test]
+    fn time_model_truncated_is_linear_full_is_quadratic() {
+        let tm = TimeModel { vjp_s: 1e-6, parallel: 280.0, bp_step_s: 1e-5, seqs_per_epoch: 100.0 };
+        let full_ratio = tm.days_adjoint(2000, 100, None) / tm.days_adjoint(1000, 100, None);
+        let trunc_ratio =
+            tm.days_adjoint(2000, 100, Some(100)) / tm.days_adjoint(1000, 100, Some(100));
+        assert!(full_ratio > 3.5, "full should scale ~quadratically, got {full_ratio}");
+        assert!(trunc_ratio < 2.5, "truncated should scale ~linearly, got {trunc_ratio}");
+    }
+}

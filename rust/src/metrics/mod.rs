@@ -1,0 +1,161 @@
+//! Run metrics: counters, per-step records, and a CSV sink for loss
+//! curves and bench reports.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One training step's record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub wall_s: f64,
+    /// Modeled step time on the simulated fleet (critical path).
+    pub virtual_s: f64,
+    /// Peak accounted bytes across devices this step.
+    pub peak_bytes: u64,
+    /// Paper-unit VJPs performed this step (0 for BPTT).
+    pub vjp_units: u64,
+    /// Bytes moved across simulated links this step.
+    pub comm_bytes: u64,
+}
+
+impl StepRecord {
+    pub const CSV_HEADER: &'static str =
+        "step,loss,grad_norm,wall_s,virtual_s,peak_bytes,vjp_units,comm_bytes";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6},{:.6},{:.6},{:.9},{},{},{}",
+            self.step,
+            self.loss,
+            self.grad_norm,
+            self.wall_s,
+            self.virtual_s,
+            self.peak_bytes,
+            self.vjp_units,
+            self.comm_bytes
+        )
+    }
+}
+
+/// Collects step records; optionally mirrors them to a CSV file.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<StepRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&StepRecord> {
+        self.records.last()
+    }
+
+    /// Mean loss over the last `n` records.
+    pub fn mean_recent_loss(&self, n: usize) -> f64 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.peak_bytes).max().unwrap_or(0)
+    }
+
+    pub fn total_vjp_units(&self) -> u64 {
+        self.records.iter().map(|r| r.vjp_units).sum()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(StepRecord::CSV_HEADER);
+        s.push('\n');
+        for r in &self.records {
+            let _ = writeln!(s, "{}", r.to_csv());
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Human-readable byte formatting for reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64, peak: u64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            grad_norm: 1.0,
+            wall_s: 0.1,
+            virtual_s: 0.05,
+            peak_bytes: peak,
+            vjp_units: 10,
+            comm_bytes: 5,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 2.0, 100));
+        r.push(rec(1, 1.5, 200));
+        let csv = r.to_csv();
+        let lines: Vec<_> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], StepRecord::CSV_HEADER);
+        assert!(lines[2].starts_with("1,1.5"));
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut r = Recorder::new();
+        for i in 0..10 {
+            r.push(rec(i, i as f64, i as u64));
+        }
+        assert_eq!(r.peak_bytes(), 9);
+        assert_eq!(r.total_vjp_units(), 100);
+        assert!((r.mean_recent_loss(2) - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 << 30).starts_with("3.00 GiB"));
+    }
+}

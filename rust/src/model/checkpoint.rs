@@ -1,0 +1,145 @@
+//! Checkpointing: a tiny self-describing binary format for `ParamSet`
+//! (magic + version + per-tensor shape & f32-LE payload). Deliberately
+//! dependency-free; resume is exact (bit-identical tensors).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{LayerParams, ParamSet};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"ADJSHCK1";
+
+fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    w.write_all(&(t.rank() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    for &x in t.data() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let rank = u32::from_le_bytes(b4) as usize;
+    if rank > 8 {
+        bail!("implausible tensor rank {rank} — corrupt checkpoint?");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        r.read_exact(&mut b8)?;
+        shape.push(u64::from_le_bytes(b8) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut data = vec![0f32; n];
+    for x in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *x = f32::from_le_bytes(b4);
+    }
+    Tensor::new(shape, data)
+}
+
+impl ParamSet {
+    /// Serialize the full model (layers + Ω + frozen embedding) plus the
+    /// caller's step counter.
+    pub fn save(&self, path: &Path, step: u64) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&step.to_le_bytes())?;
+        w.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+        for l in &self.layers {
+            for t in &l.0 {
+                write_tensor(&mut w, t)?;
+            }
+        }
+        write_tensor(&mut w, &self.omega)?;
+        write_tensor(&mut w, &self.embed)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint; returns (params, step).
+    pub fn load(path: &Path) -> Result<(ParamSet, u64)> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an adjsh checkpoint", path.display());
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let k = u32::from_le_bytes(b4) as usize;
+        if k == 0 || k > 10_000 {
+            bail!("implausible layer count {k} — corrupt checkpoint?");
+        }
+        let mut layers = Vec::with_capacity(k);
+        for _ in 0..k {
+            let tensors = (0..7)
+                .map(|_| read_tensor(&mut r))
+                .collect::<Result<Vec<_>>>()?;
+            layers.push(LayerParams(tensors));
+        }
+        let omega = read_tensor(&mut r)?;
+        let embed = read_tensor(&mut r)?;
+        Ok((ParamSet { layers, omega, embed }, step))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { name: "t".into(), v: 8, p: 4, n: 4, k: 2, t: 8, w: 8, c: 4, eps: 1e-6 }
+    }
+
+    #[test]
+    fn save_load_roundtrip_bit_exact() {
+        let ps = ParamSet::init(&dims(), 3);
+        let path = std::env::temp_dir().join("adjsh_ckpt_roundtrip.bin");
+        ps.save(&path, 41).unwrap();
+        let (loaded, step) = ParamSet::load(&path).unwrap();
+        assert_eq!(step, 41);
+        assert_eq!(loaded.omega, ps.omega);
+        assert_eq!(loaded.embed, ps.embed);
+        for (a, b) in loaded.layers.iter().zip(&ps.layers) {
+            assert_eq!(a.0, b.0);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let path = std::env::temp_dir().join("adjsh_ckpt_garbage.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(ParamSet::load(&path).is_err());
+        assert!(ParamSet::load(Path::new("/nonexistent/ckpt")).is_err());
+    }
+
+    #[test]
+    fn truncated_file_is_clean_error() {
+        let ps = ParamSet::init(&dims(), 3);
+        let path = std::env::temp_dir().join("adjsh_ckpt_trunc.bin");
+        ps.save(&path, 1).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(ParamSet::load(&path).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Host-side model state: parameters, embedding, and the flattening rules
+//! that match the AOT entry points' argument order (the ABI defined in
+//! `python/compile/model.py::LayerParams`).
+
+
+pub mod checkpoint;
+use anyhow::{bail, Result};
+
+use crate::config::ModelDims;
+use crate::rng::Rng;
+use crate::tensor::{IntTensor, Tensor};
+
+/// Per-layer parameter names, in ABI order.
+pub const PARAM_FIELDS: [&str; 7] = ["W_a", "b_a", "W_b", "b_b", "W_g", "b_g", "W_c"];
+
+/// One residual SSM layer's parameters (ABI order).
+#[derive(Debug, Clone)]
+pub struct LayerParams(pub Vec<Tensor>);
+
+impl LayerParams {
+    /// Shapes for one layer given model dims.
+    pub fn shapes(d: &ModelDims) -> Vec<Vec<usize>> {
+        vec![
+            vec![d.p, d.n], // W_a
+            vec![d.n],      // b_a
+            vec![d.p, d.n], // W_b
+            vec![d.n],      // b_b
+            vec![d.p, d.n], // W_g
+            vec![d.n],      // b_g
+            vec![d.n, d.p], // W_c
+        ]
+    }
+
+    /// Init matching `model.init_layer`: N(0, 1/√fan_in), decay bias +2
+    /// so the selective decay a^t starts near σ(2) ≈ 0.88 (long memory).
+    pub fn init(d: &ModelDims, rng: &mut Rng) -> Self {
+        let sp = 1.0 / (d.p as f32).sqrt();
+        let sn = 1.0 / (d.n as f32).sqrt();
+        LayerParams(vec![
+            Tensor::randn(&[d.p, d.n], sp, rng),
+            Tensor::full(&[d.n], 2.0),
+            Tensor::randn(&[d.p, d.n], sp, rng),
+            Tensor::zeros(&[d.n]),
+            Tensor::randn(&[d.p, d.n], sp, rng),
+            Tensor::zeros(&[d.n]),
+            Tensor::randn(&[d.n, d.p], 0.1 * sn, rng), // near-identity residual at init
+        ])
+    }
+
+    pub fn zeros_like(d: &ModelDims) -> Self {
+        LayerParams(Self::shapes(d).iter().map(|s| Tensor::zeros(s)).collect())
+    }
+
+    pub fn w_c(&self) -> &Tensor {
+        &self.0[6]
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.0.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Full model: K layers + head Ω + frozen embedding (DESIGN.md §1: the
+/// paper's Prop. 3 covers SSM parameters; Ω trains at the head device;
+/// the embedding has no gradient path under adjoint sharding and is kept
+/// as a fixed random projection in both grad modes for comparability).
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub layers: Vec<LayerParams>,
+    pub omega: Tensor,  // (P, V)
+    pub embed: Tensor,  // (V, P), frozen
+}
+
+impl ParamSet {
+    pub fn init(d: &ModelDims, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let layers = (0..d.k)
+            .map(|k| LayerParams::init(d, &mut rng.split(k as u64 + 1)))
+            .collect();
+        let omega = Tensor::randn(&[d.p, d.v], 1.0 / (d.p as f32).sqrt(), &mut rng.split(1_000_001));
+        let embed = Tensor::randn(&[d.v, d.p], 1.0, &mut rng.split(1_000_002));
+        ParamSet { layers, omega, embed }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum::<usize>() + self.omega.len()
+    }
+
+    /// Embed a token sequence: y_0^t = E[x^t]  →  (T, P).
+    pub fn embed_tokens(&self, tokens: &IntTensor) -> Result<Tensor> {
+        let v = self.embed.shape()[0];
+        let p = self.embed.shape()[1];
+        let mut data = Vec::with_capacity(tokens.len() * p);
+        for &tok in tokens.data() {
+            let t = tok as usize;
+            if t >= v {
+                bail!("token id {t} out of vocab {v}");
+            }
+            data.extend_from_slice(&self.embed.data()[t * p..(t + 1) * p]);
+        }
+        Tensor::new(vec![tokens.len(), p], data)
+    }
+
+    /// Flatten bptt_grad's parameter argument prefix: l0_W_a … l{K-1}_W_c, Ω.
+    pub fn flatten_for_bptt(&self) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(self.layers.len() * 7 + 1);
+        for l in &self.layers {
+            out.extend(l.0.iter().cloned());
+        }
+        out.push(self.omega.clone());
+        out
+    }
+}
+
+/// Gradient accumulator with the same structure as the trainable params
+/// (layers + Ω; the embedding is frozen).
+#[derive(Debug, Clone)]
+pub struct GradSet {
+    pub layers: Vec<LayerParams>,
+    pub omega: Tensor,
+}
+
+impl GradSet {
+    pub fn zeros(d: &ModelDims) -> Self {
+        GradSet {
+            layers: (0..d.k).map(|_| LayerParams::zeros_like(d)).collect(),
+            omega: Tensor::zeros(&[d.p, d.v]),
+        }
+    }
+
+    /// Accumulate one layer's 7 gradient tensors (Alg. 4 line 7: dL/dθ += Ξ).
+    pub fn accumulate_layer(&mut self, layer: usize, grads: &[Tensor]) -> Result<()> {
+        if grads.len() != 7 {
+            bail!("expected 7 grad tensors, got {}", grads.len());
+        }
+        for (acc, g) in self.layers[layer].0.iter_mut().zip(grads) {
+            acc.add_assign(g)?;
+        }
+        Ok(())
+    }
+
+    /// Global L2 norm over all gradients (for clipping / logging).
+    pub fn global_norm(&self) -> f64 {
+        let mut sq = self.omega.sq_norm();
+        for l in &self.layers {
+            for t in &l.0 {
+                sq += t.sq_norm();
+            }
+        }
+        sq.sqrt()
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.omega.scale(alpha);
+        for l in &mut self.layers {
+            for t in &mut l.0 {
+                t.scale(alpha);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { name: "t".into(), v: 8, p: 4, n: 4, k: 2, t: 8, w: 8, c: 4, eps: 1e-6 }
+    }
+
+    #[test]
+    fn init_shapes_match_abi() {
+        let d = dims();
+        let ps = ParamSet::init(&d, 0);
+        assert_eq!(ps.layers.len(), 2);
+        for l in &ps.layers {
+            let shapes: Vec<_> = l.0.iter().map(|t| t.shape().to_vec()).collect();
+            assert_eq!(shapes, LayerParams::shapes(&d));
+        }
+        assert_eq!(ps.omega.shape(), &[4, 8]);
+        assert_eq!(ps.embed.shape(), &[8, 4]);
+        assert_eq!(
+            ps.num_params(),
+            d.k * d.params_per_layer() + d.head_params()
+        );
+    }
+
+    #[test]
+    fn embed_lookup() {
+        let d = dims();
+        let ps = ParamSet::init(&d, 0);
+        let toks = IntTensor::from_vec(vec![0, 3, 7]);
+        let y0 = ps.embed_tokens(&toks).unwrap();
+        assert_eq!(y0.shape(), &[3, 4]);
+        assert_eq!(&y0.data()[4..8], &ps.embed.data()[3 * 4..4 * 4]);
+        assert!(ps.embed_tokens(&IntTensor::from_vec(vec![8])).is_err());
+    }
+
+    #[test]
+    fn grad_accumulate_and_norm() {
+        let d = dims();
+        let mut g = GradSet::zeros(&d);
+        let ones: Vec<Tensor> = LayerParams::shapes(&d).iter().map(|s| Tensor::ones(s)).collect();
+        g.accumulate_layer(0, &ones).unwrap();
+        g.accumulate_layer(0, &ones).unwrap();
+        let per_layer = d.params_per_layer() as f64;
+        assert!((g.global_norm() - (per_layer * 4.0).sqrt()).abs() < 1e-6);
+        g.scale(0.5);
+        assert!((g.global_norm() - per_layer.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bptt_flatten_order() {
+        let d = dims();
+        let ps = ParamSet::init(&d, 0);
+        let flat = ps.flatten_for_bptt();
+        assert_eq!(flat.len(), d.k * 7 + 1);
+        assert_eq!(flat[6], ps.layers[0].0[6]);
+        assert_eq!(flat[13], ps.layers[1].0[6]);
+        assert_eq!(flat[14], ps.omega);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let d = dims();
+        let a = ParamSet::init(&d, 42);
+        let b = ParamSet::init(&d, 42);
+        assert_eq!(a.omega, b.omega);
+        assert_eq!(a.layers[1].0[0], b.layers[1].0[0]);
+    }
+}

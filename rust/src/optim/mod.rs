@@ -1,0 +1,216 @@
+//! Optimizers over the model's parameter structure. Per the paper's
+//! Table 6, optimizer state is *sharded*: each simulated device holds the
+//! Adam moments only for its own layers; the head device holds Ω's.
+//! The coordinator realizes that by building one `Adam` per parameter
+//! group and letting `topology` account the state bytes device-locally.
+
+use anyhow::{bail, Result};
+
+use crate::model::{GradSet, ParamSet};
+use crate::tensor::Tensor;
+
+/// Adam with optional decoupled weight decay and global-norm clipping.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(shapes: &[Vec<usize>], lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Adam {
+            lr,
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            step: 0,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.m.iter().map(|t| t.size_bytes()).sum::<usize>()
+            + self.v.iter().map(|t| t.size_bytes()).sum::<usize>()
+    }
+
+    /// One update over a parameter group. `params` and `grads` must align
+    /// with the shapes this optimizer was built with.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        if params.len() != self.m.len() || grads.len() != self.m.len() {
+            bail!(
+                "param group size mismatch: {} params, {} grads, {} slots",
+                params.len(),
+                grads.len(),
+                self.m.len()
+            );
+        }
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            if p.shape() != g.shape() {
+                bail!("shape mismatch {:?} vs {:?}", p.shape(), g.shape());
+            }
+            let (pd, gd) = (p.data_mut(), g.data());
+            let (md, vd) = (m.data_mut(), v.data_mut());
+            for i in 0..pd.len() {
+                let gi = gd[i];
+                md[i] = self.beta1 * md[i] + (1.0 - self.beta1) * gi;
+                vd[i] = self.beta2 * vd[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                // Decoupled weight decay (AdamW-style).
+                pd[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * pd[i]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Plain SGD — used in tests and as a cheap ablation.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        if params.len() != grads.len() {
+            bail!("param/grad group size mismatch");
+        }
+        for (p, g) in params.iter_mut().zip(grads) {
+            p.axpy(-self.lr, g)?;
+        }
+        Ok(())
+    }
+}
+
+/// Sharded optimizer bank: one Adam per layer (+ one for Ω), mirroring
+/// Table 6's "Gradient_k on device of θ_k".
+#[derive(Debug)]
+pub struct ShardedAdam {
+    pub per_layer: Vec<Adam>,
+    pub head: Adam,
+}
+
+impl ShardedAdam {
+    pub fn new(params: &ParamSet, cfg: &crate::config::OptimCfg) -> Self {
+        let mk = |shapes: &[Vec<usize>]| {
+            Adam::new(shapes, cfg.lr, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+        };
+        let per_layer = params
+            .layers
+            .iter()
+            .map(|l| mk(&l.0.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()))
+            .collect();
+        let head = mk(&[params.omega.shape().to_vec()]);
+        ShardedAdam { per_layer, head }
+    }
+
+    /// Apply one step, with optional global-norm clipping applied to the
+    /// whole GradSet first (matching standard distributed practice: clip
+    /// with the *global* norm, then update shards locally).
+    pub fn step(
+        &mut self,
+        params: &mut ParamSet,
+        grads: &mut GradSet,
+        grad_clip: Option<f32>,
+    ) -> Result<f64> {
+        let norm = grads.global_norm();
+        if let Some(clip) = grad_clip {
+            if norm > clip as f64 && norm > 0.0 {
+                grads.scale(clip / norm as f32);
+            }
+        }
+        for (k, opt) in self.per_layer.iter_mut().enumerate() {
+            opt.step(&mut params.layers[k].0, &grads.layers[k].0)?;
+        }
+        self.head
+            .step(std::slice::from_mut(&mut params.omega), std::slice::from_ref(&grads.omega))?;
+        Ok(norm)
+    }
+
+    /// Optimizer state bytes for device accounting (per layer k).
+    pub fn layer_state_bytes(&self, k: usize) -> usize {
+        self.per_layer[k].state_bytes()
+    }
+
+    pub fn head_state_bytes(&self) -> usize {
+        self.head.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDims, OptimCfg};
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = ||x - 3||²; Adam should converge near 3.
+        let mut p = vec![Tensor::zeros(&[4])];
+        let mut opt = Adam::new(&[vec![4]], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        for _ in 0..300 {
+            let g = {
+                let mut g = p[0].clone();
+                for x in g.data_mut() {
+                    *x = 2.0 * (*x - 3.0);
+                }
+                g
+            };
+            opt.step(&mut p, &[g]).unwrap();
+        }
+        for &x in p[0].data() {
+            assert!((x - 3.0).abs() < 0.05, "x={x}");
+        }
+    }
+
+    #[test]
+    fn adam_rejects_mismatched_groups() {
+        let mut opt = Adam::new(&[vec![2]], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])];
+        let g = vec![Tensor::zeros(&[2])];
+        assert!(opt.step(&mut p, &g).is_err());
+    }
+
+    #[test]
+    fn sgd_step_direction() {
+        let sgd = Sgd { lr: 0.5 };
+        let mut p = vec![Tensor::ones(&[2])];
+        let g = vec![Tensor::ones(&[2])];
+        sgd.step(&mut p, &g).unwrap();
+        assert_eq!(p[0].data(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn sharded_adam_clips_global_norm() {
+        let d = ModelDims { name: "t".into(), v: 8, p: 4, n: 4, k: 2, t: 8, w: 8, c: 4, eps: 1e-6 };
+        let mut params = ParamSet::init(&d, 0);
+        let mut opt = ShardedAdam::new(&params, &OptimCfg::default());
+        let mut grads = GradSet::zeros(&d);
+        grads.omega = Tensor::full(&[4, 8], 100.0);
+        let norm_before = grads.global_norm();
+        let reported = opt.step(&mut params, &mut grads, Some(1.0)).unwrap();
+        assert!((reported - norm_before).abs() < 1e-6);
+        assert!((grads.global_norm() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn state_bytes_counts_two_moments() {
+        let opt = Adam::new(&[vec![10], vec![5]], 0.1, 0.9, 0.999, 1e-8, 0.0);
+        assert_eq!(opt.state_bytes(), 2 * (10 + 5) * 4);
+    }
+}

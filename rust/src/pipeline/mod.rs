@@ -1,0 +1,136 @@
+//! Alg. 1 — forward step in evaluation mode on the (simulated) distributed
+//! fleet: each device runs its contiguous block of layers over the full
+//! sequence, stores the activations the adjoint phase needs (Tables 2–5),
+//! and hands the residual stream to the next device; the head device
+//! computes the loss, the dl/dy_K cotangents, and dΩ, then broadcasts the
+//! cotangents to every device (line 15).
+
+use anyhow::Result;
+
+use crate::config::ModelDims;
+use crate::model::ParamSet;
+use crate::runtime::ArtifactSet;
+use crate::tensor::{Arg, IntTensor, Tensor};
+use crate::topology::{ActKind, Fleet};
+
+/// Everything the backward phase (and the logs) need from one forward pass.
+#[derive(Debug)]
+pub struct ForwardOutput {
+    pub loss: f64,
+    /// Final residual stream y_K (T, P) — kept for diagnostics.
+    pub y_k: Tensor,
+    /// dl/dy_K cotangents (T, P), broadcast to all devices.
+    pub cotangents: Tensor,
+    /// Head gradient dΩ (computed exactly at the head device).
+    pub d_omega: Tensor,
+    /// Modeled fleet-critical-path seconds for this phase.
+    pub virtual_s: f64,
+    /// Wall seconds actually spent in PJRT executions.
+    pub wall_s: f64,
+}
+
+/// Run Alg. 1. Activations are stored on each layer's owning device;
+/// cotangents end up on every device (layer key = usize::MAX).
+pub fn forward(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+) -> Result<ForwardOutput> {
+    let layer_fwd = arts.entry("layer_fwd")?;
+    let head = arts.entry("head_loss")?;
+
+    // Embedding + input norm happen host-side (frozen embedding); account
+    // the input stream on the first device.
+    let y0 = params.embed_tokens(tokens)?;
+    let mut y = y0.clone();
+    let mut xhat = y0.rmsnorm(dims.eps);
+    let first_dev = fleet.device_of_layer(0);
+    fleet.devices[first_dev]
+        .mem
+        .alloc((y.size_bytes() + xhat.size_bytes()) as u64);
+
+    let h0 = Tensor::zeros(&[dims.n]);
+    let mut virtual_s = 0.0;
+    let mut wall_s = 0.0;
+
+    for k in 0..dims.k {
+        let dev = fleet.device_of_layer(k);
+        // Store this layer's *input* sequence ŷ_{k-1} (Table 4).
+        fleet.devices[dev].put(k, ActKind::Xhat, xhat.clone());
+
+        let mut args: Vec<Arg> = params.layers[k].0.iter().cloned().map(Arg::F).collect();
+        args.push(Arg::F(xhat));
+        args.push(Arg::F(y));
+        args.push(Arg::F(h0.clone()));
+        let (outs, secs) = layer_fwd.run_timed(&args)?;
+        wall_s += secs;
+        fleet.charge_compute(dev, secs);
+        virtual_s += secs; // Alg. 1 is sequential across the pipeline.
+
+        let mut it = outs.into_iter();
+        y = it.next().unwrap();
+        xhat = it.next().unwrap();
+        let h = it.next().unwrap();
+        let a = it.next().unwrap();
+        let c = it.next().unwrap();
+        fleet.devices[dev].put(k, ActKind::H, h);
+        fleet.devices[dev].put(k, ActKind::A, a);
+        fleet.devices[dev].put(k, ActKind::C, c);
+
+        // Hand (y, ŷ_k) to the next device in the pipeline.
+        let next_dev = if k + 1 < dims.k {
+            fleet.device_of_layer(k + 1)
+        } else {
+            fleet.head_device()
+        };
+        if next_dev != dev {
+            virtual_s += fleet.send(dev, next_dev, (y.size_bytes() + xhat.size_bytes()) as u64);
+        }
+    }
+
+    // Head: loss, cotangents, dΩ (Alg. 1 lines 13–14).
+    let head_dev = fleet.head_device();
+    let args = vec![
+        Arg::F(params.omega.clone()),
+        Arg::F(y.clone()),
+        Arg::I(targets.clone()),
+    ];
+    let (outs, secs) = head.run_timed(&args)?;
+    wall_s += secs;
+    fleet.charge_compute(head_dev, secs);
+    virtual_s += secs;
+
+    let mut it = outs.into_iter();
+    let loss = it.next().unwrap().item()? as f64;
+    let cotangents = it.next().unwrap();
+    let d_omega = it.next().unwrap();
+
+    // Line 15: cotangents stored on all Υ devices.
+    virtual_s += fleet.broadcast(head_dev, cotangents.size_bytes() as u64);
+    let n_dev = fleet.cfg.devices;
+    for v in 0..n_dev {
+        fleet.devices[v].put(usize::MAX, ActKind::Cotangent, cotangents.clone());
+    }
+
+    Ok(ForwardOutput { loss, y_k: y, cotangents, d_omega, virtual_s, wall_s })
+}
+
+/// Evaluation-only forward: loss without storing anything (for held-out
+/// perplexity). Uses the same executables; clears stores afterwards.
+pub fn eval_loss(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    tokens: &IntTensor,
+    targets: &IntTensor,
+) -> Result<f64> {
+    let out = forward(arts, dims, params, fleet, tokens, targets)?;
+    for d in &mut fleet.devices {
+        d.clear_activations();
+    }
+    Ok(out.loss)
+}

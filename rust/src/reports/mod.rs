@@ -1,0 +1,422 @@
+//! Report generators: one per paper table/figure (+ ablations). Shared by
+//! the `adjsh bench …` subcommands and the `cargo bench` targets so the
+//! same code regenerates every evaluation artifact (DESIGN.md §3).
+//!
+//! Each report prints a paper-vs-ours table; absolute numbers differ (CPU
+//! simulation vs the authors' GPU fleet) but the *shape* — who wins, by
+//! what factor, where crossovers fall — is the reproduction target.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{GradMode, RunConfig};
+use crate::data::MarkovCorpus;
+use crate::memcost::{
+    fig1_models, paper_4_5_example, table1_row, MemModel, SsmFamily, TimeModel, FP16,
+};
+use crate::metrics::fmt_bytes;
+use crate::rng::Rng;
+use crate::runtime::{ArtifactSet, Runtime};
+use crate::sharding;
+use crate::tensor::{Arg, Tensor};
+use crate::train::Trainer;
+use crate::util::bench::{bench, Table};
+use crate::util::cli::Cli;
+
+fn artifacts_root(cli: &mut Cli) -> PathBuf {
+    PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"))
+}
+
+fn have_artifacts(root: &std::path::Path, name: &str) -> bool {
+    root.join(name).join("manifest.json").exists()
+}
+
+/// Train `steps` steps of `config` in `mode` and return (peak bytes, mean
+/// virtual step seconds, total vjp units) — the measured side of Fig. 1.
+fn measure_run(
+    root: &std::path::Path,
+    config: &str,
+    mode: GradMode,
+    devices: usize,
+    steps: usize,
+) -> Result<(u64, f64, u64, f64)> {
+    let rt = Rc::new(Runtime::cpu()?);
+    let mut cfg = RunConfig::load(root, config)?;
+    cfg.grad_mode = mode;
+    cfg.topology.devices = devices.min(cfg.dims.k);
+    cfg.log_every = usize::MAX;
+    let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 7));
+    let mut tr = Trainer::new(rt, cfg, corpus)?;
+    let mut virt = 0.0;
+    let mut loss = 0.0;
+    for _ in 0..steps {
+        let r = tr.step()?;
+        virt += r.virtual_s;
+        loss = r.loss;
+    }
+    Ok((
+        tr.fleet.peak_bytes(),
+        virt / steps as f64,
+        tr.recorder.total_vjp_units(),
+        loss,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — memory vs model size, backprop vs adjoint sharding.
+// ---------------------------------------------------------------------------
+
+pub fn fig1(cli: &mut Cli) -> Result<()> {
+    let t = cli.usize_or("t", 1_000_000, "context length for the model curve")? as u64;
+    let bs = cli.usize_or("bs", 2, "batch size (paper: 2)")? as u64;
+    let measured = cli.bool_or("measured", true, "also measure CPU-scale runs")?;
+    let root = artifacts_root(cli);
+
+    println!("== Fig. 1: training memory vs model size (bs={bs}, Adam, T={t}) ==");
+    println!("   paper setting: one GPU; adjoint uses chunked VJPs (C=2048, W=2048, 7 MIG slots)\n");
+    let m = MemModel::default();
+    let mut table = Table::new(&[
+        "model", "params", "backprop", "adjoint", "ratio", "paper-shape",
+    ]);
+    for (label, d) in fig1_models() {
+        let bp = m.backprop(&d, t, bs, 1).total();
+        let as_ = m.adjoint(&d, t, bs, 1, 2048, 2048, 7).total();
+        table.row(&[
+            label.to_string(),
+            format!("{:.2e}", d.total_params() as f64),
+            fmt_bytes(bp),
+            fmt_bytes(as_),
+            format!("{:.2}×", bp as f64 / as_ as f64),
+            "AS ≪ BP, gap grows with size".into(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper abstract: 'reduces memory usage by up to 3X with a 1.27B model at 1M context'"
+    );
+
+    if measured && have_artifacts(&root, "tiny") && have_artifacts(&root, "small") {
+        println!("\n-- measured (CPU scale, accounted bytes; calibrates the model above) --");
+        let mut mt = Table::new(&["config", "mode", "peak bytes", "virt step", "loss@end"]);
+        for config in ["tiny", "small"] {
+            for (mode, name) in [(GradMode::Bptt, "backprop"), (GradMode::Adjoint, "adjoint")] {
+                let (peak, virt, _, loss) = measure_run(&root, config, mode, 1, 3)?;
+                mt.row(&[
+                    config.into(),
+                    name.into(),
+                    fmt_bytes(peak),
+                    format!("{:.4}s", virt),
+                    format!("{loss:.3}"),
+                ]);
+            }
+        }
+        mt.print();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — per-VJP memory and FLOPs for the three SSM families.
+// ---------------------------------------------------------------------------
+
+pub fn table1(cli: &mut Cli) -> Result<()> {
+    let p = cli.usize_or("p", 128, "token dim P")? as u64;
+    let n = cli.usize_or("n", 225, "state dim N")? as u64;
+    let bs = cli.usize_or("bs", 8, "batch size")? as u64;
+    let measured = cli.bool_or("measured", true, "time the probe artifacts")?;
+    let root = artifacts_root(cli);
+
+    println!("== Table 1: per-VJP memory & FLOPs (P={p}, N={n}, bs={bs}, FP16 units) ==\n");
+    let mut t = Table::new(&[
+        "family", "vjp", "mem (elems)", "mem (bytes)", "FLOPs",
+    ]);
+    for fam in [SsmFamily::Unstructured, SsmFamily::Diagonal, SsmFamily::Scalar] {
+        let row = table1_row(fam, p, n, bs);
+        for (i, name) in ["vjp_A", "vjp_B", "vjp_C"].iter().enumerate() {
+            t.row(&[
+                if i == 0 { fam.label().into() } else { "".into() },
+                name.to_string(),
+                format!("{}", row[i].mem_elems),
+                fmt_bytes(row[i].mem_elems * FP16),
+                format!("{:.3e}", row[i].flops as f64),
+            ]);
+        }
+    }
+    t.print();
+
+    let (mb, flops) = paper_4_5_example();
+    println!("\n§4.5 worked example (diagonal, P=128, N=225, bs=8):");
+    println!("  ours:  {mb:.2} MB per vjp_A working set; bs(7NP+3N) = {flops} FLOPs");
+    println!("  paper: '≈0.6 MB memory and 1798144 FLOPs'");
+
+    if measured && have_artifacts(&root, "probe") {
+        println!("\n-- measured probe timings (this host, f32, interpret-lowered HLO) --");
+        let rt = Rc::new(Runtime::cpu()?);
+        let arts = ArtifactSet::load(rt, &root.join("probe"))?;
+        let mut mt = Table::new(&["probe", "mean", "p95", "GFLOP/s (analytic flops / mean)"]);
+        let mut rng = Rng::new(11);
+        for (probe, fam) in [
+            ("vjp_probe_unstructured", SsmFamily::Unstructured),
+            ("vjp_probe_diagonal", SsmFamily::Diagonal),
+            ("vjp_probe_scalar", SsmFamily::Scalar),
+        ] {
+            let entry = arts.entry(probe)?;
+            let args: Vec<Arg> = entry
+                .spec
+                .inputs
+                .iter()
+                .map(|s| Arg::F(Tensor::randn(&s.shape, 0.1, &mut rng)))
+                .collect();
+            let stats = bench(probe, 2, 10, 0.3, || entry.run(&args).unwrap());
+            let flops = table1_row(fam, p, n, bs)[0].flops as f64;
+            mt.row(&[
+                probe.into(),
+                crate::util::bench::fmt_dur(stats.mean_s),
+                crate::util::bench::fmt_dur(stats.p95_s),
+                format!("{:.2}", flops / stats.mean_s / 1e9),
+            ]);
+        }
+        mt.print();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — training time per epoch vs context length.
+// ---------------------------------------------------------------------------
+
+pub fn fig6(cli: &mut Cli) -> Result<()> {
+    let layers = cli.usize_or("layers", 100, "model layers (paper: 100)")? as u64;
+    let tbar = cli.usize_or("tbar", 2000, "truncation window T̄")? as u64;
+    let parallel = cli.f64_or("parallel", 280.0, "parallel speedup (paper: 280× / five P4s)")?;
+    let seqs = cli.f64_or("seqs", 1000.0, "sequences per epoch (assumption)")?;
+    let root = artifacts_root(cli);
+
+    // Calibrate per-VJP seconds from the diagonal probe when available;
+    // fall back to the paper's H100 arithmetic otherwise.
+    let vjp_s = if have_artifacts(&root, "probe") {
+        let rt = Rc::new(Runtime::cpu()?);
+        let arts = ArtifactSet::load(rt, &root.join("probe"))?;
+        let entry = arts.entry("vjp_probe_diagonal")?;
+        let mut rng = Rng::new(3);
+        let args: Vec<Arg> = entry
+            .spec
+            .inputs
+            .iter()
+            .map(|s| Arg::F(Tensor::randn(&s.shape, 0.1, &mut rng)))
+            .collect();
+        let stats = bench("vjp_probe_diagonal", 2, 10, 0.3, || entry.run(&args).unwrap());
+        println!("calibrated per-VJP time on this host: {}", crate::util::bench::fmt_dur(stats.mean_s));
+        stats.mean_s
+    } else {
+        1e-6
+    };
+
+    let bp_factor = cli.f64_or("bp-factor", 7.0, "BP cost per (t,k) in vjp units (fwd+bwd through 3 selection MLPs + scan + norm ≈ 7 passes)")?;
+    let tm = TimeModel { vjp_s, parallel, bp_step_s: vjp_s * bp_factor, seqs_per_epoch: seqs };
+    println!(
+        "\n== Fig. 6: days/epoch vs context length (K={layers}, T̄={tbar}, parallel={parallel}×) =="
+    );
+    let mut t = Table::new(&[
+        "T (tokens)", "backprop", "adjoint (full)", "truncated AS", "full/trunc",
+    ]);
+    for &ctx in &[15_000u64, 50_000, 100_000, 250_000, 500_000, 1_000_000, 2_500_000] {
+        let bp = tm.days_backprop(ctx, layers);
+        let full = tm.days_adjoint(ctx, layers, None);
+        let trunc = tm.days_adjoint(ctx, layers, Some(tbar));
+        t.row(&[
+            format!("{ctx}"),
+            format!("{bp:.3}d"),
+            format!("{full:.3}d"),
+            format!("{trunc:.3}d"),
+            format!("{:.1}×", full / trunc),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: truncated AS grows linearly; full AS polynomially;");
+    println!("backprop cannot use VJP-level parallelism (and OOMs first — see fig1).");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// §4.3 — VJP count reduction ("64% fewer at T=10K, T̄=2000").
+// ---------------------------------------------------------------------------
+
+pub fn vjp_count(cli: &mut Cli) -> Result<()> {
+    let t = cli.usize_or("t", 10_000, "context length")? as u64;
+    let tbar = cli.usize_or("tbar", 2_000, "truncation window")? as u64;
+    println!("== §4.3: VJP counts per (A|B)-network per layer ==\n");
+    let mut table = Table::new(&[
+        "T", "T̄", "full (T(T+1)/2)", "truncated (enumerated)", "paper formula", "reduction",
+    ]);
+    for &(tt, tb) in &[(1_000u64, 500u64), (10_000, 2_000), (100_000, 2_000), (t, tbar)] {
+        table.row(&[
+            tt.to_string(),
+            tb.to_string(),
+            sharding::vjp_count_full(tt).to_string(),
+            sharding::vjp_count_enumerated(tt, tb).to_string(),
+            sharding::vjp_count_truncated_paper(tt, tb).to_string(),
+            format!("{:.1}%", 100.0 * sharding::vjp_reduction(tt, tb)),
+        ]);
+    }
+    table.print();
+    println!("\npaper §4.3: 'when T̄=2000, truncated adjoint sharding reduces 64% of the");
+    println!("vjps when training with a context length of 10K' — enumerated: {:.1}%",
+        100.0 * sharding::vjp_reduction(10_000, 2_000));
+    println!("(note: the enumerated count matches T̄T − T̄(T̄−1)/2; the paper's stated");
+    println!("closed form T̄T + T̄(T̄−1)/2 double-counts the ramp — both printed above.)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Abstract claims — max trainable context under a memory budget.
+// ---------------------------------------------------------------------------
+
+pub fn max_context(cli: &mut Cli) -> Result<()> {
+    let per_gpu = cli.f64_or("gpu-gb", 40.0, "GB per GPU (P4 = 8×A100-40GB)")?;
+    let gpus = cli.usize_or("gpus", 40, "total GPUs (paper: five P4 = 40)")? as u64;
+    let bs = cli.usize_or("bs", 2, "batch size")? as u64;
+    let budget = (per_gpu * 1e9) as u64;
+
+    println!("== abstract claim: max trainable context, 1.27B model, {gpus}×{per_gpu:.0} GB ==\n");
+    let (_, d) = fig1_models().into_iter().last().unwrap();
+    let m = MemModel::default();
+    let mut t = Table::new(&["mode", "sharding", "budget/device", "max T"]);
+    // Backprop baseline: FSDP-style — params/grads/opt *and* activations
+    // shard across the fleet, but the full autograd graph must be held.
+    let bp1 = m.max_context(&d, bs, 1, budget, false, 0, 7);
+    let bp40 = m.max_context(&d, bs, gpus, budget, false, 0, 7);
+    t.row(&["backprop".into(), "1 GPU (replicated)".into(), fmt_bytes(budget), bp1.to_string()]);
+    t.row(&["backprop".into(), format!("{gpus} GPUs (FSDP)"), fmt_bytes(budget), bp40.to_string()]);
+    // Adjoint: layer-sharded per the paper; transients bounded by chunking.
+    let as_ = m.max_context(&d, bs, gpus, budget, true, 2048, 7);
+    t.row(&["adjoint".into(), format!("{gpus} GPUs (layer-sharded)"), fmt_bytes(budget), as_.to_string()]);
+    t.print();
+    println!(
+        "\npaper: 'increase the maximum context length … from 35K tokens to above 100K tokens\n\
+         on five AWS P4 instances' (≈2.9×) → ratio here vs the FSDP baseline: {:.1}× ({} → {})",
+        as_ as f64 / bp40.max(1) as f64,
+        bp40,
+        as_
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Ablations beyond the paper.
+// ---------------------------------------------------------------------------
+
+/// T̄ sweep: gradient fidelity & cost vs window, using the two tiny
+/// configs (W = T and W < T) plus analytic counts for a window range.
+pub fn tbar_sweep(cli: &mut Cli) -> Result<()> {
+    let root = artifacts_root(cli);
+    println!("== ablation: truncation window T̄ ==\n");
+    let mut t = Table::new(&["T", "T̄", "VJPs/net/layer", "vs full"]);
+    let ctx = 2048u64;
+    for &w in &[64u64, 128, 256, 512, 1024, 2048] {
+        t.row(&[
+            ctx.to_string(),
+            w.to_string(),
+            sharding::vjp_count_truncated(ctx, w).to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - sharding::vjp_reduction(ctx, w))),
+        ]);
+    }
+    t.print();
+
+    if have_artifacts(&root, "tiny") && have_artifacts(&root, "tiny_trunc") {
+        println!("\n-- measured: tiny (W=T=32) vs tiny_trunc (W=8), 5 adjoint steps --");
+        let mut mt = Table::new(&["config", "window", "loss@end", "vjp units", "virt step"]);
+        for config in ["tiny", "tiny_trunc"] {
+            let (peak, virt, vjps, loss) = measure_run(&root, config, GradMode::Adjoint, 1, 5)?;
+            let _ = peak;
+            let w = if config == "tiny" { "32 (full)" } else { "8" };
+            mt.row(&[
+                config.into(),
+                w.into(),
+                format!("{loss:.3}"),
+                vjps.to_string(),
+                format!("{virt:.4}s"),
+            ]);
+        }
+        mt.print();
+    }
+    Ok(())
+}
+
+/// Chunk-size ablation: scheduler granularity C trades dispatch count
+/// against transient working-set bytes (DESIGN.md design-choice call).
+pub fn chunk_size(cli: &mut Cli) -> Result<()> {
+    let root = artifacts_root(cli);
+    println!("== ablation: adjoint chunk size C (same model, W=64, T=256) ==\n");
+    let mut t = Table::new(&[
+        "config", "C", "chunk calls/step", "virt step", "peak bytes", "loss@end",
+    ]);
+    for config in ["small_c16", "small", "small_c256"] {
+        if !have_artifacts(&root, config) {
+            println!("SKIP: artifacts/{config} missing — run `make artifacts`");
+            return Ok(());
+        }
+        let rt = Rc::new(Runtime::cpu()?);
+        let cfg = RunConfig::load(&root, config)?;
+        let calls = cfg.dims.k * cfg.dims.num_chunks();
+        let c = cfg.dims.c;
+        drop(rt);
+        let (peak, virt, _, loss) = measure_run(&root, config, GradMode::Adjoint, 1, 4)?;
+        t.row(&[
+            config.into(),
+            c.to_string(),
+            calls.to_string(),
+            format!("{virt:.4}s"),
+            fmt_bytes(peak),
+            format!("{loss:.3}"),
+        ]);
+    }
+    t.print();
+    println!("\nsmaller C → more dispatches (overhead) but smaller transients;");
+    println!("larger C → fewer dispatches but bigger per-call working set.");
+    Ok(())
+}
+
+/// Υ scaling: per-device memory and modeled step time (paper §4.4's
+/// "memory per GPU close to Mem/Υ").
+pub fn topology_scaling(cli: &mut Cli) -> Result<()> {
+    let root = artifacts_root(cli);
+    let devices = cli.usize_list_or("devices", &[1, 2, 4], "Υ values to sweep")?;
+    let config = cli.str_or("config", "small", "artifact config");
+    if !have_artifacts(&root, &config) {
+        println!("SKIP: artifacts/{config} missing — run `make artifacts`");
+        return Ok(());
+    }
+    println!("== §4.4: Υ scaling on '{config}' (adjoint mode, 2 steps) ==\n");
+    let mut t = Table::new(&["Υ", "peak bytes/device", "virt step", "comm bytes/step"]);
+    for &d in &devices {
+        let rt = Rc::new(Runtime::cpu()?);
+        let mut cfg = RunConfig::load(&root, &config)?;
+        if d > cfg.dims.k {
+            continue;
+        }
+        cfg.grad_mode = GradMode::Adjoint;
+        cfg.topology.devices = d;
+        cfg.log_every = usize::MAX;
+        let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 7));
+        let mut tr = Trainer::new(rt, cfg, corpus)?;
+        let mut virt = 0.0;
+        let mut comm = 0u64;
+        for _ in 0..2 {
+            let r = tr.step()?;
+            virt += r.virtual_s;
+            comm += r.comm_bytes;
+        }
+        t.row(&[
+            d.to_string(),
+            fmt_bytes(tr.fleet.peak_bytes()),
+            format!("{:.4}s", virt / 2.0),
+            fmt_bytes(comm / 2),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: peak/device ≈ Mem/Υ; comm grows mildly (pipeline hand-offs + broadcast).");
+    Ok(())
+}

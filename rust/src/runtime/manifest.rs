@@ -1,0 +1,162 @@
+//! Artifact manifest: the shape/dtype contract emitted by
+//! `python/compile/aot.py` alongside the HLO text files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT entry point: ordered inputs and outputs.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|t| t.elements() * t.dtype.size_bytes()).sum()
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        self.outputs.iter().map(|t| t.elements() * t.dtype.size_bytes()).sum()
+    }
+}
+
+/// Parsed `manifest.json` for one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub raw_config: Json,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec { name: name.clone(), inputs, outputs },
+            );
+        }
+        Ok(Manifest { raw_config: j.get("config")?.clone(), entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "config": {"name": "tiny"},
+      "entries": {
+        "head_loss": {
+          "name": "head_loss",
+          "inputs": [
+            {"name": "omega", "shape": [16, 64], "dtype": "f32"},
+            {"name": "targets", "shape": [32], "dtype": "i32"}
+          ],
+          "outputs": [{"name": "out0", "shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_entry_specs() {
+        let m = Manifest::parse(DOC).unwrap();
+        let e = m.entry("head_loss").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![16, 64]);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(e.input_bytes(), 16 * 64 * 4 + 32 * 4);
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let doc = DOC.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+}

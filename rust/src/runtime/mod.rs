@@ -1,0 +1,240 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest), compile once,
+//! execute from the training hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All entry points are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal that
+//! is decomposed into the manifest's declared outputs.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
+
+use crate::tensor::{Arg, IntTensor, Tensor};
+
+/// Wrapper over one PJRT client. xla handles are !Send: the coordinator is
+/// single-threaded by design (see DESIGN.md §1 — device parallelism is
+/// modeled in virtual time by `topology`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one entry point from an artifact directory.
+    pub fn compile_entry(&self, dir: &Path, spec: &EntrySpec) -> Result<Compiled> {
+        let path = dir.join(format!("{}.hlo.txt", spec.name));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Compiled {
+            spec: spec.clone(),
+            exe,
+            compile_s: t0.elapsed().as_secs_f64(),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+}
+
+/// Cumulative execution statistics for one compiled entry (feeds the
+/// virtual-time model and the §Perf profile).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+impl ExecStats {
+    pub fn mean_s(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_s / self.calls as f64
+        }
+    }
+}
+
+/// One compiled, executable entry point.
+pub struct Compiled {
+    pub spec: EntrySpec,
+    pub compile_s: f64,
+    exe: xla::PjRtLoadedExecutable,
+    stats: RefCell<ExecStats>,
+}
+
+impl Compiled {
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Execute with shape/dtype validation. Returns output tensors in
+    /// manifest order plus the wall-clock seconds the call took (the
+    /// virtual-time model charges this to the owning simulated device).
+    pub fn run_timed(&self, args: &[Arg]) -> Result<(Vec<Tensor>, f64)> {
+        self.validate(args)?;
+        let literals = args
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing entry '{}'", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.calls += 1;
+            s.total_s += elapsed;
+        }
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "entry '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let outs = parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((outs, elapsed))
+    }
+
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        Ok(self.run_timed(args)?.0)
+    }
+
+    fn validate(&self, args: &[Arg]) -> Result<()> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "entry '{}' takes {} args, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            if arg.shape() != spec.shape.as_slice() {
+                bail!(
+                    "entry '{}' arg '{}': shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    spec.name,
+                    arg.shape(),
+                    spec.shape
+                );
+            }
+            let want = match spec.dtype {
+                Dtype::F32 => "f32",
+                Dtype::I32 => "i32",
+            };
+            if arg.dtype() != want {
+                bail!(
+                    "entry '{}' arg '{}': dtype {} != manifest {}",
+                    self.spec.name,
+                    spec.name,
+                    arg.dtype(),
+                    want
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn to_literal(arg: &Arg) -> Result<xla::Literal> {
+    let dims: Vec<i64> = arg.shape().iter().map(|&d| d as i64).collect();
+    let lit = match arg {
+        Arg::F(t) => xla::Literal::vec1(t.data()),
+        Arg::I(t) => xla::Literal::vec1(t.data()),
+    };
+    lit.reshape(&dims).context("reshaping input literal")
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let data: Vec<f32> = match spec.dtype {
+        Dtype::F32 => lit.to_vec::<f32>().context("reading f32 output")?,
+        // All current entry points return f32 only; widen if needed.
+        Dtype::I32 => bail!("i32 outputs not supported"),
+    };
+    Tensor::new(spec.shape.clone(), data)
+}
+
+/// An artifact directory with compile-on-demand entry caching.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    runtime: Rc<Runtime>,
+    cache: RefCell<BTreeMap<String, Rc<Compiled>>>,
+}
+
+impl ArtifactSet {
+    pub fn load(runtime: Rc<Runtime>, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            manifest,
+            runtime,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Get (compiling if needed) an entry point by name.
+    pub fn entry(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let compiled = Rc::new(self.runtime.compile_entry(&self.dir, &spec)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Sum of execution stats across all compiled entries (perf reporting).
+    pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
+        self.cache
+            .borrow()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.stats()))
+            .collect()
+    }
+}
+
+/// Convenience: `Arg` vector builders for entry calls.
+pub fn fargs(tensors: Vec<Tensor>) -> Vec<Arg> {
+    tensors.into_iter().map(Arg::F).collect()
+}
+
+pub fn push_i(args: &mut Vec<Arg>, t: IntTensor) {
+    args.push(Arg::I(t));
+}

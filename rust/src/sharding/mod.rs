@@ -1,0 +1,231 @@
+//! Sharding plans: layer→device assignment (paper Tables 2–6) and the
+//! enumeration of adjoint-VJP work items (Alg. 3/4) with truncation
+//! windows. Pure logic — heavily property-tested.
+
+use anyhow::{bail, Result};
+
+/// Contiguous-block layer→device assignment, paper Tables 2–6:
+/// device v owns layers [(v−1)·(K//Υ), v·(K//Υ)) with the remainder
+/// folded into the last device (the paper assumes Υ | K; we generalize).
+#[derive(Debug, Clone)]
+pub struct LayerAssignment {
+    pub device_of_layer: Vec<usize>,
+    pub layers_of_device: Vec<Vec<usize>>,
+}
+
+pub fn assign_layers(k: usize, devices: usize) -> Result<LayerAssignment> {
+    if devices == 0 || k == 0 {
+        bail!("need at least one layer and one device");
+    }
+    if devices > k {
+        bail!("Υ={devices} devices exceed K={k} layers");
+    }
+    let base = k / devices;
+    let rem = k % devices;
+    let mut device_of_layer = vec![0; k];
+    let mut layers_of_device = vec![Vec::new(); devices];
+    let mut layer = 0;
+    for v in 0..devices {
+        // First `rem` devices take one extra layer.
+        let take = base + usize::from(v < rem);
+        for _ in 0..take {
+            device_of_layer[layer] = v;
+            layers_of_device[v].push(layer);
+            layer += 1;
+        }
+    }
+    Ok(LayerAssignment { device_of_layer, layers_of_device })
+}
+
+/// One Alg. 3 work item: the VJP bundle for layer `layer` over token chunk
+/// [chunk_start, chunk_start + chunk_len).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub layer: usize,
+    pub chunk_start: usize,
+    pub chunk_len: usize,
+}
+
+impl WorkItem {
+    /// Number of paper-unit VJPs this item bundles, with window `w`,
+    /// sequence length `t_total`: for each token i in the chunk, one
+    /// vjp_C plus min(w, T−i) (vjp_A + vjp_B) pairs.
+    pub fn vjp_units(&self, w: usize, t_total: usize) -> u64 {
+        let mut units = 0u64;
+        for i in self.chunk_start..self.chunk_start + self.chunk_len {
+            let lookahead = w.min(t_total - i);
+            units += 1 + 2 * lookahead as u64;
+        }
+        units
+    }
+}
+
+/// Enumerate all work items for a K-layer model, T tokens, chunk size C.
+pub fn plan_chunks(k: usize, t: usize, c: usize) -> Result<Vec<WorkItem>> {
+    if c == 0 || t % c != 0 {
+        bail!("chunk size {c} must divide T={t}");
+    }
+    let mut items = Vec::with_capacity(k * (t / c));
+    for layer in 0..k {
+        for chunk in 0..t / c {
+            items.push(WorkItem { layer, chunk_start: chunk * c, chunk_len: c });
+        }
+    }
+    Ok(items)
+}
+
+// ---------------------------------------------------------------------------
+// VJP counting (paper §4.3): closed forms + literal enumeration cross-check.
+// Counts are per layer for the A- and B-networks (the C-network adds T).
+// ---------------------------------------------------------------------------
+
+/// Full adjoint sharding: (1+T)·T/2 VJPs each for A and B, plus T for C.
+pub fn vjp_count_full(t: u64) -> u64 {
+    t * (t + 1) / 2
+}
+
+/// Truncated adjoint sharding (Eq. 7): T̄·T − T̄·(T̄−1)/2 per network.
+///
+/// (The paper states "T̄T + T̄(T̄−1)/2"; direct counting of Eq. 7's index
+/// sets gives Σ_{t≤T̄} t + Σ_{t>T̄} T̄ = T̄(T̄+1)/2 + (T−T̄)·T̄
+/// = T̄T − T̄(T̄−1)/2 — also linear in T, and the value the enumeration
+/// test pins down. EXPERIMENTS.md §VJP-count records both.)
+pub fn vjp_count_truncated(t: u64, tbar: u64) -> u64 {
+    let tbar = tbar.min(t);
+    tbar * (tbar + 1) / 2 + (t - tbar) * tbar
+}
+
+/// Paper's stated closed form for the truncated count (§4.3): T̄T + T̄(T̄−1)/2.
+pub fn vjp_count_truncated_paper(t: u64, tbar: u64) -> u64 {
+    tbar * t + tbar * (tbar - 1) / 2
+}
+
+/// Literal enumeration of Eq. 7's index set — the ground truth the closed
+/// forms are checked against. O(T), counts per-t lookback set sizes.
+pub fn vjp_count_enumerated(t: u64, tbar: u64) -> u64 {
+    let mut count = 0;
+    for tok in 1..=t {
+        // t ≤ T̄: i ∈ [1, t]; t > T̄: i ∈ [t+1−T̄, t].
+        count += tok.min(tbar);
+    }
+    count
+}
+
+/// Fraction of VJPs removed by truncation (the paper's "64% at T=10K,
+/// T̄=2000" claim).
+pub fn vjp_reduction(t: u64, tbar: u64) -> f64 {
+    1.0 - vjp_count_truncated(t, tbar) as f64 / vjp_count_full(t) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn assignment_covers_all_layers_once() {
+        for (k, d) in [(8, 4), (7, 3), (100, 5), (3, 3), (5, 1)] {
+            let a = assign_layers(k, d).unwrap();
+            let mut seen = vec![false; k];
+            for (v, layers) in a.layers_of_device.iter().enumerate() {
+                for &l in layers {
+                    assert!(!seen[l], "layer {l} assigned twice");
+                    seen[l] = true;
+                    assert_eq!(a.device_of_layer[l], v);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "not all layers covered");
+        }
+    }
+
+    #[test]
+    fn assignment_is_contiguous_and_balanced() {
+        let a = assign_layers(10, 4).unwrap();
+        for layers in &a.layers_of_device {
+            for w in layers.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+        let sizes: Vec<_> = a.layers_of_device.iter().map(|l| l.len()).collect();
+        assert_eq!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap(), 1);
+    }
+
+    #[test]
+    fn assignment_rejects_bad_inputs() {
+        assert!(assign_layers(2, 3).is_err());
+        assert!(assign_layers(0, 1).is_err());
+        assert!(assign_layers(1, 0).is_err());
+    }
+
+    #[test]
+    fn chunks_partition_tokens() {
+        let items = plan_chunks(3, 32, 8).unwrap();
+        assert_eq!(items.len(), 3 * 4);
+        for layer in 0..3 {
+            let mut covered = vec![false; 32];
+            for it in items.iter().filter(|i| i.layer == layer) {
+                for t in it.chunk_start..it.chunk_start + it.chunk_len {
+                    assert!(!covered[t]);
+                    covered[t] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c));
+        }
+    }
+
+    #[test]
+    fn chunk_size_must_divide() {
+        assert!(plan_chunks(1, 32, 5).is_err());
+        assert!(plan_chunks(1, 32, 0).is_err());
+    }
+
+    #[test]
+    fn closed_form_matches_enumeration() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let t = 1 + rng.below(400);
+            let tbar = 1 + rng.below(t);
+            assert_eq!(
+                vjp_count_truncated(t, tbar),
+                vjp_count_enumerated(t, tbar),
+                "t={t} tbar={tbar}"
+            );
+        }
+    }
+
+    #[test]
+    fn full_window_equals_full_count() {
+        for t in [1u64, 2, 10, 1000] {
+            assert_eq!(vjp_count_truncated(t, t), vjp_count_full(t));
+        }
+    }
+
+    #[test]
+    fn paper_64_percent_claim_shape() {
+        // Paper §4.3: T̄=2000, T=10K removes ~64% of VJPs.
+        let r = vjp_reduction(10_000, 2_000);
+        assert!(r > 0.60 && r < 0.70, "reduction {r}");
+    }
+
+    #[test]
+    fn work_item_unit_count() {
+        // T=8, W=4, one chunk of the whole range.
+        let it = WorkItem { layer: 0, chunk_start: 0, chunk_len: 8 };
+        // token i: 1 (vjp_C) + 2*min(4, 8-i): i=0..3 → 8, i=4 →8, i=5 →6, i=6 →4, i=7 →2
+        let want: u64 = (0..8u64).map(|i| 1 + 2 * 4u64.min(8 - i)).sum();
+        assert_eq!(it.vjp_units(4, 8), want);
+    }
+
+    #[test]
+    fn chunked_units_sum_to_whole() {
+        let t = 64;
+        let w = 16;
+        let whole = WorkItem { layer: 0, chunk_start: 0, chunk_len: t }.vjp_units(w, t);
+        let parts: u64 = plan_chunks(1, t, 8)
+            .unwrap()
+            .iter()
+            .map(|it| it.vjp_units(w, t))
+            .sum();
+        assert_eq!(whole, parts);
+    }
+}

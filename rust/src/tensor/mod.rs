@@ -1,0 +1,430 @@
+//! Minimal host-side tensor: row-major `f32` buffer + shape.
+//!
+//! The heavy math lives in the AOT-compiled HLO executables; this type
+//! covers what the coordinator itself needs — parameter/optimizer state,
+//! embedding lookup, RMSNorm of the embedded stream, slicing/padding of
+//! activation windows for the adjoint work items, and reductions for
+//! metrics and tests. A small naive `matmul` exists for tests only.
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// N(0, scale²) init.
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32() * scale).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D accessor (row-major), for tests and small host math.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    // --- elementwise / BLAS-1 -------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("add_assign shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn dot(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("dot shape mismatch");
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum())
+    }
+
+    /// Relative L2 distance ‖a−b‖ / (‖b‖ + eps) — used by equivalence tests.
+    pub fn rel_l2(&self, other: &Tensor) -> Result<f64> {
+        if self.shape != other.shape {
+            bail!("rel_l2 shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        Ok(num.sqrt() / (other.norm() + 1e-12))
+    }
+
+    // --- row-block ops the adjoint scheduler needs -----------------------
+
+    /// Rows [start, start+len) of a 2-D tensor.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
+        if self.rank() != 2 {
+            bail!("slice_rows on rank-{} tensor", self.rank());
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if start + len > rows {
+            bail!("slice_rows [{start}, {}) out of {rows} rows", start + len);
+        }
+        let data = self.data[start * cols..(start + len) * cols].to_vec();
+        Tensor::new(vec![len, cols], data)
+    }
+
+    /// Rows [start, start+len) clamped to the sequence end, zero-padded to
+    /// `len` rows — the `*_ext` padding contract of the adjoint kernel.
+    pub fn slice_rows_padded(&self, start: usize, len: usize) -> Result<Tensor> {
+        if self.rank() != 2 {
+            bail!("slice_rows_padded on rank-{} tensor", self.rank());
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let avail = rows.saturating_sub(start).min(len);
+        let mut data = vec![0.0f32; len * cols];
+        if avail > 0 {
+            data[..avail * cols]
+                .copy_from_slice(&self.data[start * cols..(start + avail) * cols]);
+        }
+        Tensor::new(vec![len, cols], data)
+    }
+
+    /// Shift a 2-D state sequence down one row, inserting `first` on top:
+    /// out[0] = first, out[i] = self[i-1]. Produces h^{i-1} from h^i.
+    pub fn shift_down(&self, first: &[f32]) -> Result<Tensor> {
+        if self.rank() != 2 {
+            bail!("shift_down on rank-{} tensor", self.rank());
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if first.len() != cols {
+            bail!("shift_down first row has {} cols, want {cols}", first.len());
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        data.extend_from_slice(first);
+        data.extend_from_slice(&self.data[..(rows - 1) * cols]);
+        Tensor::new(vec![rows, cols], data)
+    }
+
+    /// Concatenate 2-D tensors along rows.
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("concat_rows of nothing");
+        }
+        let cols = parts[0].shape[1];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.rank() != 2 || p.shape[1] != cols {
+                bail!("concat_rows column mismatch");
+            }
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(vec![rows, cols], data)
+    }
+
+    // --- host math the coordinator owns ----------------------------------
+
+    /// Parameter-free RMSNorm over the last axis (must match L2's
+    /// `model.rmsnorm`: x * rsqrt(mean(x²) + eps)).
+    pub fn rmsnorm(&self, eps: f32) -> Tensor {
+        let cols = *self.shape.last().unwrap_or(&1);
+        let mut out = self.clone();
+        for row in out.data.chunks_mut(cols) {
+            let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / cols as f32;
+            let r = 1.0 / (ms + eps).sqrt();
+            for x in row.iter_mut() {
+                *x *= r;
+            }
+        }
+        out
+    }
+
+    /// Naive matmul — tests/small host math only; hot-path matmuls are HLO.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            bail!("matmul shape mismatch {:?} x {:?}", self.shape, other.shape);
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+}
+
+/// Integer tensor (i32) — token ids / targets for the head entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn from_vec(data: Vec<i32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Argument to an HLO entry point: f32 tensor or i32 tensor.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F(Tensor),
+    I(IntTensor),
+}
+
+impl Arg {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F(t) => t.shape(),
+            Arg::I(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F(_) => "f32",
+            Arg::I(_) => "i32",
+        }
+    }
+}
+
+impl From<Tensor> for Arg {
+    fn from(t: Tensor) -> Self {
+        Arg::F(t)
+    }
+}
+
+impl From<IntTensor> for Arg {
+    fn from(t: IntTensor) -> Self {
+        Arg::I(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn slice_rows_basic() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_rows_padded_pads_zero() {
+        let t = Tensor::new(vec![3, 2], (0..6).map(|x| x as f32).collect()).unwrap();
+        let s = t.slice_rows_padded(2, 3).unwrap();
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.data(), &[4.0, 5.0, 0.0, 0.0, 0.0, 0.0]);
+        // fully out of range
+        let s = t.slice_rows_padded(5, 2).unwrap();
+        assert_eq!(s.data(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn shift_down_makes_hprev() {
+        let h = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let hp = h.shift_down(&[0.0, 0.0]).unwrap();
+        assert_eq!(hp.data(), &[0., 0., 1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let t = Tensor::new(vec![2, 2], vec![3.0, 4.0, 1.0, 1.0]).unwrap();
+        let n = t.rmsnorm(0.0);
+        for row in n.data().chunks(2) {
+            let rms: f32 = (row.iter().map(|x| x * x).sum::<f32>() / 2.0).sqrt();
+            assert!((rms - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]).unwrap();
+        assert_eq!(a.matmul(&b).unwrap(), a);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Tensor::zeros(&[3]);
+        let b = Tensor::new(vec![3], vec![1., 2., 2.]).unwrap();
+        a.axpy(2.0, &b).unwrap();
+        assert_eq!(a.data(), &[2., 4., 4.]);
+        assert!((a.norm() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        let a = Tensor::randn(&[4, 4], 1.0, &mut crate::rng::Rng::new(1));
+        assert!(a.rel_l2(&a).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn concat_rows_roundtrip() {
+        let a = Tensor::new(vec![1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let c = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.slice_rows(0, 1).unwrap(), a);
+        assert_eq!(c.slice_rows(1, 2).unwrap(), b);
+    }
+}

@@ -1,0 +1,213 @@
+//! The training loop: Alg. 1 forward → (adjoint | BPTT) backward →
+//! sharded Adam update, with full metric/memory/comm accounting per step.
+//! This is the event loop the `adjsh train` command and the examples run.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::adjoint;
+use crate::baselines;
+use crate::config::{GradMode, RunConfig};
+use crate::data::{Corpus, Sample};
+use crate::metrics::{Recorder, StepRecord};
+use crate::model::{GradSet, ParamSet};
+use crate::optim::ShardedAdam;
+use crate::pipeline;
+use crate::runtime::{ArtifactSet, Runtime};
+use crate::topology::Fleet;
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub arts: ArtifactSet,
+    pub params: ParamSet,
+    pub fleet: Fleet,
+    pub recorder: Recorder,
+    opt: ShardedAdam,
+    corpus: Box<dyn Corpus>,
+    step_idx: usize,
+}
+
+impl Trainer {
+    pub fn new(runtime: Rc<Runtime>, cfg: RunConfig, corpus: Box<dyn Corpus>) -> Result<Self> {
+        cfg.validate()?;
+        if corpus.vocab() != cfg.dims.v {
+            anyhow::bail!(
+                "corpus vocab {} != model vocab {}",
+                corpus.vocab(),
+                cfg.dims.v
+            );
+        }
+        let arts = ArtifactSet::load(runtime, &cfg.artifacts_dir)
+            .context("loading artifact set")?;
+        let params = ParamSet::init(&cfg.dims, cfg.seed);
+        let mut fleet = Fleet::new(cfg.topology.clone(), cfg.dims.k)?;
+        let opt = ShardedAdam::new(&params, &cfg.optim);
+
+        // Persistent per-device accounting (paper Table 6): θ_k + grads +
+        // Adam moments live on the owning device; Ω + its state at the head.
+        for k in 0..cfg.dims.k {
+            let dev = fleet.device_of_layer(k);
+            let layer_bytes = params.layers[k].num_params() * 4;
+            let bytes = 2 * layer_bytes + opt.layer_state_bytes(k);
+            fleet.devices[dev].account_persistent(bytes as u64);
+        }
+        let head = fleet.head_device();
+        let head_bytes = 2 * params.omega.size_bytes() + opt.head_state_bytes();
+        fleet.devices[head].account_persistent(head_bytes as u64);
+
+        Ok(Self {
+            cfg,
+            arts,
+            params,
+            fleet,
+            recorder: Recorder::new(),
+            opt,
+            corpus,
+            step_idx: 0,
+        })
+    }
+
+    pub fn corpus(&self) -> &dyn Corpus {
+        self.corpus.as_ref()
+    }
+
+    fn next_sample(&mut self) -> Sample {
+        let s = self.corpus.sample(self.step_idx as u64, self.cfg.dims.t);
+        self.step_idx += 1;
+        s
+    }
+
+    /// One optimization step; returns the step record (also pushed to the
+    /// recorder).
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let sample = self.next_sample();
+        self.fleet.reset_clocks();
+        let comm_before = self.fleet.comm.bytes;
+
+        let mut grads = GradSet::zeros(&self.cfg.dims);
+        let (loss, virtual_s, vjp_units) = match self.cfg.grad_mode {
+            GradMode::Adjoint => {
+                let fwd = pipeline::forward(
+                    &self.arts,
+                    &self.cfg.dims,
+                    &self.params,
+                    &mut self.fleet,
+                    &sample.tokens,
+                    &sample.targets,
+                )?;
+                grads.omega.add_assign(&fwd.d_omega)?;
+                let bwd = adjoint::backward(
+                    &self.arts,
+                    &self.cfg.dims,
+                    &self.params,
+                    &mut self.fleet,
+                    &mut grads,
+                )?;
+                (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units)
+            }
+            GradMode::Bptt => {
+                let out = baselines::backward(
+                    &self.arts,
+                    &self.cfg.dims,
+                    &self.params,
+                    &mut self.fleet,
+                    &sample.tokens,
+                    &sample.targets,
+                    &mut grads,
+                )?;
+                (out.loss, out.virtual_s, 0)
+            }
+        };
+
+        let grad_norm =
+            self.opt
+                .step(&mut self.params, &mut grads, self.cfg.optim.grad_clip)?;
+
+        // Step boundary: all transients (activations, hand-off copies,
+        // broadcasts) are released; peaks persist in the trackers.
+        for d in &mut self.fleet.devices {
+            d.end_step();
+        }
+
+        let rec = StepRecord {
+            step: self.step_idx - 1,
+            loss,
+            grad_norm,
+            wall_s: t0.elapsed().as_secs_f64(),
+            virtual_s,
+            peak_bytes: self.fleet.peak_bytes(),
+            vjp_units,
+            comm_bytes: self.fleet.comm.bytes - comm_before,
+        };
+        self.recorder.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run `steps` steps with periodic logging; writes the CSV if configured.
+    pub fn run(&mut self, steps: usize) -> Result<()> {
+        for i in 0..steps {
+            let rec = self.step()?;
+            if i % self.cfg.log_every == 0 || i + 1 == steps {
+                println!(
+                    "step {:>5}  loss {:.4}  |g| {:.3e}  wall {:.2}s  virt {:.4}s  peak {}  vjp {}",
+                    rec.step,
+                    rec.loss,
+                    rec.grad_norm,
+                    rec.wall_s,
+                    rec.virtual_s,
+                    crate::metrics::fmt_bytes(rec.peak_bytes),
+                    rec.vjp_units,
+                );
+            }
+        }
+        if let Some(path) = self.cfg.log_csv.clone() {
+            self.recorder.write_csv(&path)?;
+            println!("wrote {}", path.display());
+        }
+        Ok(())
+    }
+
+    /// Save a checkpoint (params + step counter); resume with
+    /// [`Trainer::resume_from`].
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.params.save(path, self.step_idx as u64)
+    }
+
+    /// Restore parameters and the data-stream position from a checkpoint
+    /// (the optimizer moments restart — standard for this format tier).
+    pub fn resume_from(&mut self, path: &std::path::Path) -> Result<()> {
+        let (params, step) = ParamSet::load(path)?;
+        if params.layers.len() != self.cfg.dims.k {
+            anyhow::bail!(
+                "checkpoint has {} layers, config wants {}",
+                params.layers.len(),
+                self.cfg.dims.k
+            );
+        }
+        self.params = params;
+        self.step_idx = step as usize;
+        Ok(())
+    }
+
+    /// Held-out loss over `n` fresh sequences (sampled past the train stream).
+    pub fn eval_loss(&mut self, n: usize) -> Result<f64> {
+        let mut total = 0.0;
+        for i in 0..n {
+            let s = self
+                .corpus
+                .sample(u64::MAX / 2 + i as u64, self.cfg.dims.t);
+            total += pipeline::eval_loss(
+                &self.arts,
+                &self.cfg.dims,
+                &self.params,
+                &mut self.fleet,
+                &s.tokens,
+                &s.targets,
+            )?;
+        }
+        Ok(total / n as f64)
+    }
+}

@@ -1,0 +1,149 @@
+//! Micro-bench harness for the `cargo bench` targets (criterion is
+//! unavailable offline). Warmup + timed iterations; reports mean / p50 /
+//! p95 / min in a stable text format the bench binaries print alongside
+//! the paper-vs-measured tables.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} iters={:<5} mean={:>10} p50={:>10} p95={:>10} min={:>10}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p95_s),
+            fmt_dur(self.min_s),
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then measured ones
+/// until `min_iters` and `min_secs` are both satisfied (capped at
+/// `max_iters`). `f` should return something observable to avoid DCE.
+pub fn bench<T>(name: &str, warmup: usize, min_iters: usize, min_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    let max_iters = 10_000usize.max(min_iters);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(min_iters);
+    let start = Instant::now();
+    while (times.len() < min_iters || start.elapsed().as_secs_f64() < min_secs)
+        && times.len() < max_iters
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, &mut times)
+}
+
+fn stats_from(name: &str, times: &mut [f64]) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len().max(1);
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let pick = |q: f64| times[((n as f64 * q) as usize).min(n - 1)];
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        p50_s: pick(0.50),
+        p95_s: pick(0.95),
+        min_s: times.first().copied().unwrap_or(0.0),
+    }
+}
+
+/// Column-aligned table printer for the paper-vs-measured reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", w.iter().map(|x| "-".repeat(*x + 2)).collect::<String>());
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_stats() {
+        let s = bench("noop", 2, 20, 0.0, || 1 + 1);
+        assert!(s.iters >= 20);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(2e-5).ends_with("µs"));
+        assert!(fmt_dur(2e-2).ends_with("ms"));
+        assert!(fmt_dur(2.0).ends_with('s'));
+    }
+}

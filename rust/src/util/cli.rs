@@ -1,0 +1,165 @@
+//! Tiny flag-style CLI parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments. Typed getters with defaults; `usage()` collects registered
+//! options for `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    described: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Cli {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    cli.flags.insert(rest.to_string(), v);
+                } else {
+                    cli.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str, help: &str) -> String {
+        self.describe(key, default, help);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize, help: &str) -> Result<usize> {
+        self.describe(key, &default.to_string(), help);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&mut self, key: &str, default: f64, help: &str) -> Result<f64> {
+        self.describe(key, &default.to_string(), help);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&mut self, key: &str, default: bool, help: &str) -> Result<bool> {
+        self.describe(key, &default.to_string(), help);
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => bail!("--{key}: bad bool '{v}'"),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--devices 1,2,4,8`.
+    pub fn usize_list_or(&mut self, key: &str, default: &[usize], help: &str) -> Result<Vec<usize>> {
+        let d = default
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        self.describe(key, &d, help);
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| anyhow!("--{key}: bad list '{v}'")))
+                .collect(),
+        }
+    }
+
+    fn describe(&mut self, key: &str, default: &str, help: &str) {
+        if !self.described.iter().any(|(k, _, _)| k == key) {
+            self.described
+                .push((key.to_string(), default.to_string(), help.to_string()));
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::from("options:\n");
+        for (k, d, h) in &self.described {
+            s.push_str(&format!("  --{k:<16} {h} (default: {d})\n"));
+        }
+        s
+    }
+
+    /// Error out on unknown flags (catches typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if k != "help" && !self.described.iter().any(|(d, _, _)| d == k) {
+                bail!("unknown flag --{k}\n{}", self.usage());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_forms() {
+        let mut c = Cli::parse(args(&["train", "--steps", "10", "--lr=0.1", "--verbose"])).unwrap();
+        assert_eq!(c.positional, vec!["train"]);
+        assert_eq!(c.usize_or("steps", 1, "").unwrap(), 10);
+        assert_eq!(c.f64_or("lr", 0.0, "").unwrap(), 0.1);
+        assert!(c.bool_or("verbose", false, "").unwrap());
+        assert_eq!(c.str_or("missing", "d", ""), "d");
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        let mut c = Cli::parse(args(&["--steps", "abc"])).unwrap();
+        assert!(c.usize_or("steps", 1, "").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let mut c = Cli::parse(args(&["--devices", "1,2,4"])).unwrap();
+        assert_eq!(c.usize_list_or("devices", &[1], "").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut c = Cli::parse(args(&["--oops", "1"])).unwrap();
+        let _ = c.usize_or("steps", 1, "");
+        assert!(c.reject_unknown().is_err());
+    }
+}

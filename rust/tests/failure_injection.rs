@@ -1,0 +1,147 @@
+//! Failure injection: every misuse or corrupted input must surface as a
+//! clean `Err` (never a panic, never silent wrong numbers).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use adjoint_sharding::config::{ModelDims, RunConfig, TopologyCfg};
+use adjoint_sharding::data::MarkovCorpus;
+use adjoint_sharding::runtime::{ArtifactSet, Manifest, Runtime};
+use adjoint_sharding::tensor::{Arg, Tensor};
+use adjoint_sharding::topology::Fleet;
+use adjoint_sharding::train::Trainer;
+use adjoint_sharding::util::json::Json;
+
+fn root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    root().join(name).join("manifest.json").exists()
+}
+
+#[test]
+fn missing_artifact_dir_is_clean_error() {
+    let err = RunConfig::load(&root(), "no_such_config").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupted_manifest_is_clean_error() {
+    let dir = std::env::temp_dir().join("adjsh_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{\"config\": {\"name\": ").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), "{\"config\": {}, \"entries\": 3}").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_missing_dims_is_clean_error() {
+    let j = Json::parse(r#"{"config": {"name": "x", "V": 4}}"#).unwrap();
+    assert!(ModelDims::from_manifest_json(&j).is_err());
+}
+
+#[test]
+fn missing_hlo_file_is_clean_error() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    // Manifest that references an entry whose .hlo.txt doesn't exist.
+    let dir = std::env::temp_dir().join("adjsh_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = std::fs::read_to_string(root().join("tiny/manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), src).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let arts = ArtifactSet::load(rt, &dir).unwrap();
+    let err = match arts.entry("layer_fwd") {
+        Ok(_) => panic!("expected missing-file error"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("layer_fwd"));
+}
+
+#[test]
+fn garbage_hlo_text_is_clean_error() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let dir = std::env::temp_dir().join("adjsh_garbage_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = std::fs::read_to_string(root().join("tiny/manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), src).unwrap();
+    std::fs::write(dir.join("layer_fwd.hlo.txt"), "this is not hlo").unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let arts = ArtifactSet::load(rt, &dir).unwrap();
+    assert!(arts.entry("layer_fwd").is_err());
+}
+
+#[test]
+fn arg_arity_and_dtype_mismatches_rejected() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let entry = arts.entry("head_loss").unwrap();
+    // Too few args.
+    assert!(entry.run(&[]).is_err());
+    // Right arity, wrong dtype for targets (f32 instead of i32).
+    let bad: Vec<Arg> = entry
+        .spec
+        .inputs
+        .iter()
+        .map(|s| Arg::F(Tensor::zeros(&s.shape)))
+        .collect();
+    let err = entry.run(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"));
+}
+
+#[test]
+fn trainer_rejects_vocab_mismatch() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let cfg = RunConfig::load(&root(), "tiny").unwrap();
+    let wrong = Box::new(MarkovCorpus::new(cfg.dims.v / 2, 0));
+    assert!(Trainer::new(rt, cfg, wrong).is_err());
+}
+
+#[test]
+fn trainer_rejects_more_devices_than_layers() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
+    cfg.topology.devices = cfg.dims.k + 1;
+    let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 0));
+    assert!(Trainer::new(rt, cfg, corpus).is_err());
+}
+
+#[test]
+fn simulated_oom_detection() {
+    let cfg = TopologyCfg { devices: 1, hbm_bytes: 1024, ..Default::default() };
+    let mut fleet = Fleet::new(cfg, 2).unwrap();
+    fleet.devices[0].mem.alloc(2048);
+    let err = fleet.check_budget().unwrap_err();
+    assert!(format!("{err:#}").contains("OOM"));
+}
+
+#[test]
+fn tensor_misuse_is_clean_error() {
+    let t = Tensor::zeros(&[4, 4]);
+    assert!(t.slice_rows(3, 2).is_err());
+    assert!(t.clone().reshape(&[5]).is_err());
+    let other = Tensor::zeros(&[2, 2]);
+    assert!(t.rel_l2(&other).is_err());
+    let mut a = Tensor::zeros(&[2]);
+    assert!(a.add_assign(&Tensor::zeros(&[3])).is_err());
+}

@@ -1,0 +1,173 @@
+//! Randomized property tests on coordinator invariants (proptest is
+//! unavailable offline; cases are generated from the crate's own seeded
+//! RNG — every failure reports its seed for replay).
+
+use adjoint_sharding::memcost::MemModel;
+use adjoint_sharding::rng::Rng;
+use adjoint_sharding::sharding::{
+    assign_layers, plan_chunks, vjp_count_enumerated, vjp_count_full, vjp_count_truncated,
+    WorkItem,
+};
+use adjoint_sharding::tensor::Tensor;
+use adjoint_sharding::topology::makespan;
+
+const CASES: usize = 300;
+
+#[test]
+fn prop_layer_assignment_partition() {
+    let mut rng = Rng::new(0xA55);
+    for case in 0..CASES {
+        let k = 1 + rng.below(200) as usize;
+        let d = 1 + rng.below(k as u64) as usize;
+        let a = assign_layers(k, d).unwrap_or_else(|e| panic!("case {case} (k={k},d={d}): {e}"));
+        // Partition: every layer exactly once, devices contiguous, balance ≤ 1.
+        let mut seen = vec![0u8; k];
+        for (v, layers) in a.layers_of_device.iter().enumerate() {
+            assert!(!layers.is_empty(), "case {case}: empty device {v} (k={k}, d={d})");
+            for w in layers.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "case {case}: non-contiguous");
+            }
+            for &l in layers {
+                seen[l] += 1;
+                assert_eq!(a.device_of_layer[l], v, "case {case}: inverse mismatch");
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "case {case}: not a partition");
+        let sizes: Vec<usize> = a.layers_of_device.iter().map(|l| l.len()).collect();
+        assert!(
+            sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
+            "case {case}: imbalance {sizes:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_chunk_plan_covers_tokens_once() {
+    let mut rng = Rng::new(0xBEE);
+    for case in 0..CASES {
+        let c = 1 + rng.below(64) as usize;
+        let chunks = 1 + rng.below(32) as usize;
+        let t = c * chunks;
+        let k = 1 + rng.below(8) as usize;
+        let items = plan_chunks(k, t, c).unwrap();
+        assert_eq!(items.len(), k * chunks, "case {case}");
+        for layer in 0..k {
+            let mut covered = vec![false; t];
+            for it in items.iter().filter(|i| i.layer == layer) {
+                for tok in it.chunk_start..it.chunk_start + it.chunk_len {
+                    assert!(!covered[tok], "case {case}: token {tok} twice");
+                    covered[tok] = true;
+                }
+            }
+            assert!(covered.iter().all(|&x| x), "case {case}: gap in coverage");
+        }
+    }
+}
+
+#[test]
+fn prop_vjp_closed_form_equals_enumeration() {
+    let mut rng = Rng::new(0xCAB);
+    for case in 0..CASES {
+        let t = 1 + rng.below(3000);
+        let tbar = 1 + rng.below(t);
+        assert_eq!(
+            vjp_count_truncated(t, tbar),
+            vjp_count_enumerated(t, tbar),
+            "case {case}: t={t} tbar={tbar}"
+        );
+        assert_eq!(vjp_count_truncated(t, t), vjp_count_full(t), "case {case}");
+        // Monotone in the window.
+        if tbar > 1 {
+            assert!(
+                vjp_count_truncated(t, tbar - 1) <= vjp_count_truncated(t, tbar),
+                "case {case}: not monotone"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_work_item_units_partition_under_chunking() {
+    let mut rng = Rng::new(0xD06);
+    for case in 0..CASES {
+        let c = 1 + rng.below(16) as usize;
+        let chunks = 1 + rng.below(16) as usize;
+        let t = c * chunks;
+        let w = 1 + rng.below(t as u64) as usize;
+        let whole = WorkItem { layer: 0, chunk_start: 0, chunk_len: t }.vjp_units(w, t);
+        let parts: u64 = plan_chunks(1, t, c)
+            .unwrap()
+            .iter()
+            .map(|it| it.vjp_units(w, t))
+            .sum();
+        assert_eq!(whole, parts, "case {case}: t={t} c={c} w={w}");
+        // Cross-check against the closed form: Σ units = T (vjp_C) + 2·truncated.
+        let closed = t as u64 + 2 * vjp_count_truncated(t as u64, w as u64);
+        assert_eq!(whole, closed, "case {case}: closed-form mismatch");
+    }
+}
+
+#[test]
+fn prop_makespan_bounds() {
+    let mut rng = Rng::new(0xF1E);
+    for case in 0..CASES {
+        let n = 1 + rng.below(40) as usize;
+        let slots = 1 + rng.below(12) as usize;
+        let times: Vec<f64> = (0..n).map(|_| rng.uniform() + 1e-3).collect();
+        let m = makespan(&times, slots);
+        let total: f64 = times.iter().sum();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        // Classic list-scheduling bounds.
+        assert!(m >= max - 1e-12, "case {case}: below max item");
+        assert!(m >= total / slots as f64 - 1e-9, "case {case}: below ideal");
+        assert!(m <= total + 1e-9, "case {case}: above serial");
+        // More slots never hurt.
+        let m2 = makespan(&times, slots + 1);
+        assert!(m2 <= m + 1e-9, "case {case}: slots made it worse");
+    }
+}
+
+#[test]
+fn prop_slice_rows_padded_consistent_with_slice_rows() {
+    let mut rng = Rng::new(0x51C);
+    for case in 0..CASES {
+        let rows = 1 + rng.below(40) as usize;
+        let cols = 1 + rng.below(12) as usize;
+        let t = Tensor::randn(&[rows, cols], 1.0, &mut Rng::new(case as u64));
+        let start = rng.below(rows as u64 + 10) as usize;
+        let len = 1 + rng.below(20) as usize;
+        let padded = t.slice_rows_padded(start, len).unwrap();
+        assert_eq!(padded.shape(), &[len, cols]);
+        let avail = rows.saturating_sub(start).min(len);
+        if avail > 0 {
+            let exact = t.slice_rows(start, avail).unwrap();
+            assert_eq!(&padded.data()[..avail * cols], exact.data(), "case {case}");
+        }
+        assert!(
+            padded.data()[avail * cols..].iter().all(|&x| x == 0.0),
+            "case {case}: pad not zero"
+        );
+    }
+}
+
+#[test]
+fn prop_memory_model_monotone() {
+    let m = MemModel::default();
+    let mut rng = Rng::new(0x3E3);
+    let (_, d) = &adjoint_sharding::memcost::fig1_models()[2];
+    for case in 0..100 {
+        let t1 = 1 + rng.below(1 << 20);
+        let t2 = t1 + 1 + rng.below(1 << 20);
+        assert!(
+            m.backprop(d, t2, 2, 1).total() >= m.backprop(d, t1, 2, 1).total(),
+            "case {case}: bp not monotone in T"
+        );
+        let a1 = m.adjoint(d, t1, 2, 1, 2048, 2048.min(t1), 7).total();
+        let a2 = m.adjoint(d, t2, 2, 1, 2048, 2048.min(t2), 7).total();
+        assert!(a2 >= a1, "case {case}: adjoint not monotone in T");
+        // Sharding across more devices never increases per-device memory.
+        let s1 = m.adjoint(d, t1, 2, 1, 2048, 2048.min(t1), 7).total();
+        let s4 = m.adjoint(d, t1, 2, 4, 2048, 2048.min(t1), 7).total();
+        assert!(s4 <= s1, "case {case}: Υ=4 used more than Υ=1");
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: load the tiny artifact set, execute every entry point,
+//! and check basic numerics (finite outputs, shape contract, and the
+//! layer_fwd ↔ bptt_grad loss consistency through the full Rust path).
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use adjoint_sharding::config::ModelDims;
+use adjoint_sharding::model::ParamSet;
+use adjoint_sharding::rng::Rng;
+use adjoint_sharding::runtime::{fargs, ArtifactSet, Dtype, Runtime};
+use adjoint_sharding::tensor::{Arg, IntTensor, Tensor};
+
+fn load() -> Option<(Rc<Runtime>, ArtifactSet, ModelDims)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Rc::new(Runtime::cpu().expect("PJRT CPU client"));
+    let arts = ArtifactSet::load(rt.clone(), &dir).expect("artifact set");
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).expect("dims");
+    Some((rt, arts, dims))
+}
+
+#[test]
+fn all_entries_execute_with_manifest_shapes() {
+    let Some((_rt, arts, dims)) = load() else {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return;
+    };
+    let mut rng = Rng::new(1);
+    for name in ["layer_fwd", "head_loss", "layer_adjoint_grad", "bptt_grad"] {
+        let entry = arts.entry(name).expect(name);
+        let args: Vec<Arg> = entry
+            .spec
+            .inputs
+            .iter()
+            .map(|spec| match spec.dtype {
+                Dtype::F32 => Arg::F(Tensor::randn(&spec.shape, 0.1, &mut rng)),
+                Dtype::I32 => {
+                    let n: usize = spec.shape.iter().product();
+                    Arg::I(
+                        IntTensor::new(
+                            spec.shape.clone(),
+                            (0..n).map(|_| rng.below(dims.v as u64) as i32).collect(),
+                        )
+                        .unwrap(),
+                    )
+                }
+            })
+            .collect();
+        let outs = entry.run(&args).expect(name);
+        assert_eq!(outs.len(), entry.spec.outputs.len(), "{name} output arity");
+        for (o, spec) in outs.iter().zip(&entry.spec.outputs) {
+            assert_eq!(o.shape(), spec.shape.as_slice(), "{name} output shape");
+            assert!(
+                o.data().iter().all(|x| x.is_finite()),
+                "{name} produced non-finite values"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_shape_is_rejected_before_execution() {
+    let Some((_rt, arts, _dims)) = load() else {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return;
+    };
+    let entry = arts.entry("head_loss").unwrap();
+    let bad: Vec<Arg> = vec![Arg::F(Tensor::zeros(&[1, 1])); entry.spec.inputs.len()];
+    assert!(entry.run(&bad).is_err());
+}
+
+#[test]
+fn layer_fwd_then_head_matches_bptt_loss() {
+    let Some((_rt, arts, dims)) = load() else {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return;
+    };
+    let params = ParamSet::init(&dims, 7);
+    let mut rng = Rng::new(3);
+    let tokens = IntTensor::from_vec(
+        (0..dims.t).map(|_| rng.below(dims.v as u64) as i32).collect(),
+    );
+    let targets = IntTensor::from_vec(
+        (0..dims.t).map(|_| rng.below(dims.v as u64) as i32).collect(),
+    );
+    let y0 = params.embed_tokens(&tokens).unwrap();
+
+    // Rust-coordinated forward: embed → rmsnorm → K × layer_fwd → head.
+    let layer_fwd = arts.entry("layer_fwd").unwrap();
+    let head = arts.entry("head_loss").unwrap();
+    let mut y = y0.clone();
+    let mut xhat = y0.rmsnorm(dims.eps);
+    let h0 = Tensor::zeros(&[dims.n]);
+    for k in 0..dims.k {
+        let mut args = fargs(params.layers[k].0.clone());
+        args.push(Arg::F(xhat.clone()));
+        args.push(Arg::F(y.clone()));
+        args.push(Arg::F(h0.clone()));
+        let outs = layer_fwd.run(&args).unwrap();
+        y = outs[0].clone();
+        xhat = outs[1].clone();
+    }
+    let loss_pipeline = {
+        let args = vec![
+            Arg::F(params.omega.clone()),
+            Arg::F(y.clone()),
+            Arg::I(targets.clone()),
+        ];
+        head.run(&args).unwrap()[0].item().unwrap()
+    };
+
+    // One-shot BPTT entry computes the same loss internally.
+    let bptt = arts.entry("bptt_grad").unwrap();
+    let mut args = fargs(params.flatten_for_bptt());
+    args.push(Arg::F(y0));
+    args.push(Arg::I(targets));
+    let outs = bptt.run(&args).unwrap();
+    let loss_bptt = outs[0].item().unwrap();
+
+    let rel = ((loss_pipeline - loss_bptt) / loss_bptt.max(1e-6)).abs();
+    assert!(
+        rel < 1e-4,
+        "pipeline loss {loss_pipeline} vs bptt loss {loss_bptt} (rel {rel})"
+    );
+}

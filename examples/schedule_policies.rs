@@ -1,0 +1,120 @@
+//! Schedule-policy walkthrough: plan the adjoint backward phase of a toy
+//! model under every dispatch policy, sequential vs overlapped, and print
+//! one device's per-slot timeline. Pure virtual-time logic — runs without
+//! artifacts (`cargo run --release --example schedule_policies`).
+//!
+//! What to look for:
+//!   * lpt beats fifo whenever item costs are skewed (tail chunks of a
+//!     truncated window are cheaper than head chunks);
+//!   * the overlapped (paralleled Alg. 4) plan starts items while the
+//!     modeled forward is still streaming chunks, so the step total
+//!     shrinks — never past the sequential plan (DESIGN.md §4);
+//!   * memory-aware admission (the cap here allows two working sets in
+//!     flight) serializes dispatches and shows up as `m`-bound starts.
+
+use adjoint_sharding::schedule::{
+    overlap_ready_times, plan_backward, PolicyKind, SchedItem, StartBound,
+};
+use adjoint_sharding::sharding::{assign_layers, plan_chunks};
+
+fn main() -> anyhow::Result<()> {
+    // Toy phase: K=4 layers on Υ=2 devices, T=1024 tokens in C=128 chunks,
+    // truncation window T̄=256, 3 MIG slots per device.
+    let (k, t, c, w, devices, slots) = (4usize, 1024usize, 128usize, 256usize, 2usize, 3usize);
+    let vjp_s = 1e-6;
+
+    let items = plan_chunks(k, t, c)?;
+    let assignment = assign_layers(k, devices)?;
+    let mem_per_item = 1 << 20; // 1 MiB transient working set per call
+    let caps = vec![Some(2 * mem_per_item as u64); devices]; // two in flight
+
+    let sched_items: Vec<SchedItem> = items
+        .iter()
+        .enumerate()
+        .map(|(id, it)| SchedItem {
+            id,
+            device: assignment.device_of_layer[it.layer],
+            layer: it.layer,
+            cost_s: it.vjp_units(w, t) as f64 * vjp_s,
+            ready_at: 0.0,
+            mem_bytes: mem_per_item as u64,
+        })
+        .collect();
+
+    // Forward model: 2.5 vjp-units per (token, layer).
+    let layer_secs = vec![2.5 * t as f64 * vjp_s; k];
+    let head_secs = 2.5 * t as f64 * vjp_s;
+    let seq_start: f64 = layer_secs.iter().sum::<f64>() + head_secs;
+    let ready = overlap_ready_times(&items, &layer_secs, head_secs, 0.0, c, w);
+
+    println!("{} work items, serial forward {:.3} ms\n", items.len(), seq_start * 1e3);
+    println!(
+        "{:<12} {:>14} {:>8} {:>16} {:>10}",
+        "policy", "seq backward", "util", "overlapped step", "step win"
+    );
+    for kind in PolicyKind::ALL {
+        let pol = kind.policy();
+        let seq = plan_backward(&sched_items, None, seq_start, devices, slots, &caps, pol.as_ref())?;
+        let ov = plan_backward(
+            &sched_items,
+            Some(&ready),
+            seq_start,
+            devices,
+            slots,
+            &caps,
+            pol.as_ref(),
+        )?;
+        println!(
+            "{:<12} {:>11.3} ms {:>7.0}% {:>13.3} ms {:>9.1}%",
+            kind.label(),
+            seq.sequential_makespan_s * 1e3,
+            100.0 * seq.schedule.utilization(),
+            ov.phase_end_s * 1e3,
+            100.0 * (1.0 - ov.phase_end_s / seq.phase_end_s),
+        );
+    }
+
+    // Per-slot timeline of device 0 under lpt, overlapped.
+    let ov = plan_backward(
+        &sched_items,
+        Some(&ready),
+        seq_start,
+        devices,
+        slots,
+        &caps,
+        PolicyKind::Lpt.policy().as_ref(),
+    )?;
+    let d0 = &ov.schedule.devices[0];
+    println!(
+        "\ndevice 0 timeline ({} spans, makespan {:.3} ms, peak transient {} B):",
+        d0.spans.len(),
+        d0.makespan_s * 1e3,
+        d0.peak_transient_bytes
+    );
+    for slot in 0..d0.slots {
+        let row: Vec<String> = d0
+            .spans
+            .iter()
+            .filter(|s| s.slot == slot)
+            .map(|s| {
+                let tag = match s.bound {
+                    StartBound::Ready => "r",
+                    StartBound::Slot => "s",
+                    StartBound::Memory => "m",
+                };
+                format!("L{}@{:.2}ms{}", s.layer, s.start_s * 1e3, tag)
+            })
+            .collect();
+        println!("  slot {slot}: {}", row.join(" → "));
+    }
+    let cp = d0.critical_path();
+    println!(
+        "critical path: {} spans, from layer {} (released {:.3} ms) to layer {}",
+        cp.len(),
+        cp.first().map(|s| s.layer).unwrap_or(0),
+        cp.first().map(|s| s.start_s * 1e3).unwrap_or(0.0),
+        cp.last().map(|s| s.layer).unwrap_or(0),
+    );
+    println!("schedule_policies OK");
+    Ok(())
+}

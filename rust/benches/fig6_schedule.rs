@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig6_schedule` — the Fig. 6 companion report:
+//! virtual backward-phase makespans under the event-driven scheduler,
+//! fifo vs lpt vs layer-major dispatch, sequential (distributed Alg. 4)
+//! vs overlapped (paralleled Alg. 4, released against the
+//! chunked-pipeline forward model), with memory-aware admission against
+//! the per-device HBM cap. Asserts the acceptance property: the
+//! overlapped step never loses to the sequential one.
+//!
+//! Same generator as `adjsh bench schedule` (rust/src/reports).
+
+use adjoint_sharding::reports;
+use adjoint_sharding::util::cli::Cli;
+
+fn main() {
+    // cargo bench passes --bench; ignore harness flags.
+    let mut cli = Cli::parse(
+        std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench" && !a.starts_with("--bench=")),
+    )
+    .expect("cli");
+    if let Err(e) = reports::fig6_schedule(&mut cli) {
+        eprintln!("fig6_schedule bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -5,7 +5,11 @@
 //! independent VJP bundles (Prop. 3), one per (layer, token-chunk) work
 //! item (Alg. 3). Devices process their own layers' items with no
 //! cross-device traffic — the paper's central claim — so the phase's
-//! modeled time is the max over devices of a MIG-slot makespan.
+//! modeled time is a per-device MIG-slot schedule, planned by the
+//! event-driven scheduler in [`crate::schedule`] (DESIGN.md §4): a
+//! pluggable dispatch policy, memory-aware admission against the HBM
+//! budget, and (when `SchedCfg::overlap` is on) the paralleled variant
+//! that releases items against the chunked-pipeline forward model.
 //!
 //! The adjoint states themselves (Alg. 2) live *inside* the
 //! `layer_adjoint_grad` artifact: the L1 Pallas kernel `adjoint_window`
@@ -14,17 +18,21 @@
 
 use anyhow::Result;
 
-use crate::config::ModelDims;
+use crate::config::{ModelDims, SchedCfg};
 use crate::model::{GradSet, ParamSet};
+use crate::pipeline::ForwardTiming;
 use crate::runtime::ArtifactSet;
+use crate::schedule::{self, BackwardPlan, SchedItem};
 use crate::sharding::{plan_chunks, WorkItem};
 use crate::tensor::{Arg, Tensor};
-use crate::topology::{makespan, ActKind, Fleet};
+use crate::topology::{ActKind, Fleet};
 
 /// Backward-phase outcome.
 #[derive(Debug)]
 pub struct AdjointOutput {
-    /// Modeled phase seconds: max over devices of their slot-makespan.
+    /// Modeled phase seconds beyond the serial forward: the planned
+    /// schedule's fleet makespan (sequential), or the overlapped plan's
+    /// tail past the forward (paralleled).
     pub virtual_s: f64,
     /// Wall seconds spent in PJRT executions.
     pub wall_s: f64,
@@ -32,6 +40,9 @@ pub struct AdjointOutput {
     pub vjp_units: u64,
     /// Number of chunk executions dispatched.
     pub calls: u64,
+    /// The virtual-time plan the phase ran under: per-slot timelines,
+    /// binding constraints, peak concurrent transients, critical path.
+    pub plan: BackwardPlan,
 }
 
 /// Assemble the inputs for one Alg. 3 work item from the owning device's
@@ -73,8 +84,10 @@ pub fn gather_item_args(
     ])
 }
 
-/// Run the full backward phase (Alg. 4): every device processes its layers'
-/// chunk items; gradients accumulate into `grads` (dL/dθ += Ξ, line 7).
+/// Run the full backward phase (Alg. 4) with the default schedule: FIFO
+/// dispatch, sequential release — the seed's order, though memory-aware
+/// admission may serialize what the seed's uncapped makespan over-packed.
+/// See [`backward_scheduled`].
 pub fn backward(
     arts: &ArtifactSet,
     dims: &ModelDims,
@@ -82,44 +95,107 @@ pub fn backward(
     fleet: &mut Fleet,
     grads: &mut GradSet,
 ) -> Result<AdjointOutput> {
+    backward_scheduled(arts, dims, params, fleet, grads, &SchedCfg::default(), None)
+}
+
+/// Run the full backward phase (Alg. 4): every device processes its layers'
+/// chunk items; gradients accumulate into `grads` (dL/dθ += Ξ, line 7).
+///
+/// The PJRT executions stay single-threaded (DESIGN.md §1); their measured
+/// seconds become the service costs of an event-driven virtual-time
+/// schedule over each device's MIG slots. Memory-aware admission caps the
+/// concurrent in-flight transient working sets against the HBM headroom
+/// left after resident activations, and the recorded per-device peaks
+/// reflect that concurrency (not one call at a time). With
+/// `sched.overlap` and a [`ForwardTiming`], items release against the
+/// chunked-pipeline forward model (paralleled Alg. 4, §4.5) and
+/// `virtual_s` is the phase tail past the serial forward.
+pub fn backward_scheduled(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    grads: &mut GradSet,
+    sched: &SchedCfg,
+    fwd_timing: Option<&ForwardTiming>,
+) -> Result<AdjointOutput> {
     let entry = arts.entry("layer_adjoint_grad")?;
     let items = plan_chunks(dims.k, dims.t, dims.c)?;
-
-    let mut per_device_times: Vec<Vec<f64>> = vec![Vec::new(); fleet.cfg.devices];
-    let mut wall_s = 0.0;
-    let mut vjp_units = 0u64;
-    let mut calls = 0u64;
 
     let transient_bytes =
         (entry.spec.input_bytes() + entry.spec.output_bytes()) as u64;
 
-    for item in &items {
+    // Admission headroom per device: the HBM budget minus what is already
+    // resident (activations, cotangents, params) when the phase starts.
+    let mem_caps: Vec<Option<u64>> = fleet
+        .devices
+        .iter()
+        .map(|d| Some(fleet.cfg.hbm_bytes.saturating_sub(d.mem.live)))
+        .collect();
+
+    // Execute every VJP bundle once; measured seconds are the virtual
+    // service costs (the transient working set is "disposed after the
+    // computation", §3.3 — its lifetime in virtual time is the span the
+    // scheduler assigns below).
+    let mut sched_items = Vec::with_capacity(items.len());
+    let mut wall_s = 0.0;
+    let mut vjp_units = 0u64;
+    let mut calls = 0u64;
+    for (id, item) in items.iter().enumerate() {
         let devi = fleet.device_of_layer(item.layer);
         let args = gather_item_args(dims, fleet, params, item)?;
-
-        // Transient VJP working set lives only for this call (the paper's
-        // "disposed after the computation", §3.3).
-        fleet.devices[devi].mem.alloc(transient_bytes);
         let (outs, secs) = entry.run_timed(&args)?;
-        fleet.devices[devi].mem.free(transient_bytes);
-
         grads.accumulate_layer(item.layer, &outs)?;
         wall_s += secs;
-        per_device_times[devi].push(secs);
         vjp_units += item.vjp_units(dims.w, dims.t);
         calls += 1;
+        sched_items.push(SchedItem {
+            id,
+            device: devi,
+            layer: item.layer,
+            cost_s: secs,
+            ready_at: 0.0,
+            mem_bytes: transient_bytes,
+        });
     }
 
-    // Modeled time: devices run in parallel; within a device, chunk calls
-    // pack onto MIG slots (§4.5).
-    let mut virtual_s = 0.0f64;
-    for (devi, times) in per_device_times.iter().enumerate() {
-        let m = makespan(times, fleet.cfg.mig_slots);
-        fleet.charge_compute(devi, m);
-        virtual_s = virtual_s.max(m);
+    // Paralleled releases from the forward timing, when asked for.
+    let overlap_ready = match (sched.overlap, fwd_timing) {
+        (true, Some(t)) if !t.layer_secs.is_empty() => Some(schedule::overlap_ready_times(
+            &items,
+            &t.layer_secs,
+            t.head_secs,
+            t.broadcast_s,
+            dims.c,
+            dims.w,
+        )),
+        _ => None,
+    };
+    let seq_start_s = fwd_timing.map(|t| t.virtual_s).unwrap_or(0.0);
+
+    let policy = sched.policy.policy();
+    let plan = schedule::plan_backward(
+        &sched_items,
+        overlap_ready.as_deref(),
+        seq_start_s,
+        fleet.cfg.devices,
+        fleet.cfg.mig_slots,
+        &mem_caps,
+        policy.as_ref(),
+    )?;
+
+    // Charge each device's virtual clock with its occupied window (wall
+    // seconds, same unit the forward charges — NOT slot-seconds; equals
+    // the seed's per-device makespan for sequential releases) and record
+    // the concurrent transient peak reached under admission (bounded by
+    // the headroom, so `check_budget` still holds).
+    for d in &plan.schedule.devices {
+        fleet.charge_compute(d.device, d.makespan_s - d.first_start_s());
+        fleet.devices[d.device].mem.alloc(d.peak_transient_bytes);
+        fleet.devices[d.device].mem.free(d.peak_transient_bytes);
     }
 
-    Ok(AdjointOutput { virtual_s, wall_s, vjp_units, calls })
+    Ok(AdjointOutput { virtual_s: plan.backward_s, wall_s, vjp_units, calls, plan })
 }
 
 /// Reference single-item runner (tests / benches): executes one work item

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::schedule::PolicyKind;
 use crate::util::json::Json;
 
 /// Model dimensions — field names follow the paper (§3.1) and must match
@@ -125,6 +126,30 @@ impl Default for TopologyCfg {
     }
 }
 
+/// Backward-phase scheduling: dispatch policy for the per-device MIG-slot
+/// event queues and the paralleled (overlapped) variant toggle
+/// (paper §4.4–4.5; DESIGN.md §4).
+#[derive(Debug, Clone)]
+pub struct SchedCfg {
+    /// Dispatch order among admissible VJP work items.
+    pub policy: PolicyKind,
+    /// Paralleled Alg. 4: release each layer's VJP items against the
+    /// chunked-pipeline forward model instead of waiting for the serial
+    /// forward to finish (overlaps Alg. 1 and Alg. 4 in virtual time).
+    pub overlap: bool,
+}
+
+impl Default for SchedCfg {
+    fn default() -> Self {
+        // FIFO + no overlap reproduces the seed's dispatch order; virtual
+        // times match the seed whenever HBM headroom admits a full
+        // slot-width of transients. Memory-aware admission is new: in
+        // memory-tight configs it serializes items the seed's uncapped
+        // makespan over-packed, reporting honestly longer phases.
+        Self { policy: PolicyKind::Fifo, overlap: false }
+    }
+}
+
 /// Optimizer settings (paper trains with Adam).
 #[derive(Debug, Clone)]
 pub struct OptimCfg {
@@ -149,6 +174,7 @@ pub struct RunConfig {
     pub dims: ModelDims,
     pub grad_mode: GradMode,
     pub topology: TopologyCfg,
+    pub sched: SchedCfg,
     pub optim: OptimCfg,
     pub steps: usize,
     pub seed: u64,
@@ -170,6 +196,7 @@ impl RunConfig {
             dims,
             grad_mode: GradMode::Adjoint,
             topology: TopologyCfg::default(),
+            sched: SchedCfg::default(),
             optim: OptimCfg::default(),
             steps: 100,
             seed: 0,
@@ -251,6 +278,7 @@ mod tests {
             dims: dims(),
             grad_mode: GradMode::Adjoint,
             topology: TopologyCfg { devices: 3, ..Default::default() },
+            sched: SchedCfg::default(),
             optim: OptimCfg::default(),
             steps: 1,
             seed: 0,

@@ -27,6 +27,7 @@ pub mod pipeline;
 pub mod reports;
 pub mod rng;
 pub mod runtime;
+pub mod schedule;
 pub mod sharding;
 pub mod tensor;
 pub mod topology;

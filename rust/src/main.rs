@@ -53,12 +53,13 @@ adjsh — adjoint sharding for very long context SSM training (repro)
 
 commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
+            [--sched-policy fifo|lpt|layer-major] [--overlap]
             [--checkpoint out.ckpt] [--resume in.ckpt]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
   inspect   --config <name>
-  bench     fig1 | table1 | fig6 | vjp-count | max-context | tbar-sweep |
-            chunk-size | topology
+  bench     fig1 | table1 | fig6 | schedule | vjp-count | max-context |
+            tbar-sweep | chunk-size | topology
   help
 
 common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>";
@@ -74,6 +75,11 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         .parse::<GradMode>()?;
     cfg.topology.devices = cli.usize_or("devices", 1, "simulated devices Υ")?;
     cfg.topology.mig_slots = cli.usize_or("mig-slots", 7, "MIG slots per device")?;
+    cfg.sched.policy = cli
+        .str_or("sched-policy", "fifo", "backward dispatch policy: fifo|lpt|layer-major")
+        .parse()?;
+    cfg.sched.overlap =
+        cli.bool_or("overlap", false, "paralleled Alg. 4: overlap backward with forward")?;
     cfg.optim.lr = cli.f64_or("lr", 1e-3, "Adam learning rate")? as f32;
     cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
     let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
@@ -191,13 +197,14 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
         "fig1" => reports::fig1(cli),
         "table1" => reports::table1(cli),
         "fig6" => reports::fig6(cli),
+        "schedule" => reports::fig6_schedule(cli),
         "vjp-count" => reports::vjp_count(cli),
         "max-context" => reports::max_context(cli),
         "tbar-sweep" => reports::tbar_sweep(cli),
         "chunk-size" => reports::chunk_size(cli),
         "topology" => reports::topology_scaling(cli),
         other => bail!(
-            "unknown bench '{other}' (fig1|table1|fig6|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
+            "unknown bench '{other}' (fig1|table1|fig6|schedule|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
         ),
     }
 }

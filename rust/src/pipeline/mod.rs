@@ -27,6 +27,25 @@ pub struct ForwardOutput {
     pub virtual_s: f64,
     /// Wall seconds actually spent in PJRT executions.
     pub wall_s: f64,
+    /// Per-phase timing breakdown — feeds the paralleled backward
+    /// scheduler's chunked-pipeline release model
+    /// ([`crate::schedule::overlap_ready_times`]).
+    pub timing: ForwardTiming,
+}
+
+/// Timing breakdown of one Alg. 1 pass, consumed by the backward
+/// scheduler's overlapped (paralleled Alg. 4) variant.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardTiming {
+    /// Measured seconds of each layer's `layer_fwd` call, layer order.
+    pub layer_secs: Vec<f64>,
+    /// Measured seconds of the `head_loss` call.
+    pub head_secs: f64,
+    /// Modeled cotangent broadcast seconds (Alg. 1 line 15).
+    pub broadcast_s: f64,
+    /// Serial critical path of the whole phase (== `ForwardOutput::virtual_s`);
+    /// the sequential backward release point.
+    pub virtual_s: f64,
 }
 
 /// Run Alg. 1. Activations are stored on each layer's owning device;
@@ -55,6 +74,7 @@ pub fn forward(
     let h0 = Tensor::zeros(&[dims.n]);
     let mut virtual_s = 0.0;
     let mut wall_s = 0.0;
+    let mut timing = ForwardTiming::default();
 
     for k in 0..dims.k {
         let dev = fleet.device_of_layer(k);
@@ -69,6 +89,7 @@ pub fn forward(
         wall_s += secs;
         fleet.charge_compute(dev, secs);
         virtual_s += secs; // Alg. 1 is sequential across the pipeline.
+        timing.layer_secs.push(secs);
 
         let mut it = outs.into_iter();
         y = it.next().unwrap();
@@ -102,6 +123,7 @@ pub fn forward(
     wall_s += secs;
     fleet.charge_compute(head_dev, secs);
     virtual_s += secs;
+    timing.head_secs = secs;
 
     let mut it = outs.into_iter();
     let loss = it.next().unwrap().item()? as f64;
@@ -109,13 +131,16 @@ pub fn forward(
     let d_omega = it.next().unwrap();
 
     // Line 15: cotangents stored on all Υ devices.
-    virtual_s += fleet.broadcast(head_dev, cotangents.size_bytes() as u64);
+    let bcast_s = fleet.broadcast(head_dev, cotangents.size_bytes() as u64);
+    virtual_s += bcast_s;
+    timing.broadcast_s = bcast_s;
     let n_dev = fleet.cfg.devices;
     for v in 0..n_dev {
         fleet.devices[v].put(usize::MAX, ActKind::Cotangent, cotangents.clone());
     }
 
-    Ok(ForwardOutput { loss, y_k: y, cotangents, d_omega, virtual_s, wall_s })
+    timing.virtual_s = virtual_s;
+    Ok(ForwardOutput { loss, y_k: y, cotangents, d_omega, virtual_s, wall_s, timing })
 }
 
 /// Evaluation-only forward: loss without storing anything (for held-out

@@ -1,0 +1,852 @@
+//! Event-driven virtual-time scheduler for the adjoint backward phase —
+//! the distributed *and* paralleled versions of Alg. 4 (paper §4.4–4.5).
+//! See DESIGN.md §4.
+//!
+//! The seed modeled per-device MIG parallelism with a post-hoc greedy
+//! list-makespan over a flat list of measured VJP times. This module
+//! replaces that with a real schedule: per-device MIG-slot event queues,
+//! a pluggable dispatch policy ([`SchedPolicy`]: fifo | lpt | layer-major),
+//! per-item release times (`ready_at` — the paralleled variant overlaps
+//! Alg. 1 and Alg. 4 by releasing a layer's VJP items as soon as the
+//! chunked-pipeline forward model has produced that layer's activations
+//! and the cotangent slice its truncation window needs), and memory-aware
+//! admission (in-flight transient working sets per device are capped
+//! against the `TopologyCfg` HBM budget, so peak-memory reports reflect
+//! real concurrency instead of one-call-at-a-time accounting).
+//!
+//! Everything here is pure virtual-time logic over measured (or analytic)
+//! service times: the PJRT executions themselves stay single-threaded in
+//! the coordinator (DESIGN.md §1); the scheduler decides what those
+//! executions *would have cost* on the simulated fleet.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::sharding::WorkItem;
+
+/// Tolerance for virtual-time comparisons (measured times are ≥ µs-scale).
+const EPS: f64 = 1e-12;
+
+// ---------------------------------------------------------------------------
+// Work items and dispatch records.
+// ---------------------------------------------------------------------------
+
+/// One schedulable unit of backward work: the VJP bundle of a
+/// (layer, token-chunk) pair (Alg. 3), placed on its layer's device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedItem {
+    /// Stable id (index into the phase's work list).
+    pub id: usize,
+    /// Owning device (layer placement, paper Tables 2–6).
+    pub device: usize,
+    /// Layer the bundle belongs to (drives the layer-major policy).
+    pub layer: usize,
+    /// Service time, virtual seconds (measured PJRT wall time or analytic).
+    pub cost_s: f64,
+    /// Earliest virtual time this item may start. 0 for the sequential
+    /// (distributed) variant; the chunked-pipeline forward completion time
+    /// for the paralleled variant (see [`overlap_ready_times`]).
+    pub ready_at: f64,
+    /// Transient working-set bytes held for the item's whole service time
+    /// (the paper's "disposed after the computation", §3.3).
+    pub mem_bytes: u64,
+}
+
+/// Which constraint determined a dispatch's start time — the scheduler's
+/// explanation of every wait, surfaced by the reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartBound {
+    /// Started the moment its inputs were available (forward dependency).
+    Ready,
+    /// Waited for a MIG slot to free up.
+    Slot,
+    /// Waited for memory-aware admission (HBM headroom).
+    Memory,
+}
+
+/// One dispatched item on a MIG slot of one device.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotSpan {
+    /// [`SchedItem::id`] of the dispatched item.
+    pub item: usize,
+    pub layer: usize,
+    pub slot: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub bound: StartBound,
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch policies.
+// ---------------------------------------------------------------------------
+
+/// Pluggable dispatch order: given the admissible (ready, memory-feasible)
+/// candidates at an event, pick which one the freed slot runs next.
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Index into `candidates` of the item to dispatch. `candidates` is
+    /// non-empty and preserves submission (id) order.
+    fn pick(&self, candidates: &[SchedItem]) -> usize;
+}
+
+/// Submission order — reproduces the seed's greedy list scheduling.
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, _candidates: &[SchedItem]) -> usize {
+        0
+    }
+}
+
+/// Longest processing time first — the classic 4/3-approximation for
+/// minimizing makespan on identical machines.
+pub struct Lpt;
+
+impl SchedPolicy for Lpt {
+    fn name(&self) -> &'static str {
+        "lpt"
+    }
+
+    fn pick(&self, candidates: &[SchedItem]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cost_s.partial_cmp(&b.1.cost_s).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Lowest layer first (ties by submission order): drains each layer's
+/// bundles before the next, so gradient accumulation per layer completes
+/// early and its activations can be released sooner.
+pub struct LayerMajor;
+
+impl SchedPolicy for LayerMajor {
+    fn name(&self) -> &'static str {
+        "layer-major"
+    }
+
+    fn pick(&self, candidates: &[SchedItem]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, it)| (it.layer, it.id))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Named policy selector — the `RunConfig`-facing handle
+/// (`--sched-policy fifo|lpt|layer-major`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Lpt,
+    LayerMajor,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 3] = [PolicyKind::Fifo, PolicyKind::Lpt, PolicyKind::LayerMajor];
+
+    pub fn policy(&self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Lpt => Box::new(Lpt),
+            PolicyKind::LayerMajor => Box::new(LayerMajor),
+        }
+    }
+
+    /// Canonical name. Allocation-free; `policy_kind_parses_and_labels`
+    /// pins these to the trait impls' `name()` strings.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Lpt => "lpt",
+            PolicyKind::LayerMajor => "layer-major",
+        }
+    }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "lpt" => Ok(PolicyKind::Lpt),
+            "layer-major" | "layer_major" | "layermajor" => Ok(PolicyKind::LayerMajor),
+            _ => bail!("unknown schedule policy '{s}' (fifo|lpt|layer-major)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-device event engine.
+// ---------------------------------------------------------------------------
+
+/// The schedule of one device: dispatch-ordered spans over its MIG slots.
+#[derive(Debug, Clone)]
+pub struct DeviceSchedule {
+    pub device: usize,
+    pub slots: usize,
+    /// Spans in dispatch order (per-slot timelines are recovered by
+    /// filtering on `SlotSpan::slot`).
+    pub spans: Vec<SlotSpan>,
+    /// Virtual end of the last span (0 when empty). On the same time axis
+    /// as the items' `ready_at`.
+    pub makespan_s: f64,
+    /// Total occupied slot-seconds (Σ span durations).
+    pub busy_s: f64,
+    /// Peak concurrent transient bytes admitted on this device.
+    pub peak_transient_bytes: u64,
+}
+
+impl DeviceSchedule {
+    /// Start of the first span (== makespan when empty).
+    pub fn first_start_s(&self) -> f64 {
+        self.spans
+            .iter()
+            .map(|s| s.start_s)
+            .fold(f64::INFINITY, f64::min)
+            .min(self.makespan_s)
+    }
+
+    /// Busy fraction of the active window across all slots, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        let window = self.makespan_s - self.first_start_s();
+        if window <= 0.0 || self.slots == 0 {
+            return 0.0;
+        }
+        (self.busy_s / (self.slots as f64 * window)).min(1.0)
+    }
+
+    /// The binding chain that ends at the last-finishing span: each hop
+    /// walks to the span whose completion justified the current start
+    /// (same slot for `Slot` waits, any completion for `Memory` waits),
+    /// stopping at a `Ready` dispatch (an external forward dependency).
+    pub fn critical_path(&self) -> Vec<SlotSpan> {
+        let mut path = Vec::new();
+        let Some(mut cur) = self
+            .spans
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.end_s.partial_cmp(&b.end_s).unwrap())
+        else {
+            return path;
+        };
+        loop {
+            path.push(cur);
+            if cur.bound == StartBound::Ready {
+                break;
+            }
+            let pred = self
+                .spans
+                .iter()
+                .find(|s| {
+                    (s.end_s - cur.start_s).abs() <= 1e-9
+                        && (cur.bound != StartBound::Slot || s.slot == cur.slot)
+                })
+                .cloned();
+            match pred {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        path.reverse();
+        path
+    }
+}
+
+/// Schedule `items` (all owned by `device`) on `slots` identical MIG
+/// executors under `policy`, with optional memory-aware admission.
+///
+/// Event-driven: virtual time advances from completion to completion
+/// (plus `ready_at` releases); at each event every free slot greedily
+/// pulls the policy's choice among the admissible candidates. An item is
+/// admissible when it is released and its transient bytes fit under
+/// `mem_cap_bytes` alongside everything in flight; an item larger than
+/// the whole cap is admitted alone (the schedule must complete — the
+/// fleet's budget check reports the overrun).
+pub fn schedule_device(
+    device: usize,
+    items: &[SchedItem],
+    slots: usize,
+    mem_cap_bytes: Option<u64>,
+    policy: &dyn SchedPolicy,
+) -> Result<DeviceSchedule> {
+    if slots == 0 {
+        bail!("scheduler needs at least one MIG slot");
+    }
+    for it in items {
+        if it.device != device {
+            bail!("item {} belongs to device {}, not {device}", it.id, it.device);
+        }
+        if !it.cost_s.is_finite() || it.cost_s < 0.0 {
+            bail!("item {}: bad cost {}", it.id, it.cost_s);
+        }
+        if !it.ready_at.is_finite() || it.ready_at < 0.0 {
+            bail!("item {}: bad ready_at {}", it.id, it.ready_at);
+        }
+    }
+
+    let mut pending: Vec<SchedItem> = items.to_vec();
+    let mut slot_free = vec![0.0f64; slots];
+    let mut inflight: Vec<(f64, u64)> = Vec::new(); // (end, mem_bytes)
+    let mut mem_live = 0u64;
+    let mut peak = 0u64;
+    let mut now = 0.0f64;
+    let mut spans = Vec::with_capacity(items.len());
+
+    while !pending.is_empty() {
+        // Retire completions up to `now` (frees admission memory; slots
+        // free implicitly via their `slot_free` times).
+        inflight.retain(|&(end, mem)| {
+            if end <= now + EPS {
+                mem_live -= mem;
+                false
+            } else {
+                true
+            }
+        });
+
+        let (slot, slot_t) = slot_free
+            .iter()
+            .cloned()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let slot_open = slot_t <= now + EPS;
+
+        let admissible: Vec<usize> = pending
+            .iter()
+            .enumerate()
+            .filter(|(_, it)| {
+                it.ready_at <= now + EPS
+                    && match mem_cap_bytes {
+                        None => true,
+                        Some(cap) => mem_live + it.mem_bytes <= cap || inflight.is_empty(),
+                    }
+            })
+            .map(|(i, _)| i)
+            .collect();
+
+        if slot_open && !admissible.is_empty() {
+            let candidates: Vec<SchedItem> =
+                admissible.iter().map(|&i| pending[i]).collect();
+            let chosen = policy.pick(&candidates).min(candidates.len() - 1);
+            let it = pending.remove(admissible[chosen]);
+            // Why did it start only now? Readiness beats a just-freed
+            // slot beats memory admission (the only other constraint).
+            let bound = if it.ready_at >= now - EPS {
+                StartBound::Ready
+            } else if slot_t >= now - EPS {
+                StartBound::Slot
+            } else {
+                StartBound::Memory
+            };
+            let end = now + it.cost_s;
+            slot_free[slot] = end;
+            mem_live += it.mem_bytes;
+            peak = peak.max(mem_live);
+            inflight.push((end, it.mem_bytes));
+            spans.push(SlotSpan {
+                item: it.id,
+                layer: it.layer,
+                slot,
+                start_s: now,
+                end_s: end,
+                bound,
+            });
+            continue;
+        }
+
+        // Advance to the next event that can unblock work.
+        let mut next = f64::INFINITY;
+        for &(end, _) in &inflight {
+            if end > now + EPS {
+                next = next.min(end);
+            }
+        }
+        if slot_t > now + EPS {
+            next = next.min(slot_t);
+        }
+        for it in &pending {
+            if it.ready_at > now + EPS {
+                next = next.min(it.ready_at);
+            }
+        }
+        if !next.is_finite() {
+            bail!(
+                "scheduler deadlock on device {device}: {} items pending at t={now}",
+                pending.len()
+            );
+        }
+        now = next;
+    }
+
+    let makespan_s = spans.iter().map(|s| s.end_s).fold(0.0, f64::max);
+    let busy_s = spans.iter().map(|s| s.end_s - s.start_s).sum();
+    Ok(DeviceSchedule { device, slots, spans, makespan_s, busy_s, peak_transient_bytes: peak })
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-level schedules.
+// ---------------------------------------------------------------------------
+
+/// The full backward-phase schedule: one [`DeviceSchedule`] per device
+/// (devices run independently — the paper's no-cross-device-traffic claim).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub policy: &'static str,
+    /// Whether `ready_at` carried the paralleled (overlapped) releases.
+    pub overlapped: bool,
+    pub devices: Vec<DeviceSchedule>,
+}
+
+impl Schedule {
+    /// Fleet makespan: max device end (devices are independent).
+    pub fn makespan_s(&self) -> f64 {
+        self.devices.iter().map(|d| d.makespan_s).fold(0.0, f64::max)
+    }
+
+    /// The device whose timeline bounds the phase.
+    pub fn critical_device(&self) -> Option<usize> {
+        self.devices
+            .iter()
+            .max_by(|a, b| a.makespan_s.partial_cmp(&b.makespan_s).unwrap())
+            .map(|d| d.device)
+    }
+
+    pub fn scheduled_items(&self) -> usize {
+        self.devices.iter().map(|d| d.spans.len()).sum()
+    }
+
+    /// Max peak concurrent transient bytes over devices.
+    pub fn peak_transient_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.peak_transient_bytes).max().unwrap_or(0)
+    }
+
+    /// Busy fraction of active slot-seconds across the fleet, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        let mut busy = 0.0;
+        let mut capacity = 0.0;
+        for d in &self.devices {
+            let window = d.makespan_s - d.first_start_s();
+            if window > 0.0 {
+                busy += d.busy_s;
+                capacity += d.slots as f64 * window;
+            }
+        }
+        if capacity <= 0.0 {
+            0.0
+        } else {
+            (busy / capacity).min(1.0)
+        }
+    }
+
+    /// Dispatch counts by binding constraint: [ready, slot, memory].
+    pub fn bound_counts(&self) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for d in &self.devices {
+            for s in &d.spans {
+                match s.bound {
+                    StartBound::Ready => c[0] += 1,
+                    StartBound::Slot => c[1] += 1,
+                    StartBound::Memory => c[2] += 1,
+                }
+            }
+        }
+        c
+    }
+}
+
+/// Schedule a mixed-device item set: partition by owning device and run
+/// the per-device engine. `mem_caps` is per-device (empty = uncapped);
+/// `overlapped` only labels the result.
+pub fn schedule_items(
+    items: &[SchedItem],
+    devices: usize,
+    slots: usize,
+    mem_caps: &[Option<u64>],
+    policy: &dyn SchedPolicy,
+    overlapped: bool,
+) -> Result<Schedule> {
+    if devices == 0 {
+        bail!("scheduler needs at least one device");
+    }
+    if !mem_caps.is_empty() && mem_caps.len() != devices {
+        bail!("got {} memory caps for {devices} devices", mem_caps.len());
+    }
+    let mut per_device: Vec<Vec<SchedItem>> = vec![Vec::new(); devices];
+    for it in items {
+        if it.device >= devices {
+            bail!("item {} on device {} ≥ fleet size {devices}", it.id, it.device);
+        }
+        per_device[it.device].push(*it);
+    }
+    let mut out = Vec::with_capacity(devices);
+    for (dev, dev_items) in per_device.iter().enumerate() {
+        let cap = mem_caps.get(dev).copied().flatten();
+        out.push(schedule_device(dev, dev_items, slots, cap, policy)?);
+    }
+    Ok(Schedule { policy: policy.name(), overlapped, devices: out })
+}
+
+/// Seed-compatible greedy list-scheduling makespan: FIFO submission
+/// order, everything released at t = 0, no admission cap. This is what
+/// `topology::makespan` now delegates to.
+pub fn makespan_fifo(times: &[f64], slots: usize) -> f64 {
+    let items: Vec<SchedItem> = times
+        .iter()
+        .enumerate()
+        .map(|(id, &t)| SchedItem {
+            id,
+            device: 0,
+            layer: 0,
+            cost_s: t,
+            ready_at: 0.0,
+            mem_bytes: 0,
+        })
+        .collect();
+    schedule_device(0, &items, slots, None, &Fifo)
+        .expect("fifo makespan over finite non-negative times")
+        .makespan_s
+}
+
+// ---------------------------------------------------------------------------
+// The paralleled variant: overlapping Alg. 1 and Alg. 4 in virtual time.
+// ---------------------------------------------------------------------------
+
+/// Release times for the paralleled variant, from a chunked-pipeline
+/// model of the forward pass (the overlap idea of FPDT, arXiv:2408.16978,
+/// applied to Alg. 1):
+///
+/// * The forward is modeled as `J = T/C` equal micro-chunks flowing
+///   through the K-layer pipeline: `t[k][j] = max(t[k-1][j], t[k][j-1])
+///   + layer_secs[k]/J`.
+/// * The head emits the per-token cotangents incrementally (next-token CE
+///   is token-local): chunk j's slice is out at
+///   `h[j] = max(t[K-1][j], h[j-1]) + head_secs/J`, plus `broadcast_s` to
+///   reach every device.
+/// * An Alg. 3 item over chunk j of layer k reads that layer's chunk-j
+///   activations and — through its truncation window W — cotangents up to
+///   token `(j+1)·C + W`, i.e. head chunk `min(J-1, j + ⌈W/C⌉)`:
+///
+///   `ready(k, j) = max(t[k][j], h[min(J-1, j + ⌈W/C⌉)] + broadcast_s)`.
+///
+/// With a finite window the tail cotangent dependency is bounded, so
+/// early chunks of early layers release long before the forward finishes
+/// — that is where the paralleled variant's win comes from.
+pub fn overlap_ready_times(
+    items: &[WorkItem],
+    layer_secs: &[f64],
+    head_secs: f64,
+    broadcast_s: f64,
+    chunk_len: usize,
+    window: usize,
+) -> Vec<f64> {
+    if items.is_empty() || layer_secs.is_empty() || chunk_len == 0 {
+        return vec![0.0; items.len()];
+    }
+    let k = layer_secs.len();
+    let j_n = items
+        .iter()
+        .map(|it| it.chunk_start / chunk_len)
+        .max()
+        .unwrap_or(0)
+        + 1;
+    let jf = j_n as f64;
+
+    let mut t = vec![vec![0.0f64; j_n]; k];
+    for ki in 0..k {
+        for j in 0..j_n {
+            let from_prev_layer = if ki == 0 { 0.0 } else { t[ki - 1][j] };
+            let from_prev_chunk = if j == 0 { 0.0 } else { t[ki][j - 1] };
+            t[ki][j] = from_prev_layer.max(from_prev_chunk) + layer_secs[ki] / jf;
+        }
+    }
+    let mut h = vec![0.0f64; j_n];
+    for j in 0..j_n {
+        let prev = if j == 0 { 0.0 } else { h[j - 1] };
+        h[j] = t[k - 1][j].max(prev) + head_secs / jf;
+    }
+
+    let lookahead = (window + chunk_len - 1) / chunk_len;
+    items
+        .iter()
+        .map(|it| {
+            let j = it.chunk_start / chunk_len;
+            let layer = it.layer.min(k - 1);
+            let jc = (j + lookahead).min(j_n - 1);
+            t[layer][j].max(h[jc] + broadcast_s)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Backward-phase planning: sequential baseline vs paralleled overlap.
+// ---------------------------------------------------------------------------
+
+/// The plan the backward phase runs under, on the step's absolute virtual
+/// axis (forward starts at 0).
+#[derive(Debug, Clone)]
+pub struct BackwardPlan {
+    pub schedule: Schedule,
+    /// Absolute virtual end of the step. For the sequential plan this is
+    /// `seq_start_s + sequential_makespan_s` (its spans sit on a
+    /// phase-relative axis starting at 0); for an overlapped plan the
+    /// spans themselves are absolute and this is `max(schedule end,
+    /// seq_start_s)` — the step cannot end before the forward does.
+    pub phase_end_s: f64,
+    /// Backward-phase seconds beyond the serial forward — what the trainer
+    /// adds to `ForwardOutput::virtual_s`. Never exceeds
+    /// `sequential_makespan_s` (the overlapped plan is only kept when its
+    /// absolute finish beats the sequential one, ruling out
+    /// list-scheduling release anomalies).
+    pub backward_s: f64,
+    /// The sequential baseline's fleet makespan, for reporting the win.
+    pub sequential_makespan_s: f64,
+}
+
+/// Plan the backward phase. Always computes the sequential (distributed
+/// Alg. 4) baseline — every item released when the serial forward
+/// completes; when `overlap_ready` is given (the paralleled variant),
+/// also schedules against those releases on the absolute axis and keeps
+/// whichever plan finishes first.
+pub fn plan_backward(
+    items: &[SchedItem],
+    overlap_ready: Option<&[f64]>,
+    seq_start_s: f64,
+    devices: usize,
+    slots: usize,
+    mem_caps: &[Option<u64>],
+    policy: &dyn SchedPolicy,
+) -> Result<BackwardPlan> {
+    let mut seq_items = items.to_vec();
+    for it in &mut seq_items {
+        it.ready_at = 0.0;
+    }
+    let seq = schedule_items(&seq_items, devices, slots, mem_caps, policy, false)?;
+    let seq_make = seq.makespan_s();
+    let seq_end = seq_start_s + seq_make;
+
+    if let Some(ready) = overlap_ready {
+        if ready.len() != items.len() {
+            bail!("{} release times for {} items", ready.len(), items.len());
+        }
+        let mut ov_items = items.to_vec();
+        for (it, &r) in ov_items.iter_mut().zip(ready) {
+            // Inputs certainly exist once the serial forward has finished.
+            it.ready_at = r.clamp(0.0, seq_start_s.max(0.0));
+        }
+        let ov = schedule_items(&ov_items, devices, slots, mem_caps, policy, true)?;
+        let ov_end = ov.makespan_s().max(seq_start_s);
+        if ov_end <= seq_end {
+            return Ok(BackwardPlan {
+                schedule: ov,
+                phase_end_s: ov_end,
+                backward_s: ov_end - seq_start_s,
+                sequential_makespan_s: seq_make,
+            });
+        }
+    }
+
+    Ok(BackwardPlan {
+        schedule: seq,
+        phase_end_s: seq_end,
+        backward_s: seq_make,
+        sequential_makespan_s: seq_make,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(costs: &[f64]) -> Vec<SchedItem> {
+        costs
+            .iter()
+            .enumerate()
+            .map(|(id, &c)| SchedItem {
+                id,
+                device: 0,
+                layer: id,
+                cost_s: c,
+                ready_at: 0.0,
+                mem_bytes: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fifo_matches_greedy_list_scheduling() {
+        // Same cases as the seed's topology::makespan tests.
+        assert!((makespan_fifo(&[1.0, 1.0, 1.0, 1.0, 4.0], 1) - 8.0).abs() < 1e-12);
+        assert!((makespan_fifo(&[1.0, 1.0, 1.0, 1.0, 4.0], 5) - 4.0).abs() < 1e-12);
+        assert_eq!(makespan_fifo(&[], 3), 0.0);
+        // Greedy in submission order on 2 slots: loads (1+1+4, 1+1) → 6.
+        assert!((makespan_fifo(&[1.0, 1.0, 1.0, 1.0, 4.0], 2) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_beats_fifo_on_the_classic_case() {
+        let it = items(&[1.0, 1.0, 1.0, 1.0, 4.0]);
+        let fifo = schedule_device(0, &it, 2, None, &Fifo).unwrap();
+        let lpt = schedule_device(0, &it, 2, None, &Lpt).unwrap();
+        assert!((fifo.makespan_s - 6.0).abs() < 1e-12);
+        assert!((lpt.makespan_s - 4.0).abs() < 1e-12);
+        assert!(lpt.utilization() > fifo.utilization());
+    }
+
+    #[test]
+    fn layer_major_drains_layers_in_order() {
+        let mut it = items(&[1.0, 1.0, 1.0, 1.0]);
+        it[0].layer = 3;
+        it[1].layer = 2;
+        it[2].layer = 1;
+        it[3].layer = 0;
+        let d = schedule_device(0, &it, 1, None, &LayerMajor).unwrap();
+        let order: Vec<usize> = d.spans.iter().map(|s| s.layer).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn memory_admission_serializes_and_caps_peak() {
+        let mut it = items(&[1.0, 1.0, 1.0, 1.0]);
+        for i in &mut it {
+            i.mem_bytes = 10;
+        }
+        // Cap of one working set: 4 slots available but items must run
+        // one at a time.
+        let d = schedule_device(0, &it, 4, Some(10), &Fifo).unwrap();
+        assert!((d.makespan_s - 4.0).abs() < 1e-12);
+        assert_eq!(d.peak_transient_bytes, 10);
+        assert!(d.spans.iter().skip(1).all(|s| s.bound == StartBound::Memory));
+        // Cap of two working sets → two-wide concurrency.
+        let d2 = schedule_device(0, &it, 4, Some(20), &Fifo).unwrap();
+        assert!((d2.makespan_s - 2.0).abs() < 1e-12);
+        assert_eq!(d2.peak_transient_bytes, 20);
+    }
+
+    #[test]
+    fn oversized_item_still_schedules_alone() {
+        let mut it = items(&[1.0, 1.0]);
+        for i in &mut it {
+            i.mem_bytes = 100;
+        }
+        let d = schedule_device(0, &it, 2, Some(10), &Fifo).unwrap();
+        assert_eq!(d.spans.len(), 2);
+        assert!((d.makespan_s - 2.0).abs() < 1e-12); // serialized
+        assert_eq!(d.peak_transient_bytes, 100);
+    }
+
+    #[test]
+    fn ready_times_delay_dispatch() {
+        let mut it = items(&[1.0, 1.0]);
+        it[1].ready_at = 5.0;
+        let d = schedule_device(0, &it, 2, None, &Fifo).unwrap();
+        assert!((d.makespan_s - 6.0).abs() < 1e-12);
+        assert!(d.spans.iter().all(|s| s.bound == StartBound::Ready));
+        // Utilization measured over the active window, not from t = 0.
+        assert!(d.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn slot_bound_recorded_when_slots_are_scarce() {
+        let d = schedule_device(0, &items(&[2.0, 2.0, 2.0]), 1, None, &Fifo).unwrap();
+        assert_eq!(d.spans[0].bound, StartBound::Ready);
+        assert_eq!(d.spans[1].bound, StartBound::Slot);
+        assert_eq!(d.spans[2].bound, StartBound::Slot);
+        let cp = d.critical_path();
+        assert_eq!(cp.len(), 3);
+        assert_eq!(cp.first().unwrap().bound, StartBound::Ready);
+    }
+
+    #[test]
+    fn fleet_schedule_partitions_by_device() {
+        let mut it = items(&[1.0, 2.0, 3.0, 4.0]);
+        it[2].device = 1;
+        it[3].device = 1;
+        let s = schedule_items(&it, 2, 2, &[], &Lpt, false).unwrap();
+        assert_eq!(s.scheduled_items(), 4);
+        assert_eq!(s.devices[0].spans.len(), 2);
+        assert_eq!(s.devices[1].spans.len(), 2);
+        assert_eq!(s.critical_device(), Some(1));
+        assert!((s.makespan_s() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_plan_never_loses_to_sequential() {
+        let it = items(&[1.0, 1.0, 1.0, 1.0]);
+        // Serial forward takes 10s; releases stagger through it.
+        let ready = [0.0, 2.5, 5.0, 7.5];
+        let plan = plan_backward(&it, Some(&ready), 10.0, 1, 1, &[], &Fifo).unwrap();
+        assert!(plan.schedule.overlapped);
+        // All four 1s items fit inside the 10s forward window back-to-back
+        // from their releases: last starts at 7.5, ends at 8.5 < 10.
+        assert!((plan.phase_end_s - 10.0).abs() < 1e-12);
+        assert!(plan.backward_s.abs() < 1e-12);
+        assert!((plan.sequential_makespan_s - 4.0).abs() < 1e-12);
+        assert!(plan.backward_s <= plan.sequential_makespan_s + 1e-12);
+    }
+
+    #[test]
+    fn sequential_plan_matches_seed_semantics() {
+        let it = items(&[1.0, 1.0, 1.0, 1.0, 4.0]);
+        let plan = plan_backward(&it, None, 3.0, 1, 2, &[], &Fifo).unwrap();
+        assert!(!plan.schedule.overlapped);
+        assert!((plan.backward_s - 6.0).abs() < 1e-12);
+        assert!((plan.phase_end_s - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_ready_times_shape() {
+        let wi = crate::sharding::plan_chunks(3, 32, 8).unwrap();
+        let layer_secs = [1.0, 1.0, 1.0];
+        let r = overlap_ready_times(&wi, &layer_secs, 0.5, 0.1, 8, 8);
+        assert_eq!(r.len(), wi.len());
+        let serial: f64 = layer_secs.iter().sum::<f64>() + 0.5 + 0.1;
+        for (it, &t) in wi.iter().zip(&r) {
+            assert!(t > 0.0 && t <= serial + 1e-9, "item {it:?} ready at {t}");
+        }
+        // Later chunks of the same layer never release earlier.
+        for layer in 0..3 {
+            let mut prev = 0.0;
+            for (it, &t) in wi.iter().zip(&r).filter(|(it, _)| it.layer == layer) {
+                assert!(t >= prev - 1e-12, "layer {layer} chunk {} regressed", it.chunk_start);
+                prev = t;
+            }
+        }
+        // A finite window must release the earliest item strictly before
+        // the serial forward completes (that is the whole point).
+        let earliest = r.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(earliest < serial - 1e-9);
+    }
+
+    #[test]
+    fn policy_kind_parses_and_labels() {
+        assert_eq!("fifo".parse::<PolicyKind>().unwrap(), PolicyKind::Fifo);
+        assert_eq!("lpt".parse::<PolicyKind>().unwrap(), PolicyKind::Lpt);
+        assert_eq!(
+            "layer-major".parse::<PolicyKind>().unwrap(),
+            PolicyKind::LayerMajor
+        );
+        assert!("spt".parse::<PolicyKind>().is_err());
+        for k in PolicyKind::ALL {
+            assert_eq!(k.policy().name(), k.label());
+        }
+    }
+}

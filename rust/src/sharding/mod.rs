@@ -96,8 +96,10 @@ pub fn vjp_count_truncated(t: u64, tbar: u64) -> u64 {
 }
 
 /// Paper's stated closed form for the truncated count (§4.3): T̄T + T̄(T̄−1)/2.
+/// (`saturating_sub` keeps T̄ = 0 — no lookback at all — from underflowing
+/// `tbar - 1` in debug builds; the product term is 0 either way.)
 pub fn vjp_count_truncated_paper(t: u64, tbar: u64) -> u64 {
-    tbar * t + tbar * (tbar - 1) / 2
+    tbar * t + tbar * tbar.saturating_sub(1) / 2
 }
 
 /// Literal enumeration of Eq. 7's index set — the ground truth the closed
@@ -198,6 +200,17 @@ mod tests {
         for t in [1u64, 2, 10, 1000] {
             assert_eq!(vjp_count_truncated(t, t), vjp_count_full(t));
         }
+    }
+
+    #[test]
+    fn paper_formula_tbar_zero_does_not_underflow() {
+        // Regression: `tbar * (tbar - 1) / 2` panicked on T̄ = 0 in debug
+        // builds. Zero window ⇒ zero VJPs, in both closed forms.
+        assert_eq!(vjp_count_truncated_paper(10_000, 0), 0);
+        assert_eq!(vjp_count_truncated(10_000, 0), 0);
+        assert_eq!(vjp_count_enumerated(10_000, 0), 0);
+        // And the paper's form still matches itself at T̄ ≥ 1.
+        assert_eq!(vjp_count_truncated_paper(10, 1), 10);
     }
 
     #[test]

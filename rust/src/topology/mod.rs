@@ -204,21 +204,16 @@ impl Fleet {
     }
 }
 
-/// Makespan of `times` on `slots` identical executors, greedy list
-/// scheduling in submission order — models the paper's per-device MIG-slot
-/// parallelism over VJP chunk executions (§4.5).
+/// Makespan of `times` on `slots` identical executors — models the
+/// paper's per-device MIG-slot parallelism over VJP chunk executions
+/// (§4.5). Now a thin wrapper over the event-driven scheduler
+/// ([`crate::schedule::makespan_fifo`]): FIFO submission order,
+/// everything released at t = 0, no admission cap, which reproduces the
+/// seed's greedy list scheduling exactly — baselines keep working while
+/// the backward phase itself plans through `schedule::plan_backward`.
 pub fn makespan(times: &[f64], slots: usize) -> f64 {
     assert!(slots > 0);
-    let mut load = vec![0.0f64; slots.min(times.len().max(1))];
-    for &t in times {
-        let (i, _) = load
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        load[i] += t;
-    }
-    load.iter().cloned().fold(0.0, f64::max)
+    crate::schedule::makespan_fifo(times, slots)
 }
 
 #[cfg(test)]

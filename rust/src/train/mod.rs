@@ -16,6 +16,7 @@ use crate::model::{GradSet, ParamSet};
 use crate::optim::ShardedAdam;
 use crate::pipeline;
 use crate::runtime::{ArtifactSet, Runtime};
+use crate::schedule::BackwardPlan;
 use crate::topology::Fleet;
 
 pub struct Trainer {
@@ -24,6 +25,9 @@ pub struct Trainer {
     pub params: ParamSet,
     pub fleet: Fleet,
     pub recorder: Recorder,
+    /// The latest step's backward schedule (adjoint mode only) — per-slot
+    /// timelines, utilization, and binding constraints for the reports.
+    pub last_plan: Option<BackwardPlan>,
     opt: ShardedAdam,
     corpus: Box<dyn Corpus>,
     step_idx: usize,
@@ -63,6 +67,7 @@ impl Trainer {
             params,
             fleet,
             recorder: Recorder::new(),
+            last_plan: None,
             opt,
             corpus,
             step_idx: 0,
@@ -99,14 +104,21 @@ impl Trainer {
                     &sample.targets,
                 )?;
                 grads.omega.add_assign(&fwd.d_omega)?;
-                let bwd = adjoint::backward(
+                // Backward routes through the event-driven scheduler:
+                // `cfg.sched` picks the dispatch policy and whether the
+                // paralleled variant may overlap with the forward timing.
+                let bwd = adjoint::backward_scheduled(
                     &self.arts,
                     &self.cfg.dims,
                     &self.params,
                     &mut self.fleet,
                     &mut grads,
+                    &self.cfg.sched,
+                    Some(&fwd.timing),
                 )?;
-                (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units)
+                let step = (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units);
+                self.last_plan = Some(bwd.plan);
+                step
             }
             GradMode::Bptt => {
                 let out = baselines::backward(
@@ -162,6 +174,20 @@ impl Trainer {
                     rec.vjp_units,
                 );
             }
+        }
+        if let Some(plan) = &self.last_plan {
+            let s = &plan.schedule;
+            let [r, sl, m] = s.bound_counts();
+            println!(
+                "backward schedule [{}{}]: phase {:.4}s (sequential {:.4}s), util {:.0}%, \
+                 peak transient {}, starts bound by ready/slot/mem = {r}/{sl}/{m}",
+                s.policy,
+                if s.overlapped { ", overlapped" } else { "" },
+                plan.backward_s,
+                plan.sequential_makespan_s,
+                100.0 * s.utilization(),
+                crate::metrics::fmt_bytes(s.peak_transient_bytes()),
+            );
         }
         if let Some(path) = self.cfg.log_csv.clone() {
             self.recorder.write_csv(&path)?;

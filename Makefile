@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts build test doc verify bench clean
+.PHONY: artifacts build test doc clippy verify bench bench-json clean
 
 ## AOT-lower every L2 entry point to artifacts/<config>/ (needs jax).
 artifacts:
@@ -20,13 +20,23 @@ test:
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-## Tier-1 verify + doc honesty check.
-verify: build test doc
+## Lints denied across every target (lib, bins, tests, benches, examples).
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+## Tier-1 verify + lint + doc honesty check.
+verify: build test clippy doc
 
 ## Regenerate every paper table/figure that runs without artifacts.
 bench:
 	cargo bench --bench vjp_count
 	cargo bench --bench fig6_schedule
+
+## Machine-readable hot-path profile → BENCH_hotpath.json
+## (EXPERIMENTS.md §Perf). The host-side staging benches run without
+## artifacts; the PJRT section needs `make artifacts` first.
+bench-json:
+	cargo bench --bench hotpath
 
 clean:
 	rm -rf artifacts

@@ -1,33 +1,126 @@
 //! `cargo bench --bench hotpath` — micro-benchmarks of the training hot
-//! path (the §Perf profile): per-entry PJRT execution latency, the adjoint
-//! work-item gather (host slicing/padding), gradient accumulation, the
-//! Adam update, and a whole training step in both grad modes.
+//! path (the §Perf profile): the host-side staging ops (old owning vs new
+//! zero-copy arena paths), the adjoint work-item gather, gradient
+//! accumulation, the Adam update, and — when `make artifacts` has run —
+//! per-entry PJRT execution latency and whole training steps in both grad
+//! modes.
 //!
-//! These are the numbers the performance pass iterates on
-//! (EXPERIMENTS.md §Perf).
+//! Always writes machine-readable results to `BENCH_hotpath.json`
+//! (EXPERIMENTS.md §Perf); the host-side section needs no artifacts, so
+//! the perf trajectory of the coordinator itself is tracked on every
+//! host.
 
 use std::path::Path;
 use std::rc::Rc;
 
-use adjoint_sharding::adjoint;
+use adjoint_sharding::adjoint::{self, stage_slot, ItemStage};
 use adjoint_sharding::config::{GradMode, ModelDims, OptimCfg, RunConfig, TopologyCfg};
 use adjoint_sharding::data::{Corpus, MarkovCorpus};
-use adjoint_sharding::model::{GradSet, ParamSet};
+use adjoint_sharding::model::{GradSet, LayerParams, ParamSet};
 use adjoint_sharding::optim::ShardedAdam;
 use adjoint_sharding::pipeline;
 use adjoint_sharding::runtime::{ArtifactSet, Runtime};
 use adjoint_sharding::sharding::plan_chunks;
+use adjoint_sharding::tensor::Tensor;
 use adjoint_sharding::topology::Fleet;
 use adjoint_sharding::train::Trainer;
-use adjoint_sharding::util::bench::bench;
+use adjoint_sharding::util::bench::{bench, write_json, BenchStats};
 
-fn main() {
-    let root = Path::new("artifacts");
-    let config = "small";
-    if !root.join(config).join("manifest.json").exists() {
-        eprintln!("SKIP hotpath bench: artifacts/{config} missing — run `make artifacts`");
-        return;
+/// Host-bench dims: big enough that per-item staging cost is visible,
+/// small enough to iterate quickly.
+fn host_dims() -> ModelDims {
+    ModelDims {
+        name: "hotpath-host".into(),
+        v: 64,
+        p: 32,
+        n: 32,
+        k: 4,
+        t: 512,
+        w: 64,
+        c: 64,
+        eps: 1e-6,
     }
+}
+
+fn host_section(results: &mut Vec<BenchStats>) {
+    let dims = host_dims();
+    let params = ParamSet::init(&dims, 0);
+    let mut fleet = Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, dims.k).unwrap();
+    adjoint::put_synthetic_activations(&dims, &mut fleet, 7);
+    let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
+    let item = items[items.len() / 2];
+
+    println!(
+        "-- host-side staging (synthetic activations: K={} T={} W={} C={}) --",
+        dims.k, dims.t, dims.w, dims.c
+    );
+
+    // Old owning gather vs new arena-backed gather.
+    let s = bench("adjoint_gather(host slice+pad)", 3, 50, 1.0, || {
+        adjoint::gather_item_args(&dims, &fleet, &params, &item).unwrap()
+    });
+    println!("{s}");
+    results.push(s);
+
+    let mut stage = ItemStage::new();
+    adjoint::gather_item_args_into(&dims, &fleet, &item, &mut stage).unwrap(); // warm the arena
+    let s = bench("adjoint_gather_into(arena, zero-alloc)", 3, 50, 1.0, || {
+        adjoint::gather_item_args_into(&dims, &fleet, &item, &mut stage).unwrap();
+        stage.view(stage_slot::V_EXT).len()
+    });
+    println!("{s}");
+    results.push(s);
+
+    // Tensor staging primitives: owning vs into-place.
+    let big = Tensor::randn(&[dims.t, dims.p], 1.0, &mut adjoint_sharding::rng::Rng::new(1));
+    let s = bench("slice_rows_padded(owning)", 3, 100, 0.5, || {
+        big.slice_rows_padded(dims.t - dims.c, dims.c + dims.w).unwrap()
+    });
+    println!("{s}");
+    results.push(s);
+    let mut buf = vec![0.0f32; (dims.c + dims.w) * dims.p];
+    let s = bench("slice_rows_padded_into(pooled)", 3, 100, 0.5, || {
+        big.slice_rows_padded_into(dims.t - dims.c, dims.c + dims.w, &mut buf).unwrap();
+        buf[0]
+    });
+    println!("{s}");
+    results.push(s);
+
+    let s = bench("rmsnorm(owning)", 3, 100, 0.5, || big.rmsnorm(dims.eps));
+    println!("{s}");
+    results.push(s);
+    let mut norm_buf = Tensor::zeros(&[dims.t, dims.p]);
+    let s = bench("rmsnorm_into(pooled)", 3, 100, 0.5, || {
+        big.rmsnorm_into(dims.eps, &mut norm_buf).unwrap();
+        norm_buf.data()[0]
+    });
+    println!("{s}");
+    results.push(s);
+
+    // Gradient accumulation from a preallocated output buffer set.
+    let mut grads = GradSet::zeros(&dims);
+    let outs: Vec<Tensor> = LayerParams::shapes(&dims)
+        .iter()
+        .map(|s| Tensor::ones(s))
+        .collect();
+    let s = bench("grad_accumulate_layer", 3, 200, 0.5, || {
+        grads.accumulate_layer(item.layer, &outs).unwrap()
+    });
+    println!("{s}");
+    results.push(s);
+
+    // Optimizer update.
+    let mut p2 = params.clone();
+    let mut opt = ShardedAdam::new(&p2, &OptimCfg::default());
+    let s = bench("sharded_adam_step", 3, 50, 1.0, || {
+        let mut g = grads.clone();
+        opt.step(&mut p2, &mut g, Some(1.0)).unwrap()
+    });
+    println!("{s}");
+    results.push(s);
+}
+
+fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
     let rt = Rc::new(Runtime::cpu().expect("pjrt"));
     let arts = ArtifactSet::load(rt.clone(), &root.join(config)).expect("artifacts");
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).expect("dims");
@@ -35,7 +128,10 @@ fn main() {
     let corpus = MarkovCorpus::new(dims.v, 0);
     let sample = corpus.sample(0, dims.t);
 
-    println!("== hotpath micro-benches ('{config}': K={} T={} W={} C={}) ==\n", dims.k, dims.t, dims.w, dims.c);
+    println!(
+        "\n-- PJRT hot path ('{config}': K={} T={} W={} C={}) --\n",
+        dims.k, dims.t, dims.w, dims.c
+    );
 
     // 1. Forward pipeline (Alg. 1).
     let mut fleet = Fleet::new(TopologyCfg::default(), dims.k).unwrap();
@@ -48,45 +144,53 @@ fn main() {
             .loss
     });
     println!("{s}");
+    results.push(s);
 
-    // 2. One adjoint work-item: gather (host) vs execute (PJRT).
-    let fwd = {
-        for d in &mut fleet.devices {
-            d.end_step();
-        }
-        pipeline::forward(&arts, &dims, &params, &mut fleet, &sample.tokens, &sample.targets)
-            .unwrap()
-    };
-    let _ = fwd;
+    // 2. One adjoint work-item execution (PJRT), old path.
+    for d in &mut fleet.devices {
+        d.end_step();
+    }
+    pipeline::forward(&arts, &dims, &params, &mut fleet, &sample.tokens, &sample.targets)
+        .unwrap();
     let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
     let item = items[items.len() / 2];
-    let s = bench("adjoint_gather(host slice+pad)", 3, 50, 1.0, || {
-        adjoint::gather_item_args(&dims, &fleet, &params, &item).unwrap()
-    });
-    println!("{s}");
     let entry = arts.entry("layer_adjoint_grad").unwrap();
     let args = adjoint::gather_item_args(&dims, &fleet, &params, &item).unwrap();
     let s = bench("adjoint_item_execute(PJRT)", 3, 30, 1.0, || entry.run(&args).unwrap());
     println!("{s}");
+    results.push(s);
 
-    // 3. Full backward phase (Alg. 4).
+    // 3. Full backward phase (Alg. 4) through the pooled staging path.
     let mut grads = GradSet::zeros(&dims);
-    let s = bench("adjoint_backward(Alg.4)", 2, 10, 1.0, || {
-        adjoint::backward(&arts, &dims, &params, &mut fleet, &mut grads).unwrap().calls
+    let mut pool = adjoint::StagePool::new();
+    let s = bench("adjoint_backward(Alg.4, pooled)", 2, 10, 1.0, || {
+        adjoint::backward_pooled(
+            &arts,
+            &dims,
+            &params,
+            &mut fleet,
+            &mut grads,
+            &Default::default(),
+            None,
+            &mut pool,
+        )
+        .unwrap()
+        .calls
     });
     println!("{s}");
+    results.push(s);
+    println!(
+        "   (stage-pool alloc events over whole bench: {}; const cache: {} staged / {} hits)",
+        pool.alloc_events(),
+        arts.const_cache().stagings(),
+        arts.const_cache().hits()
+    );
 
-    // 4. Optimizer update.
-    let mut p2 = params.clone();
-    let mut opt = ShardedAdam::new(&p2, &OptimCfg::default());
-    let s = bench("sharded_adam_step", 3, 50, 1.0, || {
-        let mut g = grads.clone();
-        opt.step(&mut p2, &mut g, Some(1.0)).unwrap()
-    });
-    println!("{s}");
-
-    // 5. Whole training steps, both modes.
-    for (mode, label) in [(GradMode::Adjoint, "train_step(adjoint)"), (GradMode::Bptt, "train_step(bptt)")] {
+    // 4. Whole training steps, both modes.
+    for (mode, label) in [
+        (GradMode::Adjoint, "train_step(adjoint)"),
+        (GradMode::Bptt, "train_step(bptt)"),
+    ] {
         let rt2 = Rc::new(Runtime::cpu().expect("pjrt"));
         let mut cfg = RunConfig::load(root, config).unwrap();
         cfg.grad_mode = mode;
@@ -94,5 +198,48 @@ fn main() {
         let mut tr = Trainer::new(rt2, cfg, Box::new(MarkovCorpus::new(dims.v, 0))).unwrap();
         let s = bench(label, 2, 10, 1.5, || tr.step().unwrap().loss);
         println!("{s}");
+        results.push(s);
     }
+
+    // Per-entry latency spread: min = steady state, max = cold first call.
+    for (name, st) in arts.all_stats() {
+        println!(
+            "entry {:<20} calls {:>6}  mean {}  min {}  max {}",
+            name,
+            st.calls,
+            adjoint_sharding::util::bench::fmt_dur(st.mean_s()),
+            adjoint_sharding::util::bench::fmt_dur(st.min_s()),
+            adjoint_sharding::util::bench::fmt_dur(st.max_s()),
+        );
+    }
+}
+
+fn main() {
+    let root = Path::new("artifacts");
+    let config = "small";
+    let have_artifacts = root.join(config).join("manifest.json").exists();
+
+    println!("== hotpath micro-benches ==\n");
+    let mut results: Vec<BenchStats> = Vec::new();
+    host_section(&mut results);
+    let note = if have_artifacts {
+        host_note("host + PJRT sections")
+    } else {
+        eprintln!(
+            "\nSKIP PJRT section: artifacts/{config} missing — run `make artifacts` \
+             (host-side staging benches above ran without it)"
+        );
+        host_note("host section only; artifacts missing")
+    };
+    if have_artifacts {
+        pjrt_section(root, config, &mut results);
+    }
+
+    let out = Path::new("BENCH_hotpath.json");
+    write_json(out, "hotpath", &note, &results).expect("writing bench json");
+    println!("\nwrote {}", out.display());
+}
+
+fn host_note(scope: &str) -> String {
+    format!("{scope}; host dims K=4 T=512 W=64 C=64")
 }

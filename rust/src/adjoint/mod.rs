@@ -21,10 +21,10 @@ use anyhow::Result;
 use crate::config::{ModelDims, SchedCfg};
 use crate::model::{GradSet, ParamSet};
 use crate::pipeline::ForwardTiming;
-use crate::runtime::ArtifactSet;
+use crate::runtime::{ArgRef, ArtifactSet, ConstKey, EntrySpec, StagedConst};
 use crate::schedule::{self, BackwardPlan, SchedItem};
 use crate::sharding::{plan_chunks, WorkItem};
-use crate::tensor::{Arg, Tensor};
+use crate::tensor::{Arena, Arg, Tensor, TensorView};
 use crate::topology::{ActKind, Fleet};
 
 /// Backward-phase outcome.
@@ -45,8 +45,142 @@ pub struct AdjointOutput {
     pub plan: BackwardPlan,
 }
 
+/// Arena slot indices of the six *variable* `layer_adjoint_grad` inputs
+/// one [`ItemStage`] carries (`W_c`, the seventh, is a cached device
+/// constant and never staged per item).
+pub mod stage_slot {
+    pub const XHAT: usize = 0;
+    pub const HPREV: usize = 1;
+    pub const H: usize = 2;
+    pub const A_EXT: usize = 3;
+    pub const C_EXT: usize = 4;
+    pub const V_EXT: usize = 5;
+    pub const COUNT: usize = 6;
+}
+
+/// Reusable staging buffers for one device's work items. All items share
+/// one shape family (fixed C and W), so after the first item per device
+/// the gather performs zero heap allocations — asserted via
+/// [`ItemStage::alloc_events`] in the zero-copy tests.
+#[derive(Debug, Default)]
+pub struct ItemStage {
+    arena: Arena,
+    shapes: [[usize; 2]; stage_slot::COUNT],
+}
+
+impl ItemStage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn fill(&mut self, slot: usize, rows: usize, cols: usize) -> &mut [f32] {
+        self.shapes[slot] = [rows, cols];
+        self.arena.slot(slot, rows * cols)
+    }
+
+    /// Borrowed view of one staged argument (see [`stage_slot`]).
+    pub fn view(&self, slot: usize) -> TensorView<'_> {
+        TensorView::new(&self.shapes[slot], self.arena.get(slot))
+            .expect("stage invariant: shape matches slot length")
+    }
+
+    /// Heap allocation events in this stage's arena (growth only).
+    pub fn alloc_events(&self) -> u64 {
+        self.arena.alloc_events()
+    }
+}
+
+/// Per-device [`ItemStage`]s plus the pooled output-decomposition buffers
+/// — the whole backward phase's reusable host state. Owned by the caller
+/// (the `Trainer` keeps one across steps; `backward` creates a fresh one),
+/// reset implicitly by reuse: every buffer is fully overwritten per item.
+#[derive(Debug, Default)]
+pub struct StagePool {
+    stages: Vec<ItemStage>,
+    outs: Vec<Tensor>,
+}
+
+impl StagePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure the pooled output buffers match the entry's output specs
+    /// (rebuilt only when the artifact set changes).
+    fn prepare_outs(&mut self, spec: &EntrySpec) {
+        let ok = self.outs.len() == spec.outputs.len()
+            && self
+                .outs
+                .iter()
+                .zip(&spec.outputs)
+                .all(|(t, s)| t.shape() == s.shape.as_slice());
+        if !ok {
+            self.outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        }
+    }
+
+    fn split_mut(&mut self) -> (&mut Vec<ItemStage>, &mut Vec<Tensor>) {
+        (&mut self.stages, &mut self.outs)
+    }
+
+    /// Total arena allocation events across all device stages.
+    pub fn alloc_events(&self) -> u64 {
+        self.stages.iter().map(|s| s.alloc_events()).sum()
+    }
+}
+
+fn stage_for(stages: &mut Vec<ItemStage>, device: usize) -> &mut ItemStage {
+    if device >= stages.len() {
+        stages.resize_with(device + 1, ItemStage::new);
+    }
+    &mut stages[device]
+}
+
+/// Zero-copy gather: stage the six variable inputs of one Alg. 3 work
+/// item into `stage`'s arena (fully overwriting each slot). Bit-identical
+/// to [`gather_item_args`] minus the `W_c` clone, which the pooled
+/// execution path replaces with a cached device literal.
+pub fn gather_item_args_into(
+    dims: &ModelDims,
+    fleet: &Fleet,
+    item: &WorkItem,
+    stage: &mut ItemStage,
+) -> Result<()> {
+    use stage_slot::*;
+    let dev = &fleet.devices[fleet.device_of_layer(item.layer)];
+    let (i0, c, w) = (item.chunk_start, item.chunk_len, dims.w);
+    let h = dev.get(item.layer, ActKind::H)?;
+    let a = dev.get(item.layer, ActKind::A)?;
+    let cg = dev.get(item.layer, ActKind::C)?;
+    let xhat = dev.get(item.layer, ActKind::Xhat)?;
+    let v = dev.get(usize::MAX, ActKind::Cotangent)?;
+    let p = xhat.shape()[1];
+    let n = h.shape()[1];
+
+    xhat.slice_rows_into(i0, c, stage.fill(XHAT, c, p))?;
+    {
+        // h^{i-1} for i in the chunk; h^{-1} = h0 = 0 at the sequence
+        // start (the fused form of slice_rows(0, c) + shift_down).
+        let out = stage.fill(HPREV, c, n);
+        if i0 == 0 {
+            out[..n].fill(0.0);
+            out[n..].copy_from_slice(&h.data()[..(c - 1) * n]);
+        } else {
+            h.slice_rows_into(i0 - 1, c, out)?;
+        }
+    }
+    h.slice_rows_into(i0, c, stage.fill(H, c, n))?;
+    a.slice_rows_padded_into(i0, c + w, stage.fill(A_EXT, c + w, n))?;
+    cg.slice_rows_padded_into(i0, c + w, stage.fill(C_EXT, c + w, n))?;
+    v.slice_rows_padded_into(i0, c + w, stage.fill(V_EXT, c + w, p))?;
+    Ok(())
+}
+
 /// Assemble the inputs for one Alg. 3 work item from the owning device's
-/// activation store. Pure slicing/padding — exposed for tests.
+/// activation store. Pure slicing/padding — exposed for tests and as the
+/// owning reference the zero-copy path is checked against
+/// (`rust/tests/hotpath_zero_copy.rs`); the hot path uses
+/// [`gather_item_args_into`].
 pub fn gather_item_args(
     dims: &ModelDims,
     fleet: &Fleet,
@@ -98,6 +232,22 @@ pub fn backward(
     backward_scheduled(arts, dims, params, fleet, grads, &SchedCfg::default(), None)
 }
 
+/// [`backward_pooled`] with a phase-local [`StagePool`] (steady state
+/// within the phase is still allocation-free; the `Trainer` holds a pool
+/// across steps to make step boundaries free too).
+pub fn backward_scheduled(
+    arts: &ArtifactSet,
+    dims: &ModelDims,
+    params: &ParamSet,
+    fleet: &mut Fleet,
+    grads: &mut GradSet,
+    sched: &SchedCfg,
+    fwd_timing: Option<&ForwardTiming>,
+) -> Result<AdjointOutput> {
+    let mut pool = StagePool::new();
+    backward_pooled(arts, dims, params, fleet, grads, sched, fwd_timing, &mut pool)
+}
+
 /// Run the full backward phase (Alg. 4): every device processes its layers'
 /// chunk items; gradients accumulate into `grads` (dL/dθ += Ξ, line 7).
 ///
@@ -110,7 +260,14 @@ pub fn backward(
 /// `sched.overlap` and a [`ForwardTiming`], items release against the
 /// chunked-pipeline forward model (paralleled Alg. 4, §4.5) and
 /// `virtual_s` is the phase tail past the serial forward.
-pub fn backward_scheduled(
+///
+/// The host side of the loop is allocation-free in steady state
+/// (DESIGN.md §Host-Staging): the six variable inputs are staged into the
+/// owning device's pooled [`ItemStage`], `W_c` comes from the artifact
+/// set's device-constant cache, and outputs decompose into the pool's
+/// preallocated buffers which [`GradSet::accumulate_layer`] reads directly.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_pooled(
     arts: &ArtifactSet,
     dims: &ModelDims,
     params: &ParamSet,
@@ -118,7 +275,9 @@ pub fn backward_scheduled(
     grads: &mut GradSet,
     sched: &SchedCfg,
     fwd_timing: Option<&ForwardTiming>,
+    pool: &mut StagePool,
 ) -> Result<AdjointOutput> {
+    use stage_slot::*;
     let entry = arts.entry("layer_adjoint_grad")?;
     let items = plan_chunks(dims.k, dims.t, dims.c)?;
 
@@ -133,6 +292,21 @@ pub fn backward_scheduled(
         .map(|d| Some(fleet.cfg.hbm_bytes.saturating_sub(d.mem.live)))
         .collect();
 
+    // Per-layer W_c staged to a device literal once per phase at most —
+    // the content-hash cache makes repeat phases (and repeat steps with
+    // unchanged params) free.
+    let w_c: Vec<std::rc::Rc<StagedConst>> = (0..dims.k)
+        .map(|k| {
+            arts.staged_const(
+                ConstKey::LayerParam { layer: k, field: 6 },
+                params.layers[k].w_c(),
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    pool.prepare_outs(&entry.spec);
+    let (stages, outs) = pool.split_mut();
+
     // Execute every VJP bundle once; measured seconds are the virtual
     // service costs (the transient working set is "disposed after the
     // computation", §3.3 — its lifetime in virtual time is the span the
@@ -143,9 +317,19 @@ pub fn backward_scheduled(
     let mut calls = 0u64;
     for (id, item) in items.iter().enumerate() {
         let devi = fleet.device_of_layer(item.layer);
-        let args = gather_item_args(dims, fleet, params, item)?;
-        let (outs, secs) = entry.run_timed(&args)?;
-        grads.accumulate_layer(item.layer, &outs)?;
+        let stage = stage_for(stages, devi);
+        gather_item_args_into(dims, fleet, item, stage)?;
+        let args = [
+            ArgRef::C(w_c[item.layer].as_ref()),
+            ArgRef::F(stage.view(XHAT)),
+            ArgRef::F(stage.view(HPREV)),
+            ArgRef::F(stage.view(H)),
+            ArgRef::F(stage.view(A_EXT)),
+            ArgRef::F(stage.view(C_EXT)),
+            ArgRef::F(stage.view(V_EXT)),
+        ];
+        let secs = entry.run_timed_into(&args, outs)?;
+        grads.accumulate_layer(item.layer, outs)?;
         wall_s += secs;
         vjp_units += item.vjp_units(dims.w, dims.t);
         calls += 1;
@@ -196,6 +380,27 @@ pub fn backward_scheduled(
     }
 
     Ok(AdjointOutput { virtual_s: plan.backward_s, wall_s, vjp_units, calls, plan })
+}
+
+/// Fill `fleet` with randomly-initialized activations of the shapes the
+/// adjoint phase expects (H/A/C: (T,N); X̂: (T,P); cotangents: (T,P)
+/// replicated on every device). Bench/test support: lets the host-side
+/// gather path run without PJRT artifacts.
+pub fn put_synthetic_activations(dims: &ModelDims, fleet: &mut Fleet, seed: u64) {
+    use crate::rng::Rng;
+    let mut rng = Rng::new(seed);
+    for k in 0..dims.k {
+        let dev = fleet.device_of_layer(k);
+        let d = &mut fleet.devices[dev];
+        d.put(k, ActKind::H, Tensor::randn(&[dims.t, dims.n], 1.0, &mut rng));
+        d.put(k, ActKind::A, Tensor::randn(&[dims.t, dims.n], 1.0, &mut rng));
+        d.put(k, ActKind::C, Tensor::randn(&[dims.t, dims.n], 1.0, &mut rng));
+        d.put(k, ActKind::Xhat, Tensor::randn(&[dims.t, dims.p], 1.0, &mut rng));
+    }
+    let v = Tensor::randn(&[dims.t, dims.p], 1.0, &mut rng);
+    for d in &mut fleet.devices {
+        d.put(usize::MAX, ActKind::Cotangent, v.clone());
+    }
 }
 
 /// Reference single-item runner (tests / benches): executes one work item

@@ -12,8 +12,8 @@ use anyhow::{bail, Result};
 use crate::config::ModelDims;
 use crate::memcost::MemModel;
 use crate::model::{GradSet, ParamSet};
-use crate::runtime::ArtifactSet;
-use crate::tensor::{Arg, IntTensor};
+use crate::runtime::{ArgRef, ArtifactSet, ConstKey};
+use crate::tensor::IntTensor;
 use crate::topology::Fleet;
 
 #[derive(Debug)]
@@ -36,13 +36,17 @@ pub fn backward(
     let entry = arts.entry("bptt_grad")?;
     let y0 = params.embed_tokens(tokens)?;
 
-    let mut args: Vec<Arg> = params
-        .flatten_for_bptt()
-        .into_iter()
-        .map(Arg::F)
-        .collect();
-    args.push(Arg::F(y0));
-    args.push(Arg::I(targets.clone()));
+    // The parameter prefix (l0_W_a … l{K-1}_W_c, Ω) goes through the
+    // device-constant cache: staged once, reused across steps until the
+    // optimizer writes new values. The seed's `flatten_for_bptt` deep-
+    // cloned the entire parameter set every step.
+    let consts = params
+        .iter_bptt_abi()
+        .map(|(key, t)| arts.staged_const(key, t))
+        .collect::<Result<Vec<_>>>()?;
+    let mut args: Vec<ArgRef> = consts.iter().map(|c| ArgRef::C(c.as_ref())).collect();
+    args.push(ArgRef::F(y0.view()?));
+    args.push(ArgRef::I(targets));
 
     // Account the autograd graph on device 0 (lives for the whole call).
     // bytes_per_elem = 4: the measured runs are f32, and the adjoint side's
@@ -53,7 +57,7 @@ pub fn backward(
         .backprop(dims, dims.t as u64, 1, 1)
         .activations;
     fleet.devices[0].mem.alloc(graph_bytes);
-    let (outs, secs) = entry.run_timed(&args)?;
+    let (outs, secs) = entry.run_timed_ref(&args)?;
     fleet.devices[0].mem.free(graph_bytes);
     fleet.charge_compute(0, secs);
 

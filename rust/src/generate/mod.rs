@@ -10,20 +10,49 @@
 
 use anyhow::{bail, Result};
 
+use std::rc::Rc;
+
 use crate::config::ModelDims;
 use crate::model::ParamSet;
 use crate::rng::Rng;
-use crate::runtime::ArtifactSet;
-use crate::tensor::{Arg, Tensor};
+use crate::runtime::{ArgRef, ArtifactSet, ConstKey, StagedConst};
+use crate::tensor::Tensor;
 
-/// Carried decode state: h ∈ R^N per layer.
+/// Carried decode state: h ∈ R^N per layer, plus the per-layer staged
+/// parameter constants (filled on the first step — parameters are fixed
+/// for the lifetime of a decode session, so they are hashed and staged
+/// exactly once rather than per token).
 pub struct DecodeState {
     pub h: Vec<Tensor>,
+    consts: Vec<Vec<Rc<StagedConst>>>,
 }
 
 impl DecodeState {
     pub fn zeros(dims: &ModelDims) -> Self {
-        Self { h: (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect() }
+        Self {
+            h: (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect(),
+            consts: Vec::new(),
+        }
+    }
+
+    fn ensure_consts(&mut self, arts: &ArtifactSet, params: &ParamSet) -> Result<()> {
+        if self.consts.len() == params.layers.len() {
+            return Ok(());
+        }
+        self.consts = params
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(k, l)| {
+                l.0.iter()
+                    .enumerate()
+                    .map(|(f, t)| {
+                        arts.staged_const(ConstKey::LayerParam { layer: k, field: f }, t)
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<_>>()?;
+        Ok(())
     }
 }
 
@@ -45,14 +74,20 @@ pub fn step_token(
         vec![p],
         params.embed.data()[t * p..(t + 1) * p].to_vec(),
     )?;
-    let mut y = y0.clone();
+    state.ensure_consts(arts, params)?;
     let mut xhat = y0.rmsnorm(dims.eps);
+    let mut y = y0;
     for k in 0..dims.k {
-        let mut args: Vec<Arg> = params.layers[k].0.iter().cloned().map(Arg::F).collect();
-        args.push(Arg::F(xhat));
-        args.push(Arg::F(y));
-        args.push(Arg::F(state.h[k].clone()));
-        let outs = entry.run(&args)?;
+        // Parameters ride the once-per-session staged constants; the
+        // stream and the carried state pass as borrowed views (no
+        // per-token clones, no per-token hashing).
+        let mut args: Vec<ArgRef> =
+            state.consts[k].iter().map(|c| ArgRef::C(c.as_ref())).collect();
+        args.push(ArgRef::F(xhat.view()?));
+        args.push(ArgRef::F(y.view()?));
+        args.push(ArgRef::F(state.h[k].view()?));
+        let (outs, _) = entry.run_timed_ref(&args)?;
+        drop(args);
         let mut it = outs.into_iter();
         y = it.next().unwrap();
         xhat = it.next().unwrap();

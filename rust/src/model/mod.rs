@@ -102,6 +102,11 @@ impl ParamSet {
     }
 
     /// Flatten bptt_grad's parameter argument prefix: l0_W_a … l{K-1}_W_c, Ω.
+    ///
+    /// Deep-clones every parameter — kept as the owning reference for
+    /// tests and the gradient-equivalence checks; the training hot path
+    /// uses [`ParamSet::iter_bptt_abi`] plus the runtime's device-constant
+    /// cache instead.
     pub fn flatten_for_bptt(&self) -> Vec<Tensor> {
         let mut out = Vec::with_capacity(self.layers.len() * 7 + 1);
         for l in &self.layers {
@@ -109,6 +114,23 @@ impl ParamSet {
         }
         out.push(self.omega.clone());
         out
+    }
+
+    /// Borrowed walk of the same ABI order as [`ParamSet::flatten_for_bptt`]
+    /// — (stable cache key, tensor) pairs, no clones.
+    pub fn iter_bptt_abi(
+        &self,
+    ) -> impl Iterator<Item = (crate::runtime::ConstKey, &Tensor)> {
+        use crate::runtime::ConstKey;
+        self.layers
+            .iter()
+            .enumerate()
+            .flat_map(|(k, l)| {
+                l.0.iter()
+                    .enumerate()
+                    .map(move |(f, t)| (ConstKey::LayerParam { layer: k, field: f }, t))
+            })
+            .chain(std::iter::once((ConstKey::Omega, &self.omega)))
     }
 }
 
@@ -218,6 +240,26 @@ mod tests {
         assert_eq!(flat[6], ps.layers[0].0[6]);
         assert_eq!(flat[13], ps.layers[1].0[6]);
         assert_eq!(flat[14], ps.omega);
+    }
+
+    #[test]
+    fn iter_bptt_abi_matches_flatten() {
+        use crate::runtime::ConstKey;
+        let d = dims();
+        let ps = ParamSet::init(&d, 0);
+        let flat = ps.flatten_for_bptt();
+        let walked: Vec<_> = ps.iter_bptt_abi().collect();
+        assert_eq!(walked.len(), flat.len());
+        for ((key, t), owned) in walked.iter().zip(&flat) {
+            assert_eq!(*t, owned);
+            match key {
+                ConstKey::LayerParam { layer, field } => {
+                    assert_eq!(*t, &ps.layers[*layer].0[*field]);
+                }
+                ConstKey::Omega => assert_eq!(*t, &ps.omega),
+            }
+        }
+        assert_eq!(walked.last().unwrap().0, ConstKey::Omega);
     }
 
     #[test]

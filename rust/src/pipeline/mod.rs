@@ -7,10 +7,12 @@
 
 use anyhow::Result;
 
+use std::rc::Rc;
+
 use crate::config::ModelDims;
 use crate::model::ParamSet;
-use crate::runtime::ArtifactSet;
-use crate::tensor::{Arg, IntTensor, Tensor};
+use crate::runtime::{ArgRef, ArtifactSet, ConstKey, StagedConst};
+use crate::tensor::{IntTensor, Tensor};
 use crate::topology::{ActKind, Fleet};
 
 /// Everything the backward phase (and the logs) need from one forward pass.
@@ -50,6 +52,12 @@ pub struct ForwardTiming {
 
 /// Run Alg. 1. Activations are stored on each layer's owning device;
 /// cotangents end up on every device (layer key = usize::MAX).
+///
+/// The host side stages through the zero-copy path (DESIGN.md
+/// §Host-Staging): the seven per-layer parameters and Ω are cached device
+/// constants (staged once, reused until the optimizer writes new values),
+/// the residual stream and ŷ pass as borrowed views, and the stored ŷ_{k-1}
+/// moves into the activation store instead of being cloned.
 pub fn forward(
     arts: &ArtifactSet,
     dims: &ModelDims,
@@ -61,11 +69,25 @@ pub fn forward(
     let layer_fwd = arts.entry("layer_fwd")?;
     let head = arts.entry("head_loss")?;
 
+    // Stage the parameter prefix of every layer plus Ω once up front.
+    let layer_consts: Vec<Vec<Rc<StagedConst>>> = params
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            l.0.iter()
+                .enumerate()
+                .map(|(f, t)| arts.staged_const(ConstKey::LayerParam { layer: k, field: f }, t))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<_>>()?;
+    let omega_const = arts.staged_const(ConstKey::Omega, &params.omega)?;
+
     // Embedding + input norm happen host-side (frozen embedding); account
     // the input stream on the first device.
     let y0 = params.embed_tokens(tokens)?;
-    let mut y = y0.clone();
     let mut xhat = y0.rmsnorm(dims.eps);
+    let mut y = y0; // move — the seed cloned the embedded stream here
     let first_dev = fleet.device_of_layer(0);
     fleet.devices[first_dev]
         .mem
@@ -78,25 +100,29 @@ pub fn forward(
 
     for k in 0..dims.k {
         let dev = fleet.device_of_layer(k);
-        // Store this layer's *input* sequence ŷ_{k-1} (Table 4).
-        fleet.devices[dev].put(k, ActKind::Xhat, xhat.clone());
 
-        let mut args: Vec<Arg> = params.layers[k].0.iter().cloned().map(Arg::F).collect();
-        args.push(Arg::F(xhat));
-        args.push(Arg::F(y));
-        args.push(Arg::F(h0.clone()));
-        let (outs, secs) = layer_fwd.run_timed(&args)?;
+        let mut args: Vec<ArgRef> =
+            layer_consts[k].iter().map(|c| ArgRef::C(c.as_ref())).collect();
+        args.push(ArgRef::F(xhat.view()?));
+        args.push(ArgRef::F(y.view()?));
+        args.push(ArgRef::F(h0.view()?));
+        let (outs, secs) = layer_fwd.run_timed_ref(&args)?;
+        drop(args);
         wall_s += secs;
         fleet.charge_compute(dev, secs);
         virtual_s += secs; // Alg. 1 is sequential across the pipeline.
         timing.layer_secs.push(secs);
 
         let mut it = outs.into_iter();
-        y = it.next().unwrap();
-        xhat = it.next().unwrap();
+        let y_next = it.next().unwrap();
+        let xhat_next = it.next().unwrap();
         let h = it.next().unwrap();
         let a = it.next().unwrap();
         let c = it.next().unwrap();
+        // Store this layer's *input* sequence ŷ_{k-1} (Table 4) — by move.
+        fleet.devices[dev].put(k, ActKind::Xhat, xhat);
+        xhat = xhat_next;
+        y = y_next;
         fleet.devices[dev].put(k, ActKind::H, h);
         fleet.devices[dev].put(k, ActKind::A, a);
         fleet.devices[dev].put(k, ActKind::C, c);
@@ -114,12 +140,12 @@ pub fn forward(
 
     // Head: loss, cotangents, dΩ (Alg. 1 lines 13–14).
     let head_dev = fleet.head_device();
-    let args = vec![
-        Arg::F(params.omega.clone()),
-        Arg::F(y.clone()),
-        Arg::I(targets.clone()),
+    let args = [
+        ArgRef::C(omega_const.as_ref()),
+        ArgRef::F(y.view()?),
+        ArgRef::I(targets),
     ];
-    let (outs, secs) = head.run_timed(&args)?;
+    let (outs, secs) = head.run_timed_ref(&args)?;
     wall_s += secs;
     fleet.charge_compute(head_dev, secs);
     virtual_s += secs;
@@ -134,9 +160,8 @@ pub fn forward(
     let bcast_s = fleet.broadcast(head_dev, cotangents.size_bytes() as u64);
     virtual_s += bcast_s;
     timing.broadcast_s = bcast_s;
-    let n_dev = fleet.cfg.devices;
-    for v in 0..n_dev {
-        fleet.devices[v].put(usize::MAX, ActKind::Cotangent, cotangents.clone());
+    for d in &mut fleet.devices {
+        d.put(usize::MAX, ActKind::Cotangent, cotangents.clone());
     }
 
     timing.virtual_s = virtual_s;

@@ -6,10 +6,18 @@
 //! `client.compile` → `execute`. All entry points are lowered with
 //! `return_tuple=True`, so every execution returns one tuple literal that
 //! is decomposed into the manifest's declared outputs.
+//!
+//! The execution path is zero-copy on the host side (DESIGN.md
+//! §Host-Staging): arguments arrive as borrowed [`ArgRef`]s — views into
+//! caller buffers or [`StagedConst`] device literals cached in the
+//! [`ArtifactSet`]'s [`ConstCache`] — the per-call input-literal vector is
+//! a pooled slot reused across calls, and [`Compiled::run_timed_into`]
+//! decomposes outputs into caller-provided preallocated tensors instead
+//! of allocating a fresh `Vec<Tensor>` per call.
 
 pub mod manifest;
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -19,7 +27,7 @@ use anyhow::{bail, Context, Result};
 
 pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
 
-use crate::tensor::{Arg, IntTensor, Tensor};
+use crate::tensor::{Arg, IntTensor, Tensor, TensorView};
 
 /// Wrapper over one PJRT client. xla handles are !Send: the coordinator is
 /// single-threaded by design (see DESIGN.md §1 — device parallelism is
@@ -54,25 +62,187 @@ impl Runtime {
             exe,
             compile_s: t0.elapsed().as_secs_f64(),
             stats: RefCell::new(ExecStats::default()),
+            lit_pool: RefCell::new(Vec::new()),
         })
     }
 }
 
 /// Cumulative execution statistics for one compiled entry (feeds the
-/// virtual-time model and the §Perf profile).
-#[derive(Debug, Default, Clone, Copy)]
+/// virtual-time model and the §Perf profile). `min_s`/`max_s` separate the
+/// cold first call (literal pool + JIT-warmup effects) from steady state.
+#[derive(Debug, Clone, Copy)]
 pub struct ExecStats {
     pub calls: u64,
     pub total_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for ExecStats {
+    fn default() -> Self {
+        Self { calls: 0, total_s: 0.0, min_s: f64::INFINITY, max_s: 0.0 }
+    }
 }
 
 impl ExecStats {
+    pub fn record(&mut self, secs: f64) {
+        self.calls += 1;
+        self.total_s += secs;
+        self.min_s = self.min_s.min(secs);
+        self.max_s = self.max_s.max(secs);
+    }
+
     pub fn mean_s(&self) -> f64 {
         if self.calls == 0 {
             0.0
         } else {
             self.total_s / self.calls as f64
         }
+    }
+
+    /// Fastest observed call (0 before any call) — the steady-state floor.
+    pub fn min_s(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    /// Slowest observed call — typically the cold first call.
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+}
+
+/// Borrowed argument to an entry-point execution — the zero-copy
+/// counterpart of [`Arg`]. `C` is a device-constant literal staged once
+/// and cached (no per-call host copy at all).
+#[derive(Clone, Copy)]
+pub enum ArgRef<'a> {
+    F(TensorView<'a>),
+    I(&'a IntTensor),
+    C(&'a StagedConst),
+}
+
+impl<'a> ArgRef<'a> {
+    pub fn from_arg(arg: &'a Arg) -> Result<Self> {
+        Ok(match arg {
+            Arg::F(t) => ArgRef::F(t.view()?),
+            Arg::I(t) => ArgRef::I(t),
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ArgRef::F(v) => v.dims(),
+            ArgRef::I(t) => t.shape(),
+            ArgRef::C(c) => c.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ArgRef::F(_) | ArgRef::C(_) => "f32",
+            ArgRef::I(_) => "i32",
+        }
+    }
+}
+
+/// An `f32` tensor already converted to an `xla::Literal`, cached by
+/// content hash so unchanged constants (per-layer parameters, Ω) are
+/// staged exactly once and re-staged only after the optimizer writes new
+/// values. Held behind `Rc` in the [`ConstCache`].
+pub struct StagedConst {
+    shape: Vec<usize>,
+    hash: u64,
+    literal: xla::Literal,
+}
+
+impl StagedConst {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// Stable identity of a cacheable device constant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ConstKey {
+    /// Parameter `field` (ABI index into [`crate::model::PARAM_FIELDS`])
+    /// of layer `layer`.
+    LayerParam { layer: usize, field: usize },
+    /// The head projection Ω.
+    Omega,
+}
+
+/// FNV-1a over the f32 bit patterns — cheap O(len) content fingerprint
+/// that makes the constant cache self-invalidating after optimizer steps.
+fn hash_f32_bits(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in data {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Content-hash-keyed cache of staged device-constant literals. Ownership
+/// rule (DESIGN.md §Host-Staging): the cache owns the literals for the
+/// lifetime of the [`ArtifactSet`]; callers hold `Rc` handles only for the
+/// duration of one phase. A changed tensor (hash or shape mismatch) is
+/// silently re-staged under the same key — no explicit invalidation hook
+/// is needed around optimizer updates.
+#[derive(Default)]
+pub struct ConstCache {
+    map: RefCell<BTreeMap<ConstKey, Rc<StagedConst>>>,
+    hits: Cell<u64>,
+    stagings: Cell<u64>,
+}
+
+impl ConstCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get (staging if absent or stale) the cached literal for `t`.
+    pub fn staged(&self, key: ConstKey, t: &Tensor) -> Result<Rc<StagedConst>> {
+        let hash = hash_f32_bits(t.data());
+        if let Some(c) = self.map.borrow().get(&key) {
+            if c.hash == hash && c.shape == t.shape() {
+                self.hits.set(self.hits.get() + 1);
+                return Ok(Rc::clone(c));
+            }
+        }
+        let literal = make_literal_f32(t.data(), t.shape())
+            .with_context(|| format!("staging device constant {key:?}"))?;
+        let c = Rc::new(StagedConst { shape: t.shape().to_vec(), hash, literal });
+        self.map.borrow_mut().insert(key, Rc::clone(&c));
+        self.stagings.set(self.stagings.get() + 1);
+        Ok(c)
+    }
+
+    /// Cache hits since construction (reused without re-staging).
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Host→literal conversions performed (misses + re-stages).
+    pub fn stagings(&self) -> u64 {
+        self.stagings.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.borrow().is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.map.borrow_mut().clear();
     }
 }
 
@@ -82,6 +252,10 @@ pub struct Compiled {
     pub compile_s: f64,
     exe: xla::PjRtLoadedExecutable,
     stats: RefCell<ExecStats>,
+    /// Pooled per-call input-literal slot: cleared (capacity kept) and
+    /// refilled each execution, so steady-state calls allocate no new
+    /// literal vector.
+    lit_pool: RefCell<Vec<xla::Literal>>,
 }
 
 impl Compiled {
@@ -93,25 +267,84 @@ impl Compiled {
     /// manifest order plus the wall-clock seconds the call took (the
     /// virtual-time model charges this to the owning simulated device).
     pub fn run_timed(&self, args: &[Arg]) -> Result<(Vec<Tensor>, f64)> {
-        self.validate(args)?;
-        let literals = args
-            .iter()
-            .map(to_literal)
+        let refs = args.iter().map(ArgRef::from_arg).collect::<Result<Vec<_>>>()?;
+        self.run_timed_ref(&refs)
+    }
+
+    /// Zero-copy `run_timed`: borrowed views / cached constants in,
+    /// owned output tensors out.
+    pub fn run_timed_ref(&self, args: &[ArgRef]) -> Result<(Vec<Tensor>, f64)> {
+        let (parts, elapsed) = self.execute_refs(args)?;
+        let outs = parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec))
             .collect::<Result<Vec<_>>>()?;
+        Ok((outs, elapsed))
+    }
+
+    /// Fully pooled execution: borrowed views / cached constants in,
+    /// outputs decomposed into `outs` — caller-provided preallocated
+    /// tensors matching the manifest's output shapes — so accumulation
+    /// loops reuse one buffer set across calls instead of allocating a
+    /// `Vec<Tensor>` per item. Returns the call's wall seconds.
+    pub fn run_timed_into(&self, args: &[ArgRef], outs: &mut [Tensor]) -> Result<f64> {
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "entry '{}': {} output buffers provided, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let (parts, elapsed) = self.execute_refs(args)?;
+        for ((lit, spec), out) in parts.into_iter().zip(&self.spec.outputs).zip(outs.iter_mut()) {
+            from_literal_into(&lit, spec, out)?;
+        }
+        Ok(elapsed)
+    }
+
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        Ok(self.run_timed(args)?.0)
+    }
+
+    /// Shared execution core: validate, stage non-constant args through the
+    /// pooled literal slot, execute by reference (cached constants are
+    /// passed as-is, never copied), fetch + split the result tuple.
+    fn execute_refs(&self, args: &[ArgRef]) -> Result<(Vec<xla::Literal>, f64)> {
+        self.validate(args)?;
+        let mut pool = self.lit_pool.borrow_mut();
+        pool.clear();
+        for arg in args {
+            match arg {
+                ArgRef::F(v) => pool.push(make_literal_f32(v.data(), v.dims())?),
+                ArgRef::I(t) => pool.push(make_literal_i32(t.data(), t.shape())?),
+                ArgRef::C(_) => {}
+            }
+        }
+        // Assemble the borrowed argument list in entry order (constants
+        // straight from the cache, everything else from the pool).
+        let mut lits: Vec<&xla::Literal> = Vec::with_capacity(args.len());
+        let mut staged = 0;
+        for arg in args {
+            match arg {
+                ArgRef::C(c) => lits.push(&c.literal),
+                _ => {
+                    lits.push(&pool[staged]);
+                    staged += 1;
+                }
+            }
+        }
         let t0 = Instant::now();
         let result = self
             .exe
-            .execute::<xla::Literal>(&literals)
+            .execute::<&xla::Literal>(&lits)
             .with_context(|| format!("executing entry '{}'", self.spec.name))?;
         let tuple = result[0][0]
             .to_literal_sync()
             .context("fetching result literal")?;
         let elapsed = t0.elapsed().as_secs_f64();
-        {
-            let mut s = self.stats.borrow_mut();
-            s.calls += 1;
-            s.total_s += elapsed;
-        }
+        self.stats.borrow_mut().record(elapsed);
         let parts = tuple.to_tuple().context("decomposing result tuple")?;
         if parts.len() != self.spec.outputs.len() {
             bail!(
@@ -121,19 +354,10 @@ impl Compiled {
                 self.spec.outputs.len()
             );
         }
-        let outs = parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, spec)| from_literal(&lit, spec))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((outs, elapsed))
+        Ok((parts, elapsed))
     }
 
-    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
-        Ok(self.run_timed(args)?.0)
-    }
-
-    fn validate(&self, args: &[Arg]) -> Result<()> {
+    fn validate(&self, args: &[ArgRef]) -> Result<()> {
         if args.len() != self.spec.inputs.len() {
             bail!(
                 "entry '{}' takes {} args, got {}",
@@ -170,13 +394,20 @@ impl Compiled {
     }
 }
 
-fn to_literal(arg: &Arg) -> Result<xla::Literal> {
-    let dims: Vec<i64> = arg.shape().iter().map(|&d| d as i64).collect();
-    let lit = match arg {
-        Arg::F(t) => xla::Literal::vec1(t.data()),
-        Arg::I(t) => xla::Literal::vec1(t.data()),
-    };
-    lit.reshape(&dims).context("reshaping input literal")
+fn shape_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+fn make_literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&shape_i64(shape))
+        .context("reshaping f32 input literal")
+}
+
+fn make_literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&shape_i64(shape))
+        .context("reshaping i32 input literal")
 }
 
 fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
@@ -188,12 +419,36 @@ fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
     Tensor::new(spec.shape.clone(), data)
 }
 
-/// An artifact directory with compile-on-demand entry caching.
+/// Decompose one output literal into a caller-provided preallocated
+/// tensor. The transfer out of the literal materializes once inside the
+/// binding (`to_vec`, same as the owning path); the resulting buffer is
+/// then *moved* into `out` — no element copy, no new `Tensor`/shape
+/// allocation.
+fn from_literal_into(lit: &xla::Literal, spec: &TensorSpec, out: &mut Tensor) -> Result<()> {
+    if spec.dtype != Dtype::F32 {
+        bail!("i32 outputs not supported");
+    }
+    if out.shape() != spec.shape.as_slice() {
+        bail!(
+            "output buffer shape {:?} != manifest {:?} for '{}'",
+            out.shape(),
+            spec.shape,
+            spec.name
+        );
+    }
+    let data: Vec<f32> = lit.to_vec::<f32>().context("reading f32 output")?;
+    out.set_data(data)
+        .with_context(|| format!("output '{}'", spec.name))
+}
+
+/// An artifact directory with compile-on-demand entry caching and the
+/// device-constant literal cache.
 pub struct ArtifactSet {
     pub dir: PathBuf,
     pub manifest: Manifest,
     runtime: Rc<Runtime>,
     cache: RefCell<BTreeMap<String, Rc<Compiled>>>,
+    consts: ConstCache,
 }
 
 impl ArtifactSet {
@@ -204,6 +459,7 @@ impl ArtifactSet {
             manifest,
             runtime,
             cache: RefCell::new(BTreeMap::new()),
+            consts: ConstCache::new(),
         })
     }
 
@@ -218,6 +474,17 @@ impl ArtifactSet {
             .borrow_mut()
             .insert(name.to_string(), compiled.clone());
         Ok(compiled)
+    }
+
+    /// Stage-once device constant (per-layer parameters, Ω): converted to
+    /// an `xla::Literal` on first use and reused until the underlying
+    /// tensor's content hash changes.
+    pub fn staged_const(&self, key: ConstKey, t: &Tensor) -> Result<Rc<StagedConst>> {
+        self.consts.staged(key, t)
+    }
+
+    pub fn const_cache(&self) -> &ConstCache {
+        &self.consts
     }
 
     /// Sum of execution stats across all compiled entries (perf reporting).
@@ -237,4 +504,33 @@ pub fn fargs(tensors: Vec<Tensor>) -> Vec<Arg> {
 
 pub fn push_i(args: &mut Vec<Arg>, t: IntTensor) {
     args.push(Arg::I(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_stats_track_min_max() {
+        let mut s = ExecStats::default();
+        assert_eq!(s.min_s(), 0.0);
+        assert_eq!(s.max_s(), 0.0);
+        s.record(0.5); // cold call
+        s.record(0.1);
+        s.record(0.2);
+        assert_eq!(s.calls, 3);
+        assert!((s.min_s() - 0.1).abs() < 1e-12);
+        assert!((s.max_s() - 0.5).abs() < 1e-12);
+        assert!((s.mean_s() - 0.8 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_hash_is_content_sensitive() {
+        let a = hash_f32_bits(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, hash_f32_bits(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, hash_f32_bits(&[1.0, 2.0, 3.0000001]));
+        assert_ne!(a, hash_f32_bits(&[1.0, 2.0]));
+        // 0.0 and -0.0 have different bit patterns — treated as a change.
+        assert_ne!(hash_f32_bits(&[0.0]), hash_f32_bits(&[-0.0]));
+    }
 }

@@ -50,7 +50,37 @@ impl WorkItem {
     /// Number of paper-unit VJPs this item bundles, with window `w`,
     /// sequence length `t_total`: for each token i in the chunk, one
     /// vjp_C plus min(w, T−i) (vjp_A + vjp_B) pairs.
+    ///
+    /// Closed form, O(1) — the backward phase evaluates this once per
+    /// item, and at paper scale (K·T/C items) the seed's O(C) loop was
+    /// measurable coordinator overhead. Cross-checked against the literal
+    /// per-token sum by [`WorkItem::vjp_units_enumerated`] in the property
+    /// tests.
     pub fn vjp_units(&self, w: usize, t_total: usize) -> u64 {
+        let (i0, c) = (self.chunk_start as u64, self.chunk_len as u64);
+        let (w, t) = (w as u64, t_total as u64);
+        debug_assert!(i0 + c <= t, "chunk out of sequence");
+        // min(w, t−i) == w exactly for i ≤ t−w (requires w ≤ t); the
+        // remaining tokens contribute the arithmetic run t−i.
+        let n_full = if w > t {
+            0
+        } else {
+            (t - w + 1).saturating_sub(i0).min(c)
+        };
+        let m = c - n_full;
+        let mut lookahead = n_full * w;
+        if m > 0 {
+            // i runs from i0+n_full to i0+c−1; t−i runs hi down to lo.
+            let lo = t - (i0 + c - 1);
+            let hi = t - (i0 + n_full);
+            lookahead += (lo + hi) * m / 2;
+        }
+        c + 2 * lookahead
+    }
+
+    /// Literal per-token enumeration (the seed implementation) — ground
+    /// truth for the closed form above; tests only.
+    pub fn vjp_units_enumerated(&self, w: usize, t_total: usize) -> u64 {
         let mut units = 0u64;
         for i in self.chunk_start..self.chunk_start + self.chunk_len {
             let lookahead = w.min(t_total - i);
@@ -227,6 +257,26 @@ mod tests {
         // token i: 1 (vjp_C) + 2*min(4, 8-i): i=0..3 → 8, i=4 →8, i=5 →6, i=6 →4, i=7 →2
         let want: u64 = (0..8u64).map(|i| 1 + 2 * 4u64.min(8 - i)).sum();
         assert_eq!(it.vjp_units(4, 8), want);
+    }
+
+    #[test]
+    fn vjp_units_closed_form_matches_enumeration() {
+        let mut rng = Rng::new(0x0C10);
+        for case in 0..500 {
+            let c = 1 + rng.below(16) as usize;
+            let chunks = 1 + rng.below(16) as usize;
+            let t = c * chunks;
+            // Windows beyond T exercise the w > t branch.
+            let w = 1 + rng.below(2 * t as u64) as usize;
+            for it in plan_chunks(1, t, c).unwrap() {
+                assert_eq!(
+                    it.vjp_units(w, t),
+                    it.vjp_units_enumerated(w, t),
+                    "case {case}: t={t} c={c} w={w} i0={}",
+                    it.chunk_start
+                );
+            }
+        }
     }
 
     #[test]

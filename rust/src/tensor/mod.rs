@@ -5,10 +5,123 @@
 //! embedding lookup, RMSNorm of the embedded stream, slicing/padding of
 //! activation windows for the adjoint work items, and reductions for
 //! metrics and tests. A small naive `matmul` exists for tests only.
+//!
+//! The hot path never materializes owning copies: [`TensorView`] is a
+//! borrowed (shape, &[f32]) pair the runtime stages directly, and
+//! [`Arena`] is a reusable scratch pool the `*_into` variants of the
+//! row-block ops write into (DESIGN.md §Host-Staging). Every `*_into`
+//! variant is bit-identical to its owning counterpart.
 
 use anyhow::{bail, Result};
 
 use crate::rng::Rng;
+
+/// Maximum rank [`TensorView`] carries inline (everything the entry-point
+/// ABI uses today is rank ≤ 2; headroom for batched entries).
+pub const VIEW_MAX_RANK: usize = 4;
+
+/// Borrowed, shape-carrying view over a row-major `f32` buffer — the
+/// zero-copy argument type of the staging hot path. `Copy`, allocation-free.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: [usize; VIEW_MAX_RANK],
+    rank: usize,
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// View `data` as a tensor of shape `dims`. Errors on rank >
+    /// [`VIEW_MAX_RANK`] or element-count mismatch.
+    pub fn new(dims: &[usize], data: &'a [f32]) -> Result<Self> {
+        if dims.len() > VIEW_MAX_RANK {
+            bail!("TensorView rank {} exceeds {VIEW_MAX_RANK}", dims.len());
+        }
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("view shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        let mut shape = [0usize; VIEW_MAX_RANK];
+        shape[..dims.len()].copy_from_slice(dims);
+        Ok(Self { shape, rank: dims.len(), data })
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.shape[..self.rank]
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Materialize an owning [`Tensor`] (tests / cold paths only).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(self.dims().to_vec(), self.data.to_vec())
+            .expect("TensorView invariant: shape matches data")
+    }
+}
+
+/// Reusable scratch pool for the staging hot path: indexed `Vec<f32>`
+/// slots whose capacity persists across uses, plus a counter of heap
+/// allocation events (slot growth). Steady-state reuse — same slot, same
+/// or smaller length — performs zero heap allocations, which the
+/// zero-copy tests assert through [`Arena::alloc_events`].
+#[derive(Debug, Default)]
+pub struct Arena {
+    slots: Vec<Vec<f32>>,
+    alloc_events: u64,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow slot `idx` resized to exactly `len` elements (contents
+    /// unspecified — callers fully overwrite). Counts an allocation event
+    /// whenever the slot table or the slot's buffer must grow.
+    pub fn slot(&mut self, idx: usize, len: usize) -> &mut [f32] {
+        if idx >= self.slots.len() {
+            self.alloc_events += 1;
+            self.slots.resize_with(idx + 1, Vec::new);
+        }
+        let buf = &mut self.slots[idx];
+        if len > buf.capacity() {
+            self.alloc_events += 1;
+        }
+        buf.resize(len, 0.0);
+        &mut buf[..]
+    }
+
+    /// Read back a slot's current contents (empty if never written).
+    pub fn get(&self, idx: usize) -> &[f32] {
+        self.slots.get(idx).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total heap allocation events since construction (growth only —
+    /// reuse is free).
+    pub fn alloc_events(&self) -> u64 {
+        self.alloc_events
+    }
+
+    /// Drop contents but keep every slot's capacity.
+    pub fn reset(&mut self) {
+        for b in &mut self.slots {
+            b.clear();
+        }
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -77,6 +190,22 @@ impl Tensor {
 
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
+    }
+
+    /// Replace the backing buffer (shape unchanged; lengths must match).
+    /// Lets the runtime *move* an execution result into a pooled tensor
+    /// instead of copying element-wise.
+    pub fn set_data(&mut self, data: Vec<f32>) -> Result<()> {
+        if data.len() != self.data.len() {
+            bail!(
+                "set_data: {} elements for shape {:?} ({} wanted)",
+                data.len(),
+                self.shape,
+                self.data.len()
+            );
+        }
+        self.data = data;
+        Ok(())
     }
 
     pub fn into_data(self) -> Vec<f32> {
@@ -174,17 +303,43 @@ impl Tensor {
 
     // --- row-block ops the adjoint scheduler needs -----------------------
 
-    /// Rows [start, start+len) of a 2-D tensor.
-    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
+    /// Borrowed whole-tensor view (zero-copy).
+    pub fn view(&self) -> Result<TensorView<'_>> {
+        TensorView::new(&self.shape, &self.data)
+    }
+
+    /// Zero-copy `slice_rows`: rows [start, start+len) of a 2-D tensor as
+    /// a borrowed view over the contiguous row block.
+    pub fn view_rows(&self, start: usize, len: usize) -> Result<TensorView<'_>> {
+        let cols = self.check_row_range("view_rows", start, len)?;
+        TensorView::new(&[len, cols], &self.data[start * cols..(start + len) * cols])
+    }
+
+    fn check_row_range(&self, op: &str, start: usize, len: usize) -> Result<usize> {
         if self.rank() != 2 {
-            bail!("slice_rows on rank-{} tensor", self.rank());
+            bail!("{op} on rank-{} tensor", self.rank());
         }
         let (rows, cols) = (self.shape[0], self.shape[1]);
         if start + len > rows {
-            bail!("slice_rows [{start}, {}) out of {rows} rows", start + len);
+            bail!("{op} [{start}, {}) out of {rows} rows", start + len);
         }
-        let data = self.data[start * cols..(start + len) * cols].to_vec();
-        Tensor::new(vec![len, cols], data)
+        Ok(cols)
+    }
+
+    /// Rows [start, start+len) of a 2-D tensor.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
+        Ok(self.view_rows(start, len)?.to_tensor())
+    }
+
+    /// Write rows [start, start+len) into `out` (length `len·cols`).
+    /// Bit-identical to [`Tensor::slice_rows`], no allocation.
+    pub fn slice_rows_into(&self, start: usize, len: usize, out: &mut [f32]) -> Result<()> {
+        let cols = self.check_row_range("slice_rows_into", start, len)?;
+        if out.len() != len * cols {
+            bail!("slice_rows_into out buffer {} != {}", out.len(), len * cols);
+        }
+        out.copy_from_slice(&self.data[start * cols..(start + len) * cols]);
+        Ok(())
     }
 
     /// Rows [start, start+len) clamped to the sequence end, zero-padded to
@@ -193,14 +348,30 @@ impl Tensor {
         if self.rank() != 2 {
             bail!("slice_rows_padded on rank-{} tensor", self.rank());
         }
+        let cols = self.shape[1];
+        let mut out = Tensor::zeros(&[len, cols]);
+        self.slice_rows_padded_into(start, len, &mut out.data)?;
+        Ok(out)
+    }
+
+    /// Write the clamped, zero-padded row window into `out` (length
+    /// `len·cols`, fully overwritten). Bit-identical to
+    /// [`Tensor::slice_rows_padded`], no allocation.
+    pub fn slice_rows_padded_into(&self, start: usize, len: usize, out: &mut [f32]) -> Result<()> {
+        if self.rank() != 2 {
+            bail!("slice_rows_padded_into on rank-{} tensor", self.rank());
+        }
         let (rows, cols) = (self.shape[0], self.shape[1]);
+        if out.len() != len * cols {
+            bail!("slice_rows_padded_into out buffer {} != {}", out.len(), len * cols);
+        }
         let avail = rows.saturating_sub(start).min(len);
-        let mut data = vec![0.0f32; len * cols];
         if avail > 0 {
-            data[..avail * cols]
+            out[..avail * cols]
                 .copy_from_slice(&self.data[start * cols..(start + avail) * cols]);
         }
-        Tensor::new(vec![len, cols], data)
+        out[avail * cols..].fill(0.0);
+        Ok(())
     }
 
     /// Shift a 2-D state sequence down one row, inserting `first` on top:
@@ -210,31 +381,72 @@ impl Tensor {
             bail!("shift_down on rank-{} tensor", self.rank());
         }
         let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[rows, cols]);
+        self.shift_down_into(first, &mut out.data)?;
+        Ok(out)
+    }
+
+    /// Write the shifted sequence into `out` (length `rows·cols`, fully
+    /// overwritten). Bit-identical to [`Tensor::shift_down`], no allocation.
+    pub fn shift_down_into(&self, first: &[f32], out: &mut [f32]) -> Result<()> {
+        if self.rank() != 2 {
+            bail!("shift_down_into on rank-{} tensor", self.rank());
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if rows == 0 {
+            bail!("shift_down of an empty sequence");
+        }
         if first.len() != cols {
             bail!("shift_down first row has {} cols, want {cols}", first.len());
         }
+        if out.len() != rows * cols {
+            bail!("shift_down_into out buffer {} != {}", out.len(), rows * cols);
+        }
+        out[..cols].copy_from_slice(first);
+        out[cols..].copy_from_slice(&self.data[..(rows - 1) * cols]);
+        Ok(())
+    }
+
+    /// Concatenate 2-D tensors along rows. Pre-reserves the exact output
+    /// capacity (one allocation, no growth reallocs).
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        let (rows, cols) = Self::concat_rows_dims(parts)?;
         let mut data = Vec::with_capacity(rows * cols);
-        data.extend_from_slice(first);
-        data.extend_from_slice(&self.data[..(rows - 1) * cols]);
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
         Tensor::new(vec![rows, cols], data)
     }
 
-    /// Concatenate 2-D tensors along rows.
-    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+    /// Write the row concatenation into `out` (length `Σrows·cols`, fully
+    /// overwritten); returns the output row count. Bit-identical to
+    /// [`Tensor::concat_rows`], no allocation.
+    pub fn concat_rows_into(parts: &[&Tensor], out: &mut [f32]) -> Result<usize> {
+        let (rows, cols) = Self::concat_rows_dims(parts)?;
+        if out.len() != rows * cols {
+            bail!("concat_rows_into out buffer {} != {}", out.len(), rows * cols);
+        }
+        let mut off = 0;
+        for p in parts {
+            out[off..off + p.data.len()].copy_from_slice(&p.data);
+            off += p.data.len();
+        }
+        Ok(rows)
+    }
+
+    fn concat_rows_dims(parts: &[&Tensor]) -> Result<(usize, usize)> {
         if parts.is_empty() {
             bail!("concat_rows of nothing");
         }
         let cols = parts[0].shape[1];
-        let mut data = Vec::new();
         let mut rows = 0;
         for p in parts {
             if p.rank() != 2 || p.shape[1] != cols {
                 bail!("concat_rows column mismatch");
             }
             rows += p.shape[0];
-            data.extend_from_slice(&p.data);
         }
-        Tensor::new(vec![rows, cols], data)
+        Ok((rows, cols))
     }
 
     // --- host math the coordinator owns ----------------------------------
@@ -242,16 +454,32 @@ impl Tensor {
     /// Parameter-free RMSNorm over the last axis (must match L2's
     /// `model.rmsnorm`: x * rsqrt(mean(x²) + eps)).
     pub fn rmsnorm(&self, eps: f32) -> Tensor {
-        let cols = *self.shape.last().unwrap_or(&1);
         let mut out = self.clone();
-        for row in out.data.chunks_mut(cols) {
+        out.rmsnorm_inplace(eps);
+        out
+    }
+
+    /// In-place RMSNorm — the hot path's variant (no clone of the stream).
+    pub fn rmsnorm_inplace(&mut self, eps: f32) {
+        let cols = *self.shape.last().unwrap_or(&1);
+        for row in self.data.chunks_mut(cols) {
             let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / cols as f32;
             let r = 1.0 / (ms + eps).sqrt();
             for x in row.iter_mut() {
                 *x *= r;
             }
         }
-        out
+    }
+
+    /// RMSNorm into a caller-provided same-shape tensor (reusable buffer).
+    /// Bit-identical to [`Tensor::rmsnorm`].
+    pub fn rmsnorm_into(&self, eps: f32, out: &mut Tensor) -> Result<()> {
+        if out.shape != self.shape {
+            bail!("rmsnorm_into shape mismatch {:?} vs {:?}", out.shape, self.shape);
+        }
+        out.data.copy_from_slice(&self.data);
+        out.rmsnorm_inplace(eps);
+        Ok(())
     }
 
     /// Naive matmul — tests/small host math only; hot-path matmuls are HLO.
@@ -426,5 +654,90 @@ mod tests {
         assert_eq!(c.shape(), &[3, 2]);
         assert_eq!(c.slice_rows(0, 1).unwrap(), a);
         assert_eq!(c.slice_rows(1, 2).unwrap(), b);
+    }
+
+    #[test]
+    fn view_rows_is_zero_copy_slice() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let v = t.view_rows(1, 2).unwrap();
+        assert_eq!(v.dims(), &[2, 2]);
+        assert_eq!(v.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(v.to_tensor(), t.slice_rows(1, 2).unwrap());
+        assert!(t.view_rows(3, 2).is_err());
+        let w = t.view().unwrap();
+        assert_eq!(w.dims(), t.shape());
+        assert_eq!(w.data(), t.data());
+    }
+
+    #[test]
+    fn view_checks_shape_and_rank() {
+        assert!(TensorView::new(&[2, 3], &[0.0; 5]).is_err());
+        assert!(TensorView::new(&[1, 1, 1, 1, 1], &[0.0; 1]).is_err());
+        let v = TensorView::new(&[], &[7.0]).unwrap();
+        assert_eq!(v.rank(), 0);
+        assert_eq!(v.to_tensor().item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn into_variants_match_owning_ops() {
+        let t = Tensor::randn(&[6, 3], 1.0, &mut crate::rng::Rng::new(3));
+        let mut buf = vec![0.0f32; 2 * 3];
+        t.slice_rows_into(1, 2, &mut buf).unwrap();
+        assert_eq!(buf, t.slice_rows(1, 2).unwrap().into_data());
+
+        let mut buf = vec![9.0f32; 4 * 3];
+        t.slice_rows_padded_into(4, 4, &mut buf).unwrap();
+        assert_eq!(buf, t.slice_rows_padded(4, 4).unwrap().into_data());
+
+        let mut buf = vec![9.0f32; 6 * 3];
+        t.shift_down_into(&[1.0, 2.0, 3.0], &mut buf).unwrap();
+        assert_eq!(buf, t.shift_down(&[1.0, 2.0, 3.0]).unwrap().into_data());
+
+        let a = t.slice_rows(0, 2).unwrap();
+        let b = t.slice_rows(2, 4).unwrap();
+        let mut buf = vec![0.0f32; 6 * 3];
+        let rows = Tensor::concat_rows_into(&[&a, &b], &mut buf).unwrap();
+        assert_eq!(rows, 6);
+        assert_eq!(buf, Tensor::concat_rows(&[&a, &b]).unwrap().into_data());
+
+        let mut out = Tensor::zeros(&[6, 3]);
+        t.rmsnorm_into(1e-6, &mut out).unwrap();
+        assert_eq!(out, t.rmsnorm(1e-6));
+        let mut inp = t.clone();
+        inp.rmsnorm_inplace(1e-6);
+        assert_eq!(inp, t.rmsnorm(1e-6));
+    }
+
+    #[test]
+    fn into_variants_reject_bad_buffers() {
+        let t = Tensor::zeros(&[3, 2]);
+        assert!(t.slice_rows_into(0, 2, &mut [0.0; 3]).is_err());
+        assert!(t.slice_rows_padded_into(0, 2, &mut [0.0; 3]).is_err());
+        assert!(t.shift_down_into(&[0.0, 0.0], &mut [0.0; 5]).is_err());
+        assert!(t.shift_down_into(&[0.0; 3], &mut [0.0; 6]).is_err());
+        assert!(Tensor::concat_rows_into(&[&t], &mut [0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn arena_counts_growth_only() {
+        let mut a = Arena::new();
+        let before = a.alloc_events();
+        a.slot(0, 16).fill(1.0);
+        let grown = a.alloc_events();
+        assert!(grown > before);
+        // Reuse at same or smaller size: free.
+        a.slot(0, 16);
+        a.slot(0, 8);
+        assert_eq!(a.alloc_events(), grown);
+        assert_eq!(a.get(0).len(), 8);
+        // Growth past capacity: counted.
+        a.slot(0, 1024);
+        assert!(a.alloc_events() > grown);
+        // Reset keeps capacity — next use is free.
+        let after_grow = a.alloc_events();
+        a.reset();
+        a.slot(0, 1024);
+        assert_eq!(a.alloc_events(), after_grow);
+        assert_eq!(a.get(7), &[] as &[f32]);
     }
 }

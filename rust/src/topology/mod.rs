@@ -267,8 +267,8 @@ mod tests {
         let t = f.broadcast(3, 1000);
         assert!(t > 0.0);
         assert_eq!(f.comm.messages, 3);
-        for v in 0..3 {
-            assert_eq!(f.devices[v].mem.live, 1000);
+        for d in f.devices.iter().take(3) {
+            assert_eq!(d.mem.live, 1000);
         }
     }
 

@@ -31,6 +31,10 @@ pub struct Trainer {
     opt: ShardedAdam,
     corpus: Box<dyn Corpus>,
     step_idx: usize,
+    /// Reusable backward-phase staging pool (DESIGN.md §Host-Staging):
+    /// held across steps so steady-state training performs no per-item —
+    /// or per-step — staging allocations.
+    stage_pool: adjoint::StagePool,
 }
 
 impl Trainer {
@@ -71,6 +75,7 @@ impl Trainer {
             opt,
             corpus,
             step_idx: 0,
+            stage_pool: adjoint::StagePool::new(),
         })
     }
 
@@ -107,7 +112,7 @@ impl Trainer {
                 // Backward routes through the event-driven scheduler:
                 // `cfg.sched` picks the dispatch policy and whether the
                 // paralleled variant may overlap with the forward timing.
-                let bwd = adjoint::backward_scheduled(
+                let bwd = adjoint::backward_pooled(
                     &self.arts,
                     &self.cfg.dims,
                     &self.params,
@@ -115,6 +120,7 @@ impl Trainer {
                     &mut grads,
                     &self.cfg.sched,
                     Some(&fwd.timing),
+                    &mut self.stage_pool,
                 )?;
                 let step = (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units);
                 self.last_plan = Some(bwd.plan);
@@ -187,6 +193,19 @@ impl Trainer {
                 plan.sequential_makespan_s,
                 100.0 * s.utilization(),
                 crate::metrics::fmt_bytes(s.peak_transient_bytes()),
+            );
+        }
+        // §Perf profile: per-entry latency spread — min is the
+        // steady-state floor, max is (typically) the cold first call with
+        // an empty literal pool (EXPERIMENTS.md §Perf).
+        for (name, st) in self.arts.all_stats() {
+            println!(
+                "entry {:<20} calls {:>6}  mean {}  min {}  max {}",
+                name,
+                st.calls,
+                crate::util::bench::fmt_dur(st.mean_s()),
+                crate::util::bench::fmt_dur(st.min_s()),
+                crate::util::bench::fmt_dur(st.max_s()),
             );
         }
         if let Some(path) = self.cfg.log_csv.clone() {

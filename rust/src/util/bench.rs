@@ -1,8 +1,11 @@
 //! Micro-bench harness for the `cargo bench` targets (criterion is
 //! unavailable offline). Warmup + timed iterations; reports mean / p50 /
 //! p95 / min in a stable text format the bench binaries print alongside
-//! the paper-vs-measured tables.
+//! the paper-vs-measured tables, and as machine-readable JSON
+//! ([`write_json`]) so the perf trajectory is tracked across PRs
+//! (EXPERIMENTS.md §Perf).
 
+use std::path::Path;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -23,6 +26,48 @@ impl BenchStats {
             f64::INFINITY
         }
     }
+
+    /// One JSON object (nanosecond units — integers stay exact in f64 for
+    /// any realistic duration, and the parser in `util::json` reads them
+    /// back losslessly).
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":{:?},\"iters\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"min_ns\":{:.1}}}",
+            self.name,
+            self.iters,
+            self.mean_s * 1e9,
+            self.p50_s * 1e9,
+            self.p95_s * 1e9,
+            self.min_s * 1e9,
+        )
+    }
+}
+
+/// Write a bench run's results as `BENCH_<bench>.json`-style output:
+/// `{"bench", "schema", "note", "results": [{name, iters, mean_ns, p50_ns,
+/// p95_ns, min_ns}]}`. `note` records run context (artifact availability,
+/// host caveats) so numbers are comparable across PRs.
+pub fn write_json(
+    path: &Path,
+    bench: &str,
+    note: &str,
+    results: &[BenchStats],
+) -> anyhow::Result<()> {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\n  \"bench\": {bench:?},\n  \"schema\": 1,\n  \"note\": {note:?},\n  \"results\": [\n"
+    ));
+    for (i, r) in results.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&r.to_json());
+        if i + 1 < results.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
 }
 
 impl std::fmt::Display for BenchStats {
@@ -145,5 +190,34 @@ mod tests {
         assert!(fmt_dur(2e-5).ends_with("µs"));
         assert!(fmt_dur(2e-2).ends_with("ms"));
         assert!(fmt_dur(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_output_round_trips() {
+        let stats = vec![
+            BenchStats {
+                name: "alpha\"quoted\"".into(),
+                iters: 10,
+                mean_s: 1.5e-6,
+                p50_s: 1.4e-6,
+                p95_s: 2.0e-6,
+                min_s: 1.0e-6,
+            },
+            bench("noop", 1, 5, 0.0, || 1 + 1),
+        ];
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("bench_json_test_{}.json", std::process::id()));
+        write_json(&path, "hotpath", "unit test", &stats).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "hotpath");
+        assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 1);
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str().unwrap(), "alpha\"quoted\"");
+        assert_eq!(rs[0].get("iters").unwrap().as_usize().unwrap(), 10);
+        assert!((rs[0].get("mean_ns").unwrap().as_f64().unwrap() - 1500.0).abs() < 0.2);
+        assert!(rs[1].get("min_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

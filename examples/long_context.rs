@@ -9,7 +9,6 @@
 //!   * peak accounted memory vs the BPTT baseline.
 
 use std::path::PathBuf;
-use std::rc::Rc;
 
 use adjoint_sharding::config::{GradMode, RunConfig};
 use adjoint_sharding::data::{CopyTask, Corpus};
@@ -31,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(2);
     }
 
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     let mut cfg = RunConfig::load(&artifacts, &config)?;
     cfg.grad_mode = GradMode::Adjoint;
     cfg.optim.lr = 5e-3;
@@ -76,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Contrast with the untruncated-vjp BPTT baseline for memory/time.
-    let rt2 = Rc::new(Runtime::cpu()?);
+    let rt2 = Runtime::shared()?;
     let mut cfg2 = RunConfig::load(&artifacts, &config)?;
     cfg2.grad_mode = GradMode::Bptt;
     cfg2.log_every = usize::MAX;

@@ -8,7 +8,6 @@
 //! compare against the `bptt_grad` ground truth → take one Adam step.
 
 use std::path::Path;
-use std::rc::Rc;
 
 use adjoint_sharding::adjoint;
 use adjoint_sharding::baselines;
@@ -29,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 1. Runtime + AOT artifacts (compiled once, reused forever).
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     println!("PJRT platform: {}", rt.platform());
     let arts = ArtifactSet::load(rt, dir)?;
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config)?;

@@ -11,7 +11,6 @@
 //! for the paper's GPU-scale models, DESIGN.md §1), 400 steps, Υ=2.
 
 use std::path::PathBuf;
-use std::rc::Rc;
 
 use adjoint_sharding::config::{GradMode, RunConfig};
 use adjoint_sharding::data::MarkovCorpus;
@@ -36,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let run = |mode: GradMode, csv_path: Option<PathBuf>| -> anyhow::Result<Trainer> {
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Runtime::shared()?;
         let mut cfg = RunConfig::load(&artifacts, &config)?;
         cfg.grad_mode = mode;
         cfg.topology.devices = devices.min(cfg.dims.k);
@@ -99,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| adj.corpus().sample(0, adj.cfg.dims.t).tokens.data()[i])
         .collect();
     let arts_dir = artifacts.join(&config);
-    let rt = Rc::new(adjoint_sharding::runtime::Runtime::cpu()?);
+    let rt = adjoint_sharding::runtime::Runtime::shared()?;
     let arts = adjoint_sharding::runtime::ArtifactSet::load(rt, &arts_dir)?;
     let toks = adjoint_sharding::generate::generate(
         &arts,

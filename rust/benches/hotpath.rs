@@ -11,7 +11,6 @@
 //! host.
 
 use std::path::Path;
-use std::rc::Rc;
 
 use adjoint_sharding::adjoint::{self, stage_slot, ItemStage};
 use adjoint_sharding::config::{GradMode, ModelDims, OptimCfg, RunConfig, TopologyCfg};
@@ -121,7 +120,7 @@ fn host_section(results: &mut Vec<BenchStats>) {
 }
 
 fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
-    let rt = Rc::new(Runtime::cpu().expect("pjrt"));
+    let rt = Runtime::shared().expect("pjrt");
     let arts = ArtifactSet::load(rt.clone(), &root.join(config)).expect("artifacts");
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).expect("dims");
     let params = ParamSet::init(&dims, 0);
@@ -163,6 +162,7 @@ fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
     // 3. Full backward phase (Alg. 4) through the pooled staging path.
     let mut grads = GradSet::zeros(&dims);
     let mut pool = adjoint::StagePool::new();
+    let mut exec = adjoint_sharding::exec::SimExecutor;
     let s = bench("adjoint_backward(Alg.4, pooled)", 2, 10, 1.0, || {
         adjoint::backward_pooled(
             &arts,
@@ -173,6 +173,7 @@ fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
             &Default::default(),
             None,
             &mut pool,
+            &mut exec,
         )
         .unwrap()
         .calls
@@ -191,7 +192,7 @@ fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
         (GradMode::Adjoint, "train_step(adjoint)"),
         (GradMode::Bptt, "train_step(bptt)"),
     ] {
-        let rt2 = Rc::new(Runtime::cpu().expect("pjrt"));
+        let rt2 = Runtime::shared().expect("pjrt");
         let mut cfg = RunConfig::load(root, config).unwrap();
         cfg.grad_mode = mode;
         cfg.log_every = usize::MAX;
@@ -236,7 +237,7 @@ fn main() {
     }
 
     let out = Path::new("BENCH_hotpath.json");
-    write_json(out, "hotpath", &note, &results).expect("writing bench json");
+    write_json(out, "hotpath", false, &note, &results).expect("writing bench json");
     println!("\nwrote {}", out.display());
 }
 

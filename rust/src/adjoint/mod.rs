@@ -19,13 +19,14 @@
 use anyhow::Result;
 
 use crate::config::{ModelDims, SchedCfg};
+use crate::exec::{self, ExecCtx, Executor, SimExecutor};
 use crate::model::{GradSet, ParamSet};
 use crate::pipeline::ForwardTiming;
-use crate::runtime::{ArgRef, ArtifactSet, ConstKey, EntrySpec, StagedConst};
+use crate::runtime::{ArtifactSet, EntrySpec};
 use crate::schedule::{self, BackwardPlan, SchedItem};
 use crate::sharding::{plan_chunks, WorkItem};
 use crate::tensor::{Arena, Arg, Tensor, TensorView};
-use crate::topology::{ActKind, Fleet};
+use crate::topology::{ActKind, ActSource, Fleet};
 
 /// Backward-phase outcome.
 #[derive(Debug)]
@@ -34,14 +35,20 @@ pub struct AdjointOutput {
     /// schedule's fleet makespan (sequential), or the overlapped plan's
     /// tail past the forward (paralleled).
     pub virtual_s: f64,
-    /// Wall seconds spent in PJRT executions.
+    /// Wall seconds spent in PJRT executions (Σ over items, all lanes).
     pub wall_s: f64,
+    /// Host wall-clock of the executed phase end to end — under the
+    /// threaded executor this is what real concurrency bought vs
+    /// `wall_s`; under sim it is ≈ `wall_s` plus staging overhead.
+    pub host_s: f64,
     /// Paper-unit VJPs performed (Σ over items of item.vjp_units).
     pub vjp_units: u64,
     /// Number of chunk executions dispatched.
     pub calls: u64,
     /// The virtual-time plan the phase ran under: per-slot timelines,
     /// binding constraints, peak concurrent transients, critical path.
+    /// Re-planned from *measured* item seconds after execution (the
+    /// dispatch itself followed the analytic plan — DESIGN.md §Execution).
     pub plan: BackwardPlan,
 }
 
@@ -107,7 +114,7 @@ impl StagePool {
 
     /// Ensure the pooled output buffers match the entry's output specs
     /// (rebuilt only when the artifact set changes).
-    fn prepare_outs(&mut self, spec: &EntrySpec) {
+    pub fn prepare_outs(&mut self, spec: &EntrySpec) {
         let ok = self.outs.len() == spec.outputs.len()
             && self
                 .outs
@@ -119,7 +126,9 @@ impl StagePool {
         }
     }
 
-    fn split_mut(&mut self) -> (&mut Vec<ItemStage>, &mut Vec<Tensor>) {
+    /// The stages and the pooled output buffers, borrowed disjointly
+    /// (executor backends drive both at once).
+    pub fn split_mut(&mut self) -> (&mut Vec<ItemStage>, &mut Vec<Tensor>) {
         (&mut self.stages, &mut self.outs)
     }
 
@@ -129,7 +138,10 @@ impl StagePool {
     }
 }
 
-fn stage_for(stages: &mut Vec<ItemStage>, device: usize) -> &mut ItemStage {
+/// Get (growing the table if needed) the [`ItemStage`] of one device —
+/// shared by the sim backend's pool and the threaded workers' local
+/// stage tables.
+pub fn stage_for(stages: &mut Vec<ItemStage>, device: usize) -> &mut ItemStage {
     if device >= stages.len() {
         stages.resize_with(device + 1, ItemStage::new);
     }
@@ -146,14 +158,25 @@ pub fn gather_item_args_into(
     item: &WorkItem,
     stage: &mut ItemStage,
 ) -> Result<()> {
-    use stage_slot::*;
     let dev = &fleet.devices[fleet.device_of_layer(item.layer)];
+    gather_item_args_into_from(dims, dev, item, stage)
+}
+
+/// [`gather_item_args_into`] against any [`ActSource`] — the device-
+/// scoped core the executor workers run on their `Arc` snapshots.
+pub fn gather_item_args_into_from(
+    dims: &ModelDims,
+    src: &dyn ActSource,
+    item: &WorkItem,
+    stage: &mut ItemStage,
+) -> Result<()> {
+    use stage_slot::*;
     let (i0, c, w) = (item.chunk_start, item.chunk_len, dims.w);
-    let h = dev.get(item.layer, ActKind::H)?;
-    let a = dev.get(item.layer, ActKind::A)?;
-    let cg = dev.get(item.layer, ActKind::C)?;
-    let xhat = dev.get(item.layer, ActKind::Xhat)?;
-    let v = dev.get(usize::MAX, ActKind::Cotangent)?;
+    let h = src.act(item.layer, ActKind::H)?;
+    let a = src.act(item.layer, ActKind::A)?;
+    let cg = src.act(item.layer, ActKind::C)?;
+    let xhat = src.act(item.layer, ActKind::Xhat)?;
+    let v = src.act(usize::MAX, ActKind::Cotangent)?;
     let p = xhat.shape()[1];
     let n = h.shape()[1];
 
@@ -232,9 +255,10 @@ pub fn backward(
     backward_scheduled(arts, dims, params, fleet, grads, &SchedCfg::default(), None)
 }
 
-/// [`backward_pooled`] with a phase-local [`StagePool`] (steady state
-/// within the phase is still allocation-free; the `Trainer` holds a pool
-/// across steps to make step boundaries free too).
+/// [`backward_pooled`] with a phase-local [`StagePool`] and the default
+/// [`SimExecutor`] (steady state within the phase is still
+/// allocation-free; the `Trainer` holds a pool and an executor across
+/// steps to make step boundaries free too).
 pub fn backward_scheduled(
     arts: &ArtifactSet,
     dims: &ModelDims,
@@ -245,27 +269,34 @@ pub fn backward_scheduled(
     fwd_timing: Option<&ForwardTiming>,
 ) -> Result<AdjointOutput> {
     let mut pool = StagePool::new();
-    backward_pooled(arts, dims, params, fleet, grads, sched, fwd_timing, &mut pool)
+    let mut exec = SimExecutor;
+    backward_pooled(arts, dims, params, fleet, grads, sched, fwd_timing, &mut pool, &mut exec)
 }
 
 /// Run the full backward phase (Alg. 4): every device processes its layers'
 /// chunk items; gradients accumulate into `grads` (dL/dθ += Ξ, line 7).
 ///
-/// The PJRT executions stay single-threaded (DESIGN.md §1); their measured
-/// seconds become the service costs of an event-driven virtual-time
-/// schedule over each device's MIG slots. Memory-aware admission caps the
-/// concurrent in-flight transient working sets against the HBM headroom
-/// left after resident activations, and the recorded per-device peaks
-/// reflect that concurrency (not one call at a time). With
-/// `sched.overlap` and a [`ForwardTiming`], items release against the
-/// chunked-pipeline forward model (paralleled Alg. 4, §4.5) and
-/// `virtual_s` is the phase tail past the serial forward.
+/// Since the executor layer landed (DESIGN.md §Execution) this function
+/// is the phase *orchestrator*: it plans the dispatch analytically
+/// ([`exec::plan_dispatch`] — deterministic per-device item queues under
+/// the configured policy and the fleet's slot/memory limits), hands the
+/// contract to the given [`Executor`] backend (single-threaded `sim` or
+/// per-device-concurrent `threaded` — both produce bit-identical
+/// gradients), then re-plans virtual time from the *measured* per-item
+/// seconds exactly as before. Memory-aware admission caps the concurrent
+/// in-flight transient working sets against the HBM headroom left after
+/// resident activations, and the recorded per-device peaks reflect that
+/// concurrency. With `sched.overlap` and a [`ForwardTiming`], items
+/// release against the chunked-pipeline forward model (paralleled
+/// Alg. 4, §4.5) and `virtual_s` is the phase tail past the serial
+/// forward.
 ///
-/// The host side of the loop is allocation-free in steady state
-/// (DESIGN.md §Host-Staging): the six variable inputs are staged into the
-/// owning device's pooled [`ItemStage`], `W_c` comes from the artifact
-/// set's device-constant cache, and outputs decompose into the pool's
-/// preallocated buffers which [`GradSet::accumulate_layer`] reads directly.
+/// The host side stays allocation-free in steady state (DESIGN.md
+/// §Host-Staging): the six variable inputs are staged into the owning
+/// lane's pooled [`ItemStage`], `W_c` comes from a device-constant cache
+/// (the artifact set's for sim, each worker's own for threaded), and
+/// outputs decompose into preallocated buffers which
+/// [`GradSet::accumulate_layer`] reads directly.
 #[allow(clippy::too_many_arguments)]
 pub fn backward_pooled(
     arts: &ArtifactSet,
@@ -276,8 +307,8 @@ pub fn backward_pooled(
     sched: &SchedCfg,
     fwd_timing: Option<&ForwardTiming>,
     pool: &mut StagePool,
+    executor: &mut dyn Executor,
 ) -> Result<AdjointOutput> {
-    use stage_slot::*;
     let entry = arts.entry("layer_adjoint_grad")?;
     let items = plan_chunks(dims.k, dims.t, dims.c)?;
 
@@ -292,52 +323,29 @@ pub fn backward_pooled(
         .map(|d| Some(fleet.cfg.hbm_bytes.saturating_sub(d.mem.live)))
         .collect();
 
-    // Per-layer W_c staged to a device literal once per phase at most —
-    // the content-hash cache makes repeat phases (and repeat steps with
-    // unchanged params) free.
-    let w_c: Vec<std::rc::Rc<StagedConst>> = (0..dims.k)
-        .map(|k| {
-            arts.staged_const(
-                ConstKey::LayerParam { layer: k, field: 6 },
-                params.layers[k].w_c(),
-            )
-        })
-        .collect::<Result<_>>()?;
+    // The dispatch contract: analytic plan → per-device queues. Both
+    // backends execute exactly this item set in pinned id order per lane.
+    let dispatch = exec::plan_dispatch(dims, fleet, &items, sched, transient_bytes, &mem_caps)?;
 
-    pool.prepare_outs(&entry.spec);
-    let (stages, outs) = pool.split_mut();
-
-    // Execute every VJP bundle once; measured seconds are the virtual
+    // Execute every VJP bundle once; measured seconds become the virtual
     // service costs (the transient working set is "disposed after the
     // computation", §3.3 — its lifetime in virtual time is the span the
     // scheduler assigns below).
+    let outcome = executor.execute(
+        ExecCtx { arts, dims, params, fleet, pool },
+        &dispatch,
+        grads,
+    )?;
+
     let mut sched_items = Vec::with_capacity(items.len());
-    let mut wall_s = 0.0;
     let mut vjp_units = 0u64;
-    let mut calls = 0u64;
     for (id, item) in items.iter().enumerate() {
-        let devi = fleet.device_of_layer(item.layer);
-        let stage = stage_for(stages, devi);
-        gather_item_args_into(dims, fleet, item, stage)?;
-        let args = [
-            ArgRef::C(w_c[item.layer].as_ref()),
-            ArgRef::F(stage.view(XHAT)),
-            ArgRef::F(stage.view(HPREV)),
-            ArgRef::F(stage.view(H)),
-            ArgRef::F(stage.view(A_EXT)),
-            ArgRef::F(stage.view(C_EXT)),
-            ArgRef::F(stage.view(V_EXT)),
-        ];
-        let secs = entry.run_timed_into(&args, outs)?;
-        grads.accumulate_layer(item.layer, outs)?;
-        wall_s += secs;
         vjp_units += item.vjp_units(dims.w, dims.t);
-        calls += 1;
         sched_items.push(SchedItem {
             id,
-            device: devi,
+            device: fleet.device_of_layer(item.layer),
             layer: item.layer,
-            cost_s: secs,
+            cost_s: outcome.item_secs[id],
             ready_at: 0.0,
             mem_bytes: transient_bytes,
         });
@@ -379,7 +387,14 @@ pub fn backward_pooled(
         fleet.devices[d.device].mem.free(d.peak_transient_bytes);
     }
 
-    Ok(AdjointOutput { virtual_s: plan.backward_s, wall_s, vjp_units, calls, plan })
+    Ok(AdjointOutput {
+        virtual_s: plan.backward_s,
+        wall_s: outcome.wall_s,
+        host_s: outcome.host_s,
+        vjp_units,
+        calls: outcome.calls,
+        plan,
+    })
 }
 
 /// Fill `fleet` with randomly-initialized activations of the shapes the

@@ -3,9 +3,12 @@
 //! One `bptt_grad` execution computes loss + all parameter gradients via
 //! `jax.grad` through the whole stack. It runs on a single simulated
 //! device (backprop's sequential graph cannot layer-shard the way the
-//! adjoint phase does), and its activation memory is accounted with the
-//! closed-form autograd-graph model from `memcost` (XLA's internal buffer
-//! assignment is not observable through this PJRT client; DESIGN.md §1).
+//! adjoint phase does) — and, for the same reason, always on the
+//! coordinator thread regardless of `--executor`: one monolithic call
+//! has no independent bundles for the threaded backend to spread. Its
+//! activation memory is accounted with the closed-form autograd-graph
+//! model from `memcost` (XLA's internal buffer assignment is not
+//! observable through this PJRT client; DESIGN.md §1).
 
 use anyhow::{bail, Result};
 

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::exec::ExecCfg;
 use crate::schedule::PolicyKind;
 use crate::util::json::Json;
 
@@ -175,6 +176,11 @@ pub struct RunConfig {
     pub grad_mode: GradMode,
     pub topology: TopologyCfg,
     pub sched: SchedCfg,
+    /// Backward-phase execution backend (`--executor sim|threaded`,
+    /// `--workers N`): sim = deterministic single-threaded dispatch;
+    /// threaded = one worker thread per simulated device, bit-identical
+    /// gradients (DESIGN.md §Execution).
+    pub exec: ExecCfg,
     pub optim: OptimCfg,
     pub steps: usize,
     pub seed: u64,
@@ -197,6 +203,7 @@ impl RunConfig {
             grad_mode: GradMode::Adjoint,
             topology: TopologyCfg::default(),
             sched: SchedCfg::default(),
+            exec: ExecCfg::default(),
             optim: OptimCfg::default(),
             steps: 100,
             seed: 0,
@@ -279,6 +286,7 @@ mod tests {
             grad_mode: GradMode::Adjoint,
             topology: TopologyCfg { devices: 3, ..Default::default() },
             sched: SchedCfg::default(),
+            exec: ExecCfg::default(),
             optim: OptimCfg::default(),
             steps: 1,
             seed: 0,

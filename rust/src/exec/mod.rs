@@ -1,0 +1,713 @@
+//! Execution backends for the adjoint backward phase — the point where
+//! `BackwardPlan` stops being a report and becomes a dispatch contract
+//! (DESIGN.md §Execution).
+//!
+//! PR 1 gave the backward phase a real schedule but only *modeled* its
+//! concurrency in virtual time; the PJRT executions themselves stayed a
+//! single sequential loop. This module introduces the [`Executor`] trait
+//! with two backends:
+//!
+//! * [`SimExecutor`] — the deterministic single-threaded dispatch the
+//!   repo has always had (and the default): every item executes on the
+//!   coordinator's runtime in work-item id order. Virtual time still
+//!   models the fleet.
+//! * [`ThreadedExecutor`] — one worker thread per simulated device
+//!   (capped by `--workers`), each owning its *own* PJRT runtime, its own
+//!   compiled `layer_adjoint_grad` entry, its own device-constant cache,
+//!   and its own `ItemStage` arenas, fed its device's slice of the
+//!   dispatch plan over a channel and answering with per-layer gradient
+//!   partials. Devices really do work their independent VJP bundles
+//!   concurrently — the wall-clock realization of the paper's
+//!   distributed Alg. 4 claim.
+//!
+//! **Determinism contract.** Both backends produce bit-identical
+//! [`GradSet`]s (asserted in `rust/tests/exec_equivalence.rs`):
+//!
+//! * layers are partitioned across devices, so each layer's gradient is
+//!   accumulated by exactly one executor lane — there is no cross-thread
+//!   sum whose order could float;
+//! * within a lane, items are executed and reduced in ascending work-item
+//!   id order (layer-major, chunk-ascending — the seed's order),
+//!   regardless of the scheduling policy; the policy shapes the
+//!   *virtual-time* plan, not the reduction order;
+//! * the coordinator merges worker partials in ascending layer order
+//!   after all workers finish, so completion order can never leak into
+//!   the gradient bits. (Each partial is added once into the phase's
+//!   zeroed layer slots — the same `0 + g₀ + g₁ + …` float sequence the
+//!   sequential loop performs.)
+//!
+//! **Thread-pinning.** The xla handles (`Runtime`, `Compiled`,
+//! `StagedConst`) stay `!Send`; the Rc→Arc refactor makes the *ownership
+//! idiom* uniform, and `Arc<T: !Send>` is itself `!Send`, so the compiler
+//! still proves no runtime handle crosses a thread. Workers never receive
+//! handles — they receive plans and `Arc<Tensor>` snapshots and build
+//! their own handles on their own thread.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adjoint::{
+    gather_item_args_into, gather_item_args_into_from, stage_for, stage_slot, StagePool,
+};
+use crate::config::{ModelDims, SchedCfg};
+use crate::model::{GradSet, ParamSet};
+use crate::runtime::{ArgRef, ArtifactSet, Compiled, ConstCache, ConstKey, Manifest, Runtime};
+use crate::schedule::{self, BackwardPlan, SchedItem};
+use crate::sharding::WorkItem;
+use crate::tensor::Tensor;
+use crate::topology::{ActKind, ActSource, Fleet};
+
+/// Seconds charged per paper-unit VJP when planning the dispatch
+/// analytically (before any measurement exists). The absolute value is
+/// irrelevant — only the *relative* item weights shape the plan — and the
+/// plan built from it is deterministic across runs and backends.
+pub const ANALYTIC_VJP_UNIT_S: f64 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Executor selection (`--executor sim|threaded`, `--workers N`).
+// ---------------------------------------------------------------------------
+
+/// Which execution backend runs the backward phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Single-threaded coordinator dispatch (deterministic, the default).
+    Sim,
+    /// One worker thread per simulated device, each with its own PJRT
+    /// runtime; real concurrency across devices.
+    Threaded,
+}
+
+impl ExecutorKind {
+    pub const ALL: [ExecutorKind; 2] = [ExecutorKind::Sim, ExecutorKind::Threaded];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecutorKind::Sim => "sim",
+            ExecutorKind::Threaded => "threaded",
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for ExecutorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sim" => Ok(ExecutorKind::Sim),
+            "threaded" | "thread" | "threads" => Ok(ExecutorKind::Threaded),
+            _ => bail!("unknown executor '{s}' (sim|threaded)"),
+        }
+    }
+}
+
+/// Executor configuration carried by `RunConfig` (`--executor`,
+/// `--workers`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecCfg {
+    pub kind: ExecutorKind,
+    /// Worker-thread cap for the threaded backend; 0 = one per device.
+    /// Ignored by the sim backend.
+    pub workers: usize,
+}
+
+impl Default for ExecCfg {
+    fn default() -> Self {
+        Self { kind: ExecutorKind::Sim, workers: 0 }
+    }
+}
+
+impl ExecCfg {
+    /// Instantiate the configured backend.
+    pub fn build(&self) -> Box<dyn Executor> {
+        match self.kind {
+            ExecutorKind::Sim => Box::new(SimExecutor),
+            ExecutorKind::Threaded => Box::new(ThreadedExecutor::new(self.workers)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The dispatch contract.
+// ---------------------------------------------------------------------------
+
+/// The backward phase's dispatch contract: the work-item set, the
+/// analytic virtual-time plan that assigned it, and the per-device item
+/// queues derived from that plan. Built *before* any execution (the
+/// analytic per-item cost is `vjp_units × `[`ANALYTIC_VJP_UNIT_S`]), so
+/// both backends run the same deterministic contract; the *measured*
+/// plan the phase reports is re-planned afterwards from real seconds.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    /// All work items; a work-item id is its index here (`plan_chunks`
+    /// order: layer-major, chunk-ascending).
+    pub items: Vec<WorkItem>,
+    /// The analytic plan that assigned every item to its device's slots.
+    pub plan: BackwardPlan,
+    /// Per-device item-id queues in pinned ascending-id order — the
+    /// execution and gradient-reduction order of every backend.
+    pub queues: Vec<Vec<usize>>,
+}
+
+/// Plan the dispatch: schedule `items` analytically under `sched`'s
+/// policy and the fleet's slot/memory limits, then derive (and verify)
+/// the per-device queues. Errors if the plan drops or duplicates an item
+/// or contradicts the layer placement — the executor refuses to run work
+/// the plan didn't schedule.
+///
+/// This is a second scheduling pass per phase (the measured re-plan
+/// happens after execution), paid deliberately: the queues could be read
+/// straight off the layer partition, but running the real scheduler here
+/// is what makes the plan a verified *contract* (admission shape and
+/// slot assignment exist before any call is issued). The pass is pure
+/// host logic over K·T/C items — small next to the PJRT service times it
+/// schedules; revisit if coordinator profiles ever say otherwise.
+pub fn plan_dispatch(
+    dims: &ModelDims,
+    fleet: &Fleet,
+    items: &[WorkItem],
+    sched: &SchedCfg,
+    transient_bytes: u64,
+    mem_caps: &[Option<u64>],
+) -> Result<Dispatch> {
+    let sched_items: Vec<SchedItem> = items
+        .iter()
+        .enumerate()
+        .map(|(id, it)| SchedItem {
+            id,
+            device: fleet.device_of_layer(it.layer),
+            layer: it.layer,
+            cost_s: it.vjp_units(dims.w, dims.t) as f64 * ANALYTIC_VJP_UNIT_S,
+            ready_at: 0.0,
+            mem_bytes: transient_bytes,
+        })
+        .collect();
+    let policy = sched.policy.policy();
+    let plan = schedule::plan_backward(
+        &sched_items,
+        None,
+        0.0,
+        fleet.cfg.devices,
+        fleet.cfg.mig_slots,
+        mem_caps,
+        policy.as_ref(),
+    )?;
+
+    let mut queues = vec![Vec::new(); fleet.cfg.devices];
+    for d in &plan.schedule.devices {
+        for s in &d.spans {
+            queues[d.device].push(s.item);
+        }
+    }
+    let mut seen = vec![false; items.len()];
+    for (dev, q) in queues.iter_mut().enumerate() {
+        q.sort_unstable();
+        for &id in q.iter() {
+            if id >= items.len() || seen[id] {
+                bail!("dispatch plan scheduled item {id} twice (device {dev})");
+            }
+            seen[id] = true;
+            let owner = fleet.device_of_layer(items[id].layer);
+            if owner != dev {
+                bail!(
+                    "dispatch plan put item {id} (layer {}) on device {dev}, owner is {owner}",
+                    items[id].layer
+                );
+            }
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&s| !s) {
+        bail!("dispatch plan dropped item {missing}");
+    }
+    Ok(Dispatch { items: items.to_vec(), plan, queues })
+}
+
+// ---------------------------------------------------------------------------
+// The Executor trait.
+// ---------------------------------------------------------------------------
+
+/// Borrowed coordinator state an executor runs one backward phase against.
+pub struct ExecCtx<'a> {
+    pub arts: &'a ArtifactSet,
+    pub dims: &'a ModelDims,
+    pub params: &'a ParamSet,
+    pub fleet: &'a Fleet,
+    /// The coordinator's reusable staging state (used by the sim backend;
+    /// the threaded backend's workers own their own stages).
+    pub pool: &'a mut StagePool,
+}
+
+/// What one executed phase measured.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// Measured PJRT seconds per work item, indexed by item id — the
+    /// service costs the measured virtual-time plan is built from.
+    pub item_secs: Vec<f64>,
+    /// Σ item seconds (total PJRT execution time, all lanes).
+    pub wall_s: f64,
+    /// Host wall-clock the whole phase took end to end. For the threaded
+    /// backend this is what concurrency actually bought; for sim it is
+    /// ≈ `wall_s` plus staging overhead.
+    pub host_s: f64,
+    /// Chunk executions dispatched.
+    pub calls: u64,
+}
+
+/// An execution backend for the planned backward phase.
+///
+/// Contract: execute exactly the items in `dispatch` (every id once, on
+/// its owning device's lane, in ascending id order within the lane),
+/// accumulate each layer's gradients into `grads` (layer slots are
+/// expected zeroed — the trainer's invariant — so the reduction is the
+/// exact float sequence `0 + g₀ + g₁ + …` in id order), and report the
+/// measured per-item seconds.
+pub trait Executor {
+    fn kind(&self) -> ExecutorKind;
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome>;
+}
+
+// ---------------------------------------------------------------------------
+// SimExecutor — the deterministic single-threaded baseline.
+// ---------------------------------------------------------------------------
+
+/// Today's dispatch, behind the trait: every item executes on the
+/// coordinator's runtime in ascending id order through the pooled
+/// zero-copy staging path (DESIGN.md §Host-Staging). Bit-for-bit the
+/// seed's gradient math.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimExecutor;
+
+impl Executor for SimExecutor {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Sim
+    }
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome> {
+        use stage_slot::*;
+        let t0 = Instant::now();
+        let entry = ctx.arts.entry("layer_adjoint_grad")?;
+
+        // Per-layer W_c staged to a device literal once per phase at most
+        // — the content-hash cache makes repeat phases free.
+        let w_c: Vec<_> = (0..ctx.dims.k)
+            .map(|k| {
+                ctx.arts.staged_const(
+                    ConstKey::LayerParam { layer: k, field: 6 },
+                    ctx.params.layers[k].w_c(),
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        ctx.pool.prepare_outs(&entry.spec);
+        let (stages, outs) = ctx.pool.split_mut();
+
+        let mut item_secs = vec![0.0f64; dispatch.items.len()];
+        let mut wall_s = 0.0;
+        let mut calls = 0u64;
+        for (id, item) in dispatch.items.iter().enumerate() {
+            let devi = ctx.fleet.device_of_layer(item.layer);
+            let stage = stage_for(stages, devi);
+            gather_item_args_into(ctx.dims, ctx.fleet, item, stage)?;
+            let args = [
+                ArgRef::C(w_c[item.layer].as_ref()),
+                ArgRef::F(stage.view(XHAT)),
+                ArgRef::F(stage.view(HPREV)),
+                ArgRef::F(stage.view(H)),
+                ArgRef::F(stage.view(A_EXT)),
+                ArgRef::F(stage.view(C_EXT)),
+                ArgRef::F(stage.view(V_EXT)),
+            ];
+            let secs = entry.run_timed_into(&args, outs)?;
+            grads.accumulate_layer(item.layer, outs)?;
+            item_secs[id] = secs;
+            wall_s += secs;
+            calls += 1;
+        }
+        Ok(ExecOutcome { item_secs, wall_s, host_s: t0.elapsed().as_secs_f64(), calls })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThreadedExecutor — real per-device concurrency.
+// ---------------------------------------------------------------------------
+
+/// One device's share of a phase, shipped to a worker: its queue (item
+/// ids ascending), an `Arc` snapshot of its activation store (including
+/// the replicated cotangents), and the `W_c` values its layers need.
+struct DeviceWork {
+    device: usize,
+    items: Vec<(usize, WorkItem)>,
+    acts: Vec<((usize, ActKind), Arc<Tensor>)>,
+    w_c: Vec<(usize, Arc<Tensor>)>,
+}
+
+/// One phase's job for one worker (one or more devices when `--workers`
+/// caps the thread count below the fleet size).
+struct WorkerJob {
+    dims: ModelDims,
+    artifacts_dir: PathBuf,
+    devices: Vec<DeviceWork>,
+    reply: mpsc::Sender<Result<WorkerDone>>,
+}
+
+/// A worker's answer: per-layer gradient partials (each layer appears on
+/// exactly one worker — layers are device-partitioned), measured seconds
+/// per item, and lane totals.
+struct WorkerDone {
+    layer_grads: Vec<(usize, Vec<Tensor>)>,
+    item_secs: Vec<(usize, f64)>,
+    wall_s: f64,
+    calls: u64,
+}
+
+enum Msg {
+    Job(Box<WorkerJob>),
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Worker-local, thread-pinned state that persists across phases: the
+/// worker's own PJRT runtime + compiled entry (rebuilt only if the
+/// artifact dir changes), its sharded device-constant cache, and its
+/// reusable staging arenas — the PR-2 zero-copy invariants, worker-local.
+struct WorkerState {
+    dir: PathBuf,
+    // Field order = drop order: the compiled executable and staged
+    // literals go before the client that owns their backing runtime.
+    entry: Compiled,
+    consts: ConstCache,
+    runtime: Runtime,
+    stages: Vec<crate::adjoint::ItemStage>,
+    outs: Vec<Tensor>,
+}
+
+impl WorkerState {
+    fn open(dir: &Path) -> Result<Self> {
+        let runtime = Runtime::cpu().context("worker PJRT client")?;
+        let manifest = Manifest::load(dir)?;
+        let spec = manifest.entry("layer_adjoint_grad")?.clone();
+        let entry = runtime.compile_entry(dir, &spec)?;
+        let outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entry,
+            consts: ConstCache::new(),
+            runtime,
+            stages: Vec::new(),
+            outs,
+        })
+    }
+}
+
+/// Snapshot-backed activation source for worker-side gathers.
+struct SnapshotActs<'a>(&'a BTreeMap<(usize, ActKind), Arc<Tensor>>);
+
+impl ActSource for SnapshotActs<'_> {
+    fn act(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
+        self.0
+            .get(&(layer, kind))
+            .map(|t| t.as_ref())
+            .with_context(|| format!("worker snapshot: no activation ({layer}, {kind:?})"))
+    }
+}
+
+fn worker_main(rx: mpsc::Receiver<Msg>) {
+    let mut state: Option<WorkerState> = None;
+    while let Ok(Msg::Job(job)) = rx.recv() {
+        let result = run_worker_job(&mut state, &job);
+        // Receiver gone means the coordinator gave up on the phase;
+        // nothing useful to do with the result.
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<WorkerDone> {
+    use stage_slot::*;
+    if state.as_ref().map(|s| s.dir != job.artifacts_dir).unwrap_or(true) {
+        *state = Some(WorkerState::open(&job.artifacts_dir)?);
+    }
+    let st = state.as_mut().expect("worker state just ensured");
+
+    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut item_secs = Vec::new();
+    let mut wall_s = 0.0;
+    let mut calls = 0u64;
+
+    for work in &job.devices {
+        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> =
+            work.acts.iter().cloned().collect();
+        let src = SnapshotActs(&acts);
+        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
+        let stage = stage_for(&mut st.stages, work.device);
+        for &(id, item) in &work.items {
+            gather_item_args_into_from(&job.dims, &src, &item, stage)?;
+            let w_c_t = w_c
+                .get(&item.layer)
+                .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
+            let wc = st
+                .consts
+                .staged(ConstKey::LayerParam { layer: item.layer, field: 6 }, w_c_t)?;
+            let args = [
+                ArgRef::C(wc.as_ref()),
+                ArgRef::F(stage.view(XHAT)),
+                ArgRef::F(stage.view(HPREV)),
+                ArgRef::F(stage.view(H)),
+                ArgRef::F(stage.view(A_EXT)),
+                ArgRef::F(stage.view(C_EXT)),
+                ArgRef::F(stage.view(V_EXT)),
+            ];
+            let secs = st.entry.run_timed_into(&args, &mut st.outs)?;
+            // Pinned reduction: the lane is serial and its queue is
+            // ascending-id, so this is the exact `0 + g₀ + g₁ + …`
+            // sequence the sim backend performs for this layer.
+            let acc = layer_grads.entry(item.layer).or_insert_with(|| {
+                st.outs.iter().map(|t| Tensor::zeros(t.shape())).collect()
+            });
+            for (a, g) in acc.iter_mut().zip(&st.outs) {
+                a.add_assign(g)?;
+            }
+            item_secs.push((id, secs));
+            wall_s += secs;
+            calls += 1;
+        }
+    }
+
+    Ok(WorkerDone {
+        layer_grads: layer_grads.into_iter().collect(),
+        item_secs,
+        wall_s,
+        calls,
+    })
+}
+
+/// Real concurrent backend: persistent worker threads (spawned lazily,
+/// kept across steps so each worker compiles its entry once), one lane
+/// per simulated device. Per-device in-flight concurrency is exactly one
+/// call — within the fleet's MIG-slot cap by construction — while
+/// devices overlap for real across threads.
+pub struct ThreadedExecutor {
+    requested: usize,
+    workers: Vec<WorkerHandle>,
+}
+
+impl ThreadedExecutor {
+    /// `workers` caps the thread count; 0 = one per device.
+    pub fn new(workers: usize) -> Self {
+        Self { requested: workers, workers: Vec::new() }
+    }
+
+    fn ensure_workers(&mut self, n: usize) -> Result<()> {
+        while self.workers.len() < n {
+            let (tx, rx) = mpsc::channel();
+            let join = std::thread::Builder::new()
+                .name(format!("adjsh-exec-{}", self.workers.len()))
+                .spawn(move || worker_main(rx))
+                .context("spawning executor worker")?;
+            self.workers.push(WorkerHandle { tx, join: Some(join) });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ThreadedExecutor {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Executor for ThreadedExecutor {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Threaded
+    }
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome> {
+        let t0 = Instant::now();
+        let devices = ctx.fleet.cfg.devices;
+        let n_workers = if self.requested == 0 {
+            devices
+        } else {
+            self.requested.clamp(1, devices)
+        };
+        self.ensure_workers(n_workers)?;
+
+        // Build each device's job: its ascending-id queue, an Arc
+        // snapshot of its activation store, and its layers' W_c values.
+        let mut per_worker: Vec<Vec<DeviceWork>> = (0..n_workers).map(|_| Vec::new()).collect();
+        for (dev, queue) in dispatch.queues.iter().enumerate() {
+            if queue.is_empty() {
+                continue;
+            }
+            let layers: BTreeSet<usize> =
+                queue.iter().map(|&id| dispatch.items[id].layer).collect();
+            let w_c = layers
+                .iter()
+                .map(|&k| (k, Arc::new(ctx.params.layers[k].w_c().clone())))
+                .collect();
+            per_worker[dev % n_workers].push(DeviceWork {
+                device: dev,
+                items: queue.iter().map(|&id| (id, dispatch.items[id])).collect(),
+                acts: ctx.fleet.devices[dev].shared_store(),
+                w_c,
+            });
+        }
+
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut outstanding = 0usize;
+        for (w, work) in per_worker.into_iter().enumerate() {
+            if work.is_empty() {
+                continue;
+            }
+            let job = WorkerJob {
+                dims: ctx.dims.clone(),
+                artifacts_dir: ctx.arts.dir.clone(),
+                devices: work,
+                reply: reply_tx.clone(),
+            };
+            self.workers[w]
+                .tx
+                .send(Msg::Job(Box::new(job)))
+                .map_err(|_| anyhow::anyhow!("executor worker {w} is gone"))?;
+            outstanding += 1;
+        }
+        drop(reply_tx);
+
+        let mut dones = Vec::with_capacity(outstanding);
+        for _ in 0..outstanding {
+            let done = reply_rx
+                .recv()
+                .context("executor worker dropped its reply channel")??;
+            dones.push(done);
+        }
+
+        // Deterministic merge: completion order is erased by collecting
+        // everything first, then reducing in ascending layer order. Each
+        // layer arrives from exactly one worker (device-partitioned).
+        let mut by_layer: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+        let mut item_secs = vec![0.0f64; dispatch.items.len()];
+        let mut wall_s = 0.0;
+        let mut calls = 0u64;
+        for done in dones {
+            for (layer, g) in done.layer_grads {
+                if by_layer.insert(layer, g).is_some() {
+                    bail!("layer {layer} reduced by two workers — placement violated");
+                }
+            }
+            for (id, secs) in done.item_secs {
+                item_secs[id] = secs;
+            }
+            wall_s += done.wall_s;
+            calls += done.calls;
+        }
+        for (layer, g) in &by_layer {
+            grads.accumulate_layer(*layer, g)?;
+        }
+
+        Ok(ExecOutcome { item_secs, wall_s, host_s: t0.elapsed().as_secs_f64(), calls })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyCfg;
+    use crate::sharding::plan_chunks;
+
+    #[test]
+    fn executor_kind_parses_and_labels() {
+        assert_eq!("sim".parse::<ExecutorKind>().unwrap(), ExecutorKind::Sim);
+        assert_eq!(
+            "threaded".parse::<ExecutorKind>().unwrap(),
+            ExecutorKind::Threaded
+        );
+        assert!("gpu".parse::<ExecutorKind>().is_err());
+        for k in ExecutorKind::ALL {
+            assert_eq!(k.label().parse::<ExecutorKind>().unwrap(), k);
+        }
+        assert_eq!(ExecCfg::default().kind, ExecutorKind::Sim);
+    }
+
+    fn dims(k: usize, t: usize, c: usize, w: usize) -> ModelDims {
+        ModelDims { name: "x".into(), v: 8, p: 4, n: 4, k, t, w, c, eps: 1e-6 }
+    }
+
+    #[test]
+    fn dispatch_queues_partition_items_ascending() {
+        for (devices, policy) in [
+            (1, crate::schedule::PolicyKind::Fifo),
+            (2, crate::schedule::PolicyKind::Lpt),
+            (3, crate::schedule::PolicyKind::LayerMajor),
+        ] {
+            let d = dims(6, 32, 8, 8);
+            let fleet = Fleet::new(
+                TopologyCfg { devices, ..Default::default() },
+                d.k,
+            )
+            .unwrap();
+            let items = plan_chunks(d.k, d.t, d.c).unwrap();
+            let sched = SchedCfg { policy, overlap: false };
+            let disp = plan_dispatch(&d, &fleet, &items, &sched, 1024, &[]).unwrap();
+            let mut seen = vec![false; items.len()];
+            for (dev, q) in disp.queues.iter().enumerate() {
+                assert!(q.windows(2).all(|w| w[0] < w[1]), "queue not ascending");
+                for &id in q {
+                    assert!(!seen[id]);
+                    seen[id] = true;
+                    assert_eq!(fleet.device_of_layer(items[id].layer), dev);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "dispatch dropped items");
+            assert_eq!(disp.plan.schedule.scheduled_items(), items.len());
+        }
+    }
+
+    #[test]
+    fn dispatch_plan_is_deterministic() {
+        let d = dims(4, 64, 8, 16);
+        let fleet = Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, d.k).unwrap();
+        let items = plan_chunks(d.k, d.t, d.c).unwrap();
+        let sched = SchedCfg::default();
+        let a = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[]).unwrap();
+        let b = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[]).unwrap();
+        assert_eq!(a.queues, b.queues);
+        assert_eq!(a.plan.schedule.scheduled_items(), b.plan.schedule.scheduled_items());
+        assert!((a.plan.backward_s - b.plan.backward_s).abs() < 1e-15);
+    }
+}

@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ModelDims;
 use crate::model::ParamSet;
@@ -24,7 +24,7 @@ use crate::tensor::Tensor;
 /// exactly once rather than per token).
 pub struct DecodeState {
     pub h: Vec<Tensor>,
-    consts: Vec<Vec<Rc<StagedConst>>>,
+    consts: Vec<Vec<Arc<StagedConst>>>,
 }
 
 impl DecodeState {

@@ -18,6 +18,7 @@ pub mod adjoint;
 pub mod baselines;
 pub mod config;
 pub mod data;
+pub mod exec;
 pub mod generate;
 pub mod memcost;
 pub mod metrics;

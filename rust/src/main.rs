@@ -13,7 +13,6 @@
 //!   adjsh bench vjp-count --t 10000 --tbar 2000
 
 use std::path::PathBuf;
-use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
@@ -54,12 +53,13 @@ adjsh — adjoint sharding for very long context SSM training (repro)
 commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
             [--sched-policy fifo|lpt|layer-major] [--overlap]
+            [--executor sim|threaded] [--workers N]
             [--checkpoint out.ckpt] [--resume in.ckpt]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
   inspect   --config <name>
-  bench     fig1 | table1 | fig6 | schedule | vjp-count | max-context |
-            tbar-sweep | chunk-size | topology
+  bench     fig1 | table1 | fig6 | schedule | hotpath | vjp-count |
+            max-context | tbar-sweep | chunk-size | topology
   help
 
 common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>";
@@ -80,6 +80,11 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         .parse()?;
     cfg.sched.overlap =
         cli.bool_or("overlap", false, "paralleled Alg. 4: overlap backward with forward")?;
+    cfg.exec.kind = cli
+        .str_or("executor", "sim", "backward execution backend: sim|threaded")
+        .parse()?;
+    cfg.exec.workers =
+        cli.usize_or("workers", 0, "threaded executor worker cap (0 = one per device)")?;
     cfg.optim.lr = cli.f64_or("lr", 1e-3, "Adam learning rate")? as f32;
     cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
     let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
@@ -98,7 +103,7 @@ fn cmd_train(cli: &mut Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     let corpus = make_corpus(cli, cfg.dims.v, cfg.seed);
     let steps = cfg.steps;
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     println!(
         "training '{}': {} params, K={} T={} W={} C={} Υ={} mode={:?}",
         cfg.dims.name,
@@ -131,7 +136,7 @@ fn cmd_eval(cli: &mut Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     let corpus = make_corpus(cli, cfg.dims.v, cfg.seed);
     let batches = cli.usize_or("batches", 4, "eval batches")?;
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     let mut trainer = Trainer::new(rt, cfg, corpus)?;
     let loss = trainer.eval_loss(batches)?;
     println!("loss (untrained): {loss:.4}");
@@ -150,7 +155,7 @@ fn cmd_generate(cli: &mut Cli) -> Result<()> {
         .map(|s| s.trim().parse::<i32>().map_err(|_| anyhow::anyhow!("bad prompt token '{s}'")))
         .collect::<Result<_>>()?;
 
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     let arts = adjoint_sharding::runtime::ArtifactSet::load(rt, &cfg.artifacts_dir)?;
     let params = if resume.is_empty() {
         adjoint_sharding::model::ParamSet::init(&cfg.dims, cfg.seed)
@@ -195,6 +200,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
     let which = cli.positional.get(1).cloned().unwrap_or_default();
     match which.as_str() {
         "fig1" => reports::fig1(cli),
+        "hotpath" => reports::hotpath_profile(cli),
         "table1" => reports::table1(cli),
         "fig6" => reports::fig6(cli),
         "schedule" => reports::fig6_schedule(cli),
@@ -204,7 +210,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
         "chunk-size" => reports::chunk_size(cli),
         "topology" => reports::topology_scaling(cli),
         other => bail!(
-            "unknown bench '{other}' (fig1|table1|fig6|schedule|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
+            "unknown bench '{other}' (fig1|table1|fig6|schedule|hotpath|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
         ),
     }
 }

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ModelDims;
 use crate::model::ParamSet;
@@ -70,7 +70,7 @@ pub fn forward(
     let head = arts.entry("head_loss")?;
 
     // Stage the parameter prefix of every layer plus Ω once up front.
-    let layer_consts: Vec<Vec<Rc<StagedConst>>> = params
+    let layer_consts: Vec<Vec<Arc<StagedConst>>> = params
         .layers
         .iter()
         .enumerate()
@@ -156,12 +156,16 @@ pub fn forward(
     let cotangents = it.next().unwrap();
     let d_omega = it.next().unwrap();
 
-    // Line 15: cotangents stored on all Υ devices.
+    // Line 15: cotangents stored on all Υ devices. One host buffer, Υ
+    // logical placements: the shared handle keeps the byte accounting of
+    // a per-device copy without duplicating host memory, and executor
+    // workers later snapshot the same Arc.
     let bcast_s = fleet.broadcast(head_dev, cotangents.size_bytes() as u64);
     virtual_s += bcast_s;
     timing.broadcast_s = bcast_s;
+    let shared_cotangents = Arc::new(cotangents.clone());
     for d in &mut fleet.devices {
-        d.put(usize::MAX, ActKind::Cotangent, cotangents.clone());
+        d.put_shared(usize::MAX, ActKind::Cotangent, Arc::clone(&shared_cotangents));
     }
 
     timing.virtual_s = virtual_s;

@@ -7,9 +7,8 @@
 //! what factor, where crossovers fall — is the reproduction target.
 
 use std::path::PathBuf;
-use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::{GradMode, RunConfig};
 use crate::data::MarkovCorpus;
@@ -25,6 +24,7 @@ use crate::tensor::{Arg, Tensor};
 use crate::train::Trainer;
 use crate::util::bench::{bench, Table};
 use crate::util::cli::Cli;
+use crate::util::json::Json;
 
 fn artifacts_root(cli: &mut Cli) -> PathBuf {
     PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"))
@@ -43,7 +43,7 @@ fn measure_run(
     devices: usize,
     steps: usize,
 ) -> Result<(u64, f64, u64, f64)> {
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Runtime::shared()?;
     let mut cfg = RunConfig::load(root, config)?;
     cfg.grad_mode = mode;
     cfg.topology.devices = devices.min(cfg.dims.k);
@@ -154,7 +154,7 @@ pub fn table1(cli: &mut Cli) -> Result<()> {
 
     if measured && have_artifacts(&root, "probe") {
         println!("\n-- measured probe timings (this host, f32, interpret-lowered HLO) --");
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Runtime::shared()?;
         let arts = ArtifactSet::load(rt, &root.join("probe"))?;
         let mut mt = Table::new(&["probe", "mean", "p95", "GFLOP/s (analytic flops / mean)"]);
         let mut rng = Rng::new(11);
@@ -198,7 +198,7 @@ pub fn fig6(cli: &mut Cli) -> Result<()> {
     // Calibrate per-VJP seconds from the diagonal probe when available;
     // fall back to the paper's H100 arithmetic otherwise.
     let vjp_s = if have_artifacts(&root, "probe") {
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Runtime::shared()?;
         let arts = ArtifactSet::load(rt, &root.join("probe"))?;
         let entry = arts.entry("vjp_probe_diagonal")?;
         let mut rng = Rng::new(3);
@@ -376,6 +376,62 @@ pub fn fig6_schedule(cli: &mut Cli) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// §Perf — the recorded hot-path profile (BENCH_hotpath.json).
+// ---------------------------------------------------------------------------
+
+/// Render the recorded hot-path profile (`make bench-json` →
+/// `BENCH_hotpath.json`). Refuses to plot a machine-detectable
+/// placeholder (`"placeholder": true` — written when the authoring host
+/// had no toolchain to measure on), so stale schema stubs can never
+/// masquerade as measured numbers.
+pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
+    let path = PathBuf::from(cli.str_or(
+        "bench-json",
+        "BENCH_hotpath.json",
+        "recorded hot-path profile to render",
+    ));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make bench-json`?)", path.display()))?;
+    let j = Json::parse(&text)?;
+    if j.opt("placeholder").map(Json::as_bool).transpose()?.unwrap_or(false) {
+        bail!(
+            "{} is a placeholder (no measured rows — its note: {}); refusing to plot it. \
+             Run `make bench-json` on a host with the Rust toolchain to regenerate.",
+            path.display(),
+            j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("<none>")
+        );
+    }
+    let results = j.get("results")?.as_arr()?;
+    if results.is_empty() {
+        bail!(
+            "{} has no result rows; treat as placeholder and run `make bench-json`",
+            path.display()
+        );
+    }
+    println!(
+        "== recorded hot-path profile ({}; note: {}) ==\n",
+        path.display(),
+        j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("")
+    );
+    let mut t = Table::new(&["bench", "iters", "mean", "p50", "p95", "min"]);
+    for r in results {
+        let ns = |k: &str| -> Result<String> {
+            Ok(crate::util::bench::fmt_dur(r.get(k)?.as_f64()? * 1e-9))
+        };
+        t.row(&[
+            r.get("name")?.as_str()?.to_string(),
+            r.get("iters")?.as_usize()?.to_string(),
+            ns("mean_ns")?,
+            ns("p50_ns")?,
+            ns("p95_ns")?,
+            ns("min_ns")?,
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // §4.3 — VJP count reduction ("64% fewer at T=10K, T̄=2000").
 // ---------------------------------------------------------------------------
 
@@ -493,7 +549,7 @@ pub fn chunk_size(cli: &mut Cli) -> Result<()> {
             println!("SKIP: artifacts/{config} missing — run `make artifacts`");
             return Ok(());
         }
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Runtime::shared()?;
         let cfg = RunConfig::load(&root, config)?;
         let calls = cfg.dims.k * cfg.dims.num_chunks();
         let c = cfg.dims.c;
@@ -527,7 +583,7 @@ pub fn topology_scaling(cli: &mut Cli) -> Result<()> {
     println!("== §4.4: Υ scaling on '{config}' (adjoint mode, 2 steps) ==\n");
     let mut t = Table::new(&["Υ", "peak bytes/device", "virt step", "comm bytes/step"]);
     for &d in &devices {
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Runtime::shared()?;
         let mut cfg = RunConfig::load(&root, &config)?;
         if d > cfg.dims.k {
             continue;

@@ -20,7 +20,7 @@ pub mod manifest;
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -29,9 +29,12 @@ pub use manifest::{Dtype, EntrySpec, Manifest, TensorSpec};
 
 use crate::tensor::{Arg, IntTensor, Tensor, TensorView};
 
-/// Wrapper over one PJRT client. xla handles are !Send: the coordinator is
-/// single-threaded by design (see DESIGN.md §1 — device parallelism is
-/// modeled in virtual time by `topology`).
+/// Wrapper over one PJRT client. xla handles are !Send, so a `Runtime`
+/// (and everything compiled from it) stays pinned to its creating thread;
+/// `Arc<Runtime>` is itself !Send, which makes the pinning
+/// compiler-enforced. The threaded executor (DESIGN.md §Execution) gets
+/// real concurrency by giving each worker thread its *own* `Runtime`,
+/// never by sharing one.
 pub struct Runtime {
     client: xla::PjRtClient,
 }
@@ -40,6 +43,14 @@ impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client })
+    }
+
+    /// The shared coordinator handle (`Arc`): one client, many
+    /// `ArtifactSet`s/trainers on the same thread. The Arc is deliberate
+    /// despite the !Send payload — see the type-level docs.
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn shared() -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::cpu()?))
     }
 
     pub fn platform(&self) -> String {
@@ -152,7 +163,9 @@ impl<'a> ArgRef<'a> {
 /// An `f32` tensor already converted to an `xla::Literal`, cached by
 /// content hash so unchanged constants (per-layer parameters, Ω) are
 /// staged exactly once and re-staged only after the optimizer writes new
-/// values. Held behind `Rc` in the [`ConstCache`].
+/// values. Held behind `Arc` in the [`ConstCache`]; like every xla
+/// handle it stays pinned to its creating thread (`Arc<!Send>` is
+/// !Send) — each executor worker keeps its own cache.
 pub struct StagedConst {
     shape: Vec<usize>,
     hash: u64,
@@ -190,13 +203,14 @@ fn hash_f32_bits(data: &[f32]) -> u64 {
 
 /// Content-hash-keyed cache of staged device-constant literals. Ownership
 /// rule (DESIGN.md §Host-Staging): the cache owns the literals for the
-/// lifetime of the [`ArtifactSet`]; callers hold `Rc` handles only for the
-/// duration of one phase. A changed tensor (hash or shape mismatch) is
-/// silently re-staged under the same key — no explicit invalidation hook
-/// is needed around optimizer updates.
+/// lifetime of its owner (the [`ArtifactSet`], or one executor worker's
+/// sharded cache); callers hold `Arc` handles only for the duration of
+/// one phase, on the owning thread. A changed tensor (hash or shape
+/// mismatch) is silently re-staged under the same key — no explicit
+/// invalidation hook is needed around optimizer updates.
 #[derive(Default)]
 pub struct ConstCache {
-    map: RefCell<BTreeMap<ConstKey, Rc<StagedConst>>>,
+    map: RefCell<BTreeMap<ConstKey, Arc<StagedConst>>>,
     hits: Cell<u64>,
     stagings: Cell<u64>,
 }
@@ -207,18 +221,21 @@ impl ConstCache {
     }
 
     /// Get (staging if absent or stale) the cached literal for `t`.
-    pub fn staged(&self, key: ConstKey, t: &Tensor) -> Result<Rc<StagedConst>> {
+    // Arc over a !Send literal is deliberate: thread-pinning is exactly
+    // what we want (see the Runtime docs).
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn staged(&self, key: ConstKey, t: &Tensor) -> Result<Arc<StagedConst>> {
         let hash = hash_f32_bits(t.data());
         if let Some(c) = self.map.borrow().get(&key) {
             if c.hash == hash && c.shape == t.shape() {
                 self.hits.set(self.hits.get() + 1);
-                return Ok(Rc::clone(c));
+                return Ok(Arc::clone(c));
             }
         }
         let literal = make_literal_f32(t.data(), t.shape())
             .with_context(|| format!("staging device constant {key:?}"))?;
-        let c = Rc::new(StagedConst { shape: t.shape().to_vec(), hash, literal });
-        self.map.borrow_mut().insert(key, Rc::clone(&c));
+        let c = Arc::new(StagedConst { shape: t.shape().to_vec(), hash, literal });
+        self.map.borrow_mut().insert(key, Arc::clone(&c));
         self.stagings.set(self.stagings.get() + 1);
         Ok(c)
     }
@@ -442,17 +459,18 @@ fn from_literal_into(lit: &xla::Literal, spec: &TensorSpec, out: &mut Tensor) ->
 }
 
 /// An artifact directory with compile-on-demand entry caching and the
-/// device-constant literal cache.
+/// device-constant literal cache. Thread-pinned like everything xla
+/// (executor workers load their own sets on their own threads).
 pub struct ArtifactSet {
     pub dir: PathBuf,
     pub manifest: Manifest,
-    runtime: Rc<Runtime>,
-    cache: RefCell<BTreeMap<String, Rc<Compiled>>>,
+    runtime: Arc<Runtime>,
+    cache: RefCell<BTreeMap<String, Arc<Compiled>>>,
     consts: ConstCache,
 }
 
 impl ArtifactSet {
-    pub fn load(runtime: Rc<Runtime>, dir: &Path) -> Result<Self> {
+    pub fn load(runtime: Arc<Runtime>, dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         Ok(Self {
             dir: dir.to_path_buf(),
@@ -464,12 +482,14 @@ impl ArtifactSet {
     }
 
     /// Get (compiling if needed) an entry point by name.
-    pub fn entry(&self, name: &str) -> Result<Rc<Compiled>> {
+    // Arc over a !Send executable: deliberate thread-pinning, see Runtime.
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn entry(&self, name: &str) -> Result<Arc<Compiled>> {
         if let Some(c) = self.cache.borrow().get(name) {
             return Ok(c.clone());
         }
         let spec = self.manifest.entry(name)?.clone();
-        let compiled = Rc::new(self.runtime.compile_entry(&self.dir, &spec)?);
+        let compiled = Arc::new(self.runtime.compile_entry(&self.dir, &spec)?);
         self.cache
             .borrow_mut()
             .insert(name.to_string(), compiled.clone());
@@ -479,7 +499,7 @@ impl ArtifactSet {
     /// Stage-once device constant (per-layer parameters, Ω): converted to
     /// an `xla::Literal` on first use and reused until the underlying
     /// tensor's content hash changes.
-    pub fn staged_const(&self, key: ConstKey, t: &Tensor) -> Result<Rc<StagedConst>> {
+    pub fn staged_const(&self, key: ConstKey, t: &Tensor) -> Result<Arc<StagedConst>> {
         self.consts.staged(key, t)
     }
 

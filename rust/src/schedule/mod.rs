@@ -15,9 +15,11 @@
 //! real concurrency instead of one-call-at-a-time accounting).
 //!
 //! Everything here is pure virtual-time logic over measured (or analytic)
-//! service times: the PJRT executions themselves stay single-threaded in
-//! the coordinator (DESIGN.md §1); the scheduler decides what those
-//! executions *would have cost* on the simulated fleet.
+//! service times; the scheduler decides what the executions *would have
+//! cost* on the simulated fleet. The real executions run under an
+//! [`crate::exec::Executor`] backend — single-threaded (`sim`) or one
+//! worker per device (`threaded`) — which takes its per-device item
+//! queues from the analytic plan built here (DESIGN.md §4, §Execution).
 
 use std::fmt;
 
@@ -506,8 +508,9 @@ pub fn schedule_items(
 }
 
 /// Seed-compatible greedy list-scheduling makespan: FIFO submission
-/// order, everything released at t = 0, no admission cap. This is what
-/// `topology::makespan` now delegates to.
+/// order, everything released at t = 0, no admission cap. The former
+/// `topology::makespan` shim delegated here; callers now use this
+/// directly.
 pub fn makespan_fifo(times: &[f64], slots: usize) -> f64 {
     let items: Vec<SchedItem> = times
         .iter()

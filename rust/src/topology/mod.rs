@@ -1,17 +1,18 @@
 //! Simulated device fleet.
 //!
 //! The paper's testbed is Υ GPUs (×7 MIG instances each) across AWS P4
-//! instances. PJRT here exposes one CPU device and the xla handles are
-//! !Send, so the fleet is a *deterministic simulation*: every tensor a
+//! instances. The fleet is a *deterministic simulation*: every tensor a
 //! real deployment would place on device v is accounted against device v's
 //! byte tracker, every transfer is charged to the link model, and compute
 //! is charged to per-device virtual clocks (measured wall-seconds of the
 //! actual PJRT executions). Schedules, placements, and peak-memory numbers
-//! are therefore exactly those of Alg. 1–4; only wall-clock speedup is
-//! modeled rather than realized (the paper's own Fig. 6 does the same with
-//! its "assumed 280× acceleration"). See DESIGN.md §1.
+//! are therefore exactly those of Alg. 1–4; wall-clock speedup is modeled
+//! in virtual time and — since the executor layer landed — also *realized*
+//! per device by `exec::ThreadedExecutor`, whose workers read this store
+//! through cheap [`std::sync::Arc`] handles. See DESIGN.md §1/§Execution.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -51,7 +52,19 @@ pub enum ActKind {
 
 type ActKey = (usize, ActKind); // (layer, kind); Cotangent uses layer = usize::MAX
 
+/// Read access to a device's activation store — the interface the
+/// adjoint gather runs against, implemented both by [`Device`] (the
+/// coordinator path) and by the executor workers' `Arc` snapshots, so
+/// the same gather code serves every backend.
+pub trait ActSource {
+    fn act(&self, layer: usize, kind: ActKind) -> Result<&Tensor>;
+}
+
 /// One simulated device: activation store + byte tracker + virtual clock.
+/// Activations are held behind `Arc` so executor workers can snapshot the
+/// store without copying tensor data; byte accounting is unchanged (each
+/// logical placement is charged, shared or not — the simulation models a
+/// fleet where every device holds its own copy).
 #[derive(Debug, Default)]
 pub struct Device {
     pub id: usize,
@@ -59,11 +72,18 @@ pub struct Device {
     pub busy_s: f64,
     /// Resident bytes that survive step boundaries (params, grads, Adam).
     pub persistent_bytes: u64,
-    store: BTreeMap<ActKey, Tensor>,
+    store: BTreeMap<ActKey, Arc<Tensor>>,
 }
 
 impl Device {
     pub fn put(&mut self, layer: usize, kind: ActKind, t: Tensor) {
+        self.put_shared(layer, kind, Arc::new(t));
+    }
+
+    /// Store an already-shared tensor (e.g. the cotangent broadcast —
+    /// one host buffer, Υ logical placements). Accounting is identical
+    /// to [`Device::put`].
+    pub fn put_shared(&mut self, layer: usize, kind: ActKind, t: Arc<Tensor>) {
         self.mem.alloc(t.size_bytes() as u64);
         if let Some(old) = self.store.insert((layer, kind), t) {
             self.mem.free(old.size_bytes() as u64);
@@ -73,7 +93,17 @@ impl Device {
     pub fn get(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
         self.store
             .get(&(layer, kind))
+            .map(|t| t.as_ref())
             .with_context(|| format!("device {}: no activation ({layer}, {kind:?})", self.id))
+    }
+
+    /// `Arc` handles to the whole store — the executor's per-phase
+    /// snapshot (clones bump refcounts only, never tensor data).
+    pub fn shared_store(&self) -> Vec<((usize, ActKind), Arc<Tensor>)> {
+        self.store
+            .iter()
+            .map(|(&k, v)| (k, Arc::clone(v)))
+            .collect()
     }
 
     pub fn clear_activations(&mut self) {
@@ -81,6 +111,7 @@ impl Device {
         self.mem.free(freed);
         self.store.clear();
     }
+
 
     /// Step boundary: every transient allocation (activation hand-offs,
     /// broadcast copies, input streams) is released; only the persistent
@@ -94,6 +125,12 @@ impl Device {
     pub fn account_persistent(&mut self, bytes: u64) {
         self.persistent_bytes += bytes;
         self.mem.alloc(bytes);
+    }
+}
+
+impl ActSource for Device {
+    fn act(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
+        self.get(layer, kind)
     }
 }
 
@@ -204,18 +241,6 @@ impl Fleet {
     }
 }
 
-/// Makespan of `times` on `slots` identical executors — models the
-/// paper's per-device MIG-slot parallelism over VJP chunk executions
-/// (§4.5). Now a thin wrapper over the event-driven scheduler
-/// ([`crate::schedule::makespan_fifo`]): FIFO submission order,
-/// everything released at t = 0, no admission cap, which reproduces the
-/// seed's greedy list scheduling exactly — baselines keep working while
-/// the backward phase itself plans through `schedule::plan_backward`.
-pub fn makespan(times: &[f64], slots: usize) -> f64 {
-    assert!(slots > 0);
-    crate::schedule::makespan_fifo(times, slots)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,17 +307,31 @@ mod tests {
     }
 
     #[test]
-    fn makespan_bounds() {
-        let times = vec![1.0, 1.0, 1.0, 1.0, 4.0];
-        // 1 slot: sum; enough slots: max item.
-        assert!((makespan(&times, 1) - 8.0).abs() < 1e-12);
-        assert!((makespan(&times, 5) - 4.0).abs() < 1e-12);
-        let m2 = makespan(&times, 2);
-        assert!(m2 >= 4.0 && m2 <= 8.0);
+    fn shared_store_hands_out_arc_views() {
+        let mut d = Device::default();
+        d.put(0, ActKind::H, Tensor::ones(&[2, 2]));
+        d.put(1, ActKind::A, Tensor::zeros(&[2, 2]));
+        let snap = d.shared_store();
+        assert_eq!(snap.len(), 2);
+        // Snapshot shares the same allocation (refcount bump, no copy).
+        let ((layer, kind), t) = &snap[0];
+        assert_eq!((*layer, *kind), (0, ActKind::H));
+        assert!(std::ptr::eq(t.as_ref(), d.get(0, ActKind::H).unwrap()));
+        // ActSource goes through the same store.
+        let src: &dyn ActSource = &d;
+        assert_eq!(src.act(1, ActKind::A).unwrap().data(), &[0.0; 4]);
+        assert!(src.act(3, ActKind::C).is_err());
     }
 
     #[test]
-    fn makespan_empty_ok() {
-        assert_eq!(makespan(&[], 3), 0.0);
+    fn put_shared_accounts_like_put() {
+        let mut d = Device::default();
+        let t = Arc::new(Tensor::zeros(&[4, 4]));
+        d.put_shared(0, ActKind::Cotangent, Arc::clone(&t));
+        d.put_shared(1, ActKind::Cotangent, t);
+        assert_eq!(d.mem.live, 2 * 64);
+        // Overwrite frees the old placement, exactly as `put` does.
+        d.put_shared(0, ActKind::Cotangent, Arc::new(Tensor::zeros(&[2, 2])));
+        assert_eq!(d.mem.live, 64 + 16);
     }
 }

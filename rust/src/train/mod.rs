@@ -2,7 +2,7 @@
 //! sharded Adam update, with full metric/memory/comm accounting per step.
 //! This is the event loop the `adjsh train` command and the examples run.
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -11,6 +11,7 @@ use crate::adjoint;
 use crate::baselines;
 use crate::config::{GradMode, RunConfig};
 use crate::data::{Corpus, Sample};
+use crate::exec::Executor;
 use crate::metrics::{Recorder, StepRecord};
 use crate::model::{GradSet, ParamSet};
 use crate::optim::ShardedAdam;
@@ -28,6 +29,10 @@ pub struct Trainer {
     /// The latest step's backward schedule (adjoint mode only) — per-slot
     /// timelines, utilization, and binding constraints for the reports.
     pub last_plan: Option<BackwardPlan>,
+    /// The latest step's backward-phase host seconds as
+    /// (end-to-end, Σ PJRT item seconds) — the measured-concurrency pair
+    /// `examples/distributed.rs` compares across executors.
+    pub last_bwd_host_s: Option<(f64, f64)>,
     opt: ShardedAdam,
     corpus: Box<dyn Corpus>,
     step_idx: usize,
@@ -35,10 +40,14 @@ pub struct Trainer {
     /// held across steps so steady-state training performs no per-item —
     /// or per-step — staging allocations.
     stage_pool: adjoint::StagePool,
+    /// Execution backend for the backward phase (`cfg.exec`), held across
+    /// steps so the threaded backend's workers keep their compiled
+    /// entries and const caches warm.
+    executor: Box<dyn Executor>,
 }
 
 impl Trainer {
-    pub fn new(runtime: Rc<Runtime>, cfg: RunConfig, corpus: Box<dyn Corpus>) -> Result<Self> {
+    pub fn new(runtime: Arc<Runtime>, cfg: RunConfig, corpus: Box<dyn Corpus>) -> Result<Self> {
         cfg.validate()?;
         if corpus.vocab() != cfg.dims.v {
             anyhow::bail!(
@@ -65,6 +74,7 @@ impl Trainer {
         let head_bytes = 2 * params.omega.size_bytes() + opt.head_state_bytes();
         fleet.devices[head].account_persistent(head_bytes as u64);
 
+        let executor = cfg.exec.build();
         Ok(Self {
             cfg,
             arts,
@@ -72,10 +82,12 @@ impl Trainer {
             fleet,
             recorder: Recorder::new(),
             last_plan: None,
+            last_bwd_host_s: None,
             opt,
             corpus,
             step_idx: 0,
             stage_pool: adjoint::StagePool::new(),
+            executor,
         })
     }
 
@@ -121,8 +133,10 @@ impl Trainer {
                     &self.cfg.sched,
                     Some(&fwd.timing),
                     &mut self.stage_pool,
+                    self.executor.as_mut(),
                 )?;
                 let step = (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units);
+                self.last_bwd_host_s = Some((bwd.host_s, bwd.wall_s));
                 self.last_plan = Some(bwd.plan);
                 step
             }
@@ -185,8 +199,9 @@ impl Trainer {
             let s = &plan.schedule;
             let [r, sl, m] = s.bound_counts();
             println!(
-                "backward schedule [{}{}]: phase {:.4}s (sequential {:.4}s), util {:.0}%, \
+                "backward schedule [{} executor, {}{}]: phase {:.4}s (sequential {:.4}s), util {:.0}%, \
                  peak transient {}, starts bound by ready/slot/mem = {r}/{sl}/{m}",
+                self.executor.kind(),
                 s.policy,
                 if s.overlapped { ", overlapped" } else { "" },
                 plan.backward_s,

@@ -44,18 +44,22 @@ impl BenchStats {
 }
 
 /// Write a bench run's results as `BENCH_<bench>.json`-style output:
-/// `{"bench", "schema", "note", "results": [{name, iters, mean_ns, p50_ns,
-/// p95_ns, min_ns}]}`. `note` records run context (artifact availability,
-/// host caveats) so numbers are comparable across PRs.
+/// `{"bench", "schema", "placeholder", "note", "results": [{name, iters,
+/// mean_ns, p50_ns, p95_ns, min_ns}]}`. `note` records run context
+/// (artifact availability, host caveats) so numbers are comparable across
+/// PRs. `placeholder` marks a file with no measured rows (e.g. committed
+/// from a host without the toolchain) — machine-detectable, so
+/// `reports::hotpath_profile` refuses to plot it.
 pub fn write_json(
     path: &Path,
     bench: &str,
+    placeholder: bool,
     note: &str,
     results: &[BenchStats],
 ) -> anyhow::Result<()> {
     let mut s = String::new();
     s.push_str(&format!(
-        "{{\n  \"bench\": {bench:?},\n  \"schema\": 1,\n  \"note\": {note:?},\n  \"results\": [\n"
+        "{{\n  \"bench\": {bench:?},\n  \"schema\": 1,\n  \"placeholder\": {placeholder},\n  \"note\": {note:?},\n  \"results\": [\n"
     ));
     for (i, r) in results.iter().enumerate() {
         s.push_str("    ");
@@ -207,12 +211,13 @@ mod tests {
         ];
         let dir = std::env::temp_dir();
         let path = dir.join(format!("bench_json_test_{}.json", std::process::id()));
-        write_json(&path, "hotpath", "unit test", &stats).unwrap();
+        write_json(&path, "hotpath", false, "unit test", &stats).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         let j = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "hotpath");
         assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 1);
+        assert!(!j.get("placeholder").unwrap().as_bool().unwrap());
         let rs = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[0].get("name").unwrap().as_str().unwrap(), "alpha\"quoted\"");

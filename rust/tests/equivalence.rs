@@ -11,7 +11,6 @@
 //!  * Training: loss decreases on the Markov task in BOTH modes.
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use adjoint_sharding::adjoint;
 use adjoint_sharding::baselines;
@@ -33,7 +32,7 @@ fn have(name: &str) -> bool {
 
 /// Compute grads for one sample in both modes. Returns (adjoint, bptt, dims).
 fn both_grads(config: &str, devices: usize) -> (GradSet, GradSet, ModelDims, f64, f64) {
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &root().join(config)).unwrap();
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
     let params = ParamSet::init(&dims, 5);
@@ -142,7 +141,7 @@ fn truncated_window_grads_aligned() {
 }
 
 fn train_loss_drop(mode: GradMode) -> (f64, f64) {
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
     cfg.grad_mode = mode;
     cfg.optim.lr = 3e-3;

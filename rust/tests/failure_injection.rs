@@ -2,7 +2,6 @@
 //! clean `Err` (never a panic, never silent wrong numbers).
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use adjoint_sharding::config::{ModelDims, RunConfig, TopologyCfg};
 use adjoint_sharding::data::MarkovCorpus;
@@ -54,7 +53,7 @@ fn missing_hlo_file_is_clean_error() {
     std::fs::create_dir_all(&dir).unwrap();
     let src = std::fs::read_to_string(root().join("tiny/manifest.json")).unwrap();
     std::fs::write(dir.join("manifest.json"), src).unwrap();
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &dir).unwrap();
     let err = match arts.entry("layer_fwd") {
         Ok(_) => panic!("expected missing-file error"),
@@ -74,7 +73,7 @@ fn garbage_hlo_text_is_clean_error() {
     let src = std::fs::read_to_string(root().join("tiny/manifest.json")).unwrap();
     std::fs::write(dir.join("manifest.json"), src).unwrap();
     std::fs::write(dir.join("layer_fwd.hlo.txt"), "this is not hlo").unwrap();
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &dir).unwrap();
     assert!(arts.entry("layer_fwd").is_err());
 }
@@ -85,7 +84,7 @@ fn arg_arity_and_dtype_mismatches_rejected() {
         eprintln!("SKIP: run `make artifacts`");
         return;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
     let entry = arts.entry("head_loss").unwrap();
     // Too few args.
@@ -107,7 +106,7 @@ fn trainer_rejects_vocab_mismatch() {
         eprintln!("SKIP: run `make artifacts`");
         return;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let cfg = RunConfig::load(&root(), "tiny").unwrap();
     let wrong = Box::new(MarkovCorpus::new(cfg.dims.v / 2, 0));
     assert!(Trainer::new(rt, cfg, wrong).is_err());
@@ -119,7 +118,7 @@ fn trainer_rejects_more_devices_than_layers() {
         eprintln!("SKIP: run `make artifacts`");
         return;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
     cfg.topology.devices = cfg.dims.k + 1;
     let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 0));

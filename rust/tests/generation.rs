@@ -4,7 +4,6 @@
 //! generation must be deterministic per seed.
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use adjoint_sharding::config::ModelDims;
 use adjoint_sharding::data::{Corpus, MarkovCorpus};
@@ -23,7 +22,7 @@ fn load(config: &str) -> Option<(ArtifactSet, ModelDims)> {
     if !dir.join("manifest.json").exists() {
         return None;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &dir).unwrap();
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
     Some((arts, dims))

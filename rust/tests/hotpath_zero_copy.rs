@@ -8,7 +8,6 @@
 //! message when `make artifacts` hasn't run.
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use adjoint_sharding::adjoint::{
     self, gather_item_args, gather_item_args_into, stage_slot, ItemStage, StagePool,
@@ -201,7 +200,7 @@ fn pooled_backward_matches_seed_grads() {
         eprintln!("SKIP: run `make artifacts`");
         return;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
     let params = ParamSet::init(&dims, 5);
@@ -222,6 +221,7 @@ fn pooled_backward_matches_seed_grads() {
 
     // Pooled path (twice, to cover warm const-cache + reused pool).
     let mut pool = StagePool::new();
+    let mut exec = adjoint_sharding::exec::SimExecutor;
     for round in 0..2 {
         let mut g_new = GradSet::zeros(&dims);
         adjoint::backward_pooled(
@@ -233,6 +233,7 @@ fn pooled_backward_matches_seed_grads() {
             &Default::default(),
             None,
             &mut pool,
+            &mut exec,
         )
         .unwrap();
         for k in 0..dims.k {
@@ -257,7 +258,7 @@ fn staged_bptt_matches_seed_grads() {
         eprintln!("SKIP: run `make artifacts`");
         return;
     }
-    let rt = Rc::new(Runtime::cpu().unwrap());
+    let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
     let params = ParamSet::init(&dims, 5);

@@ -8,8 +8,8 @@ use adjoint_sharding::sharding::{
     assign_layers, plan_chunks, vjp_count_enumerated, vjp_count_full, vjp_count_truncated,
     WorkItem,
 };
+use adjoint_sharding::schedule::makespan_fifo;
 use adjoint_sharding::tensor::Tensor;
-use adjoint_sharding::topology::makespan;
 
 const CASES: usize = 300;
 
@@ -114,7 +114,7 @@ fn prop_makespan_bounds() {
         let n = 1 + rng.below(40) as usize;
         let slots = 1 + rng.below(12) as usize;
         let times: Vec<f64> = (0..n).map(|_| rng.uniform() + 1e-3).collect();
-        let m = makespan(&times, slots);
+        let m = makespan_fifo(&times, slots);
         let total: f64 = times.iter().sum();
         let max = times.iter().cloned().fold(0.0, f64::max);
         // Classic list-scheduling bounds.
@@ -122,7 +122,7 @@ fn prop_makespan_bounds() {
         assert!(m >= total / slots as f64 - 1e-9, "case {case}: below ideal");
         assert!(m <= total + 1e-9, "case {case}: above serial");
         // More slots never hurt.
-        let m2 = makespan(&times, slots + 1);
+        let m2 = makespan_fifo(&times, slots + 1);
         assert!(m2 <= m + 1e-9, "case {case}: slots made it worse");
     }
 }

@@ -5,7 +5,7 @@
 //! Requires `make artifacts` (skips with a clear message otherwise).
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use adjoint_sharding::config::ModelDims;
 use adjoint_sharding::model::ParamSet;
@@ -13,12 +13,12 @@ use adjoint_sharding::rng::Rng;
 use adjoint_sharding::runtime::{fargs, ArtifactSet, Dtype, Runtime};
 use adjoint_sharding::tensor::{Arg, IntTensor, Tensor};
 
-fn load() -> Option<(Rc<Runtime>, ArtifactSet, ModelDims)> {
+fn load() -> Option<(Arc<Runtime>, ArtifactSet, ModelDims)> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if !dir.join("manifest.json").exists() {
         return None;
     }
-    let rt = Rc::new(Runtime::cpu().expect("PJRT CPU client"));
+    let rt = Runtime::shared().expect("PJRT CPU client");
     let arts = ArtifactSet::load(rt.clone(), &dir).expect("artifact set");
     let dims = ModelDims::from_config_json(&arts.manifest.raw_config).expect("dims");
     Some((rt, arts, dims))

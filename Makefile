@@ -3,7 +3,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts build test doc clippy verify bench bench-json clean
+.PHONY: artifacts build test doc clippy fmt-check verify bench bench-json clean
 
 ## AOT-lower every L2 entry point to artifacts/<config>/ (needs jax).
 artifacts:
@@ -24,8 +24,12 @@ doc:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-## Tier-1 verify + lint + doc honesty check.
-verify: build test clippy doc
+## Formatting is enforced (CI runs the same check).
+fmt-check:
+	cargo fmt --all -- --check
+
+## Tier-1 verify + lint + doc honesty + formatting check.
+verify: build test clippy doc fmt-check
 
 ## Regenerate every paper table/figure that runs without artifacts.
 bench:

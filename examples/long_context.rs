@@ -66,7 +66,11 @@ fn main() -> anyhow::Result<()> {
     let eval = tr.eval_loss(4)?;
     let (lo, hi) = task.recall_span(dims.t);
     println!("\nheld-out full-sequence loss: {eval:.4}");
-    println!("recall span: tokens [{lo}, {hi}) at distance ≈ {} ≫ W={}", dims.t - 2 * key_len, dims.w);
+    println!(
+        "recall span: tokens [{lo}, {hi}) at distance ≈ {} ≫ W={}",
+        dims.t - 2 * key_len,
+        dims.w
+    );
 
     println!("\npeak accounted memory (adjoint): {}", fmt_bytes(tr.recorder.peak_bytes()));
     println!(

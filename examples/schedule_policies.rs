@@ -54,7 +54,8 @@ fn main() -> anyhow::Result<()> {
     );
     for kind in PolicyKind::ALL {
         let pol = kind.policy();
-        let seq = plan_backward(&sched_items, None, seq_start, devices, slots, &caps, pol.as_ref())?;
+        let seq =
+            plan_backward(&sched_items, None, seq_start, devices, slots, &caps, pol.as_ref())?;
         let ov = plan_backward(
             &sched_items,
             Some(&ready),

@@ -1,0 +1,114 @@
+//! Serving load demo (DESIGN.md §Serving): a synthetic open-loop arrival
+//! workload through the continuous-batching [`ServeLoop`] — S sessions
+//! with staggered arrivals, each prompt + N generated tokens — under
+//! both executors, printing aggregate tokens/s and latency percentiles
+//! (p50/p95/p99) and recording them as `BENCH_serve.json` via the
+//! repo's machine-readable bench convention (EXPERIMENTS.md §Serve).
+//! When the artifact set is missing, a `"placeholder": true` file is
+//! written instead so the gap stays machine-detectable.
+//!
+//!     make artifacts && cargo run --release --example serve_load
+//!
+//! Flags: --config, --artifacts, --sessions, --tokens, --prompt-len,
+//!        --max-batch, --arrival-every, --workers, --seed, --out
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use adjoint_sharding::config::{RunConfig, ServeCfg};
+use adjoint_sharding::exec::{ExecCfg, ExecutorKind};
+use adjoint_sharding::memcost::ServeAdmission;
+use adjoint_sharding::model::ParamSet;
+use adjoint_sharding::rng::Rng;
+use adjoint_sharding::serve::{build_backend, Request, ServeLoop};
+use adjoint_sharding::util::bench::{write_json, BenchStats};
+use adjoint_sharding::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let mut cli = Cli::from_env()?;
+    let artifacts = PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"));
+    let config = cli.str_or("config", "tiny", "artifact config name");
+    let sessions = cli.usize_or("sessions", 12, "sessions in the synthetic workload")?;
+    let n_new = cli.usize_or("tokens", 24, "tokens generated per session")?;
+    let prompt_len = cli.usize_or("prompt-len", 4, "synthetic prompt length")?;
+    let max_batch = cli.usize_or("max-batch", 4, "sessions per batched decode step")?;
+    let arrival_every = cli.usize_or("arrival-every", 2, "loop steps between arrivals")?;
+    let workers = cli.usize_or("workers", 2, "threaded-backend lane cap")?;
+    let seed = cli.usize_or("seed", 0, "rng seed")? as u64;
+    let out = PathBuf::from(cli.str_or("out", "BENCH_serve.json", "bench JSON output path"));
+
+    if !artifacts.join(&config).join("manifest.json").exists() {
+        eprintln!(
+            "no artifacts for '{config}' under {} — run `make artifacts` first",
+            artifacts.display()
+        );
+        write_json(
+            &out,
+            "serve",
+            true,
+            "placeholder — serve_load ran without artifacts (`make artifacts` missing), \
+             so no serving rows could be measured; rerun on a host with jax + cargo.",
+            &[],
+        )?;
+        println!("wrote placeholder {}", out.display());
+        return Ok(());
+    }
+
+    let cfg = RunConfig::load(&artifacts, &config)?;
+    let params = Arc::new(ParamSet::init(&cfg.dims, seed));
+    let admission = ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes);
+    println!(
+        "config '{}': per-session state {} B (context-independent), HBM cap admits {} sessions",
+        cfg.dims.name,
+        admission.session_bytes,
+        admission.max_sessions()
+    );
+
+    let mut recorded: Vec<BenchStats> = Vec::new();
+    for exec in [
+        ExecCfg { kind: ExecutorKind::Sim, workers: 0 },
+        ExecCfg { kind: ExecutorKind::Threaded, workers },
+    ] {
+        let backend =
+            build_backend(&exec, &cfg.artifacts_dir, &cfg.dims, Arc::clone(&params), max_batch)?;
+        let serve_cfg = ServeCfg { max_batch, snapshot_dir: None };
+        let mut sl = ServeLoop::new(backend, &cfg.dims, admission, &serve_cfg)?;
+
+        let mut wl = Rng::new(seed ^ 0x5EED_F00D);
+        for i in 0..sessions {
+            let prompt = (0..prompt_len.max(1))
+                .map(|_| wl.below(cfg.dims.v as u64) as i32)
+                .collect();
+            sl.submit(Request {
+                prompt,
+                n_new,
+                temperature: 0.8,
+                seed: seed.wrapping_add(i as u64 * 7919 + 1),
+                not_before_step: (i * arrival_every) as u64,
+            })?;
+        }
+        sl.run_until_idle()?;
+
+        println!("\n== executor {} ==", exec.kind);
+        sl.metrics.print_report();
+        let fin = sl.take_finished();
+        assert_eq!(fin.len(), sessions, "every session must complete");
+        for mut row in sl.metrics.to_bench_stats() {
+            row.name = format!("{}[{}]", row.name, exec.kind);
+            recorded.push(row);
+        }
+    }
+
+    write_json(
+        &out,
+        "serve",
+        false,
+        &format!(
+            "serve_load: {sessions} sessions × {n_new} tokens, prompt {prompt_len}, \
+             max-batch {max_batch}, arrivals every {arrival_every} steps, config {config}"
+        ),
+        &recorded,
+    )?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

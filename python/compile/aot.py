@@ -10,6 +10,8 @@ reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 
 Per config we emit:
   layer_fwd.hlo.txt           Alg. 1 inner body (one layer, full sequence)
+  layer_step.hlo.txt          single-token decode step (one layer, one session)
+  layer_step_batched.hlo.txt  SERVE_BATCH-session decode step (serving ABI)
   head_loss.hlo.txt           loss + dl/dy_K + dΩ (Alg. 1 lines 13–15)
   layer_adjoint_grad.hlo.txt  Alg. 3 work item (one layer, one token chunk)
   bptt_grad.hlo.txt           backpropagation baseline / ground truth
@@ -27,7 +29,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model as M
-from .configs import CONFIGS, ModelConfig, PROBE_BS, PROBE_N, PROBE_P
+from .configs import CONFIGS, ModelConfig, PROBE_BS, PROBE_N, PROBE_P, SERVE_BATCH
 from .kernels import ref
 
 
@@ -110,6 +112,19 @@ def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
         ("h_prev", _spec((N,))),
     ]
     emit("layer_step", layer_step_flat, specs)
+
+    # ---- layer_step_batched (B-session serving step) ----------------------
+    def layer_step_batched_flat(W_a, b_a, W_b, b_b, W_g, b_g, W_c,
+                                xhat_b, y_prev_b, h_prev_b):
+        p = M.LayerParams(W_a, b_a, W_b, b_b, W_g, b_g, W_c)
+        return M.layer_step_batched(p, xhat_b, y_prev_b, h_prev_b, cfg.eps)
+
+    specs = _param_specs(cfg) + [
+        ("xhat_b", _spec((SERVE_BATCH, P))),
+        ("y_prev_b", _spec((SERVE_BATCH, P))),
+        ("h_prev_b", _spec((SERVE_BATCH, N))),
+    ]
+    emit("layer_step_batched", layer_step_batched_flat, specs)
 
     # ---- head_loss -------------------------------------------------------
     specs = [

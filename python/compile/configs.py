@@ -75,6 +75,13 @@ CONFIGS = {
     for c in (TINY, TINY_TRUNC, SMALL, BASE, LONGCTX, SMALL_C16, SMALL_C256)
 }
 
+# Static batch width of the ``layer_step_batched`` serving entry: HLO
+# shapes are fixed at lowering time, so the Rust serving loop pads its
+# continuous batch up to this many session rows per call (reads the
+# actual width back from the manifest — change it here, re-run
+# ``make artifacts``, and `adjsh serve` follows).
+SERVE_BATCH = 8
+
 # Table-1 / §4.5 probe dims: the paper's worked example uses P=128, N=225,
 # bs=8 on a selective *diagonal* SSM; we lower one VJP unit per SSM family.
 PROBE_P = 128

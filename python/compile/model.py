@@ -136,6 +136,31 @@ def layer_step(p: LayerParams, xhat_t: jax.Array, y_prev_t: jax.Array,
     return y_t, yhat_t, h_t
 
 
+def layer_step_batched(p: LayerParams, xhat_b: jax.Array, y_prev_b: jax.Array,
+                       h_prev_b: jax.Array, eps: float):
+    """Batched single-token step: advance B *independent* decode sessions
+    one token through one layer in a single call — the serving ABI behind
+    Rust's continuous-batching loop (``rust/src/serve``).
+
+    The contract is per-row *bit* identity: row b of each output equals
+    ``layer_step`` on row b exactly. Stacking the rows into one gemm
+    (``xhat_b @ W``, whether written directly or via ``vmap``) does NOT
+    satisfy it — XLA:CPU's blocked gemm accumulates in a different order
+    than the single-row gemv and drifts in the last ulp (measured in
+    ``test_model.py``'s history; the direct form fails the equality
+    test). ``lax.map`` instead lowers to a loop whose body is the exact
+    single-row computation, so the per-row kernels — and bits — match
+    while the host still pays one dispatch per layer per batch instead
+    of one per session per layer, which is where serving-side batching
+    wins. ``test_model.py`` asserts the bit-identity at build time and
+    ``rust/tests/serve.rs`` re-asserts it against the AOT artifact."""
+    def row(args):
+        xhat_t, y_prev_t, h_prev = args
+        return layer_step(p, xhat_t, y_prev_t, h_prev, eps)
+
+    return jax.lax.map(row, (xhat_b, y_prev_b, h_prev_b))
+
+
 # ---------------------------------------------------------------------------
 # Head: loss + cotangents (the dl/dy_K^t the adjoint phase consumes)
 # ---------------------------------------------------------------------------

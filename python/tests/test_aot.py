@@ -13,8 +13,15 @@ from compile.configs import CONFIGS, TINY
 
 def test_tiny_lowering_roundtrip(tmp_path):
     manifest = aot.lower_config(TINY, str(tmp_path))
-    # All four entry points present, files exist and are non-trivial HLO text.
-    for entry in ["layer_fwd", "head_loss", "layer_adjoint_grad", "bptt_grad"]:
+    # All entry points present, files exist and are non-trivial HLO text.
+    for entry in [
+        "layer_fwd",
+        "layer_step",
+        "layer_step_batched",
+        "head_loss",
+        "layer_adjoint_grad",
+        "bptt_grad",
+    ]:
         assert entry in manifest["entries"]
         path = tmp_path / f"{entry}.hlo.txt"
         text = path.read_text()
@@ -40,6 +47,18 @@ def test_manifest_shapes_match_config(tmp_path):
     assert len(e["outputs"]) == 7
     assert e["outputs"][0]["shape"] == [cfg.P, cfg.N]  # dW_a
     assert e["outputs"][6]["shape"] == [cfg.N, cfg.P]  # dW_c
+
+    e = m["entries"]["layer_step_batched"]
+    by_name = {i["name"]: i for i in e["inputs"]}
+    from compile.configs import SERVE_BATCH
+
+    assert by_name["xhat_b"]["shape"] == [SERVE_BATCH, cfg.P]
+    assert by_name["h_prev_b"]["shape"] == [SERVE_BATCH, cfg.N]
+    assert [o["shape"] for o in e["outputs"]] == [
+        [SERVE_BATCH, cfg.P],
+        [SERVE_BATCH, cfg.P],
+        [SERVE_BATCH, cfg.N],
+    ]
 
     e = m["entries"]["bptt_grad"]
     assert len(e["inputs"]) == cfg.K * 7 + 3

@@ -113,3 +113,27 @@ def test_rmsnorm_unit_scale():
     out = M.rmsnorm(x)
     rms = float(jnp.sqrt(jnp.mean(out**2)))
     np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+
+def test_layer_step_batched_rows_match_single_step():
+    """The serving ABI contract: row b of the batched step equals
+    ``layer_step`` on row b, bit for bit (rows are independent — any
+    divergence here would break the Rust serving equivalence tests)."""
+    P, N, B = 16, 16, 8
+    p = M.init_layer(jax.random.PRNGKey(3), P, N)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    xhat_b = jax.random.normal(ks[0], (B, P))
+    y_prev_b = jax.random.normal(ks[1], (B, P))
+    h_prev_b = jax.random.normal(ks[2], (B, N))
+
+    # jit both, as the AOT pipeline lowers them.
+    step = jax.jit(lambda x, y, h: M.layer_step(p, x, y, h, 1e-6))
+    batched = jax.jit(lambda x, y, h: M.layer_step_batched(p, x, y, h, 1e-6))
+
+    yb, yhatb, hb = batched(xhat_b, y_prev_b, h_prev_b)
+    assert yb.shape == (B, P) and yhatb.shape == (B, P) and hb.shape == (B, N)
+    for b in range(B):
+        y1, yhat1, h1 = step(xhat_b[b], y_prev_b[b], h_prev_b[b])
+        assert np.array_equal(np.asarray(yb[b]), np.asarray(y1)), b
+        assert np.array_equal(np.asarray(yhatb[b]), np.asarray(yhat1)), b
+        assert np.array_equal(np.asarray(hb[b]), np.asarray(h1)), b

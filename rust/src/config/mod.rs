@@ -151,6 +151,24 @@ impl Default for SchedCfg {
     }
 }
 
+/// Session-serving settings (`adjsh serve`; DESIGN.md §Serving).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Max sessions advanced per batched decode step (`--max-batch`).
+    /// Also the upper bound on concurrently admitted sessions — every
+    /// active session participates in every step.
+    pub max_batch: usize,
+    /// Directory session snapshots are written to / restored from
+    /// (`--snapshot-dir`; None = snapshotting off).
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        Self { max_batch: 8, snapshot_dir: None }
+    }
+}
+
 /// Optimizer settings (paper trains with Adam).
 #[derive(Debug, Clone)]
 pub struct OptimCfg {
@@ -164,7 +182,14 @@ pub struct OptimCfg {
 
 impl Default for OptimCfg {
     fn default() -> Self {
-        Self { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, grad_clip: Some(1.0) }
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            grad_clip: Some(1.0),
+        }
     }
 }
 
@@ -181,6 +206,8 @@ pub struct RunConfig {
     /// threaded = one worker thread per simulated device, bit-identical
     /// gradients (DESIGN.md §Execution).
     pub exec: ExecCfg,
+    /// Session-serving settings (`adjsh serve`).
+    pub serve: ServeCfg,
     pub optim: OptimCfg,
     pub steps: usize,
     pub seed: u64,
@@ -193,8 +220,9 @@ impl RunConfig {
     pub fn load(artifacts_root: &Path, config_name: &str) -> Result<Self> {
         let dir = artifacts_root.join(config_name);
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} (run `make artifacts`?)", manifest_path.display()))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`?)", manifest_path.display())
+        })?;
         let j = Json::parse(&text)?;
         let dims = ModelDims::from_manifest_json(&j)?;
         Ok(Self {
@@ -204,6 +232,7 @@ impl RunConfig {
             topology: TopologyCfg::default(),
             sched: SchedCfg::default(),
             exec: ExecCfg::default(),
+            serve: ServeCfg::default(),
             optim: OptimCfg::default(),
             steps: 100,
             seed: 0,
@@ -223,6 +252,9 @@ impl RunConfig {
                 self.topology.devices,
                 self.dims.k
             );
+        }
+        if self.serve.max_batch == 0 {
+            bail!("serving needs max_batch ≥ 1");
         }
         Ok(())
     }
@@ -287,6 +319,7 @@ mod tests {
             topology: TopologyCfg { devices: 3, ..Default::default() },
             sched: SchedCfg::default(),
             exec: ExecCfg::default(),
+            serve: ServeCfg::default(),
             optim: OptimCfg::default(),
             steps: 1,
             seed: 0,

@@ -138,6 +138,19 @@ impl ExecCfg {
     }
 }
 
+/// Lane count for a threaded backend: `requested` caps the thread count,
+/// 0 means one lane per unit of available parallelism (`max_lanes`).
+/// Shared by the backward executor (lanes = simulated devices) and the
+/// serving loop (lanes = session shards; DESIGN.md §Serving).
+pub fn lane_count(requested: usize, max_lanes: usize) -> usize {
+    let cap = max_lanes.max(1);
+    if requested == 0 {
+        cap
+    } else {
+        requested.clamp(1, cap)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The dispatch contract.
 // ---------------------------------------------------------------------------
@@ -561,11 +574,7 @@ impl Executor for ThreadedExecutor {
     ) -> Result<ExecOutcome> {
         let t0 = Instant::now();
         let devices = ctx.fleet.cfg.devices;
-        let n_workers = if self.requested == 0 {
-            devices
-        } else {
-            self.requested.clamp(1, devices)
-        };
+        let n_workers = lane_count(self.requested, devices);
         self.ensure_workers(n_workers)?;
 
         // Build each device's job: its ascending-id queue, an Arc
@@ -666,6 +675,15 @@ mod tests {
 
     fn dims(k: usize, t: usize, c: usize, w: usize) -> ModelDims {
         ModelDims { name: "x".into(), v: 8, p: 4, n: 4, k, t, w, c, eps: 1e-6 }
+    }
+
+    #[test]
+    fn lane_count_caps_and_defaults() {
+        assert_eq!(lane_count(0, 4), 4); // 0 = one lane per unit
+        assert_eq!(lane_count(2, 4), 2);
+        assert_eq!(lane_count(9, 4), 4); // clamped to available lanes
+        assert_eq!(lane_count(0, 0), 1); // never zero lanes
+        assert_eq!(lane_count(3, 0), 1);
     }
 
     #[test]

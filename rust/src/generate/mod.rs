@@ -19,15 +19,19 @@ use crate::runtime::{ArgRef, ArtifactSet, ConstKey, StagedConst};
 use crate::tensor::Tensor;
 
 /// Carried decode state: h ∈ R^N per layer, plus the per-layer staged
-/// parameter constants (filled on the first step — parameters are fixed
-/// for the lifetime of a decode session, so they are hashed and staged
-/// exactly once rather than per token).
+/// parameter constants (parameters are fixed for the lifetime of a
+/// decode session, so they are hashed and staged exactly once rather
+/// than per token — eagerly by [`DecodeState::new`] at session
+/// admission, or lazily on the first step for [`DecodeState::zeros`]).
 pub struct DecodeState {
     pub h: Vec<Tensor>,
     consts: Vec<Vec<Arc<StagedConst>>>,
 }
 
 impl DecodeState {
+    /// Lazy constructor: constants are staged on the first
+    /// [`step_token`] call, which makes first-token latency an outlier.
+    /// Serving (and [`generate()`]) use the eager [`DecodeState::new`].
     pub fn zeros(dims: &ModelDims) -> Self {
         Self {
             h: (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect(),
@@ -35,25 +39,76 @@ impl DecodeState {
         }
     }
 
+    /// Eager constructor: stages the per-layer parameter constants at
+    /// construction (session admission) so the first token pays no
+    /// staging cost. Cache hits make repeat sessions free.
+    pub fn new(arts: &ArtifactSet, params: &ParamSet, dims: &ModelDims) -> Result<Self> {
+        let h = (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect();
+        Self::with_state(arts, params, dims, h)
+    }
+
+    /// Eager constructor over restored per-layer state rows (serving
+    /// snapshot restore): validates shapes, stages constants.
+    pub fn with_state(
+        arts: &ArtifactSet,
+        params: &ParamSet,
+        dims: &ModelDims,
+        h: Vec<Tensor>,
+    ) -> Result<Self> {
+        let mut s = Self::with_state_lazy(dims, h)?;
+        s.ensure_consts(arts, params)?;
+        Ok(s)
+    }
+
+    /// Shape-validated constructor that skips constant staging — for
+    /// callers that never read this session's `consts` (the serving
+    /// backend's batched path stages one shared set per lane instead of
+    /// re-hashing the whole parameter set on every admission).
+    pub fn with_state_lazy(dims: &ModelDims, h: Vec<Tensor>) -> Result<Self> {
+        if h.len() != dims.k {
+            bail!("decode state has {} layer rows, model has K={}", h.len(), dims.k);
+        }
+        for (k, t) in h.iter().enumerate() {
+            if t.shape() != [dims.n].as_slice() {
+                bail!(
+                    "decode state row {k} has shape {:?}, want [{}]",
+                    t.shape(),
+                    dims.n
+                );
+            }
+        }
+        Ok(Self { h, consts: Vec::new() })
+    }
+
     fn ensure_consts(&mut self, arts: &ArtifactSet, params: &ParamSet) -> Result<()> {
         if self.consts.len() == params.layers.len() {
             return Ok(());
         }
-        self.consts = params
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(k, l)| {
-                l.0.iter()
-                    .enumerate()
-                    .map(|(f, t)| {
-                        arts.staged_const(ConstKey::LayerParam { layer: k, field: f }, t)
-                    })
-                    .collect::<Result<Vec<_>>>()
-            })
-            .collect::<Result<_>>()?;
+        self.consts = stage_layer_consts(arts, params)?;
         Ok(())
     }
+}
+
+/// Stage every per-layer parameter constant (ABI field order) through
+/// `arts`'s device-constant cache — the one staging loop shared by the
+/// decode session path here and the serving backend's batched entry
+/// (`serve::backend`), so the `ConstKey` layout can never silently
+/// diverge between them.
+pub fn stage_layer_consts(
+    arts: &ArtifactSet,
+    params: &ParamSet,
+) -> Result<Vec<Vec<Arc<StagedConst>>>> {
+    params
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            l.0.iter()
+                .enumerate()
+                .map(|(f, t)| arts.staged_const(ConstKey::LayerParam { layer: k, field: f }, t))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect()
 }
 
 /// Advance the whole stack by one token id; returns the logits row (V,).
@@ -138,7 +193,7 @@ pub fn generate(
     if prompt.is_empty() {
         bail!("prompt must be non-empty");
     }
-    let mut state = DecodeState::zeros(dims);
+    let mut state = DecodeState::new(arts, params, dims)?;
     let mut logits = Tensor::zeros(&[dims.v]);
     for &tok in prompt {
         logits = step_token(arts, dims, params, &mut state, tok)?;

@@ -9,7 +9,8 @@
 //!  * L3 (this crate): the Rust coordinator — config, PJRT runtime, layer
 //!    sharding (paper Tables 2–6), the Alg. 1 forward pipeline, the
 //!    Alg. 2–4 adjoint-VJP scheduler, sharded Adam, analytic + live
-//!    memory/FLOP accounting, the data pipeline, and the training loop.
+//!    memory/FLOP accounting, the data pipeline, the training loop, and
+//!    the continuous-batching session-serving loop (`serve`).
 //!
 //! Python never runs on the training path: after `make artifacts`, the
 //! `adjsh` binary and all examples/benches are self-contained.
@@ -29,6 +30,7 @@ pub mod reports;
 pub mod rng;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sharding;
 pub mod tensor;
 pub mod topology;

@@ -3,12 +3,14 @@
 //! Subcommands:
 //!   train         run the training loop (adjoint or bptt grad mode)
 //!   eval          held-out loss of a fresh model (sanity)
+//!   serve         continuous-batching session serving (synthetic load)
 //!   inspect       print an artifact manifest + dims + parameter counts
 //!   bench <name>  regenerate a paper table/figure: fig1 | table1 | fig6 |
-//!                 vjp-count | max-context | tbar-sweep | topology
+//!                 vjp-count | max-context | tbar-sweep | topology | serve
 //!
 //! Examples:
 //!   adjsh train --config tiny --steps 50 --grad-mode adjoint
+//!   adjsh serve --config tiny --sessions 8 --max-batch 4 --executor threaded
 //!   adjsh bench fig1
 //!   adjsh bench vjp-count --t 10000 --tbar 2000
 
@@ -37,6 +39,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&mut cli),
         "eval" => cmd_eval(&mut cli),
         "generate" => cmd_generate(&mut cli),
+        "serve" => cmd_serve(&mut cli),
         "inspect" => cmd_inspect(&mut cli),
         "bench" => cmd_bench(&mut cli),
         "" | "help" => {
@@ -57,8 +60,11 @@ commands:
             [--checkpoint out.ckpt] [--resume in.ckpt]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
+  serve     --config <name> [--resume ckpt] [--max-batch B] [--executor sim|threaded]
+            [--workers N] [--snapshot-dir d] [--sessions S] [--tokens N]
+            [--prompt-len L] [--arrival-every K] [--temperature t] [--bench-json p]
   inspect   --config <name>
-  bench     fig1 | table1 | fig6 | schedule | hotpath | vjp-count |
+  bench     fig1 | table1 | fig6 | schedule | hotpath | serve | vjp-count |
             max-context | tbar-sweep | chunk-size | topology
   help
 
@@ -85,6 +91,10 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         .parse()?;
     cfg.exec.workers =
         cli.usize_or("workers", 0, "threaded executor worker cap (0 = one per device)")?;
+    cfg.serve.max_batch =
+        cli.usize_or("max-batch", 8, "serve: max sessions per batched decode step")?;
+    let snap = cli.str_or("snapshot-dir", "", "serve: session snapshot directory ('' = off)");
+    cfg.serve.snapshot_dir = (!snap.is_empty()).then(|| PathBuf::from(snap));
     cfg.optim.lr = cli.f64_or("lr", 1e-3, "Adam learning rate")? as f32;
     cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
     let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
@@ -173,6 +183,94 @@ fn cmd_generate(cli: &mut Cli) -> Result<()> {
     Ok(())
 }
 
+/// Continuous-batching serving of a synthetic open-loop workload: S
+/// sessions with staggered arrivals, each `prompt-len` prompt tokens +
+/// `tokens` generated tokens, through the configured executor. Prints
+/// tokens/s and latency percentiles (p50/p95/p99); optionally records
+/// them as machine-readable JSON (EXPERIMENTS.md §Serve).
+fn cmd_serve(cli: &mut Cli) -> Result<()> {
+    use adjoint_sharding::memcost::ServeAdmission;
+    use adjoint_sharding::serve::{self, Request, ServeLoop};
+    use std::sync::Arc;
+
+    let cfg = build_run_config(cli)?;
+    let sessions = cli.usize_or("sessions", 8, "synthetic sessions to serve")?;
+    let n_new = cli.usize_or("tokens", 32, "tokens to generate per session")?;
+    let prompt_len = cli.usize_or("prompt-len", 4, "synthetic prompt length")?;
+    let temperature = cli.f64_or("temperature", 0.8, "sampling temperature (0 = greedy)")? as f32;
+    let arrival_every =
+        cli.usize_or("arrival-every", 2, "one arrival becomes due every N loop steps")?;
+    let resume = cli.str_or("resume", "", "checkpoint to load ('' = fresh init)");
+    let bench_json =
+        cli.str_or("bench-json", "", "write BENCH_serve.json-style stats to this path ('' = none)");
+    if prompt_len == 0 {
+        bail!("serve needs --prompt-len ≥ 1 (sessions start from a prompt)");
+    }
+
+    let params = if resume.is_empty() {
+        adjoint_sharding::model::ParamSet::init(&cfg.dims, cfg.seed)
+    } else {
+        let (p, step) = adjoint_sharding::model::ParamSet::load(std::path::Path::new(&resume))?;
+        println!("loaded checkpoint {resume} (step {step})");
+        p
+    };
+    let params = Arc::new(params);
+    let admission = ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes);
+    let backend = serve::build_backend(
+        &cfg.exec,
+        &cfg.artifacts_dir,
+        &cfg.dims,
+        Arc::clone(&params),
+        cfg.serve.max_batch,
+    )?;
+    let mut sl = ServeLoop::new(backend, &cfg.dims, admission, &cfg.serve)?;
+
+    let mut wl_rng = adjoint_sharding::rng::Rng::new(cfg.seed ^ 0x5EED_F00D);
+    for i in 0..sessions {
+        let prompt = (0..prompt_len)
+            .map(|_| wl_rng.below(cfg.dims.v as u64) as i32)
+            .collect();
+        sl.submit(Request {
+            prompt,
+            n_new,
+            temperature,
+            seed: cfg.seed.wrapping_add(i as u64 * 7919 + 1),
+            not_before_step: (i * arrival_every) as u64,
+        })?;
+    }
+    println!(
+        "serving '{}': {} sessions, max-batch {}, executor {}, HBM cap admits {} sessions",
+        cfg.dims.name,
+        sessions,
+        cfg.serve.max_batch,
+        cfg.exec.kind,
+        sl.admission().max_sessions()
+    );
+    sl.run_until_idle()?;
+    let finished = sl.take_finished();
+    sl.metrics.print_report();
+    if let Some(f) = finished.first() {
+        let shown = f.tokens.len().min(16);
+        println!("session {} stream (first {shown} tokens): {:?}", f.sid, &f.tokens[..shown]);
+    }
+    if !bench_json.is_empty() {
+        let path = std::path::PathBuf::from(&bench_json);
+        adjoint_sharding::util::bench::write_json(
+            &path,
+            "serve",
+            false,
+            &format!(
+                "adjsh serve --config {} --sessions {sessions} --tokens {n_new} --max-batch {} \
+                 --executor {}",
+                cfg.dims.name, cfg.serve.max_batch, cfg.exec.kind
+            ),
+            &sl.metrics.to_bench_stats(),
+        )?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_inspect(cli: &mut Cli) -> Result<()> {
     let cfg = build_run_config(cli)?;
     println!("config '{}': {:?}", cfg.dims.name, cfg.dims);
@@ -201,6 +299,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
     match which.as_str() {
         "fig1" => reports::fig1(cli),
         "hotpath" => reports::hotpath_profile(cli),
+        "serve" => reports::serve_profile(cli),
         "table1" => reports::table1(cli),
         "fig6" => reports::fig6(cli),
         "schedule" => reports::fig6_schedule(cli),
@@ -210,7 +309,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
         "chunk-size" => reports::chunk_size(cli),
         "topology" => reports::topology_scaling(cli),
         other => bail!(
-            "unknown bench '{other}' (fig1|table1|fig6|schedule|hotpath|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
+            "unknown bench '{other}' (fig1|table1|fig6|schedule|hotpath|serve|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
         ),
     }
 }

@@ -139,7 +139,13 @@ impl Default for MemModel {
         // graph keeps x̂(P), the two σ pre-activations (2N), a,b,h,c,c⊙h
         // (5N), ỹ,y (2P) per (t,k) → 7N + 3P; adjoint sharding keeps only
         // h,a,c (3N) + ŷ(P) (paper Tables 2–5).
-        Self { bp_act_n: 7.0, bp_act_p: 3.0, as_act_n: 3.0, as_act_p: 1.0, bytes_per_elem: FP16 as f64 }
+        Self {
+            bp_act_n: 7.0,
+            bp_act_p: 3.0,
+            as_act_n: 3.0,
+            as_act_p: 1.0,
+            bytes_per_elem: FP16 as f64,
+        }
     }
 }
 
@@ -240,6 +246,78 @@ impl MemModel {
             }
         }
         lo
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving — session residency and memory-aware admission (DESIGN.md
+// §Serving). The paper's point applied to inference: recurrent state is
+// O(K·N) per session *regardless of context length*, so the HBM cap
+// translates directly into a concurrent-session budget.
+// ---------------------------------------------------------------------------
+
+/// Bytes per number on the serving path (the PJRT artifacts run f32).
+pub const F32: u64 = 4;
+
+/// Device-resident model bytes while serving: every layer's staged
+/// parameter constants plus the Ω head (all f32 literals).
+pub fn serve_model_bytes(d: &ModelDims) -> u64 {
+    d.total_params() as u64 * F32
+}
+
+/// Per-session resident bytes: the K×N recurrent state plus the pending
+/// logits row. Constant in context length — the whole point.
+pub fn serve_session_bytes(d: &ModelDims) -> u64 {
+    (d.k as u64 * d.n as u64 + d.v as u64) * F32
+}
+
+/// Per-session transient bytes while a batched step is in flight: the
+/// stacked (x̂, y) stream rows and the state row, inputs + outputs.
+pub fn serve_step_bytes_per_session(d: &ModelDims) -> u64 {
+    2 * (2 * d.p as u64 + d.n as u64) * F32
+}
+
+/// Memory-aware admission for the serving loop — the inference
+/// counterpart of the backward scheduler's HBM-headroom gate (§4): a
+/// session is admitted only while the modeled resident set (model +
+/// per-session state + worst-case step transients) stays under the cap.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeAdmission {
+    pub hbm_bytes: u64,
+    pub model_bytes: u64,
+    pub session_bytes: u64,
+    pub step_bytes_per_session: u64,
+}
+
+impl ServeAdmission {
+    pub fn new(d: &ModelDims, hbm_bytes: u64) -> Self {
+        Self {
+            hbm_bytes,
+            model_bytes: serve_model_bytes(d),
+            session_bytes: serve_session_bytes(d),
+            step_bytes_per_session: serve_step_bytes_per_session(d),
+        }
+    }
+
+    /// Modeled bytes with `active` sessions admitted, worst case (every
+    /// active session participates in the in-flight batch).
+    pub fn bytes_at(&self, active: u64) -> u64 {
+        self.model_bytes + active * (self.session_bytes + self.step_bytes_per_session)
+    }
+
+    /// Can one more session be admitted without exceeding the cap?
+    pub fn admits(&self, active: u64) -> bool {
+        self.bytes_at(active + 1) <= self.hbm_bytes
+    }
+
+    /// Largest concurrent-session count under the cap (0 when the model
+    /// alone does not fit).
+    pub fn max_sessions(&self) -> u64 {
+        if self.model_bytes >= self.hbm_bytes {
+            return 0;
+        }
+        (self.hbm_bytes - self.model_bytes)
+            / (self.session_bytes + self.step_bytes_per_session)
     }
 }
 
@@ -357,6 +435,26 @@ mod tests {
         let at = m.backprop(d, t_bp, 2, 1).total();
         let above = m.backprop(d, t_bp + 1, 2, 1).total();
         assert!(at <= budget && above > budget);
+    }
+
+    #[test]
+    fn serve_admission_respects_cap() {
+        let (_, d) = &fig1_models()[0];
+        let adm = ServeAdmission::new(d, 8 << 30);
+        let max = adm.max_sessions();
+        assert!(max > 0, "8 GiB should admit sessions for the 32M model");
+        // Consistency: admits() flips exactly at max_sessions.
+        assert!(adm.admits(max - 1));
+        assert!(!adm.admits(max));
+        assert!(adm.bytes_at(max) <= adm.hbm_bytes);
+        assert!(adm.bytes_at(max + 1) > adm.hbm_bytes);
+        // Session cost is context-independent: dims with T=1 and any T
+        // give the same per-session bytes (state is K×N, not K×N×T).
+        assert_eq!(serve_session_bytes(d), (d.k as u64 * d.n as u64 + d.v as u64) * F32);
+        // Model that doesn't fit admits nobody.
+        let tight = ServeAdmission::new(d, serve_model_bytes(d));
+        assert_eq!(tight.max_sessions(), 0);
+        assert!(!tight.admits(0));
     }
 
     #[test]

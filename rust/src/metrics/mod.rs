@@ -96,6 +96,71 @@ impl Recorder {
     }
 }
 
+/// Latency/throughput sample accumulator with percentile queries — the
+/// serving loop's SLO accounting (p50/p95/p99; DESIGN.md §Serving).
+/// Percentiles use the same nearest-rank pick as `util::bench`, so serve
+/// numbers and bench numbers are directly comparable.
+#[derive(Debug, Default, Clone)]
+pub struct Quantiles {
+    samples: Vec<f64>,
+}
+
+impl Quantiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::max)
+    }
+
+    /// Nearest-rank percentile, q ∈ [0, 1]; NaN when empty. Sorts a copy
+    /// on each query — queries happen at report time, not on the hot path.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((s.len() as f64 * q) as usize).min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
 /// Human-readable byte formatting for reports.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -150,6 +215,25 @@ mod tests {
         assert_eq!(r.peak_bytes(), 9);
         assert_eq!(r.total_vjp_units(), 100);
         assert!((r.mean_recent_loss(2) - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_nearest_rank() {
+        let mut q = Quantiles::new();
+        assert!(q.percentile(0.5).is_nan());
+        // 1..=100 in scrambled order: pXX is exact.
+        for i in (1..=100u64).rev() {
+            q.push(i as f64);
+        }
+        assert_eq!(q.len(), 100);
+        assert_eq!(q.p50(), 51.0);
+        assert_eq!(q.p95(), 96.0);
+        assert_eq!(q.p99(), 100.0);
+        assert_eq!(q.percentile(0.0), 1.0);
+        assert_eq!(q.percentile(1.0), 100.0);
+        assert_eq!(q.min(), 1.0);
+        assert_eq!(q.max(), 100.0);
+        assert!((q.mean() - 50.5).abs() < 1e-12);
     }
 
     #[test]

@@ -77,7 +77,8 @@ impl ParamSet {
         let layers = (0..d.k)
             .map(|k| LayerParams::init(d, &mut rng.split(k as u64 + 1)))
             .collect();
-        let omega = Tensor::randn(&[d.p, d.v], 1.0 / (d.p as f32).sqrt(), &mut rng.split(1_000_001));
+        let omega =
+            Tensor::randn(&[d.p, d.v], 1.0 / (d.p as f32).sqrt(), &mut rng.split(1_000_001));
         let embed = Tensor::randn(&[d.v, d.p], 1.0, &mut rng.split(1_000_002));
         ParamSet { layers, omega, embed }
     }

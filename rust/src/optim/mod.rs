@@ -23,7 +23,14 @@ pub struct Adam {
 }
 
 impl Adam {
-    pub fn new(shapes: &[Vec<usize>], lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+    pub fn new(
+        shapes: &[Vec<usize>],
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+    ) -> Self {
         Adam {
             lr,
             beta1,

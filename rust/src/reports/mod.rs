@@ -76,7 +76,9 @@ pub fn fig1(cli: &mut Cli) -> Result<()> {
     let root = artifacts_root(cli);
 
     println!("== Fig. 1: training memory vs model size (bs={bs}, Adam, T={t}) ==");
-    println!("   paper setting: one GPU; adjoint uses chunked VJPs (C=2048, W=2048, 7 MIG slots)\n");
+    println!(
+        "   paper setting: one GPU; adjoint uses chunked VJPs (C=2048, W=2048, 7 MIG slots)\n"
+    );
     let m = MemModel::default();
     let mut table = Table::new(&[
         "model", "params", "backprop", "adjoint", "ratio", "paper-shape",
@@ -209,13 +211,20 @@ pub fn fig6(cli: &mut Cli) -> Result<()> {
             .map(|s| Arg::F(Tensor::randn(&s.shape, 0.1, &mut rng)))
             .collect();
         let stats = bench("vjp_probe_diagonal", 2, 10, 0.3, || entry.run(&args).unwrap());
-        println!("calibrated per-VJP time on this host: {}", crate::util::bench::fmt_dur(stats.mean_s));
+        println!(
+            "calibrated per-VJP time on this host: {}",
+            crate::util::bench::fmt_dur(stats.mean_s)
+        );
         stats.mean_s
     } else {
         1e-6
     };
 
-    let bp_factor = cli.f64_or("bp-factor", 7.0, "BP cost per (t,k) in vjp units (fwd+bwd through 3 selection MLPs + scan + norm ≈ 7 passes)")?;
+    let bp_factor = cli.f64_or(
+        "bp-factor",
+        7.0,
+        "BP cost per (t,k) in vjp units (fwd+bwd through 3 selection MLPs + scan + norm ≈ 7 passes)",
+    )?;
     let tm = TimeModel { vjp_s, parallel, bp_step_s: vjp_s * bp_factor, seqs_per_epoch: seqs };
     println!(
         "\n== Fig. 6: days/epoch vs context length (K={layers}, T̄={tbar}, parallel={parallel}×) =="
@@ -390,13 +399,37 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
         "BENCH_hotpath.json",
         "recorded hot-path profile to render",
     ));
-    let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {} (run `make bench-json`?)", path.display()))?;
+    render_bench_json(&path, "hot-path profile", "make bench-json")
+}
+
+/// Render a recorded serving profile (`BENCH_serve.json`; EXPERIMENTS.md
+/// §Serve). Placeholder files are refused, same as hotpath.
+pub fn serve_profile(cli: &mut Cli) -> Result<()> {
+    let path = PathBuf::from(cli.str_or(
+        "bench-json",
+        "BENCH_serve.json",
+        "recorded serve profile to render",
+    ));
+    render_bench_json(
+        &path,
+        "serve profile",
+        "adjsh serve --bench-json BENCH_serve.json",
+    )
+}
+
+/// Shared `BENCH_*.json` table renderer: refuses machine-detectable
+/// placeholders (the `"placeholder": true` convention) so an unmeasured
+/// committed file can never be mistaken for data. `regen` names the
+/// command that records real rows. The p99 column is optional — older
+/// recordings (schema 1 without p99_ns) render with a dash.
+fn render_bench_json(path: &std::path::Path, what: &str, regen: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {} (run `{regen}`?)", path.display()))?;
     let j = Json::parse(&text)?;
     if j.opt("placeholder").map(Json::as_bool).transpose()?.unwrap_or(false) {
         bail!(
             "{} is a placeholder (no measured rows — its note: {}); refusing to plot it. \
-             Run `make bench-json` on a host with the Rust toolchain to regenerate.",
+             Run `{regen}` on a host with the Rust toolchain to regenerate.",
             path.display(),
             j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("<none>")
         );
@@ -404,19 +437,23 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
     let results = j.get("results")?.as_arr()?;
     if results.is_empty() {
         bail!(
-            "{} has no result rows; treat as placeholder and run `make bench-json`",
+            "{} has no result rows; treat as placeholder and run `{regen}`",
             path.display()
         );
     }
     println!(
-        "== recorded hot-path profile ({}; note: {}) ==\n",
+        "== recorded {what} ({}; note: {}) ==\n",
         path.display(),
         j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("")
     );
-    let mut t = Table::new(&["bench", "iters", "mean", "p50", "p95", "min"]);
+    let mut t = Table::new(&["bench", "iters", "mean", "p50", "p95", "p99", "min"]);
     for r in results {
         let ns = |k: &str| -> Result<String> {
             Ok(crate::util::bench::fmt_dur(r.get(k)?.as_f64()? * 1e-9))
+        };
+        let p99 = match r.opt("p99_ns") {
+            Some(v) => crate::util::bench::fmt_dur(v.as_f64()? * 1e-9),
+            None => "-".to_string(),
         };
         t.row(&[
             r.get("name")?.as_str()?.to_string(),
@@ -424,6 +461,7 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
             ns("mean_ns")?,
             ns("p50_ns")?,
             ns("p95_ns")?,
+            p99,
             ns("min_ns")?,
         ]);
     }
@@ -483,7 +521,12 @@ pub fn max_context(cli: &mut Cli) -> Result<()> {
     t.row(&["backprop".into(), format!("{gpus} GPUs (FSDP)"), fmt_bytes(budget), bp40.to_string()]);
     // Adjoint: layer-sharded per the paper; transients bounded by chunking.
     let as_ = m.max_context(&d, bs, gpus, budget, true, 2048, 7);
-    t.row(&["adjoint".into(), format!("{gpus} GPUs (layer-sharded)"), fmt_bytes(budget), as_.to_string()]);
+    t.row(&[
+        "adjoint".into(),
+        format!("{gpus} GPUs (layer-sharded)"),
+        fmt_bytes(budget),
+        as_.to_string(),
+    ]);
     t.print();
     println!(
         "\npaper: 'increase the maximum context length … from 35K tokens to above 100K tokens\n\
@@ -608,6 +651,8 @@ pub fn topology_scaling(cli: &mut Cli) -> Result<()> {
         ]);
     }
     t.print();
-    println!("\npaper shape: peak/device ≈ Mem/Υ; comm grows mildly (pipeline hand-offs + broadcast).");
+    println!(
+        "\npaper shape: peak/device ≈ Mem/Υ; comm grows mildly (pipeline hand-offs + broadcast)."
+    );
     Ok(())
 }

@@ -1,0 +1,515 @@
+//! Decode-step backends: who actually advances sessions.
+//!
+//! The serving loop talks to a [`StepBackend`]; two implementations
+//! mirror the training executors (DESIGN.md §Execution):
+//!
+//! * [`SimBackend`] — one in-process [`Stepper`] on the coordinator's
+//!   thread (deterministic, the default).
+//! * [`ThreadedBackend`] — sessions sharded across persistent lanes
+//!   (`sid % lanes`), each lane a worker thread owning its *own* PJRT
+//!   runtime, compiled entries, staged constants, and session states —
+//!   the same thread-pinning idiom as `exec::ThreadedExecutor`. Sessions
+//!   are mutually independent, so lane placement can never change a
+//!   session's token stream: `sim` and `threaded` serve bit-identical
+//!   outputs (asserted in rust/tests/serve.rs).
+//!
+//! Inside a lane, the [`Stepper`] advances sessions either through the
+//! batched `layer_step_batched` artifact — stacked state rows, one PJRT
+//! call per layer per B-chunk, riding the zero-copy staging path
+//! ([`ArgRef`] views over reusable buffers, [`crate::runtime::ConstCache`]d
+//! parameter literals, `run_timed_into` output reuse) — or, when the
+//! artifact set predates the batched ABI, through per-session
+//! `generate::step_token` calls. The two paths are bit-identical per
+//! session by construction: the batched artifact maps the *single-row*
+//! step over its rows (`lax.map`) rather than fusing them into one gemm,
+//! because XLA:CPU's blocked gemm drifts from the row-at-a-time gemv in
+//! the last ulp (measured; see `model.layer_step_batched`) — the win is
+//! dispatch amortization, not kernel fusion. Asserted at build time in
+//! `python/tests/test_model.py` and at serve time in rust/tests/serve.rs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelDims;
+use crate::exec::ExecutorKind;
+use crate::generate::{stage_layer_consts, step_token, DecodeState};
+use crate::model::ParamSet;
+use crate::runtime::{ArgRef, ArtifactSet, Compiled, Runtime, StagedConst};
+use crate::tensor::{rmsnorm_rows, Tensor, TensorView};
+
+/// What one serving step measured (summed over lanes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    /// PJRT seconds spent inside entry executions.
+    pub pjrt_s: f64,
+    /// Entry executions dispatched.
+    pub calls: u64,
+}
+
+/// The serving loop's dispatch contract. Sessions are identified by the
+/// loop's `sid`; the backend owns only their recurrent state (the K×N
+/// rows) — prompts, sampling RNGs, and pending logits stay with the
+/// coordinator, which is what keeps snapshots and lane placement
+/// orthogonal to the token stream.
+pub trait StepBackend {
+    fn kind(&self) -> ExecutorKind;
+
+    /// Admit a session with the given per-layer state rows (zeros for a
+    /// fresh session, restored rows for a snapshot).
+    fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()>;
+
+    /// Remove a session, returning its state rows.
+    fn evict(&mut self, sid: u64) -> Result<Vec<Tensor>>;
+
+    /// A live session's current state rows (for snapshots; non-destructive).
+    fn state(&mut self, sid: u64) -> Result<Vec<Tensor>>;
+
+    /// Advance each (session, token) one decode step. `inputs` must be
+    /// ascending by sid; returns (sid, logits) in the same order, plus
+    /// the step's measured cost.
+    fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)>;
+}
+
+// ---------------------------------------------------------------------------
+// Stepper — one lane's decode engine (shared by both backends).
+// ---------------------------------------------------------------------------
+
+/// Staged state of the batched entry: the compiled executable, its static
+/// batch width, the once-staged parameter constants, and the reusable
+/// stacking buffers + output tensors (steady-state serving reuses them
+/// every call — no tensor-data allocation).
+struct BatchedEntry {
+    entry: Arc<Compiled>,
+    batch: usize,
+    consts: Vec<Vec<Arc<StagedConst>>>,
+    xhat: Vec<f32>, // (B, P) stacked x̂ rows
+    y: Vec<f32>,    // (B, P) stacked residual-stream rows
+    h: Vec<f32>,    // (B, N) stacked state rows for the current layer
+    outs: Vec<Tensor>,
+}
+
+/// Per-lane store of live sessions' recurrent [`DecodeState`]s, keyed by
+/// session id (DESIGN.md §Serving: the backend half of a session; the
+/// stream half lives with the coordinator).
+pub(crate) type SessionStore = BTreeMap<u64, DecodeState>;
+
+/// One lane's decode engine: its own artifact handles, staged constants,
+/// and the `SessionStore` it owns. Construction and stepping stay
+/// crate-internal — backends are the public surface.
+pub struct Stepper {
+    dims: ModelDims,
+    params: Arc<ParamSet>,
+    arts: ArtifactSet,
+    batched: Option<BatchedEntry>,
+    sessions: SessionStore,
+}
+
+impl Stepper {
+    pub(crate) fn open(dir: &Path, dims: &ModelDims, params: Arc<ParamSet>) -> Result<Self> {
+        let runtime = Runtime::shared()?;
+        let arts = ArtifactSet::load(runtime, dir)?;
+        let batched = match arts.manifest.entries.get("layer_step_batched") {
+            None => None,
+            Some(spec) => {
+                let spec = spec.clone();
+                let b = spec
+                    .inputs
+                    .last()
+                    .map(|s| s.shape.first().copied().unwrap_or(0))
+                    .unwrap_or(0);
+                if b == 0 {
+                    bail!("layer_step_batched manifest entry has no batch dimension");
+                }
+                let entry = arts.entry("layer_step_batched")?;
+                let consts = stage_layer_consts(&arts, &params)?;
+                let outs = spec
+                    .outputs
+                    .iter()
+                    .map(|s| Tensor::zeros(&s.shape))
+                    .collect();
+                Some(BatchedEntry {
+                    entry,
+                    batch: b,
+                    consts,
+                    xhat: vec![0.0; b * dims.p],
+                    y: vec![0.0; b * dims.p],
+                    h: vec![0.0; b * dims.n],
+                    outs,
+                })
+            }
+        };
+        if batched.is_none() {
+            // Fallback path: compile the single-token entry eagerly
+            // (lane-construction time, not first-token time). The
+            // batched path never executes layer_step — don't pay its
+            // compile per lane.
+            arts.entry("layer_step")?;
+        }
+        Ok(Self { dims: dims.clone(), params, arts, batched, sessions: SessionStore::new() })
+    }
+
+    /// Static batch width of the batched ABI (None = per-session fallback).
+    pub(crate) fn batch_width(&self) -> Option<usize> {
+        self.batched.as_ref().map(|b| b.batch)
+    }
+
+    fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()> {
+        if self.sessions.contains_key(&sid) {
+            bail!("session {sid} already admitted");
+        }
+        // First-token latency carries no staging cost either way: the
+        // batched path reads the lane-shared constants staged once in
+        // `open` (so admission skips the per-session content-hash pass
+        // entirely); the fallback path stages eagerly here, admission
+        // time, per DecodeState::new semantics.
+        let state = if self.batched.is_some() {
+            DecodeState::with_state_lazy(&self.dims, h)?
+        } else {
+            DecodeState::with_state(&self.arts, &self.params, &self.dims, h)?
+        };
+        self.sessions.insert(sid, state);
+        Ok(())
+    }
+
+    fn evict(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        self.sessions
+            .remove(&sid)
+            .map(|s| s.h)
+            .with_context(|| format!("evicting unknown session {sid}"))
+    }
+
+    fn state(&self, sid: u64) -> Result<Vec<Tensor>> {
+        self.sessions
+            .get(&sid)
+            .map(|s| s.h.clone())
+            .with_context(|| format!("no state for session {sid}"))
+    }
+
+    fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
+        if inputs.windows(2).any(|w| w[0].0 >= w[1].0) {
+            bail!("step inputs must be ascending by sid");
+        }
+        if let Some(be) = self.batched.as_mut() {
+            return Self::step_batched(&self.dims, &self.params, &mut self.sessions, be, inputs);
+        }
+        // Per-session fallback (artifact set predates the batched ABI):
+        // literally the solo decode path, so serve == generate by
+        // construction. PJRT seconds fold into the loop's wall clock.
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut cost = StepCost::default();
+        for &(sid, tok) in inputs {
+            let state = self
+                .sessions
+                .get_mut(&sid)
+                .with_context(|| format!("stepping unknown session {sid}"))?;
+            let logits = step_token(&self.arts, &self.dims, &self.params, state, tok)?;
+            cost.calls += self.dims.k as u64;
+            out.push((sid, logits));
+        }
+        Ok((out, cost))
+    }
+
+    /// The batched path: chunks of ≤ B sessions, one PJRT call per layer
+    /// per chunk over stacked rows (padding rows are zeros and their
+    /// outputs are discarded). Host-side embed/RMSNorm/head math is the
+    /// byte-for-byte same code path as `generate::step_token`.
+    fn step_batched(
+        dims: &ModelDims,
+        params: &ParamSet,
+        sessions: &mut SessionStore,
+        be: &mut BatchedEntry,
+        inputs: &[(u64, i32)],
+    ) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
+        let (p, n, bsz) = (dims.p, dims.n, be.batch);
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut cost = StepCost::default();
+        for chunk in inputs.chunks(bsz) {
+            // Stack the embedded rows; padding rows stay zero.
+            be.y.fill(0.0);
+            for (i, &(sid, tok)) in chunk.iter().enumerate() {
+                let t = tok as usize;
+                if tok < 0 || t >= dims.v {
+                    bail!("session {sid}: token id {tok} out of vocab {}", dims.v);
+                }
+                if !sessions.contains_key(&sid) {
+                    bail!("stepping unknown session {sid}");
+                }
+                be.y[i * p..(i + 1) * p]
+                    .copy_from_slice(&params.embed.data()[t * p..(t + 1) * p]);
+            }
+            // x̂ rows: the one shared RMSNorm float sequence — bitwise
+            // the `rmsnorm` step_token performs on its single row.
+            be.xhat.copy_from_slice(&be.y);
+            rmsnorm_rows(&mut be.xhat, p, dims.eps);
+            for k in 0..dims.k {
+                be.h.fill(0.0);
+                for (i, &(sid, _)) in chunk.iter().enumerate() {
+                    let st = sessions.get(&sid).expect("checked above");
+                    be.h[i * n..(i + 1) * n].copy_from_slice(st.h[k].data());
+                }
+                let mut args: Vec<ArgRef> =
+                    be.consts[k].iter().map(|c| ArgRef::C(c.as_ref())).collect();
+                args.push(ArgRef::F(TensorView::new(&[bsz, p], &be.xhat)?));
+                args.push(ArgRef::F(TensorView::new(&[bsz, p], &be.y)?));
+                args.push(ArgRef::F(TensorView::new(&[bsz, n], &be.h)?));
+                let secs = be.entry.run_timed_into(&args, &mut be.outs)?;
+                drop(args);
+                cost.pjrt_s += secs;
+                cost.calls += 1;
+                // Ride the outputs back into the stacked inputs (double
+                // buffering keeps the borrow checker and the runtime's
+                // output reuse both happy) and scatter the state rows.
+                be.y.copy_from_slice(be.outs[0].data());
+                be.xhat.copy_from_slice(be.outs[1].data());
+                let h_b = be.outs[2].data();
+                for (i, &(sid, _)) in chunk.iter().enumerate() {
+                    let st = sessions.get_mut(&sid).expect("checked above");
+                    st.h[k].data_mut().copy_from_slice(&h_b[i * n..(i + 1) * n]);
+                }
+            }
+            // Head on the host, per session — the same ops as step_token:
+            // logits = y_K Ω (1×P · P×V).
+            for (i, &(sid, _)) in chunk.iter().enumerate() {
+                let y_row = Tensor::new(vec![1, p], be.y[i * p..(i + 1) * p].to_vec())?;
+                let logits = y_row.matmul(&params.omega)?.reshape(&[dims.v])?;
+                out.push((sid, logits));
+            }
+        }
+        Ok((out, cost))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimBackend — in-process serving on the coordinator's thread.
+// ---------------------------------------------------------------------------
+
+/// The default backend: one [`Stepper`] in the coordinator's process.
+pub struct SimBackend {
+    stepper: Stepper,
+}
+
+impl SimBackend {
+    pub fn new(dir: &Path, dims: &ModelDims, params: Arc<ParamSet>) -> Result<Self> {
+        Ok(Self { stepper: Stepper::open(dir, dims, params)? })
+    }
+
+    /// Static batch width of the batched ABI (None = per-session fallback).
+    pub fn batch_width(&self) -> Option<usize> {
+        self.stepper.batch_width()
+    }
+}
+
+impl StepBackend for SimBackend {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Sim
+    }
+
+    fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()> {
+        self.stepper.admit(sid, h)
+    }
+
+    fn evict(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        self.stepper.evict(sid)
+    }
+
+    fn state(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        self.stepper.state(sid)
+    }
+
+    fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
+        self.stepper.step(inputs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ThreadedBackend — session shards on persistent lanes.
+// ---------------------------------------------------------------------------
+
+enum LaneCmd {
+    Admit { sid: u64, h: Vec<Tensor>, reply: mpsc::Sender<Result<()>> },
+    Evict { sid: u64, reply: mpsc::Sender<Result<Vec<Tensor>>> },
+    State { sid: u64, reply: mpsc::Sender<Result<Vec<Tensor>>> },
+    Step {
+        inputs: Vec<(u64, i32)>,
+        reply: mpsc::Sender<Result<(Vec<(u64, Tensor)>, StepCost)>>,
+    },
+    Shutdown,
+}
+
+struct LaneHandle {
+    tx: mpsc::Sender<LaneCmd>,
+    join: Option<JoinHandle<()>>,
+}
+
+fn lane_main(
+    dir: PathBuf,
+    dims: ModelDims,
+    params: Arc<ParamSet>,
+    rx: mpsc::Receiver<LaneCmd>,
+) {
+    // Built on first use, on this thread (xla handles are !Send; the lane
+    // owns its runtime the way executor workers do).
+    let mut stepper: Option<Stepper> = None;
+    fn ensure<'a>(
+        st: &'a mut Option<Stepper>,
+        dir: &Path,
+        dims: &ModelDims,
+        params: &Arc<ParamSet>,
+    ) -> Result<&'a mut Stepper> {
+        if st.is_none() {
+            *st = Some(Stepper::open(dir, dims, Arc::clone(params))?);
+        }
+        Ok(st.as_mut().expect("just ensured"))
+    }
+    while let Ok(cmd) = rx.recv() {
+        // A dropped reply receiver means the coordinator gave up; ignore.
+        match cmd {
+            LaneCmd::Admit { sid, h, reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .and_then(|s| s.admit(sid, h));
+                let _ = reply.send(r);
+            }
+            LaneCmd::Evict { sid, reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .and_then(|s| s.evict(sid));
+                let _ = reply.send(r);
+            }
+            LaneCmd::State { sid, reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .and_then(|s| s.state(sid));
+                let _ = reply.send(r);
+            }
+            LaneCmd::Step { inputs, reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .and_then(|s| s.step(&inputs));
+                let _ = reply.send(r);
+            }
+            LaneCmd::Shutdown => break,
+        }
+    }
+}
+
+/// Sessions sharded across persistent worker lanes by `sid % lanes`;
+/// every lane owns its own PJRT stack (runtime, compiled entries, staged
+/// constants) and its shard's recurrent states. Step batches fan out to
+/// the involved lanes and the replies merge by ascending sid, so the
+/// returned order — and every session's token stream — is identical to
+/// [`SimBackend`]'s.
+pub struct ThreadedBackend {
+    lanes: Vec<LaneHandle>,
+}
+
+impl ThreadedBackend {
+    pub fn new(
+        dir: &Path,
+        dims: &ModelDims,
+        params: Arc<ParamSet>,
+        lanes: usize,
+    ) -> Result<Self> {
+        let mut handles = Vec::with_capacity(lanes.max(1));
+        for i in 0..lanes.max(1) {
+            let (tx, rx) = mpsc::channel();
+            let (dir, dims, params) = (dir.to_path_buf(), dims.clone(), Arc::clone(&params));
+            let join = std::thread::Builder::new()
+                .name(format!("adjsh-serve-{i}"))
+                .spawn(move || lane_main(dir, dims, params, rx))
+                .context("spawning serve lane")?;
+            handles.push(LaneHandle { tx, join: Some(join) });
+        }
+        Ok(Self { lanes: handles })
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn lane_of(&self, sid: u64) -> usize {
+        (sid % self.lanes.len() as u64) as usize
+    }
+
+    fn roundtrip<T>(
+        &self,
+        lane: usize,
+        make: impl FnOnce(mpsc::Sender<Result<T>>) -> LaneCmd,
+    ) -> Result<T> {
+        let (tx, rx) = mpsc::channel();
+        self.lanes[lane]
+            .tx
+            .send(make(tx))
+            .map_err(|_| anyhow::anyhow!("serve lane {lane} is gone"))?;
+        rx.recv()
+            .with_context(|| format!("serve lane {lane} dropped its reply"))?
+    }
+}
+
+impl Drop for ThreadedBackend {
+    fn drop(&mut self) {
+        for l in &self.lanes {
+            let _ = l.tx.send(LaneCmd::Shutdown);
+        }
+        for l in &mut self.lanes {
+            if let Some(j) = l.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl StepBackend for ThreadedBackend {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Threaded
+    }
+
+    fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()> {
+        let lane = self.lane_of(sid);
+        self.roundtrip(lane, |reply| LaneCmd::Admit { sid, h, reply })
+    }
+
+    fn evict(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        let lane = self.lane_of(sid);
+        self.roundtrip(lane, |reply| LaneCmd::Evict { sid, reply })
+    }
+
+    fn state(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        let lane = self.lane_of(sid);
+        self.roundtrip(lane, |reply| LaneCmd::State { sid, reply })
+    }
+
+    fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
+        // Fan out each lane's shard (ascending-sid order is preserved
+        // within a shard), collect concurrently, merge by sid.
+        let mut shards: Vec<Vec<(u64, i32)>> = vec![Vec::new(); self.lanes.len()];
+        for &(sid, tok) in inputs {
+            shards[self.lane_of(sid)].push((sid, tok));
+        }
+        let mut pending = Vec::new();
+        for (lane, shard) in shards.into_iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            self.lanes[lane]
+                .tx
+                .send(LaneCmd::Step { inputs: shard, reply: tx })
+                .map_err(|_| anyhow::anyhow!("serve lane {lane} is gone"))?;
+            pending.push((lane, rx));
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut cost = StepCost::default();
+        for (lane, rx) in pending {
+            let (part, c) = rx
+                .recv()
+                .with_context(|| format!("serve lane {lane} dropped its reply"))??;
+            cost.pjrt_s += c.pjrt_s;
+            cost.calls += c.calls;
+            out.extend(part);
+        }
+        out.sort_by_key(|&(sid, _)| sid);
+        Ok((out, cost))
+    }
+}

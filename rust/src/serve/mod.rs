@@ -1,0 +1,795 @@
+//! Long-context session serving (DESIGN.md §Serving).
+//!
+//! The paper's training contribution has an inference-side corollary:
+//! an SSM decode session is O(K·N) resident state *regardless of context
+//! length* — a million-token conversation costs the same HBM as a
+//! ten-token one. That makes sessions cheap to pause, persist, and
+//! resume (unlike a KV cache that grows with T), and makes batching many
+//! concurrent users a pure throughput win. This module turns the
+//! single-session `generate` loop into a serving subsystem:
+//!
+//! * [`ServeLoop`] — a continuous-batching scheduler: an arrival queue
+//!   feeds a set of live sessions; every tick admits due arrivals (gated
+//!   by [`ServeAdmission`]'s memcost-derived HBM headroom and
+//!   `--max-batch`), advances every active session one token through the
+//!   [`StepBackend`], samples on the host, and retires completed
+//!   sessions — arrivals and evictions between steps never perturb other
+//!   sessions' streams (sessions share only immutable parameters).
+//! * [`SessionSnapshot`] — bit-exact pause/resume: the K×N state rows +
+//!   pending logits + sampler RNG + stream position serialize to a small
+//!   file; restore reproduces the identical remaining token stream
+//!   (asserted in rust/tests/serve.rs).
+//! * [`StepBackend`] ([`SimBackend`] | [`ThreadedBackend`]) — the
+//!   decode-step engines; see `backend`.
+//!
+//! Determinism contract: a session's token stream depends only on
+//! (params, prompt, temperature, seed) — never on arrival interleaving,
+//! batch packing, lane placement, or wall-clock. Every stream equals
+//! `generate::generate` with the same inputs, bit for bit.
+
+pub mod backend;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use backend::{SimBackend, StepBackend, StepCost, ThreadedBackend};
+
+use crate::config::{ModelDims, ServeCfg};
+use crate::exec::{lane_count, ExecCfg, ExecutorKind};
+use crate::generate::sample;
+use crate::memcost::ServeAdmission;
+use crate::metrics::Quantiles;
+use crate::model::ParamSet;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::util::bench::BenchStats;
+
+/// Build the configured decode backend (`--executor sim|threaded`,
+/// `--workers N`). An explicit `--workers` request is honored up to
+/// `max_batch` (more lanes than live sessions is pure waste — the same
+/// `exec::lane_count` clamp the backward executor applies at its device
+/// count); `--workers 0` defaults to min(max_batch, 4) lanes, since
+/// every lane carries a full PJRT runtime.
+pub fn build_backend(
+    exec: &ExecCfg,
+    dir: &Path,
+    dims: &ModelDims,
+    params: Arc<ParamSet>,
+    max_batch: usize,
+) -> Result<Box<dyn StepBackend>> {
+    Ok(match exec.kind {
+        ExecutorKind::Sim => Box::new(SimBackend::new(dir, dims, params)?),
+        ExecutorKind::Threaded => {
+            let lanes = if exec.workers == 0 {
+                max_batch.clamp(1, 4)
+            } else {
+                lane_count(exec.workers, max_batch)
+            };
+            Box::new(ThreadedBackend::new(dir, dims, params, lanes)?)
+        }
+    })
+}
+
+/// One serving request: consume `prompt`, then generate `n_new` tokens at
+/// `temperature` with a session-private sampler seeded by `seed`.
+/// `not_before_step` models the arrival time in loop steps (open-loop
+/// workloads submit everything up front with staggered arrivals).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub n_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub not_before_step: u64,
+}
+
+/// A retired session's results.
+#[derive(Debug, Clone)]
+pub struct FinishedSession {
+    pub sid: u64,
+    pub tokens: Vec<i32>,
+    pub wall_s: f64,
+    /// Decode steps this session participated in (prompt + generated).
+    pub steps: u64,
+    pub admitted_step: u64,
+    pub completed_step: u64,
+}
+
+/// Coordinator-side session bookkeeping. The backend owns only the
+/// recurrent state; everything that defines the *stream* — pending
+/// prompt, sampler, pending logits — lives here, which is what makes
+/// snapshots small and lane placement irrelevant.
+struct Session {
+    pending: VecDeque<i32>,
+    n_new: usize,
+    temperature: f32,
+    rng: Rng,
+    logits: Option<Tensor>,
+    out: Vec<i32>,
+    admitted_step: u64,
+    t_admit: Instant,
+    t_first: Option<Instant>,
+    steps: u64,
+}
+
+/// Serving-side latency/throughput accounting (p50/p95/p99).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Wall seconds per batched step.
+    pub step_s: Quantiles,
+    /// Wall seconds a generated token waited on its decode step.
+    pub token_latency_s: Quantiles,
+    /// Admission → first generated token, per session.
+    pub first_token_s: Quantiles,
+    /// Per-session generated-token throughput.
+    pub session_tokens_per_s: Quantiles,
+    /// Sessions per batched step.
+    pub batch_occupancy: Quantiles,
+    pub tokens_generated: u64,
+    pub tokens_prefilled: u64,
+    pub steps: u64,
+    /// PJRT entry executions dispatched (batched path).
+    pub calls: u64,
+    /// Seconds inside PJRT executions (batched path).
+    pub pjrt_s: f64,
+    pub admitted: u64,
+    pub completed: u64,
+    /// Ticks on which a due arrival was deferred by the admission gate.
+    pub deferred: u64,
+    pub peak_sessions: usize,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    /// Aggregate decode throughput (prefill + generated tokens over the
+    /// loop's stepping wall time).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.tokens_generated + self.tokens_prefilled) as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Rows for `util::bench::write_json` (`BENCH_serve.json`); empty
+    /// quantiles are skipped so the JSON never carries NaNs.
+    pub fn to_bench_stats(&self) -> Vec<BenchStats> {
+        let row = |name: &str, q: &Quantiles| BenchStats {
+            name: name.to_string(),
+            iters: q.len(),
+            mean_s: q.mean(),
+            p50_s: q.p50(),
+            p95_s: q.p95(),
+            p99_s: q.p99(),
+            min_s: q.min(),
+        };
+        [
+            ("serve_step_wall", &self.step_s),
+            ("serve_token_latency", &self.token_latency_s),
+            ("serve_first_token_latency", &self.first_token_s),
+        ]
+        .into_iter()
+        .filter(|(_, q)| !q.is_empty())
+        .map(|(n, q)| row(n, q))
+        .collect()
+    }
+
+    /// Human-readable summary (the `adjsh serve` report).
+    pub fn print_report(&self) {
+        use crate::util::bench::{fmt_dur, Table};
+        println!(
+            "served: {} sessions admitted, {} completed, peak concurrency {}, {} deferral ticks",
+            self.admitted, self.completed, self.peak_sessions, self.deferred
+        );
+        println!(
+            "tokens: {} generated + {} prefill over {} steps ({:.1} tok/s aggregate)",
+            self.tokens_generated,
+            self.tokens_prefilled,
+            self.steps,
+            self.tokens_per_s()
+        );
+        if self.calls > 0 {
+            println!(
+                "PJRT: {} batched entry calls, {} inside executions",
+                self.calls,
+                fmt_dur(self.pjrt_s)
+            );
+        }
+        let mut t = Table::new(&["metric", "n", "mean", "p50", "p95", "p99"]);
+        let mut push = |name: &str, q: &Quantiles| {
+            if !q.is_empty() {
+                t.row(&[
+                    name.to_string(),
+                    q.len().to_string(),
+                    fmt_dur(q.mean()),
+                    fmt_dur(q.p50()),
+                    fmt_dur(q.p95()),
+                    fmt_dur(q.p99()),
+                ]);
+            }
+        };
+        push("step wall", &self.step_s);
+        push("token latency", &self.token_latency_s);
+        push("first-token latency", &self.first_token_s);
+        t.print();
+        if !self.session_tokens_per_s.is_empty() {
+            println!(
+                "per-session throughput: mean {:.1} tok/s, p50 {:.1}, slowest {:.1} (n={})",
+                self.session_tokens_per_s.mean(),
+                self.session_tokens_per_s.p50(),
+                self.session_tokens_per_s.min(),
+                self.session_tokens_per_s.len()
+            );
+        }
+        if !self.batch_occupancy.is_empty() {
+            println!(
+                "batch occupancy: mean {:.2}, p50 {:.0}",
+                self.batch_occupancy.mean(),
+                self.batch_occupancy.p50()
+            );
+        }
+    }
+}
+
+/// The continuous-batching serving loop. See the module docs for the
+/// determinism contract; see [`ServeAdmission`] for the admission rule.
+pub struct ServeLoop {
+    backend: Box<dyn StepBackend>,
+    dims: ModelDims,
+    admission: ServeAdmission,
+    max_batch: usize,
+    snapshot_dir: Option<PathBuf>,
+    queue: VecDeque<(u64, Request)>,
+    sessions: BTreeMap<u64, Session>,
+    next_sid: u64,
+    step_idx: u64,
+    finished: Vec<FinishedSession>,
+    pub metrics: ServeMetrics,
+}
+
+impl ServeLoop {
+    pub fn new(
+        backend: Box<dyn StepBackend>,
+        dims: &ModelDims,
+        admission: ServeAdmission,
+        cfg: &ServeCfg,
+    ) -> Result<Self> {
+        if cfg.max_batch == 0 {
+            bail!("serving needs max_batch ≥ 1");
+        }
+        Ok(Self {
+            backend,
+            dims: dims.clone(),
+            admission,
+            max_batch: cfg.max_batch,
+            snapshot_dir: cfg.snapshot_dir.clone(),
+            queue: VecDeque::new(),
+            sessions: BTreeMap::new(),
+            next_sid: 0,
+            step_idx: 0,
+            finished: Vec::new(),
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    /// Enqueue a request; returns its session id. Admission happens
+    /// between steps, subject to the memory gate and `max_batch`.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        if req.prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        self.queue.push_back((sid, req));
+        Ok(sid)
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn step_idx(&self) -> u64 {
+        self.step_idx
+    }
+
+    pub fn admission(&self) -> &ServeAdmission {
+        &self.admission
+    }
+
+    pub fn executor_kind(&self) -> ExecutorKind {
+        self.backend.kind()
+    }
+
+    /// Retired sessions accumulated so far (drains).
+    pub fn take_finished(&mut self) -> Vec<FinishedSession> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Admit due arrivals in submission order until the batch or the
+    /// memory gate blocks. The gate is the acceptance invariant:
+    /// modeled bytes never exceed the HBM cap (checked, not assumed).
+    fn admit_ready(&mut self) -> Result<()> {
+        let mut blocked = false;
+        while let Some((_, req)) = self.queue.front() {
+            if req.not_before_step > self.step_idx {
+                break;
+            }
+            let active = self.sessions.len();
+            if active >= self.max_batch || !self.admission.admits(active as u64) {
+                if active == 0 {
+                    // Nothing to evict will ever free headroom: the model
+                    // alone exhausts the cap. Erroring beats spinning.
+                    bail!(
+                        "request can never be admitted: model residency {} of {} HBM bytes \
+                         leaves no session headroom",
+                        self.admission.model_bytes,
+                        self.admission.hbm_bytes
+                    );
+                }
+                blocked = true;
+                break;
+            }
+            let (sid, req) = self.queue.pop_front().expect("front checked");
+            let h = (0..self.dims.k).map(|_| Tensor::zeros(&[self.dims.n])).collect();
+            self.backend.admit(sid, h)?;
+            self.sessions.insert(
+                sid,
+                Session {
+                    pending: req.prompt.iter().copied().collect(),
+                    n_new: req.n_new,
+                    temperature: req.temperature,
+                    rng: Rng::new(req.seed),
+                    logits: None,
+                    out: Vec::with_capacity(req.n_new),
+                    admitted_step: self.step_idx,
+                    t_admit: Instant::now(),
+                    t_first: None,
+                    steps: 0,
+                },
+            );
+            self.metrics.admitted += 1;
+            self.metrics.peak_sessions = self.metrics.peak_sessions.max(self.sessions.len());
+            let bytes = self.admission.bytes_at(self.sessions.len() as u64);
+            if bytes > self.admission.hbm_bytes {
+                bail!(
+                    "admission invariant violated: {} modeled bytes over the {}-byte HBM cap",
+                    bytes,
+                    self.admission.hbm_bytes
+                );
+            }
+        }
+        if blocked {
+            self.metrics.deferred += 1;
+        }
+        Ok(())
+    }
+
+    /// One loop iteration: admissions, one batched decode step over every
+    /// active session, sampling, completions. Returns false when fully
+    /// idle (no active sessions and an empty queue).
+    pub fn tick(&mut self) -> Result<bool> {
+        self.admit_ready()?;
+        if self.sessions.is_empty() {
+            if self.queue.is_empty() {
+                return Ok(false);
+            }
+            // Nothing active yet, but arrivals are pending: advance the
+            // step clock so their not_before_step comes due.
+            self.step_idx += 1;
+            return Ok(true);
+        }
+
+        // Build the batch in ascending sid order: next prompt token while
+        // prefilling, else sample from the pending logits — the exact
+        // order of operations of `generate::generate`.
+        let mut inputs = Vec::with_capacity(self.sessions.len());
+        let mut sampled = 0u64;
+        for (&sid, sess) in self.sessions.iter_mut() {
+            let tok = match sess.pending.pop_front() {
+                Some(t) => {
+                    self.metrics.tokens_prefilled += 1;
+                    t
+                }
+                None => {
+                    let logits = sess
+                        .logits
+                        .as_ref()
+                        .context("decode session has no pending logits")?;
+                    let t = sample(logits, sess.temperature, &mut sess.rng);
+                    sess.out.push(t);
+                    sampled += 1;
+                    if sess.t_first.is_none() {
+                        let now = Instant::now();
+                        sess.t_first = Some(now);
+                        self.metrics
+                            .first_token_s
+                            .push(now.duration_since(sess.t_admit).as_secs_f64());
+                    }
+                    t
+                }
+            };
+            inputs.push((sid, tok));
+        }
+        self.metrics.tokens_generated += sampled;
+        self.metrics.batch_occupancy.push(inputs.len() as f64);
+
+        let t0 = Instant::now();
+        let (outs, cost) = self.backend.step(&inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.step_s.push(dt);
+        self.metrics.wall_s += dt;
+        self.metrics.pjrt_s += cost.pjrt_s;
+        self.metrics.calls += cost.calls;
+        self.metrics.steps += 1;
+        for _ in 0..sampled {
+            self.metrics.token_latency_s.push(dt);
+        }
+        if outs.len() != inputs.len() {
+            bail!("backend returned {} logits for {} inputs", outs.len(), inputs.len());
+        }
+        for (sid, logits) in outs {
+            let sess = self
+                .sessions
+                .get_mut(&sid)
+                .context("backend returned an unknown session id")?;
+            sess.logits = Some(logits);
+            sess.steps += 1;
+        }
+
+        // Retire completed sessions (prompt fully fed, target reached).
+        // `generate` also steps the final sampled token, so completion is
+        // checked after the step — streams match exactly.
+        let done: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.pending.is_empty() && s.out.len() >= s.n_new)
+            .map(|(&sid, _)| sid)
+            .collect();
+        for sid in done {
+            self.backend.evict(sid)?;
+            let sess = self.sessions.remove(&sid).expect("session just listed");
+            let wall = sess.t_admit.elapsed().as_secs_f64();
+            if sess.n_new > 0 && wall > 0.0 {
+                self.metrics
+                    .session_tokens_per_s
+                    .push(sess.n_new as f64 / wall);
+            }
+            self.metrics.completed += 1;
+            self.finished.push(FinishedSession {
+                sid,
+                tokens: sess.out,
+                wall_s: wall,
+                steps: sess.steps,
+                admitted_step: sess.admitted_step,
+                completed_step: self.step_idx,
+            });
+        }
+        self.step_idx += 1;
+        Ok(true)
+    }
+
+    /// Run until every submitted session has completed.
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while self.tick()? {}
+        Ok(())
+    }
+
+    // --- snapshots ---------------------------------------------------------
+
+    /// Default snapshot path for a session under `--snapshot-dir`.
+    pub fn snapshot_path(&self, sid: u64) -> Option<PathBuf> {
+        self.snapshot_dir
+            .as_ref()
+            .map(|d| d.join(format!("session_{sid}.snap")))
+    }
+
+    /// Serialize a live session (state rows + sampler + stream position)
+    /// without disturbing it.
+    pub fn snapshot(&mut self, sid: u64, path: &Path) -> Result<()> {
+        let sess = self
+            .sessions
+            .get(&sid)
+            .with_context(|| format!("no live session {sid} to snapshot"))?;
+        let snap = SessionSnapshot {
+            k: self.dims.k,
+            n: self.dims.n,
+            v: self.dims.v,
+            temperature: sess.temperature,
+            remaining: (sess.n_new - sess.out.len().min(sess.n_new)) as u64,
+            pending: sess.pending.iter().copied().collect(),
+            rng_state: sess.rng.state().0,
+            rng_spare: sess.rng.state().1,
+            logits: sess.logits.as_ref().map(|t| t.data().to_vec()),
+            h: Vec::new(), // filled below (backend roundtrip)
+        };
+        let h = self.backend.state(sid)?;
+        let snap = SessionSnapshot {
+            h: h.iter().map(|t| t.data().to_vec()).collect(),
+            ..snap
+        };
+        snap.save(path)
+    }
+
+    /// Snapshot then evict: pause a session to disk, freeing its batch
+    /// slot and HBM. Returns the tokens generated so far.
+    pub fn evict_to_snapshot(&mut self, sid: u64, path: &Path) -> Result<Vec<i32>> {
+        self.snapshot(sid, path)?;
+        self.backend.evict(sid)?;
+        let sess = self.sessions.remove(&sid).expect("snapshot checked liveness");
+        Ok(sess.out)
+    }
+
+    /// Resume a snapshotted session as a new session id, subject to the
+    /// same admission gate as fresh arrivals. The restored session
+    /// produces the exact token stream the paused one would have.
+    pub fn restore(&mut self, path: &Path) -> Result<u64> {
+        let snap = SessionSnapshot::load(path)?;
+        if snap.k != self.dims.k || snap.n != self.dims.n || snap.v != self.dims.v {
+            bail!(
+                "snapshot dims (K={}, N={}, V={}) do not match model (K={}, N={}, V={})",
+                snap.k,
+                snap.n,
+                snap.v,
+                self.dims.k,
+                self.dims.n,
+                self.dims.v
+            );
+        }
+        let active = self.sessions.len();
+        if active >= self.max_batch || !self.admission.admits(active as u64) {
+            bail!("no serving headroom to restore a session (active={active})");
+        }
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        let h = snap
+            .h
+            .iter()
+            .map(|row| Tensor::new(vec![self.dims.n], row.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        self.backend.admit(sid, h)?;
+        let logits = match &snap.logits {
+            Some(d) => Some(Tensor::new(vec![self.dims.v], d.clone())?),
+            None => None,
+        };
+        self.sessions.insert(
+            sid,
+            Session {
+                pending: snap.pending.iter().copied().collect(),
+                n_new: snap.remaining as usize,
+                temperature: snap.temperature,
+                rng: Rng::from_state(snap.rng_state, snap.rng_spare),
+                logits,
+                out: Vec::with_capacity(snap.remaining as usize),
+                admitted_step: self.step_idx,
+                t_admit: Instant::now(),
+                t_first: None,
+                steps: 0,
+            },
+        );
+        self.metrics.admitted += 1;
+        self.metrics.peak_sessions = self.metrics.peak_sessions.max(self.sessions.len());
+        Ok(sid)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SessionSnapshot — the bit-exact pause/resume format.
+// ---------------------------------------------------------------------------
+
+const SNAP_MAGIC: &[u8; 8] = b"ADJSHSN1";
+
+/// Everything a paused session needs to resume its exact token stream:
+/// the K×N recurrent state, the pending logits row, the sampler RNG, the
+/// unfed prompt suffix, and the generation target. O(K·N + V) bytes —
+/// independent of how much context the session has consumed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub k: usize,
+    pub n: usize,
+    pub v: usize,
+    pub temperature: f32,
+    /// Tokens still to generate.
+    pub remaining: u64,
+    /// Unfed prompt suffix (non-empty only when paused mid-prefill).
+    pub pending: Vec<i32>,
+    pub rng_state: u64,
+    pub rng_spare: Option<f64>,
+    /// Pending logits row (absent only before the first step).
+    pub logits: Option<Vec<f32>>,
+    /// Per-layer state rows, K × N.
+    pub h: Vec<Vec<f32>>,
+}
+
+impl SessionSnapshot {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        w.write_all(SNAP_MAGIC)?;
+        for d in [self.k as u64, self.n as u64, self.v as u64, self.remaining] {
+            w.write_all(&d.to_le_bytes())?;
+        }
+        w.write_all(&self.temperature.to_le_bytes())?;
+        w.write_all(&(self.pending.len() as u64).to_le_bytes())?;
+        for &t in &self.pending {
+            w.write_all(&t.to_le_bytes())?;
+        }
+        w.write_all(&self.rng_state.to_le_bytes())?;
+        match self.rng_spare {
+            Some(s) => {
+                w.write_all(&[1u8])?;
+                w.write_all(&s.to_le_bytes())?;
+            }
+            None => w.write_all(&[0u8])?,
+        }
+        match &self.logits {
+            Some(row) => {
+                if row.len() != self.v {
+                    bail!("snapshot logits row has {} elements, V={}", row.len(), self.v);
+                }
+                w.write_all(&[1u8])?;
+                for &x in row {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            None => w.write_all(&[0u8])?,
+        }
+        if self.h.len() != self.k {
+            bail!("snapshot has {} state rows, K={}", self.h.len(), self.k);
+        }
+        for row in &self.h {
+            if row.len() != self.n {
+                bail!("snapshot state row has {} elements, N={}", row.len(), self.n);
+            }
+            for &x in row {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut b1 = [0u8; 1];
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != SNAP_MAGIC {
+            bail!("{} is not a session snapshot", path.display());
+        }
+        let mut read_u64 = |r: &mut dyn Read| -> Result<u64> {
+            r.read_exact(&mut b8)?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let k = read_u64(&mut r)? as usize;
+        let n = read_u64(&mut r)? as usize;
+        let v = read_u64(&mut r)? as usize;
+        let remaining = read_u64(&mut r)?;
+        if k > 1 << 20 || n > 1 << 30 || v > 1 << 30 {
+            bail!("implausible snapshot dims — corrupt file?");
+        }
+        r.read_exact(&mut b4)?;
+        let temperature = f32::from_le_bytes(b4);
+        let n_pending = read_u64(&mut r)? as usize;
+        let mut pending = Vec::with_capacity(n_pending.min(1 << 20));
+        for _ in 0..n_pending {
+            r.read_exact(&mut b4)?;
+            pending.push(i32::from_le_bytes(b4));
+        }
+        let rng_state = read_u64(&mut r)?;
+        r.read_exact(&mut b1)?;
+        let rng_spare = if b1[0] == 1 {
+            r.read_exact(&mut b8)?;
+            Some(f64::from_le_bytes(b8))
+        } else {
+            None
+        };
+        // Capacity clamps (like `pending` above): a corrupt header must
+        // fail at the first short read, not attempt a giant preallocation.
+        r.read_exact(&mut b1)?;
+        let logits = if b1[0] == 1 {
+            let mut row = Vec::with_capacity(v.min(1 << 20));
+            for _ in 0..v {
+                r.read_exact(&mut b4)?;
+                row.push(f32::from_le_bytes(b4));
+            }
+            Some(row)
+        } else {
+            None
+        };
+        let mut h = Vec::with_capacity(k.min(1 << 20));
+        for _ in 0..k {
+            let mut row = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                r.read_exact(&mut b4)?;
+                row.push(f32::from_le_bytes(b4));
+            }
+            h.push(row);
+        }
+        Ok(Self { k, n, v, temperature, remaining, pending, rng_state, rng_spare, logits, h })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap() -> SessionSnapshot {
+        SessionSnapshot {
+            k: 2,
+            n: 4,
+            v: 8,
+            temperature: 0.8,
+            remaining: 5,
+            pending: vec![3, 1],
+            rng_state: 0xDEADBEEF,
+            rng_spare: Some(-1.25),
+            logits: Some((0..8).map(|i| i as f32 * 0.5).collect()),
+            h: vec![vec![1.0, -2.0, 3.0, 0.5], vec![0.0, 0.25, -0.125, 9.0]],
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exactly() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("serve_snap_test_{}.snap", std::process::id()));
+        let s = snap();
+        s.save(&path).unwrap();
+        let back = SessionSnapshot::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_without_optionals() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("serve_snap_opt_{}.snap", std::process::id()));
+        let mut s = snap();
+        s.rng_spare = None;
+        s.logits = None;
+        s.pending.clear();
+        s.save(&path).unwrap();
+        let back = SessionSnapshot::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn snapshot_rejects_shape_lies() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("serve_snap_bad_{}.snap", std::process::id()));
+        let mut s = snap();
+        s.h.pop();
+        assert!(s.save(&path).is_err(), "K mismatch must not serialize");
+        let mut s = snap();
+        s.logits = Some(vec![0.0; 3]);
+        assert!(s.save(&path).is_err(), "logits/V mismatch must not serialize");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_foreign_files() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("serve_snap_foreign_{}.snap", std::process::id()));
+        std::fs::write(&path, b"definitely not a snapshot").unwrap();
+        assert!(SessionSnapshot::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -462,13 +462,7 @@ impl Tensor {
     /// In-place RMSNorm — the hot path's variant (no clone of the stream).
     pub fn rmsnorm_inplace(&mut self, eps: f32) {
         let cols = *self.shape.last().unwrap_or(&1);
-        for row in self.data.chunks_mut(cols) {
-            let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / cols as f32;
-            let r = 1.0 / (ms + eps).sqrt();
-            for x in row.iter_mut() {
-                *x *= r;
-            }
-        }
+        rmsnorm_rows(&mut self.data, cols, eps);
     }
 
     /// RMSNorm into a caller-provided same-shape tensor (reusable buffer).
@@ -503,6 +497,21 @@ impl Tensor {
             }
         }
         Tensor::new(vec![m, n], out)
+    }
+}
+
+/// Row-wise RMSNorm over a raw buffer of `cols`-wide rows — THE RMSNorm
+/// float sequence of this crate, shared by [`Tensor::rmsnorm_inplace`]
+/// (and everything built on it) and the serving backend's batched-row
+/// staging (`serve::backend`), so the decode paths can never drift from
+/// each other in the last ulp. `cols` must be non-zero.
+pub fn rmsnorm_rows(data: &mut [f32], cols: usize, eps: f32) {
+    for row in data.chunks_mut(cols) {
+        let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / cols as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for x in row.iter_mut() {
+            *x *= r;
+        }
     }
 }
 

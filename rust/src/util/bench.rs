@@ -1,9 +1,9 @@
 //! Micro-bench harness for the `cargo bench` targets (criterion is
 //! unavailable offline). Warmup + timed iterations; reports mean / p50 /
-//! p95 / min in a stable text format the bench binaries print alongside
-//! the paper-vs-measured tables, and as machine-readable JSON
+//! p95 / p99 / min in a stable text format the bench binaries print
+//! alongside the paper-vs-measured tables, and as machine-readable JSON
 //! ([`write_json`]) so the perf trajectory is tracked across PRs
-//! (EXPERIMENTS.md §Perf).
+//! (EXPERIMENTS.md §Perf, §Serve).
 
 use std::path::Path;
 use std::time::Instant;
@@ -15,6 +15,7 @@ pub struct BenchStats {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
     pub min_s: f64,
 }
 
@@ -32,12 +33,13 @@ impl BenchStats {
     /// back losslessly).
     fn to_json(&self) -> String {
         format!(
-            "{{\"name\":{:?},\"iters\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"min_ns\":{:.1}}}",
+            "{{\"name\":{:?},\"iters\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"p99_ns\":{:.1},\"min_ns\":{:.1}}}",
             self.name,
             self.iters,
             self.mean_s * 1e9,
             self.p50_s * 1e9,
             self.p95_s * 1e9,
+            self.p99_s * 1e9,
             self.min_s * 1e9,
         )
     }
@@ -45,7 +47,7 @@ impl BenchStats {
 
 /// Write a bench run's results as `BENCH_<bench>.json`-style output:
 /// `{"bench", "schema", "placeholder", "note", "results": [{name, iters,
-/// mean_ns, p50_ns, p95_ns, min_ns}]}`. `note` records run context
+/// mean_ns, p50_ns, p95_ns, p99_ns, min_ns}]}`. `note` records run context
 /// (artifact availability, host caveats) so numbers are comparable across
 /// PRs. `placeholder` marks a file with no measured rows (e.g. committed
 /// from a host without the toolchain) — machine-detectable, so
@@ -78,12 +80,13 @@ impl std::fmt::Display for BenchStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:<40} iters={:<5} mean={:>10} p50={:>10} p95={:>10} min={:>10}",
+            "{:<40} iters={:<5} mean={:>10} p50={:>10} p95={:>10} p99={:>10} min={:>10}",
             self.name,
             self.iters,
             fmt_dur(self.mean_s),
             fmt_dur(self.p50_s),
             fmt_dur(self.p95_s),
+            fmt_dur(self.p99_s),
             fmt_dur(self.min_s),
         )
     }
@@ -104,7 +107,13 @@ pub fn fmt_dur(s: f64) -> String {
 /// Run `f` repeatedly: `warmup` unmeasured iterations, then measured ones
 /// until `min_iters` and `min_secs` are both satisfied (capped at
 /// `max_iters`). `f` should return something observable to avoid DCE.
-pub fn bench<T>(name: &str, warmup: usize, min_iters: usize, min_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    min_secs: f64,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
     let max_iters = 10_000usize.max(min_iters);
     for _ in 0..warmup {
         std::hint::black_box(f());
@@ -132,6 +141,7 @@ fn stats_from(name: &str, times: &mut [f64]) -> BenchStats {
         mean_s: mean,
         p50_s: pick(0.50),
         p95_s: pick(0.95),
+        p99_s: pick(0.99),
         min_s: times.first().copied().unwrap_or(0.0),
     }
 }
@@ -185,7 +195,7 @@ mod tests {
     fn bench_runs_and_orders_stats() {
         let s = bench("noop", 2, 20, 0.0, || 1 + 1);
         assert!(s.iters >= 20);
-        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
     }
 
     #[test]
@@ -205,6 +215,7 @@ mod tests {
                 mean_s: 1.5e-6,
                 p50_s: 1.4e-6,
                 p95_s: 2.0e-6,
+                p99_s: 2.1e-6,
                 min_s: 1.0e-6,
             },
             bench("noop", 1, 5, 0.0, || 1 + 1),
@@ -223,6 +234,7 @@ mod tests {
         assert_eq!(rs[0].get("name").unwrap().as_str().unwrap(), "alpha\"quoted\"");
         assert_eq!(rs[0].get("iters").unwrap().as_usize().unwrap(), 10);
         assert!((rs[0].get("mean_ns").unwrap().as_f64().unwrap() - 1500.0).abs() < 0.2);
+        assert!((rs[0].get("p99_ns").unwrap().as_f64().unwrap() - 2100.0).abs() < 0.2);
         assert!(rs[1].get("min_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

@@ -84,7 +84,12 @@ impl Cli {
     }
 
     /// Comma-separated list of integers, e.g. `--devices 1,2,4,8`.
-    pub fn usize_list_or(&mut self, key: &str, default: &[usize], help: &str) -> Result<Vec<usize>> {
+    pub fn usize_list_or(
+        &mut self,
+        key: &str,
+        default: &[usize],
+        help: &str,
+    ) -> Result<Vec<usize>> {
         let d = default
             .iter()
             .map(|x| x.to_string())

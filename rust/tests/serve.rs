@@ -1,0 +1,297 @@
+//! Serving correctness: the continuous-batching loop must be a pure
+//! throughput transformation — every session's token stream is
+//! bit-identical to running it alone through `generate::generate`,
+//! regardless of batching, arrival interleaving, executor backend, or a
+//! snapshot/restore cycle in the middle; and admission never exceeds the
+//! memcost-modeled HBM cap.
+//!
+//! Artifact-gated (run `make artifacts` first); the batched-ABI test
+//! additionally requires an artifact set that includes
+//! `layer_step_batched` (regenerated sets do; pre-serving sets fall back
+//! to the per-session path, which these stream tests still cover).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use adjoint_sharding::config::{ModelDims, ServeCfg};
+use adjoint_sharding::exec::{ExecCfg, ExecutorKind};
+use adjoint_sharding::generate::{self, DecodeState};
+use adjoint_sharding::memcost::ServeAdmission;
+use adjoint_sharding::model::ParamSet;
+use adjoint_sharding::rng::Rng;
+use adjoint_sharding::runtime::{ArtifactSet, Manifest, Runtime};
+use adjoint_sharding::serve::{build_backend, Request, ServeLoop, SimBackend, StepBackend};
+use adjoint_sharding::tensor::Tensor;
+
+fn root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Artifact dir + dims, without opening a PJRT client (each backend
+/// opens its own).
+fn tiny() -> Option<(PathBuf, ModelDims)> {
+    let dir = root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return None;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    let dims = ModelDims::from_config_json(&m.raw_config).unwrap();
+    Some((dir, dims))
+}
+
+fn zeros_h(dims: &ModelDims) -> Vec<Tensor> {
+    (0..dims.k).map(|_| Tensor::zeros(&[dims.n])).collect()
+}
+
+fn mk_loop(
+    dir: &Path,
+    dims: &ModelDims,
+    params: &Arc<ParamSet>,
+    exec: ExecCfg,
+    max_batch: usize,
+    admission: ServeAdmission,
+) -> ServeLoop {
+    let backend = build_backend(&exec, dir, dims, Arc::clone(params), max_batch).unwrap();
+    let cfg = ServeCfg { max_batch, snapshot_dir: None };
+    ServeLoop::new(backend, dims, admission, &cfg).unwrap()
+}
+
+fn default_admission(dims: &ModelDims) -> ServeAdmission {
+    ServeAdmission::new(dims, 80 << 30)
+}
+
+/// The mixed workload the stream-equivalence tests serve: staggered
+/// arrivals, different lengths/temperatures (greedy included), so
+/// admissions and evictions interleave mid-loop.
+fn workload() -> Vec<Request> {
+    vec![
+        Request { prompt: vec![1, 2, 3], n_new: 10, temperature: 0.8, seed: 9, not_before_step: 0 },
+        Request { prompt: vec![5, 4], n_new: 6, temperature: 0.0, seed: 1, not_before_step: 1 },
+        Request { prompt: vec![7], n_new: 14, temperature: 1.3, seed: 33, not_before_step: 3 },
+    ]
+}
+
+fn solo_streams(dir: &Path, dims: &ModelDims, params: &ParamSet) -> Vec<Vec<i32>> {
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, dir).unwrap();
+    workload()
+        .iter()
+        .map(|r| {
+            generate::generate(
+                &arts,
+                dims,
+                params,
+                &r.prompt,
+                r.n_new,
+                r.temperature,
+                &mut Rng::new(r.seed),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn batched_serving_matches_solo_generate_with_mid_loop_arrivals_and_evictions() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    // max_batch 2 < 3 sessions: the third arrival is deferred until an
+    // eviction frees a slot — admissions and evictions both happen
+    // mid-loop, and must not perturb anyone's stream.
+    let mut sl = mk_loop(&dir, &dims, &params, ExecCfg::default(), 2, default_admission(&dims));
+    for r in workload() {
+        sl.submit(r).unwrap();
+    }
+    sl.run_until_idle().unwrap();
+    let mut fin = sl.take_finished();
+    fin.sort_by_key(|f| f.sid);
+    let want = solo_streams(&dir, &dims, &params);
+    assert_eq!(fin.len(), want.len());
+    for (f, w) in fin.iter().zip(&want) {
+        assert_eq!(f.tokens, *w, "session {} diverged from solo generate", f.sid);
+    }
+    assert_eq!(sl.metrics.admitted, 3);
+    assert_eq!(sl.metrics.completed, 3);
+    assert_eq!(sl.metrics.tokens_generated, 10 + 6 + 14);
+    assert_eq!(sl.metrics.peak_sessions, 2, "batch cap must bound concurrency");
+    assert!(sl.metrics.deferred > 0, "third arrival should have waited on a slot");
+    assert_eq!(sl.active_sessions(), 0);
+    assert_eq!(sl.queued(), 0);
+}
+
+#[test]
+fn sim_and_threaded_executors_serve_identical_streams() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let mut streams = Vec::new();
+    for exec in [
+        ExecCfg { kind: ExecutorKind::Sim, workers: 0 },
+        ExecCfg { kind: ExecutorKind::Threaded, workers: 2 },
+    ] {
+        let mut sl = mk_loop(&dir, &dims, &params, exec, 3, default_admission(&dims));
+        assert_eq!(sl.executor_kind(), exec.kind);
+        for r in workload() {
+            sl.submit(r).unwrap();
+        }
+        sl.run_until_idle().unwrap();
+        let mut fin = sl.take_finished();
+        fin.sort_by_key(|f| f.sid);
+        streams.push(fin.into_iter().map(|f| f.tokens).collect::<Vec<_>>());
+    }
+    assert_eq!(streams[0], streams[1], "sim and threaded streams must be bit-identical");
+    assert_eq!(streams[0], solo_streams(&dir, &dims, &params));
+}
+
+#[test]
+fn snapshot_restore_mid_sequence_reproduces_the_exact_stream() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let (prompt, n_new, temperature, seed) = (vec![2i32, 3, 4], 12usize, 0.9f32, 42u64);
+
+    let mut sl = mk_loop(&dir, &dims, &params, ExecCfg::default(), 2, default_admission(&dims));
+    let sid = sl
+        .submit(Request {
+            prompt: prompt.clone(),
+            n_new,
+            temperature,
+            seed,
+            not_before_step: 0,
+        })
+        .unwrap();
+    // 3 prompt ticks + 5 decode ticks: pause mid-generation.
+    for _ in 0..8 {
+        assert!(sl.tick().unwrap());
+    }
+    let path = std::env::temp_dir().join(format!("serve_restore_{}.snap", std::process::id()));
+    let prefix = sl.evict_to_snapshot(sid, &path).unwrap();
+    assert_eq!(prefix.len(), 5, "expected to pause after 5 generated tokens");
+    assert_eq!(sl.active_sessions(), 0);
+
+    // Resume in a *fresh* loop (new backend, new PJRT client): only the
+    // snapshot file carries the session.
+    let mut sl2 = mk_loop(&dir, &dims, &params, ExecCfg::default(), 2, default_admission(&dims));
+    sl2.restore(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    sl2.run_until_idle().unwrap();
+    let fin = sl2.take_finished();
+    assert_eq!(fin.len(), 1);
+    let mut full = prefix;
+    full.extend_from_slice(&fin[0].tokens);
+
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &dir).unwrap();
+    let want = generate::generate(
+        &arts,
+        &dims,
+        &params,
+        &prompt,
+        n_new,
+        temperature,
+        &mut Rng::new(seed),
+    )
+    .unwrap();
+    assert_eq!(full, want, "snapshot→restore changed the token stream");
+}
+
+#[test]
+fn admission_never_exceeds_the_memcost_hbm_cap() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    // Cap sized for exactly two concurrent sessions (plus slack smaller
+    // than a third): the memory gate — not the batch cap — binds.
+    let base = ServeAdmission::new(&dims, 0);
+    let per = base.session_bytes + base.step_bytes_per_session;
+    let admission =
+        ServeAdmission { hbm_bytes: base.model_bytes + 2 * per + per / 2, ..base };
+    assert_eq!(admission.max_sessions(), 2);
+
+    let mut sl = mk_loop(&dir, &dims, &params, ExecCfg::default(), 8, admission);
+    for i in 0..5u64 {
+        sl.submit(Request {
+            prompt: vec![1 + i as i32],
+            n_new: 4,
+            temperature: 0.7,
+            seed: 100 + i,
+            not_before_step: 0,
+        })
+        .unwrap();
+    }
+    sl.run_until_idle().unwrap();
+    assert_eq!(sl.metrics.completed, 5, "memory pressure must defer, not drop");
+    assert_eq!(sl.metrics.peak_sessions, 2, "cap admits exactly two sessions");
+    assert!(sl.metrics.deferred > 0);
+    assert!(
+        sl.admission().bytes_at(sl.metrics.peak_sessions as u64) <= sl.admission().hbm_bytes,
+        "modeled bytes exceeded the HBM cap"
+    );
+}
+
+#[test]
+fn batched_abi_is_bit_identical_to_single_session_step_token() {
+    let Some((dir, dims)) = tiny() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    if !m.entries.contains_key("layer_step_batched") {
+        eprintln!("SKIP: artifact set predates layer_step_batched (re-run `make artifacts`)");
+        return;
+    }
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let mut be = SimBackend::new(&dir, &dims, Arc::clone(&params)).unwrap();
+    assert!(be.batch_width().is_some());
+
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &dir).unwrap();
+    let mut solo: Vec<DecodeState> = (0..3)
+        .map(|_| DecodeState::new(&arts, &params, &dims).unwrap())
+        .collect();
+    for sid in 0..3u64 {
+        be.admit(sid, zeros_h(&dims)).unwrap();
+    }
+    let steps: [[i32; 3]; 4] = [[1, 5, 2], [3, 3, 60], [7, 0, 9], [2, 2, 2]];
+    for toks in steps {
+        let inputs: Vec<(u64, i32)> =
+            toks.iter().enumerate().map(|(s, &t)| (s as u64, t)).collect();
+        let (outs, cost) = be.step(&inputs).unwrap();
+        assert!(cost.calls >= dims.k as u64);
+        assert_eq!(outs.len(), 3);
+        for (s, (sid, logits)) in outs.iter().enumerate() {
+            assert_eq!(*sid, s as u64);
+            let want =
+                generate::step_token(&arts, &dims, &params, &mut solo[s], toks[s]).unwrap();
+            let same = logits
+                .data()
+                .iter()
+                .zip(want.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "session {sid}: batched logits diverged from step_token");
+        }
+    }
+    // Recurrent state also matches, bit for bit.
+    for (sid, st) in solo.iter().enumerate() {
+        let h = be.state(sid as u64).unwrap();
+        for (k, (got, want)) in h.iter().zip(&st.h).enumerate() {
+            assert_eq!(got.data(), want.data(), "state rows diverged at layer {k}");
+        }
+    }
+}
+
+#[test]
+fn serve_rejects_bad_inputs() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let mut sl = mk_loop(&dir, &dims, &params, ExecCfg::default(), 2, default_admission(&dims));
+    assert!(
+        sl.submit(Request {
+            prompt: vec![],
+            n_new: 4,
+            temperature: 0.5,
+            seed: 0,
+            not_before_step: 0
+        })
+        .is_err(),
+        "empty prompts are rejected, as in generate"
+    );
+    let missing = std::env::temp_dir().join("definitely_missing.snap");
+    assert!(sl.restore(&missing).is_err());
+    assert!(sl.snapshot(999, &missing).is_err(), "snapshot of unknown session errors");
+}

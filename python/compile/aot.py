@@ -14,6 +14,10 @@ Per config we emit:
   layer_step_batched.hlo.txt  SERVE_BATCH-session decode step (serving ABI)
   head_loss.hlo.txt           loss + dl/dy_K + dΩ (Alg. 1 lines 13–15)
   layer_adjoint_grad.hlo.txt  Alg. 3 work item (one layer, one token chunk)
+  layer_adjoint_grad_batched.hlo.txt
+                              cfg.AB same-layer chunk items per call with
+                              the on-device running-sum reduction
+                              (batched-dispatch training ABI)
   bptt_grad.hlo.txt           backpropagation baseline / ground truth
   manifest.json               shapes, dtypes, arg order, model dims
 
@@ -150,6 +154,32 @@ def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
         ("v_ext", _spec((C + W, P))),
     ]
     emit("layer_adjoint_grad", adj_flat, specs)
+
+    # ---- layer_adjoint_grad_batched (M-item fused dispatch + reduction) ---
+    AB = cfg.AB
+
+    def adj_batched_flat(W_c, xhat_b, hprev_b, h_b, a_ext_b, c_ext_b, v_ext_b,
+                         acc_dW_a, acc_db_a, acc_dW_b, acc_db_b,
+                         acc_dW_g, acc_db_g, acc_dW_c):
+        acc = (acc_dW_a, acc_db_a, acc_dW_b, acc_db_b,
+               acc_dW_g, acc_db_g, acc_dW_c)
+        return M.layer_adjoint_grad_batched(
+            W_c, xhat_b, hprev_b, h_b, a_ext_b, c_ext_b, v_ext_b, acc, window=W
+        )
+
+    grad_shapes = [(P, N), (N,), (P, N), (N,), (P, N), (N,), (N, P)]
+    specs = [
+        ("W_c", _spec((N, P))),
+        ("xhat_b", _spec((AB, C, P))),
+        ("hprev_b", _spec((AB, C, N))),
+        ("h_b", _spec((AB, C, N))),
+        ("a_ext_b", _spec((AB, C + W, N))),
+        ("c_ext_b", _spec((AB, C + W, N))),
+        ("v_ext_b", _spec((AB, C + W, P))),
+    ] + [
+        (f"acc_d{f}", _spec(s)) for f, s in zip(M.PARAM_FIELDS, grad_shapes)
+    ]
+    emit("layer_adjoint_grad_batched", adj_batched_flat, specs)
 
     # ---- bptt_grad (baseline + ground truth) ------------------------------
     def bptt_flat(*args):

@@ -11,6 +11,10 @@ Dims follow the paper's notation (§3.1):
   T — training context length
   W — truncated-adjoint window  T̄  (W == T  ⇒ full adjoint sharding)
   C — scheduler chunk size along the token dimension (Alg. 3/4 work item)
+  AB — adjoint-batch width M: how many same-layer chunk items one
+       ``layer_adjoint_grad_batched`` call carries (the batched-dispatch
+       ABI; the Rust scheduler reads the actual width back from the
+       manifest and pads ragged tail groups instead of recompiling)
 """
 
 from dataclasses import dataclass, asdict
@@ -26,11 +30,13 @@ class ModelConfig:
     T: int  # context length
     W: int  # adjoint window (T-bar); W == T means full adjoint
     C: int  # adjoint chunk size (must divide T)
+    AB: int = 4  # adjoint-batch width M of layer_adjoint_grad_batched
     eps: float = 1e-6  # rmsnorm epsilon
 
     def __post_init__(self):
         assert self.T % self.C == 0, "chunk size must divide context length"
         assert 1 <= self.W <= self.T, "window must be in [1, T]"
+        assert self.AB >= 1, "adjoint-batch width must be >= 1"
 
     def to_dict(self):
         return asdict(self)
@@ -62,13 +68,16 @@ SMALL = ModelConfig(name="small", V=256, P=64, N=64, K=4, T=256, W=64, C=64)
 BASE = ModelConfig(name="base", V=256, P=128, N=128, K=6, T=512, W=128, C=128)
 
 # Long-context config: exercises the truncation win at CPU-feasible T.
-LONGCTX = ModelConfig(name="longctx", V=256, P=64, N=64, K=4, T=2048, W=128, C=256)
+# 8 chunks per layer → AB=8 folds a whole layer into one batched call.
+LONGCTX = ModelConfig(name="longctx", V=256, P=64, N=64, K=4, T=2048, W=128, C=256, AB=8)
 
 # Chunk-size ablation variants of SMALL (bench chunk-size): same model,
 # different scheduler granularity → dispatch-overhead vs transient-memory
-# trade-off.
-SMALL_C16 = ModelConfig(name="small_c16", V=256, P=64, N=64, K=4, T=256, W=64, C=16)
-SMALL_C256 = ModelConfig(name="small_c256", V=256, P=64, N=64, K=4, T=256, W=64, C=256)
+# trade-off. small_c16 has 16 chunks/layer (AB=8 halves them per call);
+# small_c256 has a single chunk/layer, so its batched entry degenerates
+# to M=1 (the fallback-equivalent width).
+SMALL_C16 = ModelConfig(name="small_c16", V=256, P=64, N=64, K=4, T=256, W=64, C=16, AB=8)
+SMALL_C256 = ModelConfig(name="small_c256", V=256, P=64, N=64, K=4, T=256, W=64, C=256, AB=1)
 
 CONFIGS = {
     c.name: c

@@ -232,6 +232,64 @@ def layer_adjoint_grad(
     return dW_a, db_a, dW_b, db_b, dW_g, db_g, dW_c
 
 
+def layer_adjoint_grad_batched(
+    W_c: jax.Array,       # (N, P) — shared by every item (same layer)
+    xhat_b: jax.Array,    # (M, C, P)   per-item layer-input rows
+    hprev_b: jax.Array,   # (M, C, N)   per-item h^{i-1}
+    h_b: jax.Array,       # (M, C, N)   per-item h^i
+    a_ext_b: jax.Array,   # (M, C+W, N) per-item a, zero-padded past T
+    c_ext_b: jax.Array,   # (M, C+W, N) per-item c, zero-padded past T
+    v_ext_b: jax.Array,   # (M, C+W, P) per-item dl/dy_K, zero-padded past T
+    acc,                  # 7-tuple of running gradient accumulators
+    window: int,
+):
+    """M same-layer Alg. 3 work items in a single call, plus the on-device
+    running-sum reduction — the batched-dispatch training ABI behind
+    Rust's ``backward_pooled`` (``rust/src/exec``), the training-side
+    sibling of ``layer_step_batched``.
+
+    The contract is *bit* identity with the sequential single-item path:
+    the result must equal ``layer_adjoint_grad`` applied to the M items in
+    ascending order with the partials folded into ``acc`` one item at a
+    time — the exact float sequence ``GradSet::accumulate_layer`` performs
+    on the Rust side. Two lowering decisions make that hold:
+
+    * the per-item VJP bundle is ``lax.map`` of the *single-item* body
+      (the ``layer_step_batched`` recipe): the map's loop body is the same
+      HLO as the single-item entry, so per-item partials match to the last
+      bit — a stacked/vmapped lowering would batch the gemms and drift in
+      the last ulp (measured; see ``layer_step_batched``'s history);
+    * the reduction is a tree-free left fold ``acc ⊕ g_0 ⊕ g_1 ⊕ …`` in
+      pinned ascending item order, *seeded with the caller's running
+      accumulators* — not a per-group sum from zero, which would
+      re-parenthesize the accumulation and change the rounding whenever a
+      layer spans more than one group.
+
+    Taking ``acc`` in and returning the updated accumulators keeps output
+    traffic at 7 tensors per call instead of M×7, which is the dispatch
+    amortization the batching buys. Ragged tail groups are zero-padded by
+    the caller: an all-zero item's cotangents ``v_ext`` are zero, so every
+    one of its partials is ±0 and the fold ignores it (the kernel's
+    padding contract, applied item-wise). Precision fine print: adding a
+    padded item's signed zero can flip the sign of an *exactly-zero*
+    accumulator element (``-0.0 + +0.0 = +0.0``), so cross-width identity
+    is f32 *value* equality (±0 compare equal — what ``np.array_equal``
+    and Rust's f32 ``==`` check); nonzero elements are byte-exact.
+    """
+
+    def item(args):
+        xhat_c, hprev_c, h_c, a_ext, c_ext, v_ext = args
+        return layer_adjoint_grad(
+            W_c, xhat_c, hprev_c, h_c, a_ext, c_ext, v_ext, window
+        )
+
+    parts = jax.lax.map(item, (xhat_b, hprev_b, h_b, a_ext_b, c_ext_b, v_ext_b))
+    out = tuple(acc)
+    for i in range(xhat_b.shape[0]):
+        out = tuple(o + p[i] for o, p in zip(out, parts))
+    return out
+
+
 def adjoint_grad_full(
     layers: Sequence[LayerParams],
     y0: jax.Array,

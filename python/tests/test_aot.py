@@ -60,6 +60,22 @@ def test_manifest_shapes_match_config(tmp_path):
         [SERVE_BATCH, cfg.N],
     ]
 
+    e = m["entries"]["layer_adjoint_grad_batched"]
+    by_name = {i["name"]: i for i in e["inputs"]}
+    # W_c + 6 batch-major item inputs + 7 running accumulators.
+    assert len(e["inputs"]) == 14
+    assert by_name["xhat_b"]["shape"] == [cfg.AB, cfg.C, cfg.P]
+    assert by_name["hprev_b"]["shape"] == [cfg.AB, cfg.C, cfg.N]
+    assert by_name["a_ext_b"]["shape"] == [cfg.AB, cfg.C + cfg.W, cfg.N]
+    assert by_name["v_ext_b"]["shape"] == [cfg.AB, cfg.C + cfg.W, cfg.P]
+    assert by_name["acc_dW_a"]["shape"] == [cfg.P, cfg.N]
+    assert by_name["acc_dW_c"]["shape"] == [cfg.N, cfg.P]
+    # Outputs: the 7 updated accumulators, exactly the single-item entry's
+    # gradient shapes (GradSet slots swap in place of accumulating).
+    assert [o["shape"] for o in e["outputs"]] == [
+        o["shape"] for o in m["entries"]["layer_adjoint_grad"]["outputs"]
+    ]
+
     e = m["entries"]["bptt_grad"]
     assert len(e["inputs"]) == cfg.K * 7 + 3
     assert len(e["outputs"]) == 1 + cfg.K * 7 + 1

@@ -115,6 +115,109 @@ def test_rmsnorm_unit_scale():
     np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
 
 
+def _adjoint_batch_inputs(M_items, C, W, P, N, seed=0):
+    """Random same-layer item bundle shaped like the batched-entry ABI."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    return dict(
+        W_c=jax.random.normal(ks[0], (N, P)),
+        xhat_b=jax.random.normal(ks[1], (M_items, C, P)),
+        hprev_b=jax.random.normal(ks[2], (M_items, C, N)),
+        h_b=jax.random.normal(ks[3], (M_items, C, N)),
+        a_ext_b=jax.nn.sigmoid(jax.random.normal(ks[4], (M_items, C + W, N))),
+        c_ext_b=jax.nn.sigmoid(jax.random.normal(ks[5], (M_items, C + W, N))),
+        v_ext_b=jax.random.normal(ks[6], (M_items, C + W, P)),
+    )
+
+
+def test_layer_adjoint_grad_batched_matches_sequential_accumulation():
+    """The batched-dispatch training ABI contract: the batched entry must
+    equal the single-item entry applied to its M items in ascending order
+    with partials folded into the running accumulators one at a time —
+    bit for bit (the Rust exec_equivalence tests assert the same against
+    the AOT artifacts)."""
+    MB, C, W, P, N = 4, 8, 8, 16, 16
+    inp = _adjoint_batch_inputs(MB, C, W, P, N, seed=7)
+
+    single = jax.jit(
+        lambda W_c, x, hp, h, a, c, v: M.layer_adjoint_grad(
+            W_c, x, hp, h, a, c, v, window=W
+        )
+    )
+    batched = jax.jit(
+        lambda W_c, xb, hpb, hb, ab, cb, vb, acc: M.layer_adjoint_grad_batched(
+            W_c, xb, hpb, hb, ab, cb, vb, acc, window=W
+        )
+    )
+
+    grad_shapes = [(P, N), (N,), (P, N), (N,), (P, N), (N,), (N, P)]
+    # Non-zero starting accumulators: the fold must continue from the
+    # caller's running sums, not restart from zero.
+    for acc_seed, zero_acc in ((None, True), (11, False)):
+        if zero_acc:
+            acc = tuple(jnp.zeros(s) for s in grad_shapes)
+        else:
+            aks = jax.random.split(jax.random.PRNGKey(acc_seed), 7)
+            acc = tuple(
+                jax.random.normal(k, s) for k, s in zip(aks, grad_shapes)
+            )
+
+        want = acc
+        for i in range(MB):
+            g = single(
+                inp["W_c"], inp["xhat_b"][i], inp["hprev_b"][i], inp["h_b"][i],
+                inp["a_ext_b"][i], inp["c_ext_b"][i], inp["v_ext_b"][i],
+            )
+            want = tuple(w + gi for w, gi in zip(want, g))
+
+        got = batched(
+            inp["W_c"], inp["xhat_b"], inp["hprev_b"], inp["h_b"],
+            inp["a_ext_b"], inp["c_ext_b"], inp["v_ext_b"], acc,
+        )
+        for name, w, g in zip(M.PARAM_FIELDS, want, got):
+            assert np.array_equal(np.asarray(w), np.asarray(g)), (
+                f"batched d{name} != sequential accumulation (zero_acc={zero_acc})"
+            )
+
+
+def test_layer_adjoint_grad_batched_zero_padded_items_are_noops():
+    """Ragged tail contract: items whose staged inputs are all zero
+    contribute exactly nothing to the fold (zero v_ext kills every
+    gradient term), so short groups pad instead of recompiling."""
+    MB, C, W, P, N = 4, 8, 4, 16, 16
+    inp = _adjoint_batch_inputs(MB, C, W, P, N, seed=9)
+    grad_shapes = [(P, N), (N,), (P, N), (N,), (P, N), (N,), (N, P)]
+    acc = tuple(jnp.zeros(s) for s in grad_shapes)
+
+    batched = jax.jit(
+        lambda W_c, xb, hpb, hb, ab, cb, vb, a: M.layer_adjoint_grad_batched(
+            W_c, xb, hpb, hb, ab, cb, vb, a, window=W
+        )
+    )
+
+    live = 2  # items [0, live) real, the rest zero-padded
+    pad = lambda x: x.at[live:].set(0.0)
+    got = batched(
+        inp["W_c"], pad(inp["xhat_b"]), pad(inp["hprev_b"]), pad(inp["h_b"]),
+        pad(inp["a_ext_b"]), pad(inp["c_ext_b"]), pad(inp["v_ext_b"]), acc,
+    )
+
+    single = jax.jit(
+        lambda W_c, x, hp, h, a, c, v: M.layer_adjoint_grad(
+            W_c, x, hp, h, a, c, v, window=W
+        )
+    )
+    want = acc
+    for i in range(live):
+        g = single(
+            inp["W_c"], inp["xhat_b"][i], inp["hprev_b"][i], inp["h_b"][i],
+            inp["a_ext_b"][i], inp["c_ext_b"][i], inp["v_ext_b"][i],
+        )
+        want = tuple(w + gi for w, gi in zip(want, g))
+    for name, w, g in zip(M.PARAM_FIELDS, want, got):
+        # ±0 tolerated (float equality), everything else must match bitwise.
+        assert np.array_equal(np.asarray(w), np.asarray(g)), f"padded d{name}"
+
+
 def test_layer_step_batched_rows_match_single_step():
     """The serving ABI contract: row b of the batched step equals
     ``layer_step`` on row b, bit for bit (rows are independent — any

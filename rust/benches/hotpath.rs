@@ -202,6 +202,86 @@ fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
         results.push(s);
     }
 
+    // 5. Dispatch amortization (ISSUE 5): one layer's first M chunk items
+    // through the single-item loop (M dispatches + host accumulation) vs
+    // one batched call (1 dispatch, on-device reduction). Same work per
+    // iteration, so the mean ratio IS the per-group speedup; `adjsh bench
+    // hotpath` renders the pair with a calls/s + speedup column.
+    if arts.manifest.entries.contains_key("layer_adjoint_grad_batched") {
+        use adjoint_sharding::runtime::{ArgRef, ConstKey};
+        use adjoint_sharding::sharding::BatchGroup;
+
+        let entry_b = arts.entry("layer_adjoint_grad_batched").unwrap();
+        let m = adjoint_sharding::exec::batched_entry_width(&entry_b.spec).unwrap();
+        let take = m.min(dims.num_chunks());
+        let group = BatchGroup { layer: 0, ids: (0..take).collect() };
+        let wc = arts
+            .staged_const(ConstKey::LayerParam { layer: 0, field: 6 }, params.layers[0].w_c())
+            .unwrap();
+
+        let mut grads = GradSet::zeros(&dims);
+        let mut stage = ItemStage::new();
+        let mut outs: Vec<Tensor> = entry
+            .spec
+            .outputs
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        println!(
+            "\n-- adjoint dispatch amortization ({take} items/group, batched entry M={m}) --\n"
+        );
+        let s = bench("adjoint_dispatch_single_item", 3, 20, 1.0, || {
+            for id in 0..take {
+                let item = items[id];
+                adjoint::gather_item_args_into(&dims, &fleet, &item, &mut stage).unwrap();
+                let args = [
+                    ArgRef::C(wc.as_ref()),
+                    ArgRef::F(stage.view(stage_slot::XHAT)),
+                    ArgRef::F(stage.view(stage_slot::HPREV)),
+                    ArgRef::F(stage.view(stage_slot::H)),
+                    ArgRef::F(stage.view(stage_slot::A_EXT)),
+                    ArgRef::F(stage.view(stage_slot::C_EXT)),
+                    ArgRef::F(stage.view(stage_slot::V_EXT)),
+                ];
+                entry.run_timed_into(&args, &mut outs).unwrap();
+                grads.accumulate_layer(0, &outs).unwrap();
+            }
+            grads.layers[0].0[0].data()[0]
+        });
+        println!("{s}");
+        results.push(s);
+
+        let dev0 = &fleet.devices[fleet.device_of_layer(0)];
+        let s = bench("adjoint_dispatch_batched", 3, 20, 1.0, || {
+            adjoint::gather_group_args_into_from(
+                &dims, dev0, &items, &group, m, &mut stage,
+            )
+            .unwrap();
+            let acc = &grads.layers[0].0;
+            let args = [
+                ArgRef::C(wc.as_ref()),
+                ArgRef::F(stage.view(stage_slot::XHAT)),
+                ArgRef::F(stage.view(stage_slot::HPREV)),
+                ArgRef::F(stage.view(stage_slot::H)),
+                ArgRef::F(stage.view(stage_slot::A_EXT)),
+                ArgRef::F(stage.view(stage_slot::C_EXT)),
+                ArgRef::F(stage.view(stage_slot::V_EXT)),
+                ArgRef::F(acc[0].view().unwrap()),
+                ArgRef::F(acc[1].view().unwrap()),
+                ArgRef::F(acc[2].view().unwrap()),
+                ArgRef::F(acc[3].view().unwrap()),
+                ArgRef::F(acc[4].view().unwrap()),
+                ArgRef::F(acc[5].view().unwrap()),
+                ArgRef::F(acc[6].view().unwrap()),
+            ];
+            entry_b.run_timed_into(&args, &mut outs).unwrap();
+            outs[0].data()[0]
+        });
+        println!("{s}");
+        results.push(s);
+        println!("   ({take} PJRT dispatches/group amortized to 1 by the batched entry)");
+    }
+
     // Per-entry latency spread: min = steady state, max = cold first call.
     for (name, st) in arts.all_stats() {
         println!(

@@ -16,7 +16,7 @@
 //! computes the windowed products C^t·∏A on the fly, which is the paper's
 //! "computed on the fly in the gradient computation phase" option (§4.2).
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::{ModelDims, SchedCfg};
 use crate::exec::{self, ExecCtx, Executor, SimExecutor};
@@ -24,7 +24,7 @@ use crate::model::{GradSet, ParamSet};
 use crate::pipeline::ForwardTiming;
 use crate::runtime::{ArtifactSet, EntrySpec};
 use crate::schedule::{self, BackwardPlan, SchedItem};
-use crate::sharding::{plan_chunks, WorkItem};
+use crate::sharding::{plan_chunks, BatchGroup, WorkItem};
 use crate::tensor::{Arena, Arg, Tensor, TensorView};
 use crate::topology::{ActKind, ActSource, Fleet};
 
@@ -41,9 +41,16 @@ pub struct AdjointOutput {
     /// threaded executor this is what real concurrency bought vs
     /// `wall_s`; under sim it is ≈ `wall_s` plus staging overhead.
     pub host_s: f64,
+    /// Host staging seconds spent while a PJRT execution was in flight
+    /// on the same lane (Σ over lanes) — an upper bound on the staging
+    /// the double-buffered batched dispatch truly hid; 0 on the
+    /// single-item path (DESIGN.md §Batched-Backward).
+    pub overlap_s: f64,
     /// Paper-unit VJPs performed (Σ over items of item.vjp_units).
     pub vjp_units: u64,
-    /// Number of chunk executions dispatched.
+    /// Number of PJRT executions dispatched: one per work item on the
+    /// single-item path, one per [`BatchGroup`] (≈ items / M) when the
+    /// batched entry dispatches.
     pub calls: u64,
     /// The virtual-time plan the phase ran under: per-slot timelines,
     /// binding constraints, peak concurrent transients, critical path.
@@ -65,14 +72,18 @@ pub mod stage_slot {
     pub const COUNT: usize = 6;
 }
 
-/// Reusable staging buffers for one device's work items. All items share
-/// one shape family (fixed C and W), so after the first item per device
+/// Reusable staging buffers for one lane's work items. All items share
+/// one shape family (fixed C and W), so after the first item per lane
 /// the gather performs zero heap allocations — asserted via
-/// [`ItemStage::alloc_events`] in the zero-copy tests.
+/// [`ItemStage::alloc_events`] in the zero-copy tests. Slots are rank 2
+/// on the single-item path and rank 3 (`[M, rows, cols]`, batch-major)
+/// on the batched path; one stage serves either shape family (switching
+/// grows the arena once, then reuse is free again).
 #[derive(Debug, Default)]
 pub struct ItemStage {
     arena: Arena,
-    shapes: [[usize; 2]; stage_slot::COUNT],
+    shapes: [[usize; 3]; stage_slot::COUNT],
+    ranks: [usize; stage_slot::COUNT],
 }
 
 impl ItemStage {
@@ -81,13 +92,24 @@ impl ItemStage {
     }
 
     fn fill(&mut self, slot: usize, rows: usize, cols: usize) -> &mut [f32] {
-        self.shapes[slot] = [rows, cols];
+        self.shapes[slot] = [rows, cols, 1];
+        self.ranks[slot] = 2;
         self.arena.slot(slot, rows * cols)
+    }
+
+    /// Batch-major slab for `m` stacked items of one slot.
+    fn fill3(&mut self, slot: usize, m: usize, rows: usize, cols: usize) -> &mut [f32] {
+        self.shapes[slot] = [m, rows, cols];
+        self.ranks[slot] = 3;
+        self.arena.slot(slot, m * rows * cols)
     }
 
     /// Borrowed view of one staged argument (see [`stage_slot`]).
     pub fn view(&self, slot: usize) -> TensorView<'_> {
-        TensorView::new(&self.shapes[slot], self.arena.get(slot))
+        // Never-filled slots read as an empty rank-2 view (the pre-batch
+        // behavior), not a scalar.
+        let rank = if self.ranks[slot] == 0 { 2 } else { self.ranks[slot] };
+        TensorView::new(&self.shapes[slot][..rank], self.arena.get(slot))
             .expect("stage invariant: shape matches slot length")
     }
 
@@ -105,6 +127,13 @@ impl ItemStage {
 pub struct StagePool {
     stages: Vec<ItemStage>,
     outs: Vec<Tensor>,
+    /// Which entry the pooled output buffers were prepared for. Keyed by
+    /// *name*, not just output shapes: the single-item and batched
+    /// adjoint entries share identical output shapes but use the buffers
+    /// differently (accumulate-into vs swap-with-GradSet), and silently
+    /// sharing them across entries let one path observe the other's
+    /// leftovers (regression-tested in `rust/tests/hotpath_zero_copy.rs`).
+    outs_entry: String,
 }
 
 impl StagePool {
@@ -112,10 +141,12 @@ impl StagePool {
         Self::default()
     }
 
-    /// Ensure the pooled output buffers match the entry's output specs
-    /// (rebuilt only when the artifact set changes).
+    /// Ensure the pooled output buffers match the entry's output specs,
+    /// rebuilt (zeroed) whenever the entry *name* or any output shape
+    /// changes — shape equality alone is not sufficient identity.
     pub fn prepare_outs(&mut self, spec: &EntrySpec) {
-        let ok = self.outs.len() == spec.outputs.len()
+        let ok = self.outs_entry == spec.name
+            && self.outs.len() == spec.outputs.len()
             && self
                 .outs
                 .iter()
@@ -123,6 +154,7 @@ impl StagePool {
                 .all(|(t, s)| t.shape() == s.shape.as_slice());
         if !ok {
             self.outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            self.outs_entry = spec.name.clone();
         }
     }
 
@@ -162,6 +194,62 @@ pub fn gather_item_args_into(
     gather_item_args_into_from(dims, dev, item, stage)
 }
 
+/// (rows, cols) of one staged slot for chunk length `c`, window `w` and
+/// model dims `n`/`p` — the shape family both the single-item and
+/// batch-major gathers share.
+fn slot_shape(slot: usize, c: usize, w: usize, n: usize, p: usize) -> [usize; 2] {
+    use stage_slot::*;
+    match slot {
+        XHAT => [c, p],
+        HPREV | H => [c, n],
+        A_EXT | C_EXT => [c + w, n],
+        V_EXT => [c + w, p],
+        _ => unreachable!("unknown stage slot {slot}"),
+    }
+}
+
+/// Stage one slot of one work item into `out` — THE per-item slicing /
+/// padding copy sequence, shared verbatim by [`gather_item_args_into_from`]
+/// (single-item, `out` = the whole slot) and
+/// [`gather_group_args_into_from`] (batched, `out` = the item's sub-slab).
+fn stage_item_slot(
+    src: &dyn ActSource,
+    item: &WorkItem,
+    w: usize,
+    slot: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    use stage_slot::*;
+    let (i0, c) = (item.chunk_start, item.chunk_len);
+    match slot {
+        XHAT => src.act(item.layer, ActKind::Xhat)?.slice_rows_into(i0, c, out),
+        HPREV => {
+            // h^{i-1} for i in the chunk; h^{-1} = h0 = 0 at the sequence
+            // start (the fused form of slice_rows(0, c) + shift_down).
+            let h = src.act(item.layer, ActKind::H)?;
+            let n = h.shape()[1];
+            if i0 == 0 {
+                out[..n].fill(0.0);
+                out[n..].copy_from_slice(&h.data()[..(c - 1) * n]);
+                Ok(())
+            } else {
+                h.slice_rows_into(i0 - 1, c, out)
+            }
+        }
+        H => src.act(item.layer, ActKind::H)?.slice_rows_into(i0, c, out),
+        A_EXT => src
+            .act(item.layer, ActKind::A)?
+            .slice_rows_padded_into(i0, c + w, out),
+        C_EXT => src
+            .act(item.layer, ActKind::C)?
+            .slice_rows_padded_into(i0, c + w, out),
+        V_EXT => src
+            .act(usize::MAX, ActKind::Cotangent)?
+            .slice_rows_padded_into(i0, c + w, out),
+        _ => unreachable!("unknown stage slot {slot}"),
+    }
+}
+
 /// [`gather_item_args_into`] against any [`ActSource`] — the device-
 /// scoped core the executor workers run on their `Arc` snapshots.
 pub fn gather_item_args_into_from(
@@ -170,32 +258,68 @@ pub fn gather_item_args_into_from(
     item: &WorkItem,
     stage: &mut ItemStage,
 ) -> Result<()> {
-    use stage_slot::*;
-    let (i0, c, w) = (item.chunk_start, item.chunk_len, dims.w);
-    let h = src.act(item.layer, ActKind::H)?;
-    let a = src.act(item.layer, ActKind::A)?;
-    let cg = src.act(item.layer, ActKind::C)?;
-    let xhat = src.act(item.layer, ActKind::Xhat)?;
-    let v = src.act(usize::MAX, ActKind::Cotangent)?;
-    let p = xhat.shape()[1];
-    let n = h.shape()[1];
-
-    xhat.slice_rows_into(i0, c, stage.fill(XHAT, c, p))?;
-    {
-        // h^{i-1} for i in the chunk; h^{-1} = h0 = 0 at the sequence
-        // start (the fused form of slice_rows(0, c) + shift_down).
-        let out = stage.fill(HPREV, c, n);
-        if i0 == 0 {
-            out[..n].fill(0.0);
-            out[n..].copy_from_slice(&h.data()[..(c - 1) * n]);
-        } else {
-            h.slice_rows_into(i0 - 1, c, out)?;
-        }
+    let w = dims.w;
+    for slot in 0..stage_slot::COUNT {
+        let [rows, cols] = slot_shape(slot, item.chunk_len, w, dims.n, dims.p);
+        let buf = stage.fill(slot, rows, cols);
+        stage_item_slot(src, item, w, slot, buf)?;
     }
-    h.slice_rows_into(i0, c, stage.fill(H, c, n))?;
-    a.slice_rows_padded_into(i0, c + w, stage.fill(A_EXT, c + w, n))?;
-    cg.slice_rows_padded_into(i0, c + w, stage.fill(C_EXT, c + w, n))?;
-    v.slice_rows_padded_into(i0, c + w, stage.fill(V_EXT, c + w, p))?;
+    Ok(())
+}
+
+/// Batch-major gather for one [`BatchGroup`]: stage the group's items —
+/// and zero-pad the ragged tail up to the entry's static width
+/// `m_static` — so slot `s` becomes an `[M, rows_s, cols_s]` slab, each
+/// item filled by the same per-slot core as the single-item gather (so
+/// member sub-slabs are bit-identical to single-item stages by
+/// construction). Zero-padding the whole padded item keeps its on-device
+/// partials at exactly ±0: zero `v_ext` kills every gradient term (the
+/// kernel's padding contract, applied item-wise), and adding signed
+/// zeros leaves every accumulator *value* unchanged (the sign of an
+/// exactly-zero element may normalize to +0 — f32 `==` treats that as
+/// equal, and so do all the equality tests; see DESIGN.md
+/// §Batched-Backward).
+pub fn gather_group_args_into_from(
+    dims: &ModelDims,
+    src: &dyn ActSource,
+    items: &[WorkItem],
+    group: &BatchGroup,
+    m_static: usize,
+    stage: &mut ItemStage,
+) -> Result<()> {
+    if group.ids.is_empty() || group.ids.len() > m_static {
+        bail!(
+            "batch group of {} items does not fit the entry's static width {m_static}",
+            group.ids.len()
+        );
+    }
+    let w = dims.w;
+    for slot in 0..stage_slot::COUNT {
+        let [rows, cols] = slot_shape(slot, dims.c, w, dims.n, dims.p);
+        let per = rows * cols;
+        let slab = stage.fill3(slot, m_static, rows, cols);
+        for (mi, &id) in group.ids.iter().enumerate() {
+            let item = items
+                .get(id)
+                .with_context(|| format!("batch group references unknown item {id}"))?;
+            if item.layer != group.layer {
+                bail!(
+                    "batch group for layer {} contains item {id} of layer {}",
+                    group.layer,
+                    item.layer
+                );
+            }
+            if item.chunk_len != dims.c {
+                bail!(
+                    "item {id} chunk length {} != static chunk size {}",
+                    item.chunk_len,
+                    dims.c
+                );
+            }
+            stage_item_slot(src, item, w, slot, &mut slab[mi * per..(mi + 1) * per])?;
+        }
+        slab[group.ids.len() * per..].fill(0.0);
+    }
     Ok(())
 }
 
@@ -309,11 +433,19 @@ pub fn backward_pooled(
     pool: &mut StagePool,
     executor: &mut dyn Executor,
 ) -> Result<AdjointOutput> {
-    let entry = arts.entry("layer_adjoint_grad")?;
     let items = plan_chunks(dims.k, dims.t, dims.c)?;
 
-    let transient_bytes =
-        (entry.spec.input_bytes() + entry.spec.output_bytes()) as u64;
+    // Batched dispatch width: the artifact's static M (from the batched
+    // entry's manifest shape) capped by `--adjoint-batch`; 1 — the
+    // single-item path, bit-identical to the pre-batching dispatch — when
+    // the artifact set predates the batched entry (serve's fallback
+    // pattern) or the user forces it. Only manifest *specs* are read
+    // here; the executor compiles whichever entry it actually dispatches
+    // (so batched phases skip the dead single-item compile, like serve's
+    // lanes skip the dead `layer_step`).
+    let batched_spec = arts.manifest.entries.get("layer_adjoint_grad_batched");
+    let static_m = batched_spec.map(exec::batched_entry_width).transpose()?;
+    let mut width = exec::resolve_adjoint_batch(sched.adjoint_batch, static_m);
 
     // Admission headroom per device: the HBM budget minus what is already
     // resident (activations, cotangents, params) when the phase starts.
@@ -323,9 +455,43 @@ pub fn backward_pooled(
         .map(|d| Some(fleet.cfg.hbm_bytes.saturating_sub(d.mem.live)))
         .collect();
 
-    // The dispatch contract: analytic plan → per-device queues. Both
-    // backends execute exactly this item set in pinned id order per lane.
-    let dispatch = exec::plan_dispatch(dims, fleet, &items, sched, transient_bytes, &mem_caps)?;
+    // One batched call always stages the *full* static-M slab (ragged
+    // groups zero-pad, they don't shrink the literals), so if the
+    // tightest device cannot hold one whole call the honest move is to
+    // fall back to single-item dispatch — not to admit amortized shares
+    // the real call would blow through.
+    if width > 1 {
+        let spec = batched_spec.expect("width > 1 implies the batched entry exists");
+        let call_bytes = (spec.input_bytes() + spec.output_bytes()) as u64;
+        let min_headroom = mem_caps.iter().flatten().min().copied().unwrap_or(u64::MAX);
+        if call_bytes > min_headroom {
+            width = 1;
+        }
+    }
+
+    // Per-item share of the in-flight transient working set the memory
+    // admission charges: one batched call holds M items' inputs plus the
+    // running accumulators and outputs at once (M× inputs, 1× outputs —
+    // `memcost::adjoint_batched_transient_bytes` is the closed form the
+    // manifest numbers are cross-checked against). A packed group of
+    // `width` admitted items therefore accounts for one whole call; a
+    // ragged tail under-charges by its padded fraction, which stays
+    // bounded because the real dispatch holds at most one call in flight
+    // per lane and the headroom guard above guarantees that call fits.
+    let transient_bytes = if width > 1 {
+        let spec = batched_spec.expect("width > 1 implies the batched entry exists");
+        let total = (spec.input_bytes() + spec.output_bytes()) as u64;
+        total.saturating_add(width as u64 - 1) / width as u64
+    } else {
+        let spec = arts.manifest.entry("layer_adjoint_grad")?;
+        (spec.input_bytes() + spec.output_bytes()) as u64
+    };
+
+    // The dispatch contract: analytic plan → per-device queues (and their
+    // batch-group packing). Both backends execute exactly this item set
+    // in pinned id order per lane.
+    let dispatch =
+        exec::plan_dispatch(dims, fleet, &items, sched, transient_bytes, &mem_caps, width)?;
 
     // Execute every VJP bundle once; measured seconds become the virtual
     // service costs (the transient working set is "disposed after the
@@ -391,6 +557,7 @@ pub fn backward_pooled(
         virtual_s: plan.backward_s,
         wall_s: outcome.wall_s,
         host_s: outcome.host_s,
+        overlap_s: outcome.overlap_s,
         vjp_units,
         calls: outcome.calls,
         plan,

@@ -138,6 +138,15 @@ pub struct SchedCfg {
     /// chunked-pipeline forward model instead of waiting for the serial
     /// forward to finish (overlaps Alg. 1 and Alg. 4 in virtual time).
     pub overlap: bool,
+    /// Batched backward dispatch width (`--adjoint-batch`): how many
+    /// same-layer work items one `layer_adjoint_grad_batched` call
+    /// carries. 0 = auto (the artifact's static width M when the batched
+    /// entry exists — the default); 1 = single-item dispatch (also the
+    /// forced fallback for pre-batching artifact sets); n ≥ 2 =
+    /// min(n, M). Gradient bits are identical at every width (DESIGN.md
+    /// §Batched-Backward); the width only changes how many PJRT
+    /// dispatches the phase pays.
+    pub adjoint_batch: usize,
 }
 
 impl Default for SchedCfg {
@@ -147,7 +156,9 @@ impl Default for SchedCfg {
         // slot-width of transients. Memory-aware admission is new: in
         // memory-tight configs it serializes items the seed's uncapped
         // makespan over-packed, reporting honestly longer phases.
-        Self { policy: PolicyKind::Fifo, overlap: false }
+        // Batched dispatch defaults to auto: bit-identical gradients,
+        // ~M× fewer PJRT calls.
+        Self { policy: PolicyKind::Fifo, overlap: false, adjoint_batch: 0 }
     }
 }
 

@@ -53,13 +53,16 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::adjoint::{
-    gather_item_args_into, gather_item_args_into_from, stage_for, stage_slot, StagePool,
+    gather_group_args_into_from, gather_item_args_into, gather_item_args_into_from, stage_for,
+    stage_slot, ItemStage, StagePool,
 };
 use crate::config::{ModelDims, SchedCfg};
 use crate::model::{GradSet, ParamSet};
-use crate::runtime::{ArgRef, ArtifactSet, Compiled, ConstCache, ConstKey, Manifest, Runtime};
+use crate::runtime::{
+    ArgRef, ArtifactSet, Compiled, ConstCache, ConstKey, EntrySpec, InFlight, Manifest, Runtime,
+};
 use crate::schedule::{self, BackwardPlan, SchedItem};
-use crate::sharding::WorkItem;
+use crate::sharding::{plan_batches, BatchGroup, WorkItem};
 use crate::tensor::Tensor;
 use crate::topology::{ActKind, ActSource, Fleet};
 
@@ -151,6 +154,44 @@ pub fn lane_count(requested: usize, max_lanes: usize) -> usize {
     }
 }
 
+/// Resolve the batched backward dispatch width (`--adjoint-batch`)
+/// against the artifact's static width: no batched entry in the manifest
+/// ⇒ 1 (the single-item fallback, bit-identical to the pre-batching
+/// dispatch); requested 0 ⇒ the artifact's full width; otherwise
+/// `min(requested, static)` — runtime widths below the static M dispatch
+/// short groups into the same entry via zero padding, never a recompile.
+pub fn resolve_adjoint_batch(requested: usize, static_m: Option<usize>) -> usize {
+    match static_m {
+        None => 1,
+        Some(m) => {
+            let m = m.max(1);
+            if requested == 0 {
+                m
+            } else {
+                requested.min(m)
+            }
+        }
+    }
+}
+
+/// Static batch width M of a `layer_adjoint_grad_batched` entry, read
+/// back from its manifest shapes (input 1 is `xhat_b: [M, C, P]`).
+pub fn batched_entry_width(spec: &EntrySpec) -> Result<usize> {
+    let xhat_b = spec
+        .inputs
+        .get(1)
+        .with_context(|| format!("entry '{}' has no batched input shapes", spec.name))?;
+    if xhat_b.name != "xhat_b" || xhat_b.shape.len() != 3 {
+        bail!(
+            "entry '{}' input 1 is '{}' {:?}, expected batch-major xhat_b [M, C, P]",
+            spec.name,
+            xhat_b.name,
+            xhat_b.shape
+        );
+    }
+    Ok(xhat_b.shape[0].max(1))
+}
+
 // ---------------------------------------------------------------------------
 // The dispatch contract.
 // ---------------------------------------------------------------------------
@@ -171,6 +212,15 @@ pub struct Dispatch {
     /// Per-device item-id queues in pinned ascending-id order — the
     /// execution and gradient-reduction order of every backend.
     pub queues: Vec<Vec<usize>>,
+    /// Resolved batched dispatch width: 1 = single-item entry per call
+    /// (the pre-batching path), > 1 = `layer_adjoint_grad_batched` runs
+    /// each [`BatchGroup`] as one call.
+    pub batch: usize,
+    /// Per-device batch-group packing of `queues` (`plan_batches`),
+    /// precomputed so the grouping is part of the verified contract.
+    /// Singleton groups when `batch == 1` (unused by the single-item
+    /// dispatch, kept for uniform accounting).
+    pub groups: Vec<Vec<BatchGroup>>,
 }
 
 /// Plan the dispatch: schedule `items` analytically under `sched`'s
@@ -193,6 +243,7 @@ pub fn plan_dispatch(
     sched: &SchedCfg,
     transient_bytes: u64,
     mem_caps: &[Option<u64>],
+    batch: usize,
 ) -> Result<Dispatch> {
     let sched_items: Vec<SchedItem> = items
         .iter()
@@ -243,7 +294,11 @@ pub fn plan_dispatch(
     if let Some(missing) = seen.iter().position(|&s| !s) {
         bail!("dispatch plan dropped item {missing}");
     }
-    Ok(Dispatch { items: items.to_vec(), plan, queues })
+    let groups = queues
+        .iter()
+        .map(|q| plan_batches(items, q, batch.max(1)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Dispatch { items: items.to_vec(), plan, queues, batch: batch.max(1), groups })
 }
 
 // ---------------------------------------------------------------------------
@@ -273,7 +328,13 @@ pub struct ExecOutcome {
     /// backend this is what concurrency actually bought; for sim it is
     /// ≈ `wall_s` plus staging overhead.
     pub host_s: f64,
-    /// Chunk executions dispatched.
+    /// Host staging seconds spent while a PJRT execution was in flight on
+    /// the same lane (Σ over lanes) — an upper bound on the batched
+    /// dispatch's truly hidden stage/compute overlap (the device may
+    /// finish mid-gather; see `ExecStats`); 0 on the single-item path.
+    pub overlap_s: f64,
+    /// PJRT executions dispatched (one per item single-item, one per
+    /// batch group batched).
     pub calls: u64,
 }
 
@@ -283,7 +344,9 @@ pub struct ExecOutcome {
 /// its owning device's lane, in ascending id order within the lane),
 /// accumulate each layer's gradients into `grads` (layer slots are
 /// expected zeroed — the trainer's invariant — so the reduction is the
-/// exact float sequence `0 + g₀ + g₁ + …` in id order), and report the
+/// exact float sequence `0 + g₀ + g₁ + …` in id order, whether the adds
+/// run on the host per item or on-device per batch group seeded from the
+/// running accumulators — DESIGN.md §Batched-Backward), and report the
 /// measured per-item seconds.
 pub trait Executor {
     fn kind(&self) -> ExecutorKind;
@@ -318,6 +381,9 @@ impl Executor for SimExecutor {
         dispatch: &Dispatch,
         grads: &mut GradSet,
     ) -> Result<ExecOutcome> {
+        if dispatch.batch > 1 {
+            return sim_execute_batched(ctx, dispatch, grads);
+        }
         use stage_slot::*;
         let t0 = Instant::now();
         let entry = ctx.arts.entry("layer_adjoint_grad")?;
@@ -358,8 +424,160 @@ impl Executor for SimExecutor {
             wall_s += secs;
             calls += 1;
         }
-        Ok(ExecOutcome { item_secs, wall_s, host_s: t0.elapsed().as_secs_f64(), calls })
+        Ok(ExecOutcome {
+            item_secs,
+            wall_s,
+            host_s: t0.elapsed().as_secs_f64(),
+            overlap_s: 0.0,
+            calls,
+        })
     }
+}
+
+/// Complete one in-flight batch group: block for the updated running
+/// accumulators and swap them into the layer's slots (`acc` — the
+/// GradSet's layer tensors for the sim backend, the worker's partial for
+/// threaded). The outputs ARE the new accumulators, folded on-device in
+/// ascending item-id order seeded from the staged `acc`, so the swap
+/// completes the exact `acc + g₀ + g₁ + …` float sequence the single-item
+/// path performs. Measured group seconds are attributed evenly to the
+/// member items (the virtual-time re-plan's per-item service costs).
+fn finish_group(
+    fly: InFlight<'_>,
+    outs: &mut [Tensor],
+    acc: &mut [Tensor],
+    group: &BatchGroup,
+    item_secs: &mut dyn FnMut(usize, f64),
+    wall_s: &mut f64,
+) -> Result<f64> {
+    let secs = fly.wait_into(outs)?;
+    for (a, o) in acc.iter_mut().zip(outs.iter_mut()) {
+        std::mem::swap(a, o);
+    }
+    let share = secs / group.ids.len() as f64;
+    for &id in &group.ids {
+        item_secs(id, share);
+    }
+    *wall_s += secs;
+    Ok(secs)
+}
+
+/// Assemble the 14-argument batched-entry call: `W_c`, the six
+/// batch-major slabs, and the layer's running accumulators.
+fn batched_args<'a>(
+    w_c: &'a crate::runtime::StagedConst,
+    stage: &'a ItemStage,
+    acc: &'a [Tensor],
+) -> Result<[ArgRef<'a>; 14]> {
+    use stage_slot::*;
+    Ok([
+        ArgRef::C(w_c),
+        ArgRef::F(stage.view(XHAT)),
+        ArgRef::F(stage.view(HPREV)),
+        ArgRef::F(stage.view(H)),
+        ArgRef::F(stage.view(A_EXT)),
+        ArgRef::F(stage.view(C_EXT)),
+        ArgRef::F(stage.view(V_EXT)),
+        ArgRef::F(acc[0].view()?),
+        ArgRef::F(acc[1].view()?),
+        ArgRef::F(acc[2].view()?),
+        ArgRef::F(acc[3].view()?),
+        ArgRef::F(acc[4].view()?),
+        ArgRef::F(acc[5].view()?),
+        ArgRef::F(acc[6].view()?),
+    ])
+}
+
+/// The batched sim dispatch: per lane, batch groups execute in ascending
+/// order through a **double-buffered stage pair** — group g+1 is gathered
+/// into the lane's other stage while group g is in flight on PJRT
+/// (`Compiled::launch` / `InFlight::wait_into`), the first real
+/// stage/compute overlap in the codebase. Gradient bits are unchanged
+/// from the single-item path: the entry folds each group's partials into
+/// the layer's running accumulators on-device, in pinned ascending item
+/// order (DESIGN.md §Batched-Backward).
+fn sim_execute_batched(
+    ctx: ExecCtx<'_>,
+    dispatch: &Dispatch,
+    grads: &mut GradSet,
+) -> Result<ExecOutcome> {
+    let t0 = Instant::now();
+    let entry = ctx.arts.entry("layer_adjoint_grad_batched")?;
+    let m_static = batched_entry_width(&entry.spec)?;
+
+    let w_c: Vec<_> = (0..ctx.dims.k)
+        .map(|k| {
+            ctx.arts.staged_const(
+                ConstKey::LayerParam { layer: k, field: 6 },
+                ctx.params.layers[k].w_c(),
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    ctx.pool.prepare_outs(&entry.spec);
+    let (stages, outs) = ctx.pool.split_mut();
+
+    let mut item_secs = vec![0.0f64; dispatch.items.len()];
+    let mut wall_s = 0.0;
+    let mut overlap_s = 0.0;
+    let mut calls = 0u64;
+    for (dev, groups) in dispatch.groups.iter().enumerate() {
+        let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
+        for (gi, group) in groups.iter().enumerate() {
+            // Stage pair per lane: parity picks the buffer not used by
+            // the in-flight group. Today `launch` copies the views into
+            // literals before returning, so a single stage would already
+            // be safe to reuse — the pair is the contract that stays
+            // correct if launch ever stages zero-copy from the arena,
+            // and it keeps both in-flight groups' host slabs inspectable.
+            let stage = stage_for(stages, dev * 2 + gi % 2);
+            let tg = Instant::now();
+            gather_group_args_into_from(
+                ctx.dims,
+                &ctx.fleet.devices[dev],
+                &dispatch.items,
+                group,
+                m_static,
+                stage,
+            )?;
+            if pending.is_some() {
+                let hidden = tg.elapsed().as_secs_f64();
+                overlap_s += hidden;
+                entry.note_overlap(hidden);
+            }
+            if let Some((fly, g)) = pending.take() {
+                finish_group(
+                    fly,
+                    outs,
+                    &mut grads.layers[g.layer].0,
+                    g,
+                    &mut |id, s| item_secs[id] = s,
+                    &mut wall_s,
+                )?;
+            }
+            let args =
+                batched_args(w_c[group.layer].as_ref(), stage, &grads.layers[group.layer].0)?;
+            pending = Some((entry.launch(&args)?, group));
+            calls += 1;
+        }
+        if let Some((fly, g)) = pending.take() {
+            finish_group(
+                fly,
+                outs,
+                &mut grads.layers[g.layer].0,
+                g,
+                &mut |id, s| item_secs[id] = s,
+                &mut wall_s,
+            )?;
+        }
+    }
+    Ok(ExecOutcome {
+        item_secs,
+        wall_s,
+        host_s: t0.elapsed().as_secs_f64(),
+        overlap_s,
+        calls,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -367,11 +585,15 @@ impl Executor for SimExecutor {
 // ---------------------------------------------------------------------------
 
 /// One device's share of a phase, shipped to a worker: its queue (item
-/// ids ascending), an `Arc` snapshot of its activation store (including
-/// the replicated cotangents), and the `W_c` values its layers need.
+/// ids ascending), the queue's batch-group packing, an `Arc` snapshot of
+/// its activation store (including the replicated cotangents), and the
+/// `W_c` values its layers need.
 struct DeviceWork {
     device: usize,
     items: Vec<(usize, WorkItem)>,
+    /// The device queue's [`BatchGroup`] packing from the dispatch
+    /// contract (used when `WorkerJob::batch > 1`).
+    groups: Vec<BatchGroup>,
     acts: Vec<((usize, ActKind), Arc<Tensor>)>,
     w_c: Vec<(usize, Arc<Tensor>)>,
 }
@@ -381,6 +603,12 @@ struct DeviceWork {
 struct WorkerJob {
     dims: ModelDims,
     artifacts_dir: PathBuf,
+    /// Resolved batched dispatch width (`Dispatch::batch`): 1 = the
+    /// single-item entry per call, > 1 = batched groups.
+    batch: usize,
+    /// The phase's full work-item table (`Dispatch::items`) — batch
+    /// groups reference it by global item id.
+    items: Vec<WorkItem>,
     devices: Vec<DeviceWork>,
     reply: mpsc::Sender<Result<WorkerDone>>,
 }
@@ -392,6 +620,7 @@ struct WorkerDone {
     layer_grads: Vec<(usize, Vec<Tensor>)>,
     item_secs: Vec<(usize, f64)>,
     wall_s: f64,
+    overlap_s: f64,
     calls: u64,
 }
 
@@ -411,12 +640,19 @@ struct WorkerHandle {
 /// reusable staging arenas — the PR-2 zero-copy invariants, worker-local.
 struct WorkerState {
     dir: PathBuf,
-    // Field order = drop order: the compiled executable and staged
+    // Field order = drop order: the compiled executables and staged
     // literals go before the client that owns their backing runtime.
-    entry: Compiled,
+    //
+    // Both entries compile lazily on first dispatch of their kind (kept
+    // warm across phases), so a batched phase never pays a dead
+    // single-item compile and vice versa — the same skip serve's lanes
+    // apply to the dead `layer_step`.
+    entry: Option<Compiled>,
+    entry_batched: Option<Compiled>,
     consts: ConstCache,
     runtime: Runtime,
-    stages: Vec<crate::adjoint::ItemStage>,
+    manifest: Manifest,
+    stages: Vec<ItemStage>,
     outs: Vec<Tensor>,
 }
 
@@ -424,17 +660,38 @@ impl WorkerState {
     fn open(dir: &Path) -> Result<Self> {
         let runtime = Runtime::cpu().context("worker PJRT client")?;
         let manifest = Manifest::load(dir)?;
-        let spec = manifest.entry("layer_adjoint_grad")?.clone();
-        let entry = runtime.compile_entry(dir, &spec)?;
+        // The output buffer set is shared by both entries (identical
+        // gradient shapes — asserted again at decomposition time).
+        let spec = manifest.entry("layer_adjoint_grad")?;
         let outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
         Ok(Self {
             dir: dir.to_path_buf(),
-            entry,
+            entry: None,
+            entry_batched: None,
             consts: ConstCache::new(),
             runtime,
+            manifest,
             stages: Vec::new(),
             outs,
         })
+    }
+
+    /// Get (compiling on first use) the single-item entry.
+    fn single(&mut self) -> Result<&Compiled> {
+        if self.entry.is_none() {
+            let spec = self.manifest.entry("layer_adjoint_grad")?.clone();
+            self.entry = Some(self.runtime.compile_entry(&self.dir, &spec)?);
+        }
+        Ok(self.entry.as_ref().expect("just compiled"))
+    }
+
+    /// Get (compiling on first use) the batched entry.
+    fn batched(&mut self) -> Result<&Compiled> {
+        if self.entry_batched.is_none() {
+            let spec = self.manifest.entry("layer_adjoint_grad_batched")?.clone();
+            self.entry_batched = Some(self.runtime.compile_entry(&self.dir, &spec)?);
+        }
+        Ok(self.entry_batched.as_ref().expect("just compiled"))
     }
 }
 
@@ -466,6 +723,12 @@ fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<Wo
         *state = Some(WorkerState::open(&job.artifacts_dir)?);
     }
     let st = state.as_mut().expect("worker state just ensured");
+    if job.batch > 1 {
+        return run_worker_job_batched(st, job);
+    }
+    st.single()?; // compile before the disjoint field borrows below
+    let WorkerState { entry, consts, stages, outs, .. } = st;
+    let entry = entry.as_ref().expect("single-item entry just ensured");
 
     let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = Vec::new();
@@ -477,15 +740,14 @@ fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<Wo
             work.acts.iter().cloned().collect();
         let src = SnapshotActs(&acts);
         let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
-        let stage = stage_for(&mut st.stages, work.device);
+        let stage = stage_for(stages, work.device);
         for &(id, item) in &work.items {
             gather_item_args_into_from(&job.dims, &src, &item, stage)?;
             let w_c_t = w_c
                 .get(&item.layer)
                 .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
-            let wc = st
-                .consts
-                .staged(ConstKey::LayerParam { layer: item.layer, field: 6 }, w_c_t)?;
+            let wc =
+                consts.staged(ConstKey::LayerParam { layer: item.layer, field: 6 }, w_c_t)?;
             let args = [
                 ArgRef::C(wc.as_ref()),
                 ArgRef::F(stage.view(XHAT)),
@@ -495,14 +757,14 @@ fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<Wo
                 ArgRef::F(stage.view(C_EXT)),
                 ArgRef::F(stage.view(V_EXT)),
             ];
-            let secs = st.entry.run_timed_into(&args, &mut st.outs)?;
+            let secs = entry.run_timed_into(&args, outs)?;
             // Pinned reduction: the lane is serial and its queue is
             // ascending-id, so this is the exact `0 + g₀ + g₁ + …`
             // sequence the sim backend performs for this layer.
-            let acc = layer_grads.entry(item.layer).or_insert_with(|| {
-                st.outs.iter().map(|t| Tensor::zeros(t.shape())).collect()
-            });
-            for (a, g) in acc.iter_mut().zip(&st.outs) {
+            let acc = layer_grads
+                .entry(item.layer)
+                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
+            for (a, g) in acc.iter_mut().zip(outs.iter()) {
                 a.add_assign(g)?;
             }
             item_secs.push((id, secs));
@@ -515,6 +777,72 @@ fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<Wo
         layer_grads: layer_grads.into_iter().collect(),
         item_secs,
         wall_s,
+        overlap_s: 0.0,
+        calls,
+    })
+}
+
+/// The batched worker loop: the sim backend's double-buffered group
+/// dispatch, worker-local — per device, gather group g+1 into the lane's
+/// other stage while group g is in flight on the worker's own runtime.
+/// The worker's per-layer partials are the running accumulators the
+/// batched entry folds into (seeded zero, exactly as the single-item
+/// worker's partials start), so the coordinator's ascending-layer merge
+/// is unchanged.
+fn run_worker_job_batched(st: &mut WorkerState, job: &WorkerJob) -> Result<WorkerDone> {
+    st.batched()?; // compile before the disjoint field borrows below
+    let WorkerState { entry_batched, consts, stages, outs, .. } = st;
+    let entry = entry_batched.as_ref().expect("batched entry just ensured");
+    let m_static = batched_entry_width(&entry.spec)?;
+
+    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut item_secs = Vec::new();
+    let mut wall_s = 0.0;
+    let mut overlap_s = 0.0;
+    let mut calls = 0u64;
+
+    for work in &job.devices {
+        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> =
+            work.acts.iter().cloned().collect();
+        let src = SnapshotActs(&acts);
+        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
+        let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
+        for (gi, group) in work.groups.iter().enumerate() {
+            let stage = stage_for(stages, work.device * 2 + gi % 2);
+            let tg = Instant::now();
+            gather_group_args_into_from(&job.dims, &src, &job.items, group, m_static, stage)?;
+            if pending.is_some() {
+                let hidden = tg.elapsed().as_secs_f64();
+                overlap_s += hidden;
+                entry.note_overlap(hidden);
+            }
+            if let Some((fly, g)) = pending.take() {
+                let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
+                finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+            }
+            let w_c_t = w_c
+                .get(&group.layer)
+                .with_context(|| format!("worker job missing W_c for layer {}", group.layer))?;
+            let wc =
+                consts.staged(ConstKey::LayerParam { layer: group.layer, field: 6 }, w_c_t)?;
+            let acc = layer_grads
+                .entry(group.layer)
+                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
+            let args = batched_args(wc.as_ref(), stage, acc)?;
+            pending = Some((entry.launch(&args)?, group));
+            calls += 1;
+        }
+        if let Some((fly, g)) = pending.take() {
+            let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
+            finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+        }
+    }
+
+    Ok(WorkerDone {
+        layer_grads: layer_grads.into_iter().collect(),
+        item_secs,
+        wall_s,
+        overlap_s,
         calls,
     })
 }
@@ -593,6 +921,13 @@ impl Executor for ThreadedExecutor {
             per_worker[dev % n_workers].push(DeviceWork {
                 device: dev,
                 items: queue.iter().map(|&id| (id, dispatch.items[id])).collect(),
+                // Group packing only travels when the batched path will
+                // read it — dead weight otherwise.
+                groups: if dispatch.batch > 1 {
+                    dispatch.groups[dev].clone()
+                } else {
+                    Vec::new()
+                },
                 acts: ctx.fleet.devices[dev].shared_store(),
                 w_c,
             });
@@ -607,6 +942,10 @@ impl Executor for ThreadedExecutor {
             let job = WorkerJob {
                 dims: ctx.dims.clone(),
                 artifacts_dir: ctx.arts.dir.clone(),
+                batch: dispatch.batch,
+                // The global item table is only consulted by the batched
+                // path (groups reference it by id).
+                items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
                 devices: work,
                 reply: reply_tx.clone(),
             };
@@ -632,6 +971,7 @@ impl Executor for ThreadedExecutor {
         let mut by_layer: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
         let mut item_secs = vec![0.0f64; dispatch.items.len()];
         let mut wall_s = 0.0;
+        let mut overlap_s = 0.0;
         let mut calls = 0u64;
         for done in dones {
             for (layer, g) in done.layer_grads {
@@ -643,13 +983,20 @@ impl Executor for ThreadedExecutor {
                 item_secs[id] = secs;
             }
             wall_s += done.wall_s;
+            overlap_s += done.overlap_s;
             calls += done.calls;
         }
         for (layer, g) in &by_layer {
             grads.accumulate_layer(*layer, g)?;
         }
 
-        Ok(ExecOutcome { item_secs, wall_s, host_s: t0.elapsed().as_secs_f64(), calls })
+        Ok(ExecOutcome {
+            item_secs,
+            wall_s,
+            host_s: t0.elapsed().as_secs_f64(),
+            overlap_s,
+            calls,
+        })
     }
 }
 
@@ -700,8 +1047,8 @@ mod tests {
             )
             .unwrap();
             let items = plan_chunks(d.k, d.t, d.c).unwrap();
-            let sched = SchedCfg { policy, overlap: false };
-            let disp = plan_dispatch(&d, &fleet, &items, &sched, 1024, &[]).unwrap();
+            let sched = SchedCfg { policy, overlap: false, ..Default::default() };
+            let disp = plan_dispatch(&d, &fleet, &items, &sched, 1024, &[], 1).unwrap();
             let mut seen = vec![false; items.len()];
             for (dev, q) in disp.queues.iter().enumerate() {
                 assert!(q.windows(2).all(|w| w[0] < w[1]), "queue not ascending");
@@ -713,6 +1060,7 @@ mod tests {
             }
             assert!(seen.iter().all(|&s| s), "dispatch dropped items");
             assert_eq!(disp.plan.schedule.scheduled_items(), items.len());
+            assert_eq!(disp.batch, 1);
         }
     }
 
@@ -722,10 +1070,66 @@ mod tests {
         let fleet = Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, d.k).unwrap();
         let items = plan_chunks(d.k, d.t, d.c).unwrap();
         let sched = SchedCfg::default();
-        let a = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[]).unwrap();
-        let b = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[]).unwrap();
+        let a = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[], 3).unwrap();
+        let b = plan_dispatch(&d, &fleet, &items, &sched, 4096, &[], 3).unwrap();
         assert_eq!(a.queues, b.queues);
+        assert_eq!(a.groups, b.groups);
         assert_eq!(a.plan.schedule.scheduled_items(), b.plan.schedule.scheduled_items());
         assert!((a.plan.backward_s - b.plan.backward_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dispatch_groups_tile_the_queues() {
+        let d = dims(4, 64, 8, 16); // 8 chunks per layer
+        let fleet = Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, d.k).unwrap();
+        let items = plan_chunks(d.k, d.t, d.c).unwrap();
+        let disp =
+            plan_dispatch(&d, &fleet, &items, &SchedCfg::default(), 4096, &[], 3).unwrap();
+        assert_eq!(disp.batch, 3);
+        for (dev, groups) in disp.groups.iter().enumerate() {
+            let flat: Vec<usize> = groups.iter().flat_map(|g| g.ids.clone()).collect();
+            assert_eq!(flat, disp.queues[dev], "groups must tile the queue in order");
+            for g in groups {
+                assert!(!g.ids.is_empty() && g.ids.len() <= 3);
+                assert!(g.ids.iter().all(|&id| items[id].layer == g.layer));
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_adjoint_batch_rules() {
+        // No batched entry in the manifest → single-item fallback.
+        assert_eq!(resolve_adjoint_batch(0, None), 1);
+        assert_eq!(resolve_adjoint_batch(8, None), 1);
+        // Auto (0) takes the artifact's static width.
+        assert_eq!(resolve_adjoint_batch(0, Some(4)), 4);
+        // Explicit requests cap at the static width.
+        assert_eq!(resolve_adjoint_batch(2, Some(4)), 2);
+        assert_eq!(resolve_adjoint_batch(9, Some(4)), 4);
+        assert_eq!(resolve_adjoint_batch(1, Some(4)), 1);
+        // Degenerate M=1 artifacts never batch.
+        assert_eq!(resolve_adjoint_batch(0, Some(1)), 1);
+    }
+
+    #[test]
+    fn batched_entry_width_reads_manifest_shape() {
+        use crate::runtime::{Dtype, TensorSpec};
+        let ts = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: Dtype::F32,
+        };
+        let spec = EntrySpec {
+            name: "layer_adjoint_grad_batched".into(),
+            inputs: vec![ts("W_c", &[4, 8]), ts("xhat_b", &[4, 8, 8])],
+            outputs: vec![],
+        };
+        assert_eq!(batched_entry_width(&spec).unwrap(), 4);
+        let bad = EntrySpec {
+            name: "layer_adjoint_grad".into(),
+            inputs: vec![ts("W_c", &[4, 8]), ts("xhat_c", &[8, 8])],
+            outputs: vec![],
+        };
+        assert!(batched_entry_width(&bad).is_err());
     }
 }

@@ -56,7 +56,7 @@ adjsh — adjoint sharding for very long context SSM training (repro)
 commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
             [--sched-policy fifo|lpt|layer-major] [--overlap]
-            [--executor sim|threaded] [--workers N]
+            [--executor sim|threaded] [--workers N] [--adjoint-batch M]
             [--checkpoint out.ckpt] [--resume in.ckpt]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
@@ -86,6 +86,11 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         .parse()?;
     cfg.sched.overlap =
         cli.bool_or("overlap", false, "paralleled Alg. 4: overlap backward with forward")?;
+    cfg.sched.adjoint_batch = cli.usize_or(
+        "adjoint-batch",
+        0,
+        "batched backward width: 0 = auto (artifact's M), 1 = single-item dispatch",
+    )?;
     cfg.exec.kind = cli
         .str_or("executor", "sim", "backward execution backend: sim|threaded")
         .parse()?;

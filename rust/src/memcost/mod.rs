@@ -322,6 +322,42 @@ impl ServeAdmission {
 }
 
 // ---------------------------------------------------------------------------
+// Batched backward dispatch (DESIGN.md §Batched-Backward): the transient
+// working set of the fused `layer_adjoint_grad_batched` call, closed form.
+// The schedule's memory-aware admission charges each work item the
+// per-item share of its group, so a full in-flight group of M items
+// accounts for the whole call.
+// ---------------------------------------------------------------------------
+
+/// Bytes of the six *variable* per-item inputs of one adjoint work item
+/// (f32): x̂ (C,P), h/h_prev (C,N)×2, a/c_ext (C+W,N)×2, v_ext (C+W,P).
+/// The manifest's `layer_adjoint_grad` spec minus `W_c` — cross-checked
+/// against the lowered artifacts in `rust/tests/exec_equivalence.rs`.
+pub fn adjoint_item_input_bytes(d: &ModelDims) -> u64 {
+    let (c, w, n, p) = (d.c as u64, d.w as u64, d.n as u64, d.p as u64);
+    (c * p + 2 * c * n + (c + w) * (2 * n + p)) * F32
+}
+
+/// Transient working set of one M-wide batched adjoint call: M× the six
+/// per-item inputs, plus `W_c`, the 7 running-accumulator inputs and the
+/// 7 updated-accumulator outputs (each a per-layer parameter set). M = 1
+/// with the acc legs removed models the single-item entry — see
+/// [`adjoint_single_transient_bytes`].
+pub fn adjoint_batched_transient_bytes(d: &ModelDims, m: u64) -> u64 {
+    let wc = (d.n as u64) * (d.p as u64) * F32;
+    let grads = d.params_per_layer() as u64 * F32;
+    m * adjoint_item_input_bytes(d) + wc + 2 * grads
+}
+
+/// Transient working set of one single-item `layer_adjoint_grad` call:
+/// the six variable inputs + `W_c` + the 7 gradient outputs.
+pub fn adjoint_single_transient_bytes(d: &ModelDims) -> u64 {
+    let wc = (d.n as u64) * (d.p as u64) * F32;
+    let grads = d.params_per_layer() as u64 * F32;
+    adjoint_item_input_bytes(d) + wc + grads
+}
+
+// ---------------------------------------------------------------------------
 // Fig. 6 — training time per epoch vs context length.
 // ---------------------------------------------------------------------------
 
@@ -455,6 +491,38 @@ mod tests {
         let tight = ServeAdmission::new(d, serve_model_bytes(d));
         assert_eq!(tight.max_sessions(), 0);
         assert!(!tight.admits(0));
+    }
+
+    #[test]
+    fn adjoint_transient_closed_forms() {
+        let d = ModelDims {
+            name: "t".into(),
+            v: 64,
+            p: 16,
+            n: 16,
+            k: 2,
+            t: 32,
+            w: 8,
+            c: 8,
+            eps: 1e-6,
+        };
+        // Enumerate the shapes by hand (the manifest's input list).
+        let item = (8 * 16 + 2 * 8 * 16 + (8 + 8) * (2 * 16 + 16)) as u64 * F32;
+        assert_eq!(adjoint_item_input_bytes(&d), item);
+        let wc = 16 * 16 * F32;
+        let grads = d.params_per_layer() as u64 * F32;
+        assert_eq!(adjoint_single_transient_bytes(&d), item + wc + grads);
+        // M× inputs, acc in + out once each.
+        for m in [1u64, 2, 4, 8] {
+            assert_eq!(
+                adjoint_batched_transient_bytes(&d, m),
+                m * item + wc + 2 * grads
+            );
+        }
+        // Batching amortizes the fixed legs: per-item cost is monotone
+        // non-increasing in M.
+        let per = |m: u64| adjoint_batched_transient_bytes(&d, m) / m;
+        assert!(per(8) < per(2) && per(2) < per(1));
     }
 
     #[test]

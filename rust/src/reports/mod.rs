@@ -399,7 +399,37 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
         "BENCH_hotpath.json",
         "recorded hot-path profile to render",
     ));
-    render_bench_json(&path, "hot-path profile", "make bench-json")
+    let rows = render_bench_json(&path, "hot-path profile", "make bench-json")?;
+    // Dispatch-amortization pair (ISSUE 5): the single-item loop and the
+    // batched entry do the same per-group work, so mean ratio = speedup
+    // and 1/mean = groups/s (the batched row's "calls/s" is true PJRT
+    // dispatches; the single row pays one dispatch per member item).
+    let mean = |name: &str| {
+        rows.iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, mean_ns)| *mean_ns * 1e-9)
+    };
+    if let (Some(single), Some(batched)) = (
+        mean("adjoint_dispatch_single_item"),
+        mean("adjoint_dispatch_batched"),
+    ) {
+        println!("\n== adjoint dispatch amortization (same work per group) ==\n");
+        let mut t = Table::new(&["dispatch", "mean/group", "groups/s", "speedup"]);
+        t.row(&[
+            "single-item loop".into(),
+            crate::util::bench::fmt_dur(single),
+            format!("{:.1}", 1.0 / single),
+            "1.00×".into(),
+        ]);
+        t.row(&[
+            "batched entry".into(),
+            crate::util::bench::fmt_dur(batched),
+            format!("{:.1}", 1.0 / batched),
+            format!("{:.2}×", single / batched),
+        ]);
+        t.print();
+    }
+    Ok(())
 }
 
 /// Render a recorded serving profile (`BENCH_serve.json`; EXPERIMENTS.md
@@ -414,15 +444,22 @@ pub fn serve_profile(cli: &mut Cli) -> Result<()> {
         &path,
         "serve profile",
         "adjsh serve --bench-json BENCH_serve.json",
-    )
+    )?;
+    Ok(())
 }
 
 /// Shared `BENCH_*.json` table renderer: refuses machine-detectable
 /// placeholders (the `"placeholder": true` convention) so an unmeasured
 /// committed file can never be mistaken for data. `regen` names the
 /// command that records real rows. The p99 column is optional — older
-/// recordings (schema 1 without p99_ns) render with a dash.
-fn render_bench_json(path: &std::path::Path, what: &str, regen: &str) -> Result<()> {
+/// recordings (schema 1 without p99_ns) render with a dash. Returns the
+/// `(name, mean_ns)` rows so callers can derive cross-row columns (the
+/// hotpath dispatch-amortization speedup).
+fn render_bench_json(
+    path: &std::path::Path,
+    what: &str,
+    regen: &str,
+) -> Result<Vec<(String, f64)>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {} (run `{regen}`?)", path.display()))?;
     let j = Json::parse(&text)?;
@@ -447,6 +484,7 @@ fn render_bench_json(path: &std::path::Path, what: &str, regen: &str) -> Result<
         j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("")
     );
     let mut t = Table::new(&["bench", "iters", "mean", "p50", "p95", "p99", "min"]);
+    let mut rows = Vec::with_capacity(results.len());
     for r in results {
         let ns = |k: &str| -> Result<String> {
             Ok(crate::util::bench::fmt_dur(r.get(k)?.as_f64()? * 1e-9))
@@ -455,8 +493,10 @@ fn render_bench_json(path: &std::path::Path, what: &str, regen: &str) -> Result<
             Some(v) => crate::util::bench::fmt_dur(v.as_f64()? * 1e-9),
             None => "-".to_string(),
         };
+        let name = r.get("name")?.as_str()?.to_string();
+        rows.push((name.clone(), r.get("mean_ns")?.as_f64()?));
         t.row(&[
-            r.get("name")?.as_str()?.to_string(),
+            name,
             r.get("iters")?.as_usize()?.to_string(),
             ns("mean_ns")?,
             ns("p50_ns")?,
@@ -466,7 +506,7 @@ fn render_bench_json(path: &std::path::Path, what: &str, regen: &str) -> Result<
         ]);
     }
     t.print();
-    Ok(())
+    Ok(rows)
 }
 
 // ---------------------------------------------------------------------------

@@ -81,17 +81,31 @@ impl Runtime {
 /// Cumulative execution statistics for one compiled entry (feeds the
 /// virtual-time model and the §Perf profile). `min_s`/`max_s` separate the
 /// cold first call (literal pool + JIT-warmup effects) from steady state.
+/// `overlap_s` accumulates host staging seconds spent while one of this
+/// entry's executions was in flight ([`Compiled::launch`] →
+/// [`InFlight::wait_into`]) — an **upper bound** on truly hidden
+/// staging: the device may finish mid-gather, and PJRT exposes no
+/// completion event to subtract the slack. The complementary signal is
+/// the wait span inside the recorded call seconds shrinking toward the
+/// transfer floor (DESIGN.md §Batched-Backward).
 #[derive(Debug, Clone, Copy)]
 pub struct ExecStats {
     pub calls: u64,
     pub total_s: f64,
     min_s: f64,
     max_s: f64,
+    overlap_s: f64,
 }
 
 impl Default for ExecStats {
     fn default() -> Self {
-        Self { calls: 0, total_s: 0.0, min_s: f64::INFINITY, max_s: 0.0 }
+        Self {
+            calls: 0,
+            total_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+            overlap_s: 0.0,
+        }
     }
 }
 
@@ -101,6 +115,18 @@ impl ExecStats {
         self.total_s += secs;
         self.min_s = self.min_s.min(secs);
         self.max_s = self.max_s.max(secs);
+    }
+
+    /// Credit `secs` of host work performed while an execution of this
+    /// entry was in flight (reported by the dispatch loop that did the
+    /// overlapping — the runtime cannot observe it on its own).
+    pub fn record_overlap(&mut self, secs: f64) {
+        self.overlap_s += secs;
+    }
+
+    /// Host seconds hidden behind in-flight executions of this entry.
+    pub fn overlap_s(&self) -> f64 {
+        self.overlap_s
     }
 
     pub fn mean_s(&self) -> f64 {
@@ -306,6 +332,9 @@ impl Compiled {
     /// loops reuse one buffer set across calls instead of allocating a
     /// `Vec<Tensor>` per item. Returns the call's wall seconds.
     pub fn run_timed_into(&self, args: &[ArgRef], outs: &mut [Tensor]) -> Result<f64> {
+        // Fail fast on a bad buffer set *before* paying the execution
+        // (wait_into re-checks for direct launch users, but by then the
+        // call has already run).
         if outs.len() != self.spec.outputs.len() {
             bail!(
                 "entry '{}': {} output buffers provided, manifest says {}",
@@ -314,21 +343,28 @@ impl Compiled {
                 self.spec.outputs.len()
             );
         }
-        let (parts, elapsed) = self.execute_refs(args)?;
-        for ((lit, spec), out) in parts.into_iter().zip(&self.spec.outputs).zip(outs.iter_mut()) {
-            from_literal_into(&lit, spec, out)?;
-        }
-        Ok(elapsed)
+        self.launch(args)?.wait_into(outs)
     }
 
     pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
         Ok(self.run_timed(args)?.0)
     }
 
-    /// Shared execution core: validate, stage non-constant args through the
-    /// pooled literal slot, execute by reference (cached constants are
-    /// passed as-is, never copied), fetch + split the result tuple.
-    fn execute_refs(&self, args: &[ArgRef]) -> Result<(Vec<xla::Literal>, f64)> {
+    /// Record host seconds spent while one of this entry's executions was
+    /// in flight (see [`ExecStats::record_overlap`]).
+    pub fn note_overlap(&self, secs: f64) {
+        self.stats.borrow_mut().record_overlap(secs);
+    }
+
+    /// Enqueue one execution without fetching its outputs: validate,
+    /// stage non-constant args through the pooled literal slot, launch by
+    /// reference. The returned [`InFlight`] owns the result buffers; the
+    /// host is free to stage the *next* call's arguments before
+    /// [`InFlight::wait_into`] blocks — the double-buffered dispatch
+    /// overlap of DESIGN.md §Batched-Backward. At most one in-flight
+    /// execution per entry is supported (the next `launch` reuses the
+    /// literal pool).
+    pub fn launch(&self, args: &[ArgRef]) -> Result<InFlight<'_>> {
         self.validate(args)?;
         let mut pool = self.lit_pool.borrow_mut();
         pool.clear();
@@ -353,25 +389,18 @@ impl Compiled {
             }
         }
         let t0 = Instant::now();
-        let result = self
+        let bufs = self
             .exe
             .execute::<&xla::Literal>(&lits)
             .with_context(|| format!("executing entry '{}'", self.spec.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let elapsed = t0.elapsed().as_secs_f64();
-        self.stats.borrow_mut().record(elapsed);
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "entry '{}' returned {} outputs, manifest says {}",
-                self.spec.name,
-                parts.len(),
-                self.spec.outputs.len()
-            );
-        }
-        Ok((parts, elapsed))
+        let launch_s = t0.elapsed().as_secs_f64();
+        Ok(InFlight { entry: self, bufs, launch_s })
+    }
+
+    /// Shared execution core: launch immediately followed by the blocking
+    /// fetch — bit- and stat-identical to the pre-launch/wait form.
+    fn execute_refs(&self, args: &[ArgRef]) -> Result<(Vec<xla::Literal>, f64)> {
+        self.launch(args)?.wait_parts()
     }
 
     fn validate(&self, args: &[ArgRef]) -> Result<()> {
@@ -408,6 +437,65 @@ impl Compiled {
             }
         }
         Ok(())
+    }
+}
+
+/// One in-flight execution of a [`Compiled`] entry: the PJRT call has
+/// been enqueued and its input literals transferred, but the outputs not
+/// yet fetched — so the host can stage the next call's arguments while
+/// the device computes. Dropping an `InFlight` without waiting abandons
+/// the results (the execution still completes device-side). Thread-pinned
+/// like every xla handle.
+pub struct InFlight<'a> {
+    entry: &'a Compiled,
+    bufs: Vec<Vec<xla::PjRtBuffer>>,
+    /// Seconds the enqueue itself took (input transfer + dispatch).
+    launch_s: f64,
+}
+
+impl InFlight<'_> {
+    /// Block for the result tuple and split it. Returns the call's
+    /// *visible* seconds — launch span + wait span, excluding whatever
+    /// host work ran in between — which is what the virtual-time model
+    /// should charge when staging genuinely overlaps compute.
+    fn wait_parts(self) -> Result<(Vec<xla::Literal>, f64)> {
+        let t0 = Instant::now();
+        let tuple = self.bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let elapsed = self.launch_s + t0.elapsed().as_secs_f64();
+        self.entry.stats.borrow_mut().record(elapsed);
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.entry.spec.outputs.len() {
+            bail!(
+                "entry '{}' returned {} outputs, manifest says {}",
+                self.entry.spec.name,
+                parts.len(),
+                self.entry.spec.outputs.len()
+            );
+        }
+        Ok((parts, elapsed))
+    }
+
+    /// Block for the results and decompose them into `outs` (the pooled
+    /// counterpart — see [`Compiled::run_timed_into`]). Returns visible
+    /// call seconds.
+    pub fn wait_into(self, outs: &mut [Tensor]) -> Result<f64> {
+        let spec_outputs_len = self.entry.spec.outputs.len();
+        if outs.len() != spec_outputs_len {
+            bail!(
+                "entry '{}': {} output buffers provided, manifest says {}",
+                self.entry.spec.name,
+                outs.len(),
+                spec_outputs_len
+            );
+        }
+        let entry = self.entry;
+        let (parts, elapsed) = self.wait_parts()?;
+        for ((lit, spec), out) in parts.into_iter().zip(&entry.spec.outputs).zip(outs.iter_mut()) {
+            from_literal_into(&lit, spec, out)?;
+        }
+        Ok(elapsed)
     }
 }
 
@@ -542,6 +630,12 @@ mod tests {
         assert!((s.min_s() - 0.1).abs() < 1e-12);
         assert!((s.max_s() - 0.5).abs() < 1e-12);
         assert!((s.mean_s() - 0.8 / 3.0).abs() < 1e-12);
+        // Overlap accrues separately from call time.
+        assert_eq!(s.overlap_s(), 0.0);
+        s.record_overlap(0.25);
+        s.record_overlap(0.25);
+        assert!((s.overlap_s() - 0.5).abs() < 1e-12);
+        assert_eq!(s.calls, 3, "overlap must not count as a call");
     }
 
     #[test]

@@ -104,6 +104,53 @@ pub fn plan_chunks(k: usize, t: usize, c: usize) -> Result<Vec<WorkItem>> {
     Ok(items)
 }
 
+/// One batched backward dispatch group: up to M same-layer work items
+/// executed as a single `layer_adjoint_grad_batched` call, reduced
+/// on-device in ascending item-id order (the pinned accumulation order of
+/// `GradSet::accumulate_layer` — DESIGN.md §Batched-Backward).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchGroup {
+    /// The layer every member belongs to (the entry shares one `W_c`).
+    pub layer: usize,
+    /// Ascending work-item ids (indices into the phase's `plan_chunks`
+    /// item table); `1 ≤ len ≤ M`. A ragged tail shorter than the
+    /// entry's static width is zero-padded at staging time — the kernel's
+    /// padding contract (zero `v_ext` rows kill every gradient term)
+    /// makes short groups free instead of forcing a recompile.
+    pub ids: Vec<usize>,
+}
+
+/// The grouping pass of the batched dispatch: pack a lane's strictly
+/// ascending item-id queue into [`BatchGroup`]s of width ≤ `m`, greedily
+/// along the queue. Guarantees (property-tested in
+/// `rust/tests/schedule_props.rs`): every queued item lands in exactly
+/// one group; every group is same-layer; group order — and the ids within
+/// each group — preserve the queue's ascending order; within one layer's
+/// contiguous run only the final group is ragged (< m).
+pub fn plan_batches(items: &[WorkItem], queue: &[usize], m: usize) -> Result<Vec<BatchGroup>> {
+    if m == 0 {
+        bail!("batch width must be ≥ 1");
+    }
+    let mut groups: Vec<BatchGroup> = Vec::new();
+    let mut prev: Option<usize> = None;
+    for &id in queue {
+        let Some(item) = items.get(id) else {
+            bail!("queue references unknown work item {id}");
+        };
+        if let Some(p) = prev {
+            if id <= p {
+                bail!("queue not strictly ascending at item {id} (after {p})");
+            }
+        }
+        prev = Some(id);
+        match groups.last_mut() {
+            Some(g) if g.layer == item.layer && g.ids.len() < m => g.ids.push(id),
+            _ => groups.push(BatchGroup { layer: item.layer, ids: vec![id] }),
+        }
+    }
+    Ok(groups)
+}
+
 // ---------------------------------------------------------------------------
 // VJP counting (paper §4.3): closed forms + literal enumeration cross-check.
 // Counts are per layer for the A- and B-networks (the C-network adds T).
@@ -209,6 +256,37 @@ mod tests {
     fn chunk_size_must_divide() {
         assert!(plan_chunks(1, 32, 5).is_err());
         assert!(plan_chunks(1, 32, 0).is_err());
+    }
+
+    #[test]
+    fn plan_batches_packs_same_layer_runs() {
+        let items = plan_chunks(2, 32, 8).unwrap(); // 4 chunks per layer
+        let queue: Vec<usize> = (0..items.len()).collect();
+        let groups = plan_batches(&items, &queue, 3).unwrap();
+        // Layer 0: [0,1,2] + ragged [3]; layer 1: [4,5,6] + ragged [7].
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0].ids, vec![0, 1, 2]);
+        assert_eq!(groups[1].ids, vec![3]);
+        assert_eq!(groups[2].ids, vec![4, 5, 6]);
+        assert_eq!(groups[3].ids, vec![7]);
+        assert_eq!(groups[0].layer, 0);
+        assert_eq!(groups[3].layer, 1);
+        // Width 1 degenerates to singleton groups; huge width packs each
+        // layer's whole run without crossing the layer boundary.
+        assert_eq!(plan_batches(&items, &queue, 1).unwrap().len(), 8);
+        let whole = plan_batches(&items, &queue, 64).unwrap();
+        assert_eq!(whole.len(), 2);
+        assert!(whole.iter().all(|g| g.ids.len() == 4));
+    }
+
+    #[test]
+    fn plan_batches_rejects_bad_queues() {
+        let items = plan_chunks(1, 16, 8).unwrap();
+        assert!(plan_batches(&items, &[0, 1], 0).is_err()); // zero width
+        assert!(plan_batches(&items, &[1, 0], 2).is_err()); // not ascending
+        assert!(plan_batches(&items, &[0, 0], 2).is_err()); // duplicate
+        assert!(plan_batches(&items, &[5], 2).is_err()); // unknown id
+        assert!(plan_batches(&items, &[], 2).unwrap().is_empty());
     }
 
     #[test]

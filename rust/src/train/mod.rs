@@ -33,6 +33,12 @@ pub struct Trainer {
     /// (end-to-end, Σ PJRT item seconds) — the measured-concurrency pair
     /// `examples/distributed.rs` compares across executors.
     pub last_bwd_host_s: Option<(f64, f64)>,
+    /// The latest step's staging seconds hidden behind in-flight batched
+    /// calls (`AdjointOutput::overlap_s`, Σ over lanes). Reported here —
+    /// not only via per-entry `ExecStats` — because the threaded
+    /// backend's workers record overlap on their own thread-local
+    /// entries, invisible to the coordinator's `arts.all_stats()`.
+    pub last_overlap_s: Option<f64>,
     opt: ShardedAdam,
     corpus: Box<dyn Corpus>,
     step_idx: usize,
@@ -83,6 +89,7 @@ impl Trainer {
             recorder: Recorder::new(),
             last_plan: None,
             last_bwd_host_s: None,
+            last_overlap_s: None,
             opt,
             corpus,
             step_idx: 0,
@@ -137,6 +144,7 @@ impl Trainer {
                 )?;
                 let step = (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units);
                 self.last_bwd_host_s = Some((bwd.host_s, bwd.wall_s));
+                self.last_overlap_s = Some(bwd.overlap_s);
                 self.last_plan = Some(bwd.plan);
                 step
             }
@@ -209,18 +217,32 @@ impl Trainer {
                 100.0 * s.utilization(),
                 crate::metrics::fmt_bytes(s.peak_transient_bytes()),
             );
+            // Batched-dispatch staging hidden behind in-flight PJRT calls
+            // (Σ over lanes, last step) — reported from AdjointOutput so
+            // it covers the threaded backend's worker-local entries too.
+            if let Some(ov) = self.last_overlap_s.filter(|&ov| ov > 0.0) {
+                println!(
+                    "batched dispatch: up to {} of host staging overlapped device compute last step",
+                    crate::util::bench::fmt_dur(ov),
+                );
+            }
         }
         // §Perf profile: per-entry latency spread — min is the
         // steady-state floor, max is (typically) the cold first call with
-        // an empty literal pool (EXPERIMENTS.md §Perf).
+        // an empty literal pool (EXPERIMENTS.md §Perf). `overlap` is host
+        // staging hidden behind in-flight calls by the double-buffered
+        // batched dispatch — coordinator-side entries only (sim backend;
+        // the threaded workers' thread-local entries report through the
+        // "batched dispatch:" summary line above instead).
         for (name, st) in self.arts.all_stats() {
             println!(
-                "entry {:<20} calls {:>6}  mean {}  min {}  max {}",
+                "entry {:<26} calls {:>6}  mean {}  min {}  max {}  overlap {}",
                 name,
                 st.calls,
                 crate::util::bench::fmt_dur(st.mean_s()),
                 crate::util::bench::fmt_dur(st.min_s()),
                 crate::util::bench::fmt_dur(st.max_s()),
+                crate::util::bench::fmt_dur(st.overlap_s()),
             );
         }
         if let Some(path) = self.cfg.log_csv.clone() {

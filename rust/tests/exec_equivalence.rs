@@ -71,9 +71,9 @@ fn dispatch_contract_invariants_across_seeds_and_policies() {
                 let topo = TopologyCfg { devices, mig_slots: 2, ..Default::default() };
                 let fleet = Fleet::new(topo, dims.k).unwrap();
                 let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
-                let sched = SchedCfg { policy, overlap: false };
+                let sched = SchedCfg { policy, overlap: false, ..Default::default() };
                 let caps: Vec<Option<u64>> = vec![Some(1 << 20); devices];
-                let d = plan_dispatch(&dims, &fleet, &items, &sched, 4096, &caps).unwrap();
+                let d = plan_dispatch(&dims, &fleet, &items, &sched, 4096, &caps, 1).unwrap();
 
                 // Every item scheduled exactly once, on its owner, queues
                 // ascending (the pinned reduction order).
@@ -136,7 +136,10 @@ fn compare_backends(
     let params = ParamSet::init(&dims, seed);
     let corpus = MarkovCorpus::new(dims.v, seed ^ 0x5EED);
     let s = corpus.sample(0, dims.t);
-    let sched = SchedCfg { policy, overlap };
+    // adjoint_batch: 0 (auto) — with post-ISSUE-5 artifacts this whole
+    // sweep runs the *batched* dispatch, which must stay bit-identical
+    // across backends exactly like the single-item path did.
+    let sched = SchedCfg { policy, overlap, ..Default::default() };
 
     let mut fleet = Fleet::new(
         TopologyCfg { devices, ..Default::default() },
@@ -220,6 +223,218 @@ fn worker_cap_below_fleet_size_still_bit_identical() {
     // 2 devices multiplexed onto 1 worker thread: still the same pinned
     // per-lane order, still the same bits.
     compare_backends("tiny", 2, 7, PolicyKind::Lpt, false, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Batched dispatch (ISSUE 5): bit-identical GradSets across
+// {single-item, batched} × {sim, threaded} × batch widths, with the call
+// count dropping ~M× — and the pre-batching-artifact fallback staying on
+// the single-item path.
+// ---------------------------------------------------------------------------
+
+/// One forward, then one backward per (width, executor); returns the
+/// GradSet + AdjointOutput of each run, all against identical activations.
+fn backward_grid(
+    config: &str,
+    devices: usize,
+    seed: u64,
+    widths: &[usize],
+) -> Vec<(usize, &'static str, GradSet, adjoint_sharding::adjoint::AdjointOutput)> {
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join(config)).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let params = ParamSet::init(&dims, seed);
+    let corpus = MarkovCorpus::new(dims.v, seed ^ 0xBA7C);
+    let s = corpus.sample(0, dims.t);
+    let mut fleet =
+        Fleet::new(TopologyCfg { devices, ..Default::default() }, dims.k).unwrap();
+    pipeline::forward(&arts, &dims, &params, &mut fleet, &s.tokens, &s.targets).unwrap();
+
+    let mut out = Vec::new();
+    for &width in widths {
+        let sched = SchedCfg { adjoint_batch: width, ..Default::default() };
+        let mut runs: Vec<(&'static str, Box<dyn Executor>)> = vec![
+            ("sim", Box::new(SimExecutor)),
+            ("threaded", Box::new(ThreadedExecutor::new(0))),
+        ];
+        for (label, exec) in runs.iter_mut() {
+            let mut grads = GradSet::zeros(&dims);
+            let mut pool = StagePool::new();
+            let o = adjoint::backward_pooled(
+                &arts,
+                &dims,
+                &params,
+                &mut fleet,
+                &mut grads,
+                &sched,
+                None,
+                &mut pool,
+                exec.as_mut(),
+            )
+            .unwrap();
+            out.push((width, *label, grads, o));
+        }
+    }
+    out
+}
+
+#[test]
+fn batched_widths_bit_identical_to_single_item() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let static_m = adjoint_sharding::exec::batched_entry_width(
+        arts.manifest.entry("layer_adjoint_grad_batched").unwrap(),
+    )
+    .unwrap();
+    let chunks = dims.num_chunks();
+    assert!(chunks >= 3, "tiny must have ≥ 3 chunks/layer for ragged coverage");
+    drop(arts);
+
+    // Widths: 1 = single-item entry; 2 = batched, even groups; 3 =
+    // batched with a ragged (zero-padded) tail; 0 = auto (the full
+    // static M). Every combination must produce the same bits.
+    let grid = backward_grid("tiny", 2, 5, &[1, 2, 3, 0]);
+    let (_, _, reference, ref_out) = &grid[0]; // width 1, sim
+    assert_eq!(ref_out.calls, (dims.k * chunks) as u64, "single-item call count");
+
+    for (width, label, grads, o) in &grid {
+        let eff = adjoint_sharding::exec::resolve_adjoint_batch(*width, Some(static_m));
+        let ctx = format!("width={width} (effective {eff}) exec={label}");
+        assert_grads_bit_identical(grads, reference, &ctx);
+        assert_eq!(o.vjp_units, ref_out.vjp_units, "{ctx}: vjp_units");
+        // Calls drop ~M×: one per group, groups = K · ⌈chunks/eff⌉ here
+        // (each layer is one contiguous run).
+        let expect = (dims.k * ((chunks + eff - 1) / eff)) as u64;
+        assert_eq!(o.calls, expect, "{ctx}: dispatch count");
+        if eff > 1 {
+            assert!(o.calls < ref_out.calls, "{ctx}: batching must cut dispatches");
+        }
+    }
+}
+
+/// Strip one entry from a manifest.json text (json.dump indent=1 format)
+/// by brace-depth scanning — builds the pre-batching artifact set the
+/// fallback contract is tested against.
+fn strip_entry(manifest: &str, entry: &str) -> String {
+    let needle = format!("\"{entry}\":");
+    let start = manifest.find(&needle).expect("entry present in manifest");
+    let bytes = manifest.as_bytes();
+    let mut depth = 0usize;
+    let mut end = start;
+    for (i, &b) in bytes.iter().enumerate().skip(start) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = i + 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    // Swallow the trailing comma (entry mid-object) or the preceding one
+    // (entry last in the object).
+    let mut head = manifest[..start].to_string();
+    let mut tail = &manifest[end..];
+    if let Some(rest) = tail.trim_start().strip_prefix(',') {
+        tail = rest;
+    } else {
+        head.truncate(head.trim_end().trim_end_matches(',').len());
+    }
+    format!("{head}{tail}")
+}
+
+#[test]
+fn memcost_transient_forms_match_manifest() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    use adjoint_sharding::memcost;
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+
+    let single = arts.manifest.entry("layer_adjoint_grad").unwrap();
+    assert_eq!(
+        memcost::adjoint_single_transient_bytes(&dims),
+        (single.input_bytes() + single.output_bytes()) as u64,
+        "single-item closed form drifted from the lowered artifact"
+    );
+    let batched = arts.manifest.entry("layer_adjoint_grad_batched").unwrap();
+    let m = adjoint_sharding::exec::batched_entry_width(batched).unwrap() as u64;
+    assert_eq!(
+        memcost::adjoint_batched_transient_bytes(&dims, m),
+        (batched.input_bytes() + batched.output_bytes()) as u64,
+        "batched closed form drifted from the lowered artifact"
+    );
+}
+
+#[test]
+fn pre_batching_artifacts_fall_back_to_single_item_path() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    // Build a pre-ISSUE-5 artifact set: same HLO files, manifest without
+    // the batched entry.
+    let src = root().join("tiny");
+    let dir = std::env::temp_dir().join(format!("adjsh_prebatch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for f in std::fs::read_dir(&src).unwrap() {
+        let f = f.unwrap();
+        let name = f.file_name();
+        if name != "manifest.json" {
+            std::fs::copy(f.path(), dir.join(&name)).unwrap();
+        }
+    }
+    let manifest = std::fs::read_to_string(src.join("manifest.json")).unwrap();
+    let stripped = strip_entry(&manifest, "layer_adjoint_grad_batched");
+    std::fs::write(dir.join("manifest.json"), &stripped).unwrap();
+
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt.clone(), &dir).unwrap();
+    assert!(
+        arts.manifest.entry("layer_adjoint_grad_batched").is_err(),
+        "strip failed: batched entry still in manifest"
+    );
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let params = ParamSet::init(&dims, 5);
+    let corpus = MarkovCorpus::new(dims.v, 5 ^ 0xBA7C);
+    let s = corpus.sample(0, dims.t);
+    let mut fleet = Fleet::new(TopologyCfg::default(), dims.k).unwrap();
+    pipeline::forward(&arts, &dims, &params, &mut fleet, &s.tokens, &s.targets).unwrap();
+
+    // Auto width against the stripped set must take the single-item path
+    // (one call per item) and match the full set's gradients bit for bit.
+    let mut grads = GradSet::zeros(&dims);
+    let mut pool = StagePool::new();
+    let o = adjoint::backward_pooled(
+        &arts,
+        &dims,
+        &params,
+        &mut fleet,
+        &mut grads,
+        &SchedCfg::default(),
+        None,
+        &mut pool,
+        &mut SimExecutor,
+    )
+    .unwrap();
+    let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
+    assert_eq!(o.calls, items.len() as u64, "fallback must dispatch per item");
+    assert_eq!(o.overlap_s, 0.0, "single-item path has no overlap");
+
+    let batched_grid = backward_grid("tiny", 1, 5, &[0]);
+    assert_grads_bit_identical(&grads, &batched_grid[0].2, "pre-batching fallback");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -10,7 +10,8 @@
 use std::path::{Path, PathBuf};
 
 use adjoint_sharding::adjoint::{
-    self, gather_item_args, gather_item_args_into, stage_slot, ItemStage, StagePool,
+    self, gather_group_args_into_from, gather_item_args, gather_item_args_into, stage_slot,
+    ItemStage, StagePool,
 };
 use adjoint_sharding::baselines;
 use adjoint_sharding::config::{ModelDims, TopologyCfg};
@@ -18,8 +19,8 @@ use adjoint_sharding::data::{Corpus, MarkovCorpus};
 use adjoint_sharding::model::{GradSet, ParamSet};
 use adjoint_sharding::pipeline;
 use adjoint_sharding::rng::Rng;
-use adjoint_sharding::runtime::{ArtifactSet, Runtime};
-use adjoint_sharding::sharding::plan_chunks;
+use adjoint_sharding::runtime::{ArtifactSet, Dtype, EntrySpec, Runtime, TensorSpec};
+use adjoint_sharding::sharding::{plan_batches, plan_chunks};
 use adjoint_sharding::tensor::{Arg, Tensor};
 use adjoint_sharding::topology::Fleet;
 
@@ -148,6 +149,96 @@ fn gather_into_matches_owning_gather_item_by_item() {
             }
         }
     }
+}
+
+#[test]
+fn batched_gather_sub_slabs_match_single_item_stages() {
+    // Every member of a batch group stages bit-identically to its
+    // single-item gather; ragged-tail padding items are exactly zero.
+    for (t, c, w, m) in [(32usize, 8usize, 8usize, 3usize), (32, 8, 16, 4), (24, 8, 5, 2)] {
+        let dims = host_dims(t, c, w);
+        let (_params, fleet) = synthetic_fleet(&dims, 2, 11);
+        let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
+        let mut single = ItemStage::new();
+        let mut batched = ItemStage::new();
+        for dev in 0..2usize {
+            let queue: Vec<usize> = (0..items.len())
+                .filter(|&id| fleet.device_of_layer(items[id].layer) == dev)
+                .collect();
+            for group in plan_batches(&items, &queue, m).unwrap() {
+                gather_group_args_into_from(
+                    &dims,
+                    &fleet.devices[dev],
+                    &items,
+                    &group,
+                    m,
+                    &mut batched,
+                )
+                .unwrap();
+                for slot in 0..stage_slot::COUNT {
+                    let slab = batched.view(slot);
+                    assert_eq!(slab.rank(), 3, "t={t} slot {slot}: batch-major rank");
+                    assert_eq!(slab.dims()[0], m, "t={t} slot {slot}: static width");
+                    let per = slab.dims()[1] * slab.dims()[2];
+                    for (mi, &id) in group.ids.iter().enumerate() {
+                        gather_item_args_into(&dims, &fleet, &items[id], &mut single)
+                            .unwrap();
+                        let want = single.view(slot);
+                        assert_eq!(
+                            &slab.data()[mi * per..(mi + 1) * per],
+                            want.data(),
+                            "t={t} c={c} w={w} m={m} item {id} slot {slot}: sub-slab"
+                        );
+                    }
+                    assert!(
+                        slab.data()[group.ids.len() * per..].iter().all(|&x| x == 0.0),
+                        "t={t} slot {slot}: padding rows must be zero"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prepare_outs_rekeys_on_entry_name() {
+    // Regression (ISSUE 5 satellite): two entries with identical output
+    // shapes but different names must not share pooled output buffers —
+    // the single-item and batched adjoint entries are exactly that pair.
+    let grad_outs = || {
+        vec![
+            TensorSpec { name: "out0".into(), shape: vec![2, 3], dtype: Dtype::F32 },
+            TensorSpec { name: "out1".into(), shape: vec![3], dtype: Dtype::F32 },
+        ]
+    };
+    let single = EntrySpec {
+        name: "layer_adjoint_grad".into(),
+        inputs: vec![],
+        outputs: grad_outs(),
+    };
+    let batched = EntrySpec {
+        name: "layer_adjoint_grad_batched".into(),
+        inputs: vec![],
+        outputs: grad_outs(),
+    };
+
+    let mut pool = StagePool::new();
+    pool.prepare_outs(&single);
+    {
+        let (_, outs) = pool.split_mut();
+        outs[0].data_mut()[0] = 7.0;
+    }
+    // Same shapes, same name: buffers must be kept (the reuse contract).
+    pool.prepare_outs(&single);
+    assert_eq!(pool.split_mut().1[0].data()[0], 7.0, "same-entry reuse lost the pool");
+
+    // Same shapes, different name: buffers must be rebuilt, not shared.
+    pool.prepare_outs(&batched);
+    assert_eq!(
+        pool.split_mut().1[0].data()[0],
+        0.0,
+        "same-shape outs silently shared across entries"
+    );
 }
 
 #[test]

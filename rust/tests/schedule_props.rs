@@ -15,7 +15,7 @@ use adjoint_sharding::schedule::{
     makespan_fifo, overlap_ready_times, plan_backward, schedule_items, PolicyKind, SchedItem,
     Schedule,
 };
-use adjoint_sharding::sharding::{assign_layers, plan_chunks};
+use adjoint_sharding::sharding::{assign_layers, plan_batches, plan_chunks};
 
 const CASES: usize = 150;
 
@@ -219,6 +219,64 @@ fn prop_overlapped_never_loses_to_sequential() {
         strict_wins > 0,
         "overlap never beat sequential strictly across {CASES} cases — release model inert"
     );
+}
+
+#[test]
+fn prop_plan_batches_partitions_queues() {
+    // ISSUE-5 invariants: every queued item in exactly one group; groups
+    // same-layer; group order (and ids within groups) preserve the
+    // queue's ascending order; within a layer's contiguous run only the
+    // final group is ragged (< m), and no group exceeds m.
+    let mut rng = Rng::new(0xBA7C);
+    for case in 0..CASES {
+        let k = 1 + rng.below(8) as usize;
+        let chunks = 1 + rng.below(12) as usize;
+        let c = 4usize;
+        let t = c * chunks;
+        let devices = 1 + rng.below(k as u64) as usize;
+        let m = 1 + rng.below(9) as usize;
+        let items = plan_chunks(k, t, c).unwrap();
+        let assignment = assign_layers(k, devices).unwrap();
+
+        for dev in 0..devices {
+            // The executors' queue shape: this device's items, ascending.
+            let queue: Vec<usize> = (0..items.len())
+                .filter(|&id| assignment.device_of_layer[items[id].layer] == dev)
+                .collect();
+            let groups = plan_batches(&items, &queue, m)
+                .unwrap_or_else(|e| panic!("case {case} dev {dev}: {e}"));
+
+            // Exactly-once coverage in queue order.
+            let flat: Vec<usize> = groups.iter().flat_map(|g| g.ids.clone()).collect();
+            assert_eq!(flat, queue, "case {case} dev {dev}: groups must tile the queue");
+
+            for (gi, g) in groups.iter().enumerate() {
+                assert!(
+                    !g.ids.is_empty() && g.ids.len() <= m,
+                    "case {case} dev {dev}: group {gi} size {}",
+                    g.ids.len()
+                );
+                assert!(
+                    g.ids.iter().all(|&id| items[id].layer == g.layer),
+                    "case {case} dev {dev}: group {gi} mixes layers"
+                );
+                assert!(
+                    g.ids.windows(2).all(|w| w[0] < w[1]),
+                    "case {case} dev {dev}: group {gi} not ascending"
+                );
+                // Ragged tail only at the end of a layer's run: a short
+                // group must be followed by a different layer (or nothing).
+                if g.ids.len() < m {
+                    if let Some(next) = groups.get(gi + 1) {
+                        assert_ne!(
+                            next.layer, g.layer,
+                            "case {case} dev {dev}: ragged group {gi} mid-run"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]

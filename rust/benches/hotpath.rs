@@ -162,7 +162,7 @@ fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
     // 3. Full backward phase (Alg. 4) through the pooled staging path.
     let mut grads = GradSet::zeros(&dims);
     let mut pool = adjoint::StagePool::new();
-    let mut exec = adjoint_sharding::exec::SimExecutor;
+    let mut exec = adjoint_sharding::exec::SimExecutor::new();
     let s = bench("adjoint_backward(Alg.4, pooled)", 2, 10, 1.0, || {
         adjoint::backward_pooled(
             &arts,

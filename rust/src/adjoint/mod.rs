@@ -393,7 +393,7 @@ pub fn backward_scheduled(
     fwd_timing: Option<&ForwardTiming>,
 ) -> Result<AdjointOutput> {
     let mut pool = StagePool::new();
-    let mut exec = SimExecutor;
+    let mut exec = SimExecutor::new();
     backward_pooled(arts, dims, params, fleet, grads, sched, fwd_timing, &mut pool, &mut exec)
 }
 

@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::exec::ExecCfg;
+use crate::exec::{ExecCfg, FaultPlan};
 use crate::schedule::PolicyKind;
 use crate::util::json::Json;
 
@@ -212,11 +212,16 @@ pub struct RunConfig {
     pub grad_mode: GradMode,
     pub topology: TopologyCfg,
     pub sched: SchedCfg,
-    /// Backward-phase execution backend (`--executor sim|threaded`,
-    /// `--workers N`): sim = deterministic single-threaded dispatch;
-    /// threaded = one worker thread per simulated device, bit-identical
-    /// gradients (DESIGN.md §Execution).
+    /// Backward-phase execution backend (`--executor
+    /// sim|threaded|process`, `--workers N`): sim = deterministic
+    /// single-threaded dispatch; threaded = one worker thread per
+    /// simulated device; process = one worker child process per device.
+    /// All are bit-identical (DESIGN.md §Execution, §Fault-Tolerance).
     pub exec: ExecCfg,
+    /// Fault-injection schedule (`--fault-at lane@items[+rejoin],…` or
+    /// `--fault-seed N`): kill executor lanes mid-phase to exercise the
+    /// re-plan/rejoin path. `None` = no faults armed.
+    pub fault: Option<FaultPlan>,
     /// Session-serving settings (`adjsh serve`).
     pub serve: ServeCfg,
     pub optim: OptimCfg,
@@ -243,6 +248,7 @@ impl RunConfig {
             topology: TopologyCfg::default(),
             sched: SchedCfg::default(),
             exec: ExecCfg::default(),
+            fault: None,
             serve: ServeCfg::default(),
             optim: OptimCfg::default(),
             steps: 100,
@@ -330,6 +336,7 @@ mod tests {
             topology: TopologyCfg { devices: 3, ..Default::default() },
             sched: SchedCfg::default(),
             exec: ExecCfg::default(),
+            fault: None,
             serve: ServeCfg::default(),
             optim: OptimCfg::default(),
             steps: 1,

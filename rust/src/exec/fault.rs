@@ -1,0 +1,535 @@
+//! Fault injection and recovery planning for the live executors
+//! (DESIGN.md §Fault-Tolerance).
+//!
+//! A [`FaultPlan`] (`--fault-at lane@k[+rejoin]`, or `--fault-seed` for a
+//! deterministic random schedule) kills a worker lane right before it
+//! dispatches its k-th work unit. All three backends share the hook: the
+//! sim backend *models* the death (truncate the lane's queue, discard its
+//! partials), a threaded worker reports it over its channel, a process
+//! worker exits without replying — the coordinator sees a broken pipe,
+//! exactly what a real crash or kill signal looks like.
+//!
+//! Recovery reuses the ordinary planner: the dead lane's layers are
+//! localized to `0..L` and re-run through [`super::plan_dispatch`] on a
+//! sub-fleet of the surviving lanes (same MIG slot caps), then the
+//! verified queues are mapped back to global work-item ids. The id
+//! mapping is monotone, so every recovery queue stays ascending in
+//! global id — the pinned reduction order that makes the recovered
+//! `GradSet` bit-identical to a healthy run: a lane's death discards
+//! *all* of its partials, its layers roll back to zero bits, and each
+//! orphaned layer is re-accumulated `0 + g₀ + g₁ + …` by exactly one
+//! recovery lane.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelDims, TopologyCfg};
+use crate::rng::Rng;
+use crate::schedule::BackwardPlan;
+use crate::sharding::{layer_span, plan_batches, BatchGroup, WorkItem};
+use crate::topology::Fleet;
+
+use super::{plan_dispatch, Dispatch};
+
+/// One injected worker death: lane `lane` dies right before dispatching
+/// its `after_items`-th work unit (an item at width 1, a whole batch
+/// group otherwise). `rejoin` restarts the worker and hands it back
+/// exactly its own orphaned layer range (elastic join); otherwise the
+/// orphans spread across the never-killed lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub lane: usize,
+    pub after_items: usize,
+    pub rejoin: bool,
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}", self.lane, self.after_items)?;
+        if self.rejoin {
+            f.write_str("+rejoin")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Fault {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (head, rejoin) = match s.strip_suffix("+rejoin") {
+            Some(h) => (h, true),
+            None => (s, false),
+        };
+        let (lane, after) = head
+            .split_once('@')
+            .with_context(|| format!("fault '{s}' must look like lane@k or lane@k+rejoin"))?;
+        Ok(Fault {
+            lane: lane
+                .trim()
+                .parse()
+                .with_context(|| format!("fault '{s}': bad lane index"))?,
+            after_items: after
+                .trim()
+                .parse()
+                .with_context(|| format!("fault '{s}': bad item count"))?,
+            rejoin,
+        })
+    }
+}
+
+/// A deterministic fault schedule: which lanes die, when, and whether
+/// they rejoin. Carried by `RunConfig` (`--fault-at`) and armed on any
+/// backend via `ExecCfg::build_with`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kills: Vec<Fault>,
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.kills.iter().map(Fault::to_string).collect();
+        f.write_str(&parts.join(","))
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut kills = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            kills.push(part.parse()?);
+        }
+        if kills.is_empty() {
+            bail!("empty fault plan '{s}'");
+        }
+        Ok(FaultPlan { kills })
+    }
+}
+
+impl FaultPlan {
+    /// Seeded random schedule (`--fault-seed`): one kill at a
+    /// pseudo-random lane and fault point, rejoining half the time. Same
+    /// seed, same schedule — reproducible failure drills.
+    pub fn seeded(seed: u64, lanes: usize, max_after: usize) -> Self {
+        let mut root = Rng::new(seed);
+        let mut rng = root.split(0xFA11);
+        let lane = rng.below(lanes.max(1) as u64) as usize;
+        let after_items = rng.below(max_after.max(1) as u64) as usize;
+        let rejoin = rng.chance(0.5);
+        FaultPlan { kills: vec![Fault { lane, after_items, rejoin }] }
+    }
+}
+
+/// One observed death, as the coordinator recorded it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Death {
+    pub lane: usize,
+    /// Devices the lane was executing (device d runs on lane d mod lanes).
+    pub devices: Vec<usize>,
+    /// Work items the lane dispatched before dying — wasted work, since a
+    /// dead lane's partials are lost with it.
+    pub executed: u64,
+}
+
+/// What one faulted phase did: who died, what was orphaned, what the
+/// recovery waves actually re-executed, who rejoined. Executors bail
+/// unless `recovered == orphans` — every orphaned item exactly once.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultReport {
+    pub deaths: Vec<Death>,
+    /// Layers whose partials died with their lane (ascending).
+    pub orphan_layers: Vec<usize>,
+    /// Work-item ids orphaned by the deaths (ascending).
+    pub orphans: Vec<usize>,
+    /// Work-item ids the recovery waves re-executed (ascending).
+    pub recovered: Vec<usize>,
+    /// Dead lanes that rejoined and recovered their own layer range.
+    pub rejoined: Vec<usize>,
+}
+
+/// A fault plan resolved against one phase's lane shape. A kill is
+/// *effective* only when its lane exists and its fault point lies inside
+/// the lane's queue; anything else is a uniform no-op across backends
+/// (the lane would have finished before the fault fired).
+#[derive(Debug, Clone, Default)]
+pub struct FaultSplit {
+    /// Effective kills, ascending by lane.
+    pub kills: Vec<Fault>,
+}
+
+impl FaultSplit {
+    /// The lane's injected fault point, if it dies this phase.
+    pub fn kill_after(&self, lane: usize) -> Option<u64> {
+        self.kills.iter().find(|f| f.lane == lane).map(|f| f.after_items as u64)
+    }
+
+    pub fn rejoin(&self, lane: usize) -> bool {
+        self.kills.iter().any(|f| f.lane == lane && f.rejoin)
+    }
+}
+
+/// Resolve a plan against the phase's per-lane item counts.
+pub fn split_faults(plan: &FaultPlan, n_lanes: usize, lane_items: &[usize]) -> Result<FaultSplit> {
+    if lane_items.len() != n_lanes {
+        bail!("lane item counts ({}) disagree with lane count ({n_lanes})", lane_items.len());
+    }
+    if plan.kills.is_empty() {
+        bail!("fault plan has no kills");
+    }
+    let mut seen = BTreeSet::new();
+    for f in &plan.kills {
+        if !seen.insert(f.lane) {
+            bail!("fault plan kills lane {} twice", f.lane);
+        }
+    }
+    let mut kills: Vec<Fault> = plan
+        .kills
+        .iter()
+        .filter(|f| f.lane < n_lanes && f.after_items < lane_items[f.lane])
+        .copied()
+        .collect();
+    kills.sort_unstable_by_key(|f| f.lane);
+    if kills.len() == n_lanes && kills.iter().any(|f| !f.rejoin) {
+        bail!("fault plan kills every lane and at least one never rejoins — nothing left to recover on");
+    }
+    Ok(FaultSplit { kills })
+}
+
+/// Devices a lane executes: device d runs on lane d mod `n_lanes`.
+pub fn devices_of_lane(lane: usize, n_lanes: usize, n_devices: usize) -> Vec<usize> {
+    (0..n_devices).filter(|d| d % n_lanes == lane).collect()
+}
+
+/// Ring visitation order over `n` lanes starting at `start` — the
+/// deterministic reply-drain order the process executor walks when more
+/// than two lanes are live. Each layer's 7 accumulator tensors are owned
+/// by exactly one lane (the placement invariant), so the ring pass
+/// degenerates to a gather; the gradient reduction itself stays pinned
+/// ascending-layer in the coordinator's merge.
+pub fn ring_order(n: usize, start: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    (0..n).map(|i| (start + i) % n).collect()
+}
+
+/// Whole dispatch units (batch groups; singletons at width 1) a killed
+/// lane issues before dying: the worker checks `executed >= kill` before
+/// each unit, so a unit straddling the fault point still runs. The sim
+/// model and the live workers both count this way — the wasted-work
+/// accounting is identical across backends.
+pub fn doomed_groups(groups: &[BatchGroup], kill: u64) -> usize {
+    let mut executed = 0u64;
+    let mut n = 0usize;
+    for g in groups {
+        if executed >= kill {
+            break;
+        }
+        executed += g.ids.len() as u64;
+        n += 1;
+    }
+    n
+}
+
+/// One recovery lane's share of the orphaned work.
+#[derive(Debug, Clone)]
+pub struct RecoveryLane {
+    /// Executing lane: a survivor, or the dead lane itself on rejoin.
+    pub lane: usize,
+    /// Global work-item ids, ascending — the pinned reduction order.
+    pub queue: Vec<usize>,
+    /// The queue's batch-group packing (global ids; singletons unused at
+    /// width 1, mirroring `Dispatch::groups`).
+    pub groups: Vec<BatchGroup>,
+}
+
+/// One re-plan pass: the lanes it filled and the slot-capped sub-plan
+/// ([`super::plan_dispatch`] on the localized orphan problem) they run
+/// under.
+#[derive(Debug, Clone)]
+pub struct RecoveryWave {
+    pub lanes: Vec<RecoveryLane>,
+    pub plan: BackwardPlan,
+    pub orphan_layers: Vec<usize>,
+}
+
+/// The full recovery: rejoin waves (one per rejoining lane) followed by
+/// one combined wave spreading the rest over the survivors.
+#[derive(Debug, Clone)]
+pub struct RecoveryPlan {
+    pub waves: Vec<RecoveryWave>,
+    /// Union of all orphaned layers (ascending).
+    pub orphan_layers: Vec<usize>,
+    /// Union of all orphaned work-item ids (ascending).
+    pub orphans: Vec<usize>,
+}
+
+/// Re-plan a set of orphaned layers onto `targets`: localize the layers
+/// to `0..L` and their items to a fresh id space, run the ordinary
+/// dispatch planner on a sub-fleet of `min(targets, L)` devices (same
+/// scheduling policy, same MIG slot caps), and map the verified queues
+/// back. The id mapping is monotone, so each recovery queue is ascending
+/// in global id.
+pub fn replan_onto(
+    dims: &ModelDims,
+    topo: &TopologyCfg,
+    dispatch: &Dispatch,
+    orphan_layers: &[usize],
+    targets: &[usize],
+) -> Result<RecoveryWave> {
+    if orphan_layers.is_empty() {
+        bail!("no orphan layers to re-plan");
+    }
+    if targets.is_empty() {
+        bail!("no lanes to re-plan orphaned layers onto");
+    }
+    if orphan_layers.windows(2).any(|w| w[1] <= w[0]) {
+        bail!("orphan layer set must be ascending and unique");
+    }
+    let mut orphan_ids = Vec::new();
+    let mut local_items = Vec::new();
+    for (id, it) in dispatch.items.iter().enumerate() {
+        if let Ok(local) = orphan_layers.binary_search(&it.layer) {
+            orphan_ids.push(id);
+            local_items.push(WorkItem { layer: local, ..*it });
+        }
+    }
+    let n_sub = targets.len().min(orphan_layers.len());
+    let sub_topo = TopologyCfg { devices: n_sub, ..topo.clone() };
+    let sub_fleet = Fleet::new(sub_topo, orphan_layers.len())?;
+    let sub = plan_dispatch(
+        dims,
+        &sub_fleet,
+        &local_items,
+        &dispatch.sched,
+        dispatch.transient_bytes,
+        &[],
+        dispatch.batch,
+    )?;
+    let mut lanes = Vec::new();
+    for (v, q) in sub.queues.iter().enumerate() {
+        if q.is_empty() {
+            continue;
+        }
+        let queue: Vec<usize> = q.iter().map(|&local| orphan_ids[local]).collect();
+        let groups = plan_batches(&dispatch.items, &queue, dispatch.batch)?;
+        lanes.push(RecoveryLane { lane: targets[v], queue, groups });
+    }
+    Ok(RecoveryWave { lanes, plan: sub.plan, orphan_layers: orphan_layers.to_vec() })
+}
+
+/// Build the full recovery plan for a set of dead lanes (`(lane,
+/// rejoin)` pairs). Each rejoining lane takes back exactly its own
+/// orphaned layer range; everything else lands on the never-killed
+/// survivors in one combined wave. Verifies that the waves' queues cover
+/// the orphaned items exactly once before any executor acts on them.
+pub fn plan_recovery(
+    dims: &ModelDims,
+    topo: &TopologyCfg,
+    dispatch: &Dispatch,
+    n_lanes: usize,
+    dead: &[(usize, bool)],
+) -> Result<RecoveryPlan> {
+    if dead.is_empty() {
+        bail!("no dead lanes to recover from");
+    }
+    let mut dead_set = BTreeSet::new();
+    for &(lane, _) in dead {
+        if lane >= n_lanes {
+            bail!("dead lane {lane} out of range ({n_lanes} lanes)");
+        }
+        if !dead_set.insert(lane) {
+            bail!("lane {lane} reported dead twice");
+        }
+    }
+    let survivors: Vec<usize> = (0..n_lanes).filter(|l| !dead_set.contains(l)).collect();
+    let n_devices = dispatch.queues.len();
+
+    let mut waves = Vec::new();
+    let mut all_layers = BTreeSet::new();
+    let mut spread_layers = BTreeSet::new();
+    let mut orphans = Vec::new();
+    for &(lane, rejoin) in dead {
+        let mut lane_layers = BTreeSet::new();
+        for dev in devices_of_lane(lane, n_lanes, n_devices) {
+            let dev_layers: Vec<usize> = dispatch.queues[dev]
+                .iter()
+                .map(|&id| dispatch.items[id].layer)
+                .collect::<BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            if dev_layers.is_empty() {
+                continue;
+            }
+            // assign_layers places a contiguous block per device — the
+            // re-plan relies on the orphaned work being a layer *range*
+            // it can treat as a smaller instance of the same problem.
+            layer_span(&dev_layers).with_context(|| {
+                format!("device {dev} (lane {lane}) owns a non-contiguous layer set")
+            })?;
+            orphans.extend(dispatch.queues[dev].iter().copied());
+            lane_layers.extend(dev_layers);
+        }
+        all_layers.extend(lane_layers.iter().copied());
+        if rejoin {
+            let layers: Vec<usize> = lane_layers.into_iter().collect();
+            if layers.is_empty() {
+                continue;
+            }
+            waves.push(replan_onto(dims, topo, dispatch, &layers, &[lane])?);
+        } else {
+            spread_layers.extend(lane_layers);
+        }
+    }
+    if !spread_layers.is_empty() {
+        if survivors.is_empty() {
+            bail!("every lane died without rejoining — orphaned layers have nowhere to go");
+        }
+        let layers: Vec<usize> = spread_layers.into_iter().collect();
+        waves.push(replan_onto(dims, topo, dispatch, &layers, &survivors)?);
+    }
+    orphans.sort_unstable();
+    let mut covered: Vec<usize> = waves
+        .iter()
+        .flat_map(|w| w.lanes.iter().flat_map(|l| l.queue.iter().copied()))
+        .collect();
+    covered.sort_unstable();
+    if covered != orphans {
+        bail!(
+            "recovery re-plan covers {} items, the deaths orphaned {}",
+            covered.len(),
+            orphans.len()
+        );
+    }
+    Ok(RecoveryPlan { waves, orphan_layers: all_layers.into_iter().collect(), orphans })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedCfg;
+    use crate::sharding::plan_chunks;
+
+    fn dims(k: usize, t: usize, c: usize) -> ModelDims {
+        ModelDims { name: "f".into(), v: 8, p: 4, n: 4, k, t, w: 8, c, eps: 1e-6 }
+    }
+
+    fn dispatch(k: usize, devices: usize, batch: usize) -> (ModelDims, Fleet, Dispatch) {
+        let d = dims(k, 32, 8);
+        let fleet =
+            Fleet::new(TopologyCfg { devices, ..Default::default() }, d.k).unwrap();
+        let items = plan_chunks(d.k, d.t, d.c).unwrap();
+        let disp =
+            plan_dispatch(&d, &fleet, &items, &SchedCfg::default(), 1024, &[], batch).unwrap();
+        (d, fleet, disp)
+    }
+
+    #[test]
+    fn fault_parse_display_roundtrip() {
+        for s in ["0@3", "2@0+rejoin", "1@7,0@2+rejoin"] {
+            let plan: FaultPlan = s.parse().unwrap();
+            assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+        }
+        let plan: FaultPlan = "1@4+rejoin".parse().unwrap();
+        assert_eq!(plan.kills, vec![Fault { lane: 1, after_items: 4, rejoin: true }]);
+        assert!("".parse::<FaultPlan>().is_err());
+        assert!("x@y".parse::<FaultPlan>().is_err());
+        assert!("1@".parse::<FaultPlan>().is_err());
+        assert!("1@2+fly".parse::<FaultPlan>().is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        for seed in [1u64, 42, 0xDEAD] {
+            let a = FaultPlan::seeded(seed, 4, 16);
+            let b = FaultPlan::seeded(seed, 4, 16);
+            assert_eq!(a, b, "same seed must give the same schedule");
+            assert!(a.kills[0].lane < 4);
+            assert!(a.kills[0].after_items < 16);
+        }
+        assert_ne!(
+            FaultPlan::seeded(1, 64, 1 << 20),
+            FaultPlan::seeded(2, 64, 1 << 20),
+            "different seeds should (here) give different schedules"
+        );
+    }
+
+    #[test]
+    fn split_filters_ineffective_kills() {
+        let plan: FaultPlan = "0@2,7@0,1@99".parse().unwrap();
+        // Lane 7 doesn't exist; lane 1's fault point is past its queue.
+        let split = split_faults(&plan, 2, &[4, 4]).unwrap();
+        assert_eq!(split.kills, vec![Fault { lane: 0, after_items: 2, rejoin: false }]);
+        assert_eq!(split.kill_after(0), Some(2));
+        assert_eq!(split.kill_after(1), None);
+        assert!(!split.rejoin(0));
+    }
+
+    #[test]
+    fn split_rejects_duplicate_and_total_loss() {
+        let dup: FaultPlan = "0@1,0@2".parse().unwrap();
+        assert!(split_faults(&dup, 2, &[4, 4]).is_err());
+        let total: FaultPlan = "0@1,1@1".parse().unwrap();
+        assert!(split_faults(&total, 2, &[4, 4]).is_err());
+        // All lanes dying is fine when every one rejoins.
+        let rejoin_all: FaultPlan = "0@1+rejoin,1@1+rejoin".parse().unwrap();
+        assert!(split_faults(&rejoin_all, 2, &[4, 4]).is_ok());
+    }
+
+    #[test]
+    fn ring_and_lane_device_helpers() {
+        assert_eq!(ring_order(4, 1), vec![1, 2, 3, 0]);
+        assert_eq!(ring_order(1, 0), vec![0]);
+        assert!(ring_order(0, 3).is_empty());
+        assert_eq!(devices_of_lane(1, 2, 5), vec![1, 3]);
+        assert_eq!(devices_of_lane(0, 1, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn doomed_groups_counts_units_before_the_fault() {
+        let g = |layer: usize, ids: &[usize]| BatchGroup { layer, ids: ids.to_vec() };
+        let groups = vec![g(0, &[0, 1]), g(0, &[2]), g(1, &[3, 4])];
+        assert_eq!(doomed_groups(&groups, 0), 0); // dies before anything
+        assert_eq!(doomed_groups(&groups, 1), 1); // first group straddles
+        assert_eq!(doomed_groups(&groups, 2), 1);
+        assert_eq!(doomed_groups(&groups, 3), 2);
+        assert_eq!(doomed_groups(&groups, 99), 3);
+    }
+
+    #[test]
+    fn recovery_covers_dead_lane_exactly_once() {
+        let (d, fleet, disp) = dispatch(4, 2, 1);
+        let rec = plan_recovery(&d, &fleet.cfg, &disp, 2, &[(1, false)]).unwrap();
+        // Lane 1 owns device 1 = layers {2, 3}; its whole queue orphans.
+        assert_eq!(rec.orphan_layers, vec![2, 3]);
+        assert_eq!(rec.orphans, disp.queues[1]);
+        assert_eq!(rec.waves.len(), 1);
+        for lane in &rec.waves[0].lanes {
+            assert_eq!(lane.lane, 0, "orphans must land on the survivor");
+            assert!(lane.queue.windows(2).all(|w| w[0] < w[1]), "queue not ascending");
+        }
+    }
+
+    #[test]
+    fn recovery_rejoin_takes_back_own_range() {
+        let (d, fleet, disp) = dispatch(4, 2, 3);
+        let rec = plan_recovery(&d, &fleet.cfg, &disp, 2, &[(0, true)]).unwrap();
+        assert_eq!(rec.orphan_layers, vec![0, 1]);
+        assert_eq!(rec.waves.len(), 1);
+        for lane in &rec.waves[0].lanes {
+            assert_eq!(lane.lane, 0, "rejoin must recover on the dead lane itself");
+            // Groups tile the queue with global ids, same-layer.
+            let flat: Vec<usize> = lane.groups.iter().flat_map(|g| g.ids.clone()).collect();
+            assert_eq!(flat, lane.queue);
+        }
+        // All lanes dead, no rejoin: nowhere to recover.
+        assert!(plan_recovery(&d, &fleet.cfg, &disp, 2, &[(0, false), (1, false)]).is_err());
+    }
+}

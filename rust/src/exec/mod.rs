@@ -1,70 +1,81 @@
 //! Execution backends for the adjoint backward phase — the point where
 //! `BackwardPlan` stops being a report and becomes a dispatch contract
-//! (DESIGN.md §Execution).
+//! (DESIGN.md §Execution, §Fault-Tolerance).
 //!
 //! PR 1 gave the backward phase a real schedule but only *modeled* its
-//! concurrency in virtual time; the PJRT executions themselves stayed a
-//! single sequential loop. This module introduces the [`Executor`] trait
-//! with two backends:
+//! concurrency in virtual time; PR 3 made device concurrency real inside
+//! one process. This module now holds the [`Executor`] trait and three
+//! backends:
 //!
-//! * [`SimExecutor`] — the deterministic single-threaded dispatch the
-//!   repo has always had (and the default): every item executes on the
-//!   coordinator's runtime in work-item id order. Virtual time still
-//!   models the fleet.
-//! * [`ThreadedExecutor`] — one worker thread per simulated device
-//!   (capped by `--workers`), each owning its *own* PJRT runtime, its own
-//!   compiled `layer_adjoint_grad` entry, its own device-constant cache,
-//!   and its own `ItemStage` arenas, fed its device's slice of the
-//!   dispatch plan over a channel and answering with per-layer gradient
-//!   partials. Devices really do work their independent VJP bundles
-//!   concurrently — the wall-clock realization of the paper's
-//!   distributed Alg. 4 claim.
+//! * [`SimExecutor`] ([`sim`]) — the deterministic single-threaded
+//!   dispatch the repo has always had (and the default): every item
+//!   executes on the coordinator's runtime in work-item id order.
+//!   Virtual time still models the fleet, and injected faults are
+//!   *modeled* (queue truncation + zero-bit rollback + re-plan).
+//! * [`ThreadedExecutor`] ([`threaded`]) — one worker thread per
+//!   simulated device (capped by `--workers`), each owning its *own*
+//!   PJRT runtime, compiled entries, device-constant cache, and staging
+//!   arenas; real concurrency across devices.
+//! * [`ProcessExecutor`] ([`process`]) — workers as child processes
+//!   speaking the length-prefixed [`wire`] protocol over stdio pipes;
+//!   a real OS failure domain per lane. Worker death (crash, kill
+//!   signal, or injected [`FaultPlan`] fault) presents as EOF and
+//!   triggers re-planning the orphaned layer range onto surviving lanes,
+//!   with elastic rejoin ([`fault`]).
 //!
-//! **Determinism contract.** Both backends produce bit-identical
-//! [`GradSet`]s (asserted in `rust/tests/exec_equivalence.rs`):
+//! **Determinism contract.** All backends produce bit-identical
+//! [`GradSet`]s — healthy *and* across worker death and rejoin (asserted
+//! in `rust/tests/exec_equivalence.rs` and
+//! `rust/tests/failure_injection.rs`):
 //!
 //! * layers are partitioned across devices, so each layer's gradient is
-//!   accumulated by exactly one executor lane — there is no cross-thread
+//!   accumulated by exactly one executor lane — there is no cross-lane
 //!   sum whose order could float;
 //! * within a lane, items are executed and reduced in ascending work-item
 //!   id order (layer-major, chunk-ascending — the seed's order),
 //!   regardless of the scheduling policy; the policy shapes the
 //!   *virtual-time* plan, not the reduction order;
-//! * the coordinator merges worker partials in ascending layer order
-//!   after all workers finish, so completion order can never leak into
-//!   the gradient bits. (Each partial is added once into the phase's
-//!   zeroed layer slots — the same `0 + g₀ + g₁ + …` float sequence the
-//!   sequential loop performs.)
+//! * the coordinator merges lane partials in ascending layer order after
+//!   all lanes finish, so completion order can never leak into the
+//!   gradient bits (each partial is added once into the phase's zeroed
+//!   layer slots — the same `0 + g₀ + g₁ + …` float sequence the
+//!   sequential loop performs);
+//! * a dead lane's partials are discarded whole and its layers recover
+//!   from zero on exactly one lane each, so the recovered reduction is
+//!   the same float sequence again — fault recovery is bit-invisible.
 //!
 //! **Thread-pinning.** The xla handles (`Runtime`, `Compiled`,
-//! `StagedConst`) stay `!Send`; the Rc→Arc refactor makes the *ownership
-//! idiom* uniform, and `Arc<T: !Send>` is itself `!Send`, so the compiler
-//! still proves no runtime handle crosses a thread. Workers never receive
-//! handles — they receive plans and `Arc<Tensor>` snapshots and build
-//! their own handles on their own thread.
+//! `StagedConst`) stay `!Send`; workers never receive handles — they
+//! receive plans and `Arc<Tensor>` snapshots and build their own handles
+//! on their own thread (or in their own process).
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::path::{Path, PathBuf};
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::adjoint::{
-    gather_group_args_into_from, gather_item_args_into, gather_item_args_into_from, stage_for,
-    stage_slot, ItemStage, StagePool,
-};
+use crate::adjoint::{stage_slot, ItemStage, StagePool};
 use crate::config::{ModelDims, SchedCfg};
 use crate::model::{GradSet, ParamSet};
-use crate::runtime::{
-    ArgRef, ArtifactSet, Compiled, ConstCache, ConstKey, EntrySpec, InFlight, Manifest, Runtime,
-};
+use crate::runtime::{ArgRef, ArtifactSet, EntrySpec, InFlight, StagedConst};
 use crate::schedule::{self, BackwardPlan, SchedItem};
 use crate::sharding::{plan_batches, BatchGroup, WorkItem};
 use crate::tensor::Tensor;
-use crate::topology::{ActKind, ActSource, Fleet};
+use crate::topology::{ActKind, Fleet};
+
+pub mod fault;
+pub mod process;
+pub mod sim;
+pub mod threaded;
+pub mod wire;
+
+pub use fault::{Death, Fault, FaultPlan, FaultReport};
+pub use process::{process_worker_main, ProcessExecutor, FAULT_EXIT};
+pub use sim::SimExecutor;
+pub use threaded::ThreadedExecutor;
+
+use fault::RecoveryLane;
+use wire::{DeviceWorkMsg, DoneMsg};
 
 /// Seconds charged per paper-unit VJP when planning the dispatch
 /// analytically (before any measurement exists). The absolute value is
@@ -73,7 +84,7 @@ use crate::topology::{ActKind, ActSource, Fleet};
 pub const ANALYTIC_VJP_UNIT_S: f64 = 1e-6;
 
 // ---------------------------------------------------------------------------
-// Executor selection (`--executor sim|threaded`, `--workers N`).
+// Executor selection (`--executor sim|threaded|process`, `--workers N`).
 // ---------------------------------------------------------------------------
 
 /// Which execution backend runs the backward phase.
@@ -84,15 +95,20 @@ pub enum ExecutorKind {
     /// One worker thread per simulated device, each with its own PJRT
     /// runtime; real concurrency across devices.
     Threaded,
+    /// One worker *process* per simulated device over the wire protocol;
+    /// a real OS failure domain per lane.
+    Process,
 }
 
 impl ExecutorKind {
-    pub const ALL: [ExecutorKind; 2] = [ExecutorKind::Sim, ExecutorKind::Threaded];
+    pub const ALL: [ExecutorKind; 3] =
+        [ExecutorKind::Sim, ExecutorKind::Threaded, ExecutorKind::Process];
 
     pub fn label(&self) -> &'static str {
         match self {
             ExecutorKind::Sim => "sim",
             ExecutorKind::Threaded => "threaded",
+            ExecutorKind::Process => "process",
         }
     }
 }
@@ -110,7 +126,8 @@ impl std::str::FromStr for ExecutorKind {
         match s {
             "sim" => Ok(ExecutorKind::Sim),
             "threaded" | "thread" | "threads" => Ok(ExecutorKind::Threaded),
-            _ => bail!("unknown executor '{s}' (sim|threaded)"),
+            "process" | "proc" | "processes" => Ok(ExecutorKind::Process),
+            _ => bail!("unknown executor '{s}' (sim|threaded|process)"),
         }
     }
 }
@@ -120,8 +137,8 @@ impl std::str::FromStr for ExecutorKind {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecCfg {
     pub kind: ExecutorKind,
-    /// Worker-thread cap for the threaded backend; 0 = one per device.
-    /// Ignored by the sim backend.
+    /// Worker lane cap for the threaded/process backends; 0 = one per
+    /// device. Ignored by the sim backend.
     pub workers: usize,
 }
 
@@ -132,19 +149,27 @@ impl Default for ExecCfg {
 }
 
 impl ExecCfg {
-    /// Instantiate the configured backend.
+    /// Instantiate the configured backend with no fault plan armed.
     pub fn build(&self) -> Box<dyn Executor> {
+        self.build_with(None)
+    }
+
+    /// Instantiate the configured backend, arming `fault` (`--fault-at`)
+    /// on it — every backend shares the hook (DESIGN.md §Fault-Tolerance).
+    pub fn build_with(&self, fault: Option<FaultPlan>) -> Box<dyn Executor> {
         match self.kind {
-            ExecutorKind::Sim => Box::new(SimExecutor),
-            ExecutorKind::Threaded => Box::new(ThreadedExecutor::new(self.workers)),
+            ExecutorKind::Sim => Box::new(SimExecutor::with_faults(fault)),
+            ExecutorKind::Threaded => Box::new(ThreadedExecutor::with_faults(self.workers, fault)),
+            ExecutorKind::Process => Box::new(ProcessExecutor::new(self.workers).with_faults(fault)),
         }
     }
 }
 
-/// Lane count for a threaded backend: `requested` caps the thread count,
-/// 0 means one lane per unit of available parallelism (`max_lanes`).
-/// Shared by the backward executor (lanes = simulated devices) and the
-/// serving loop (lanes = session shards; DESIGN.md §Serving).
+/// Lane count for a worker-backed backend: `requested` caps the lane
+/// count, 0 means one lane per unit of available parallelism
+/// (`max_lanes`). Shared by the backward executors (lanes = simulated
+/// devices) and the serving loop (lanes = session shards; DESIGN.md
+/// §Serving).
 pub fn lane_count(requested: usize, max_lanes: usize) -> usize {
     let cap = max_lanes.max(1);
     if requested == 0 {
@@ -200,7 +225,7 @@ pub fn batched_entry_width(spec: &EntrySpec) -> Result<usize> {
 /// analytic virtual-time plan that assigned it, and the per-device item
 /// queues derived from that plan. Built *before* any execution (the
 /// analytic per-item cost is `vjp_units × `[`ANALYTIC_VJP_UNIT_S`]), so
-/// both backends run the same deterministic contract; the *measured*
+/// all backends run the same deterministic contract; the *measured*
 /// plan the phase reports is re-planned afterwards from real seconds.
 #[derive(Debug, Clone)]
 pub struct Dispatch {
@@ -221,6 +246,13 @@ pub struct Dispatch {
     /// Singleton groups when `batch == 1` (unused by the single-item
     /// dispatch, kept for uniform accounting).
     pub groups: Vec<Vec<BatchGroup>>,
+    /// The scheduling configuration the plan was built under — carried so
+    /// fault recovery re-plans orphaned layers through the *same*
+    /// scheduler ([`fault::replan_onto`]).
+    pub sched: SchedCfg,
+    /// Per-item transient admission bytes the plan charged — carried for
+    /// the same re-plan.
+    pub transient_bytes: u64,
 }
 
 /// Plan the dispatch: schedule `items` analytically under `sched`'s
@@ -298,7 +330,15 @@ pub fn plan_dispatch(
         .iter()
         .map(|q| plan_batches(items, q, batch.max(1)))
         .collect::<Result<Vec<_>>>()?;
-    Ok(Dispatch { items: items.to_vec(), plan, queues, batch: batch.max(1), groups })
+    Ok(Dispatch {
+        items: items.to_vec(),
+        plan,
+        queues,
+        batch: batch.max(1),
+        groups,
+        sched: sched.clone(),
+        transient_bytes,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -312,7 +352,7 @@ pub struct ExecCtx<'a> {
     pub params: &'a ParamSet,
     pub fleet: &'a Fleet,
     /// The coordinator's reusable staging state (used by the sim backend;
-    /// the threaded backend's workers own their own stages).
+    /// the threaded/process workers own their own stages).
     pub pool: &'a mut StagePool,
 }
 
@@ -324,8 +364,8 @@ pub struct ExecOutcome {
     pub item_secs: Vec<f64>,
     /// Σ item seconds (total PJRT execution time, all lanes).
     pub wall_s: f64,
-    /// Host wall-clock the whole phase took end to end. For the threaded
-    /// backend this is what concurrency actually bought; for sim it is
+    /// Host wall-clock the whole phase took end to end. For the worker
+    /// backends this is what concurrency actually bought; for sim it is
     /// ≈ `wall_s` plus staging overhead.
     pub host_s: f64,
     /// Host staging seconds spent while a PJRT execution was in flight on
@@ -347,9 +387,18 @@ pub struct ExecOutcome {
 /// exact float sequence `0 + g₀ + g₁ + …` in id order, whether the adds
 /// run on the host per item or on-device per batch group seeded from the
 /// running accumulators — DESIGN.md §Batched-Backward), and report the
-/// measured per-item seconds.
+/// measured per-item seconds. An armed fault plan may kill lanes
+/// mid-phase; the backend must then recover every orphaned item exactly
+/// once and leave `grads` bit-identical to a healthy run.
 pub trait Executor {
     fn kind(&self) -> ExecutorKind;
+
+    /// What the last `execute` call's fault handling did: `None` when no
+    /// fault plan was armed, an empty default report when every kill was
+    /// ineffective, and the full death/orphan/recovery account otherwise.
+    fn fault_report(&self) -> Option<&FaultReport> {
+        None
+    }
 
     fn execute(
         &mut self,
@@ -360,89 +409,19 @@ pub trait Executor {
 }
 
 // ---------------------------------------------------------------------------
-// SimExecutor — the deterministic single-threaded baseline.
+// Shared dispatch plumbing (used by two or more backends).
 // ---------------------------------------------------------------------------
-
-/// Today's dispatch, behind the trait: every item executes on the
-/// coordinator's runtime in ascending id order through the pooled
-/// zero-copy staging path (DESIGN.md §Host-Staging). Bit-for-bit the
-/// seed's gradient math.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct SimExecutor;
-
-impl Executor for SimExecutor {
-    fn kind(&self) -> ExecutorKind {
-        ExecutorKind::Sim
-    }
-
-    fn execute(
-        &mut self,
-        ctx: ExecCtx<'_>,
-        dispatch: &Dispatch,
-        grads: &mut GradSet,
-    ) -> Result<ExecOutcome> {
-        if dispatch.batch > 1 {
-            return sim_execute_batched(ctx, dispatch, grads);
-        }
-        use stage_slot::*;
-        let t0 = Instant::now();
-        let entry = ctx.arts.entry("layer_adjoint_grad")?;
-
-        // Per-layer W_c staged to a device literal once per phase at most
-        // — the content-hash cache makes repeat phases free.
-        let w_c: Vec<_> = (0..ctx.dims.k)
-            .map(|k| {
-                ctx.arts.staged_const(
-                    ConstKey::LayerParam { layer: k, field: 6 },
-                    ctx.params.layers[k].w_c(),
-                )
-            })
-            .collect::<Result<Vec<_>>>()?;
-
-        ctx.pool.prepare_outs(&entry.spec);
-        let (stages, outs) = ctx.pool.split_mut();
-
-        let mut item_secs = vec![0.0f64; dispatch.items.len()];
-        let mut wall_s = 0.0;
-        let mut calls = 0u64;
-        for (id, item) in dispatch.items.iter().enumerate() {
-            let devi = ctx.fleet.device_of_layer(item.layer);
-            let stage = stage_for(stages, devi);
-            gather_item_args_into(ctx.dims, ctx.fleet, item, stage)?;
-            let args = [
-                ArgRef::C(w_c[item.layer].as_ref()),
-                ArgRef::F(stage.view(XHAT)),
-                ArgRef::F(stage.view(HPREV)),
-                ArgRef::F(stage.view(H)),
-                ArgRef::F(stage.view(A_EXT)),
-                ArgRef::F(stage.view(C_EXT)),
-                ArgRef::F(stage.view(V_EXT)),
-            ];
-            let secs = entry.run_timed_into(&args, outs)?;
-            grads.accumulate_layer(item.layer, outs)?;
-            item_secs[id] = secs;
-            wall_s += secs;
-            calls += 1;
-        }
-        Ok(ExecOutcome {
-            item_secs,
-            wall_s,
-            host_s: t0.elapsed().as_secs_f64(),
-            overlap_s: 0.0,
-            calls,
-        })
-    }
-}
 
 /// Complete one in-flight batch group: block for the updated running
 /// accumulators and swap them into the layer's slots (`acc` — the
 /// GradSet's layer tensors for the sim backend, the worker's partial for
-/// threaded). The outputs ARE the new accumulators, folded on-device in
-/// ascending item-id order seeded from the staged `acc`, so the swap
-/// completes the exact `acc + g₀ + g₁ + …` float sequence the single-item
-/// path performs. Measured group seconds are attributed evenly to the
-/// member items (the virtual-time re-plan's per-item service costs).
-fn finish_group(
+/// threaded/process). The outputs ARE the new accumulators, folded
+/// on-device in ascending item-id order seeded from the staged `acc`, so
+/// the swap completes the exact `acc + g₀ + g₁ + …` float sequence the
+/// single-item path performs. Measured group seconds are attributed
+/// evenly to the member items (the virtual-time re-plan's per-item
+/// service costs).
+pub(crate) fn finish_group(
     fly: InFlight<'_>,
     outs: &mut [Tensor],
     acc: &mut [Tensor],
@@ -464,8 +443,8 @@ fn finish_group(
 
 /// Assemble the 14-argument batched-entry call: `W_c`, the six
 /// batch-major slabs, and the layer's running accumulators.
-fn batched_args<'a>(
-    w_c: &'a crate::runtime::StagedConst,
+pub(crate) fn batched_args<'a>(
+    w_c: &'a StagedConst,
     stage: &'a ItemStage,
     acc: &'a [Tensor],
 ) -> Result<[ArgRef<'a>; 14]> {
@@ -488,516 +467,125 @@ fn batched_args<'a>(
     ])
 }
 
-/// The batched sim dispatch: per lane, batch groups execute in ascending
-/// order through a **double-buffered stage pair** — group g+1 is gathered
-/// into the lane's other stage while group g is in flight on PJRT
-/// (`Compiled::launch` / `InFlight::wait_into`), the first real
-/// stage/compute overlap in the codebase. Gradient bits are unchanged
-/// from the single-item path: the entry folds each group's partials into
-/// the layer's running accumulators on-device, in pinned ascending item
-/// order (DESIGN.md §Batched-Backward).
-fn sim_execute_batched(
-    ctx: ExecCtx<'_>,
+/// One device's healthy-phase share, packaged for a worker lane: its
+/// ascending-id queue, the queue's group packing (batched only), an
+/// `Arc` snapshot of its activation store, and its layers' `W_c`.
+/// `None` when the device has no work this phase.
+pub(crate) fn device_work(
     dispatch: &Dispatch,
-    grads: &mut GradSet,
-) -> Result<ExecOutcome> {
-    let t0 = Instant::now();
-    let entry = ctx.arts.entry("layer_adjoint_grad_batched")?;
-    let m_static = batched_entry_width(&entry.spec)?;
-
-    let w_c: Vec<_> = (0..ctx.dims.k)
-        .map(|k| {
-            ctx.arts.staged_const(
-                ConstKey::LayerParam { layer: k, field: 6 },
-                ctx.params.layers[k].w_c(),
-            )
-        })
-        .collect::<Result<Vec<_>>>()?;
-
-    ctx.pool.prepare_outs(&entry.spec);
-    let (stages, outs) = ctx.pool.split_mut();
-
-    let mut item_secs = vec![0.0f64; dispatch.items.len()];
-    let mut wall_s = 0.0;
-    let mut overlap_s = 0.0;
-    let mut calls = 0u64;
-    for (dev, groups) in dispatch.groups.iter().enumerate() {
-        let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
-        for (gi, group) in groups.iter().enumerate() {
-            // Stage pair per lane: parity picks the buffer not used by
-            // the in-flight group. Today `launch` copies the views into
-            // literals before returning, so a single stage would already
-            // be safe to reuse — the pair is the contract that stays
-            // correct if launch ever stages zero-copy from the arena,
-            // and it keeps both in-flight groups' host slabs inspectable.
-            let stage = stage_for(stages, dev * 2 + gi % 2);
-            let tg = Instant::now();
-            gather_group_args_into_from(
-                ctx.dims,
-                &ctx.fleet.devices[dev],
-                &dispatch.items,
-                group,
-                m_static,
-                stage,
-            )?;
-            if pending.is_some() {
-                let hidden = tg.elapsed().as_secs_f64();
-                overlap_s += hidden;
-                entry.note_overlap(hidden);
-            }
-            if let Some((fly, g)) = pending.take() {
-                finish_group(
-                    fly,
-                    outs,
-                    &mut grads.layers[g.layer].0,
-                    g,
-                    &mut |id, s| item_secs[id] = s,
-                    &mut wall_s,
-                )?;
-            }
-            let args =
-                batched_args(w_c[group.layer].as_ref(), stage, &grads.layers[group.layer].0)?;
-            pending = Some((entry.launch(&args)?, group));
-            calls += 1;
-        }
-        if let Some((fly, g)) = pending.take() {
-            finish_group(
-                fly,
-                outs,
-                &mut grads.layers[g.layer].0,
-                g,
-                &mut |id, s| item_secs[id] = s,
-                &mut wall_s,
-            )?;
-        }
+    fleet: &Fleet,
+    params: &ParamSet,
+    dev: usize,
+) -> Option<DeviceWorkMsg> {
+    let queue = &dispatch.queues[dev];
+    if queue.is_empty() {
+        return None;
     }
-    Ok(ExecOutcome {
-        item_secs,
-        wall_s,
-        host_s: t0.elapsed().as_secs_f64(),
-        overlap_s,
-        calls,
+    let layers: BTreeSet<usize> = queue.iter().map(|&id| dispatch.items[id].layer).collect();
+    let w_c = layers
+        .iter()
+        .map(|&k| (k, Arc::new(params.layers[k].w_c().clone())))
+        .collect();
+    Some(DeviceWorkMsg {
+        device: dev,
+        items: queue.iter().map(|&id| (id, dispatch.items[id])).collect(),
+        // Group packing only travels when the batched path will read it —
+        // dead weight otherwise.
+        groups: if dispatch.batch > 1 { dispatch.groups[dev].clone() } else { Vec::new() },
+        acts: fleet.devices[dev].shared_store(),
+        w_c,
     })
 }
 
-// ---------------------------------------------------------------------------
-// ThreadedExecutor — real per-device concurrency.
-// ---------------------------------------------------------------------------
-
-/// One device's share of a phase, shipped to a worker: its queue (item
-/// ids ascending), the queue's batch-group packing, an `Arc` snapshot of
-/// its activation store (including the replicated cotangents), and the
-/// `W_c` values its layers need.
-struct DeviceWork {
-    device: usize,
-    items: Vec<(usize, WorkItem)>,
-    /// The device queue's [`BatchGroup`] packing from the dispatch
-    /// contract (used when `WorkerJob::batch > 1`).
-    groups: Vec<BatchGroup>,
-    acts: Vec<((usize, ActKind), Arc<Tensor>)>,
-    w_c: Vec<(usize, Arc<Tensor>)>,
-}
-
-/// One phase's job for one worker (one or more devices when `--workers`
-/// caps the thread count below the fleet size).
-struct WorkerJob {
-    dims: ModelDims,
-    artifacts_dir: PathBuf,
-    /// Resolved batched dispatch width (`Dispatch::batch`): 1 = the
-    /// single-item entry per call, > 1 = batched groups.
-    batch: usize,
-    /// The phase's full work-item table (`Dispatch::items`) — batch
-    /// groups reference it by global item id.
-    items: Vec<WorkItem>,
-    devices: Vec<DeviceWork>,
-    reply: mpsc::Sender<Result<WorkerDone>>,
-}
-
-/// A worker's answer: per-layer gradient partials (each layer appears on
-/// exactly one worker — layers are device-partitioned), measured seconds
-/// per item, and lane totals.
-struct WorkerDone {
-    layer_grads: Vec<(usize, Vec<Tensor>)>,
-    item_secs: Vec<(usize, f64)>,
-    wall_s: f64,
-    overlap_s: f64,
-    calls: u64,
-}
-
-enum Msg {
-    Job(Box<WorkerJob>),
-    Shutdown,
-}
-
-struct WorkerHandle {
-    tx: mpsc::Sender<Msg>,
-    join: Option<JoinHandle<()>>,
-}
-
-/// Worker-local, thread-pinned state that persists across phases: the
-/// worker's own PJRT runtime + compiled entry (rebuilt only if the
-/// artifact dir changes), its sharded device-constant cache, and its
-/// reusable staging arenas — the PR-2 zero-copy invariants, worker-local.
-struct WorkerState {
-    dir: PathBuf,
-    // Field order = drop order: the compiled executables and staged
-    // literals go before the client that owns their backing runtime.
-    //
-    // Both entries compile lazily on first dispatch of their kind (kept
-    // warm across phases), so a batched phase never pays a dead
-    // single-item compile and vice versa — the same skip serve's lanes
-    // apply to the dead `layer_step`.
-    entry: Option<Compiled>,
-    entry_batched: Option<Compiled>,
-    consts: ConstCache,
-    runtime: Runtime,
-    manifest: Manifest,
-    stages: Vec<ItemStage>,
-    outs: Vec<Tensor>,
-}
-
-impl WorkerState {
-    fn open(dir: &Path) -> Result<Self> {
-        let runtime = Runtime::cpu().context("worker PJRT client")?;
-        let manifest = Manifest::load(dir)?;
-        // The output buffer set is shared by both entries (identical
-        // gradient shapes — asserted again at decomposition time).
-        let spec = manifest.entry("layer_adjoint_grad")?;
-        let outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-        Ok(Self {
-            dir: dir.to_path_buf(),
-            entry: None,
-            entry_batched: None,
-            consts: ConstCache::new(),
-            runtime,
-            manifest,
-            stages: Vec::new(),
-            outs,
-        })
-    }
-
-    /// Get (compiling on first use) the single-item entry.
-    fn single(&mut self) -> Result<&Compiled> {
-        if self.entry.is_none() {
-            let spec = self.manifest.entry("layer_adjoint_grad")?.clone();
-            self.entry = Some(self.runtime.compile_entry(&self.dir, &spec)?);
-        }
-        Ok(self.entry.as_ref().expect("just compiled"))
-    }
-
-    /// Get (compiling on first use) the batched entry.
-    fn batched(&mut self) -> Result<&Compiled> {
-        if self.entry_batched.is_none() {
-            let spec = self.manifest.entry("layer_adjoint_grad_batched")?.clone();
-            self.entry_batched = Some(self.runtime.compile_entry(&self.dir, &spec)?);
-        }
-        Ok(self.entry_batched.as_ref().expect("just compiled"))
+/// Package one recovery lane's share of the orphaned work: the queue and
+/// groups come from the recovery re-plan; activations are snapshotted
+/// from the orphaned layers' *owner* devices (their stores survive a
+/// lane death — it is the lane's compute that died, not the simulated
+/// device memory), plus the replicated cotangent exactly once.
+pub(crate) fn recovery_work(
+    dispatch: &Dispatch,
+    fleet: &Fleet,
+    params: &ParamSet,
+    rl: &RecoveryLane,
+) -> DeviceWorkMsg {
+    let layers: BTreeSet<usize> = rl.queue.iter().map(|&id| dispatch.items[id].layer).collect();
+    let w_c = layers
+        .iter()
+        .map(|&k| (k, Arc::new(params.layers[k].w_c().clone())))
+        .collect();
+    DeviceWorkMsg {
+        device: rl.lane,
+        items: rl.queue.iter().map(|&id| (id, dispatch.items[id])).collect(),
+        groups: if dispatch.batch > 1 { rl.groups.clone() } else { Vec::new() },
+        acts: lane_snapshot_acts(fleet, &layers),
+        w_c,
     }
 }
 
-/// Snapshot-backed activation source for worker-side gathers.
-struct SnapshotActs<'a>(&'a BTreeMap<(usize, ActKind), Arc<Tensor>>);
-
-impl ActSource for SnapshotActs<'_> {
-    fn act(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
-        self.0
-            .get(&(layer, kind))
-            .map(|t| t.as_ref())
-            .with_context(|| format!("worker snapshot: no activation ({layer}, {kind:?})"))
-    }
-}
-
-fn worker_main(rx: mpsc::Receiver<Msg>) {
-    let mut state: Option<WorkerState> = None;
-    while let Ok(Msg::Job(job)) = rx.recv() {
-        let result = run_worker_job(&mut state, &job);
-        // Receiver gone means the coordinator gave up on the phase;
-        // nothing useful to do with the result.
-        let _ = job.reply.send(result);
-    }
-}
-
-fn run_worker_job(state: &mut Option<WorkerState>, job: &WorkerJob) -> Result<WorkerDone> {
-    use stage_slot::*;
-    if state.as_ref().map(|s| s.dir != job.artifacts_dir).unwrap_or(true) {
-        *state = Some(WorkerState::open(&job.artifacts_dir)?);
-    }
-    let st = state.as_mut().expect("worker state just ensured");
-    if job.batch > 1 {
-        return run_worker_job_batched(st, job);
-    }
-    st.single()?; // compile before the disjoint field borrows below
-    let WorkerState { entry, consts, stages, outs, .. } = st;
-    let entry = entry.as_ref().expect("single-item entry just ensured");
-
-    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-    let mut item_secs = Vec::new();
-    let mut wall_s = 0.0;
-    let mut calls = 0u64;
-
-    for work in &job.devices {
-        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> =
-            work.acts.iter().cloned().collect();
-        let src = SnapshotActs(&acts);
-        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
-        let stage = stage_for(stages, work.device);
-        for &(id, item) in &work.items {
-            gather_item_args_into_from(&job.dims, &src, &item, stage)?;
-            let w_c_t = w_c
-                .get(&item.layer)
-                .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
-            let wc =
-                consts.staged(ConstKey::LayerParam { layer: item.layer, field: 6 }, w_c_t)?;
-            let args = [
-                ArgRef::C(wc.as_ref()),
-                ArgRef::F(stage.view(XHAT)),
-                ArgRef::F(stage.view(HPREV)),
-                ArgRef::F(stage.view(H)),
-                ArgRef::F(stage.view(A_EXT)),
-                ArgRef::F(stage.view(C_EXT)),
-                ArgRef::F(stage.view(V_EXT)),
-            ];
-            let secs = entry.run_timed_into(&args, outs)?;
-            // Pinned reduction: the lane is serial and its queue is
-            // ascending-id, so this is the exact `0 + g₀ + g₁ + …`
-            // sequence the sim backend performs for this layer.
-            let acc = layer_grads
-                .entry(item.layer)
-                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
-            for (a, g) in acc.iter_mut().zip(outs.iter()) {
-                a.add_assign(g)?;
-            }
-            item_secs.push((id, secs));
-            wall_s += secs;
-            calls += 1;
-        }
-    }
-
-    Ok(WorkerDone {
-        layer_grads: layer_grads.into_iter().collect(),
-        item_secs,
-        wall_s,
-        overlap_s: 0.0,
-        calls,
-    })
-}
-
-/// The batched worker loop: the sim backend's double-buffered group
-/// dispatch, worker-local — per device, gather group g+1 into the lane's
-/// other stage while group g is in flight on the worker's own runtime.
-/// The worker's per-layer partials are the running accumulators the
-/// batched entry folds into (seeded zero, exactly as the single-item
-/// worker's partials start), so the coordinator's ascending-layer merge
-/// is unchanged.
-fn run_worker_job_batched(st: &mut WorkerState, job: &WorkerJob) -> Result<WorkerDone> {
-    st.batched()?; // compile before the disjoint field borrows below
-    let WorkerState { entry_batched, consts, stages, outs, .. } = st;
-    let entry = entry_batched.as_ref().expect("batched entry just ensured");
-    let m_static = batched_entry_width(&entry.spec)?;
-
-    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-    let mut item_secs = Vec::new();
-    let mut wall_s = 0.0;
-    let mut overlap_s = 0.0;
-    let mut calls = 0u64;
-
-    for work in &job.devices {
-        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> =
-            work.acts.iter().cloned().collect();
-        let src = SnapshotActs(&acts);
-        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
-        let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
-        for (gi, group) in work.groups.iter().enumerate() {
-            let stage = stage_for(stages, work.device * 2 + gi % 2);
-            let tg = Instant::now();
-            gather_group_args_into_from(&job.dims, &src, &job.items, group, m_static, stage)?;
-            if pending.is_some() {
-                let hidden = tg.elapsed().as_secs_f64();
-                overlap_s += hidden;
-                entry.note_overlap(hidden);
-            }
-            if let Some((fly, g)) = pending.take() {
-                let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
-                finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
-            }
-            let w_c_t = w_c
-                .get(&group.layer)
-                .with_context(|| format!("worker job missing W_c for layer {}", group.layer))?;
-            let wc =
-                consts.staged(ConstKey::LayerParam { layer: group.layer, field: 6 }, w_c_t)?;
-            let acc = layer_grads
-                .entry(group.layer)
-                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
-            let args = batched_args(wc.as_ref(), stage, acc)?;
-            pending = Some((entry.launch(&args)?, group));
-            calls += 1;
-        }
-        if let Some((fly, g)) = pending.take() {
-            let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
-            finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
-        }
-    }
-
-    Ok(WorkerDone {
-        layer_grads: layer_grads.into_iter().collect(),
-        item_secs,
-        wall_s,
-        overlap_s,
-        calls,
-    })
-}
-
-/// Real concurrent backend: persistent worker threads (spawned lazily,
-/// kept across steps so each worker compiles its entry once), one lane
-/// per simulated device. Per-device in-flight concurrency is exactly one
-/// call — within the fleet's MIG-slot cap by construction — while
-/// devices overlap for real across threads.
-pub struct ThreadedExecutor {
-    requested: usize,
-    workers: Vec<WorkerHandle>,
-}
-
-impl ThreadedExecutor {
-    /// `workers` caps the thread count; 0 = one per device.
-    pub fn new(workers: usize) -> Self {
-        Self { requested: workers, workers: Vec::new() }
-    }
-
-    fn ensure_workers(&mut self, n: usize) -> Result<()> {
-        while self.workers.len() < n {
-            let (tx, rx) = mpsc::channel();
-            let join = std::thread::Builder::new()
-                .name(format!("adjsh-exec-{}", self.workers.len()))
-                .spawn(move || worker_main(rx))
-                .context("spawning executor worker")?;
-            self.workers.push(WorkerHandle { tx, join: Some(join) });
-        }
-        Ok(())
-    }
-}
-
-impl Drop for ThreadedExecutor {
-    fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Msg::Shutdown);
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
-    }
-}
-
-impl Executor for ThreadedExecutor {
-    fn kind(&self) -> ExecutorKind {
-        ExecutorKind::Threaded
-    }
-
-    fn execute(
-        &mut self,
-        ctx: ExecCtx<'_>,
-        dispatch: &Dispatch,
-        grads: &mut GradSet,
-    ) -> Result<ExecOutcome> {
-        let t0 = Instant::now();
-        let devices = ctx.fleet.cfg.devices;
-        let n_workers = lane_count(self.requested, devices);
-        self.ensure_workers(n_workers)?;
-
-        // Build each device's job: its ascending-id queue, an Arc
-        // snapshot of its activation store, and its layers' W_c values.
-        let mut per_worker: Vec<Vec<DeviceWork>> = (0..n_workers).map(|_| Vec::new()).collect();
-        for (dev, queue) in dispatch.queues.iter().enumerate() {
-            if queue.is_empty() {
-                continue;
-            }
-            let layers: BTreeSet<usize> =
-                queue.iter().map(|&id| dispatch.items[id].layer).collect();
-            let w_c = layers
-                .iter()
-                .map(|&k| (k, Arc::new(ctx.params.layers[k].w_c().clone())))
-                .collect();
-            per_worker[dev % n_workers].push(DeviceWork {
-                device: dev,
-                items: queue.iter().map(|&id| (id, dispatch.items[id])).collect(),
-                // Group packing only travels when the batched path will
-                // read it — dead weight otherwise.
-                groups: if dispatch.batch > 1 {
-                    dispatch.groups[dev].clone()
-                } else {
-                    Vec::new()
-                },
-                acts: ctx.fleet.devices[dev].shared_store(),
-                w_c,
-            });
-        }
-
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let mut outstanding = 0usize;
-        for (w, work) in per_worker.into_iter().enumerate() {
-            if work.is_empty() {
-                continue;
-            }
-            let job = WorkerJob {
-                dims: ctx.dims.clone(),
-                artifacts_dir: ctx.arts.dir.clone(),
-                batch: dispatch.batch,
-                // The global item table is only consulted by the batched
-                // path (groups reference it by id).
-                items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
-                devices: work,
-                reply: reply_tx.clone(),
-            };
-            self.workers[w]
-                .tx
-                .send(Msg::Job(Box::new(job)))
-                .map_err(|_| anyhow::anyhow!("executor worker {w} is gone"))?;
-            outstanding += 1;
-        }
-        drop(reply_tx);
-
-        let mut dones = Vec::with_capacity(outstanding);
-        for _ in 0..outstanding {
-            let done = reply_rx
-                .recv()
-                .context("executor worker dropped its reply channel")??;
-            dones.push(done);
-        }
-
-        // Deterministic merge: completion order is erased by collecting
-        // everything first, then reducing in ascending layer order. Each
-        // layer arrives from exactly one worker (device-partitioned).
-        let mut by_layer: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-        let mut item_secs = vec![0.0f64; dispatch.items.len()];
-        let mut wall_s = 0.0;
-        let mut overlap_s = 0.0;
-        let mut calls = 0u64;
-        for done in dones {
-            for (layer, g) in done.layer_grads {
-                if by_layer.insert(layer, g).is_some() {
-                    bail!("layer {layer} reduced by two workers — placement violated");
+/// Snapshot the activations a set of layers needs for re-execution: each
+/// layer's H/A/C/Xhat from its owner device, and one copy of the
+/// replicated cotangent (`(usize::MAX, Cotangent)`).
+fn lane_snapshot_acts(
+    fleet: &Fleet,
+    layers: &BTreeSet<usize>,
+) -> Vec<((usize, ActKind), Arc<Tensor>)> {
+    let owners: BTreeSet<usize> = layers.iter().map(|&k| fleet.device_of_layer(k)).collect();
+    let mut acts = Vec::new();
+    let mut have_cot = false;
+    for &dev in &owners {
+        for ((layer, kind), t) in fleet.devices[dev].shared_store() {
+            if layer == usize::MAX && kind == ActKind::Cotangent {
+                if !have_cot {
+                    have_cot = true;
+                    acts.push(((layer, kind), t));
                 }
+            } else if layers.contains(&layer) {
+                acts.push(((layer, kind), t));
             }
-            for (id, secs) in done.item_secs {
-                item_secs[id] = secs;
-            }
-            wall_s += done.wall_s;
-            overlap_s += done.overlap_s;
-            calls += done.calls;
         }
-        for (layer, g) in &by_layer {
-            grads.accumulate_layer(*layer, g)?;
-        }
-
-        Ok(ExecOutcome {
-            item_secs,
-            wall_s,
-            host_s: t0.elapsed().as_secs_f64(),
-            overlap_s,
-            calls,
-        })
     }
+    acts
+}
+
+/// Deterministic host-side merge of lane partials: completion order is
+/// erased by collecting everything first, then reducing in ascending
+/// layer order. Each layer must arrive from exactly one lane (the
+/// placement invariant — recovery re-plans preserve it), and every
+/// wire-supplied index is bounds-checked before use. Returns the merged
+/// `(item_secs, wall_s, overlap_s, calls)` accounting.
+pub(crate) fn merge_partials(
+    dones: Vec<DoneMsg>,
+    n_items: usize,
+    grads: &mut GradSet,
+) -> Result<(Vec<f64>, f64, f64, u64)> {
+    let mut by_layer: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut item_secs = vec![0.0f64; n_items];
+    let mut wall_s = 0.0;
+    let mut overlap_s = 0.0;
+    let mut calls = 0u64;
+    for done in dones {
+        for (layer, g) in done.layer_grads {
+            if layer >= grads.layers.len() {
+                bail!("lane partial for unknown layer {layer}");
+            }
+            if by_layer.insert(layer, g).is_some() {
+                bail!("layer {layer} reduced by two lanes — placement violated");
+            }
+        }
+        for (id, secs) in done.item_secs {
+            if id >= n_items {
+                bail!("lane partial for unknown work item {id}");
+            }
+            item_secs[id] = secs;
+        }
+        wall_s += done.wall_s;
+        overlap_s += done.overlap_s;
+        calls += done.calls;
+    }
+    for (layer, g) in &by_layer {
+        grads.accumulate_layer(*layer, g)?;
+    }
+    Ok((item_secs, wall_s, overlap_s, calls))
 }
 
 #[cfg(test)]
@@ -1013,6 +601,11 @@ mod tests {
             "threaded".parse::<ExecutorKind>().unwrap(),
             ExecutorKind::Threaded
         );
+        assert_eq!(
+            "process".parse::<ExecutorKind>().unwrap(),
+            ExecutorKind::Process
+        );
+        assert_eq!("proc".parse::<ExecutorKind>().unwrap(), ExecutorKind::Process);
         assert!("gpu".parse::<ExecutorKind>().is_err());
         for k in ExecutorKind::ALL {
             assert_eq!(k.label().parse::<ExecutorKind>().unwrap(), k);
@@ -1061,6 +654,7 @@ mod tests {
             assert!(seen.iter().all(|&s| s), "dispatch dropped items");
             assert_eq!(disp.plan.schedule.scheduled_items(), items.len());
             assert_eq!(disp.batch, 1);
+            assert_eq!(disp.transient_bytes, 1024);
         }
     }
 
@@ -1131,5 +725,35 @@ mod tests {
             outputs: vec![],
         };
         assert!(batched_entry_width(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_partials_rejects_bad_indices_and_duplicates() {
+        let d = dims(2, 32, 8, 8);
+        let mk = |layer: usize| DoneMsg {
+            layer_grads: vec![(layer, crate::model::LayerParams::zeros_like(&d).0)],
+            item_secs: vec![(0, 1e-6)],
+            wall_s: 1e-6,
+            overlap_s: 0.0,
+            calls: 1,
+            died: false,
+            executed: 1,
+        };
+        let mut grads = GradSet::zeros(&d);
+        // Two lanes claiming the same layer: placement violated.
+        let err = merge_partials(vec![mk(0), mk(0)], 4, &mut grads).unwrap_err();
+        assert!(err.to_string().contains("two lanes"), "{err}");
+        // Out-of-range layer and item ids are rejected, not indexed.
+        assert!(merge_partials(vec![mk(7)], 4, &mut grads).is_err());
+        let mut bad_item = mk(1);
+        bad_item.item_secs = vec![(99, 1e-6)];
+        assert!(merge_partials(vec![bad_item], 4, &mut grads).is_err());
+        // The happy path accumulates.
+        let mut grads = GradSet::zeros(&d);
+        let (item_secs, wall, _, calls) =
+            merge_partials(vec![mk(0), mk(1)], 4, &mut grads).unwrap();
+        assert_eq!(item_secs.len(), 4);
+        assert!(wall > 0.0);
+        assert_eq!(calls, 2);
     }
 }

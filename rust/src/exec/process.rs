@@ -1,0 +1,489 @@
+//! The process-separated backend (DESIGN.md §Fault-Tolerance): workers
+//! are child processes (`adjsh __exec-worker`) speaking the length-
+//! prefixed [`super::wire`] protocol over stdio pipes. Each child owns
+//! its own PJRT runtime, compiled entries, and ConstCache — the same
+//! worker body as a threaded lane ([`super::threaded::run_job`]), but
+//! with a real OS process boundary: a crash, a kill signal, or an
+//! injected fault all present identically to the coordinator as EOF on
+//! the worker's pipe.
+//!
+//! Dispatch per phase: the coordinator writes *all* JOB frames before
+//! reading any reply (each lane has its own pipe pair, so a worker
+//! blocked writing DONE can never block the coordinator's writes — no
+//! deadlock), then drains replies in deterministic ring order over the
+//! live lanes (> 2 lanes start the ring at lane 1; each layer's 7
+//! accumulator tensors are owned by exactly one lane, so the ring pass is
+//! a gather). Determinism never depends on arrival order anyway: partials
+//! are collected first and merged host-side in pinned ascending layer
+//! order.
+//!
+//! A dead lane triggers the shared recovery path: re-plan the orphaned
+//! layer range onto surviving lanes via `exec::plan_dispatch`, or — for
+//! `+rejoin` faults — respawn the worker (fresh HELLO handshake, the
+//! elastic join) and hand it back exactly its own layers. The recovered
+//! `GradSet` is bit-identical to a healthy sim run: the dead lane's
+//! partials never reached the coordinator, and each orphaned layer is
+//! re-accumulated `0 + g₀ + g₁ + …` by exactly one lane.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::GradSet;
+
+use super::fault::{
+    devices_of_lane, plan_recovery, ring_order, split_faults, Death, FaultPlan, FaultReport,
+};
+use super::threaded::{run_job, WorkerState};
+use super::wire::{
+    decode_done, decode_err, decode_hello, decode_job, encode_done, encode_err, encode_hello,
+    encode_job, read_frame, write_frame, DoneMsg, JobMsg, K_DONE, K_ERR, K_HELLO, K_HELLO_OK,
+    K_JOB, K_SHUTDOWN, WIRE_VERSION,
+};
+use super::{
+    device_work, lane_count, merge_partials, recovery_work, Dispatch, ExecCtx, ExecOutcome,
+    Executor, ExecutorKind,
+};
+
+/// Exit code a worker uses for an injected fault — distinguishable from
+/// a panic (101) or a clean exit in CI logs, but the coordinator treats
+/// every mid-phase EOF the same way: the lane is dead.
+pub const FAULT_EXIT: i32 = 43;
+
+struct ProcHandle {
+    child: std::process::Child,
+    stdin: std::process::ChildStdin,
+    stdout: BufReader<std::process::ChildStdout>,
+}
+
+enum Reply {
+    Done(DoneMsg),
+    /// EOF (or a torn frame) on the worker's pipe: the process is gone.
+    Dead,
+}
+
+fn read_reply(h: &mut ProcHandle) -> Result<Reply> {
+    match read_frame(&mut h.stdout) {
+        Ok(Some((K_DONE, payload))) => Ok(Reply::Done(decode_done(&payload)?)),
+        Ok(Some((K_ERR, payload))) => bail!("worker error: {}", decode_err(&payload)?),
+        Ok(Some((kind, _))) => bail!("unexpected frame kind {kind} from worker"),
+        Ok(None) => Ok(Reply::Dead),
+        Err(_) => Ok(Reply::Dead),
+    }
+}
+
+/// Reap a dead worker: close the pipes, collect the exit status.
+fn reap(h: ProcHandle) {
+    let ProcHandle { mut child, stdin, stdout } = h;
+    drop(stdin);
+    drop(stdout);
+    let _ = child.wait();
+}
+
+fn spawn_worker(program: &Path, lane: usize) -> Result<ProcHandle> {
+    let mut child = std::process::Command::new(program)
+        .arg("__exec-worker")
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .with_context(|| {
+            format!("spawning process-executor worker {lane} ({})", program.display())
+        })?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut h = ProcHandle { child, stdin, stdout };
+    // The join handshake: refuse a worker from a different build rather
+    // than corrupting gradients with a skewed wire format.
+    write_frame(&mut h.stdin, K_HELLO, &encode_hello(WIRE_VERSION))?;
+    h.stdin.flush()?;
+    match read_frame(&mut h.stdout)? {
+        Some((K_HELLO_OK, payload)) => {
+            let v = decode_hello(&payload)?;
+            if v != WIRE_VERSION {
+                bail!("worker {lane} speaks wire version {v}, coordinator {WIRE_VERSION}");
+            }
+        }
+        Some((kind, _)) => bail!("worker {lane} answered HELLO with frame kind {kind}"),
+        None => bail!("worker {lane} exited during the HELLO handshake"),
+    }
+    Ok(h)
+}
+
+/// Replay a killed worker's dispatch-unit loop to count the items it
+/// executed before dying — the coordinator can't ask a dead process, but
+/// the kill semantics are deterministic (check before each unit, and
+/// once after the last), so the wasted-work accounting matches the sim
+/// and threaded backends exactly.
+fn killed_executed(job: &JobMsg, kill: u64) -> u64 {
+    let mut executed = 0u64;
+    for w in &job.devices {
+        if job.batch > 1 {
+            for g in &w.groups {
+                if executed >= kill {
+                    return executed;
+                }
+                executed += g.ids.len() as u64;
+            }
+        } else {
+            for _ in &w.items {
+                if executed >= kill {
+                    return executed;
+                }
+                executed += 1;
+            }
+        }
+    }
+    executed
+}
+
+/// The process-separated fleet executor.
+pub struct ProcessExecutor {
+    requested: usize,
+    program: Option<PathBuf>,
+    fault: Option<FaultPlan>,
+    report: Option<FaultReport>,
+    workers: Vec<Option<ProcHandle>>,
+}
+
+impl ProcessExecutor {
+    /// `workers` caps the process count; 0 = one per device.
+    pub fn new(workers: usize) -> Self {
+        Self { requested: workers, program: None, fault: None, report: None, workers: Vec::new() }
+    }
+
+    /// Pin the worker binary (tests point this at `CARGO_BIN_EXE_adjsh`).
+    pub fn with_program(mut self, program: PathBuf) -> Self {
+        self.program = Some(program);
+        self
+    }
+
+    /// Arm a fault plan: victim lanes receive a kill count inside their
+    /// job and exit abruptly at the fault point.
+    pub fn with_faults(mut self, fault: Option<FaultPlan>) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Locate the worker binary: explicit override, `ADJSH_WORKER_BIN`,
+    /// or the running `adjsh` itself (with a sibling/parent-dir probe for
+    /// test binaries living under `target/*/deps`).
+    fn worker_program(&self) -> Result<PathBuf> {
+        if let Some(p) = &self.program {
+            return Ok(p.clone());
+        }
+        if let Ok(p) = std::env::var("ADJSH_WORKER_BIN") {
+            return Ok(PathBuf::from(p));
+        }
+        let exe = std::env::current_exe().context("locating current executable")?;
+        if let Some(stem) = exe.file_stem() {
+            if stem.to_str() == Some("adjsh") {
+                return Ok(exe);
+            }
+        }
+        if let Some(dir) = exe.parent() {
+            let cand = dir.join("adjsh");
+            if cand.is_file() {
+                return Ok(cand);
+            }
+            if let Some(up) = dir.parent() {
+                let cand = up.join("adjsh");
+                if cand.is_file() {
+                    return Ok(cand);
+                }
+            }
+        }
+        bail!(
+            "cannot locate the adjsh worker binary — set ADJSH_WORKER_BIN or \
+             ProcessExecutor::with_program"
+        )
+    }
+
+    fn send_job(&mut self, lane: usize, msg: &JobMsg) -> Result<()> {
+        let payload = encode_job(msg)?;
+        let h = self.workers[lane]
+            .as_mut()
+            .with_context(|| format!("worker lane {lane} has no live process"))?;
+        write_frame(&mut h.stdin, K_JOB, &payload)?;
+        h.stdin.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for ProcessExecutor {
+    fn drop(&mut self) {
+        for slot in &mut self.workers {
+            if let Some(mut h) = slot.take() {
+                let _ = write_frame(&mut h.stdin, K_SHUTDOWN, &[]);
+                let _ = h.stdin.flush();
+                reap(h);
+            }
+        }
+    }
+}
+
+impl Executor for ProcessExecutor {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Process
+    }
+
+    fn fault_report(&self) -> Option<&FaultReport> {
+        self.report.as_ref()
+    }
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome> {
+        self.report = None;
+        let t0 = Instant::now();
+        let devices = ctx.fleet.cfg.devices;
+        let n_lanes = lane_count(self.requested, devices);
+        let program = self.worker_program()?;
+        if self.workers.len() < n_lanes {
+            self.workers.resize_with(n_lanes, || None);
+        }
+        // Lazy (re)spawn: lanes persist across phases; a lane lost to a
+        // non-rejoin death last phase simply joins fresh here.
+        for lane in 0..n_lanes {
+            if self.workers[lane].is_none() {
+                self.workers[lane] = Some(spawn_worker(&program, lane)?);
+            }
+        }
+
+        let mut per_lane: Vec<Vec<_>> = (0..n_lanes).map(|_| Vec::new()).collect();
+        for dev in 0..dispatch.queues.len() {
+            if let Some(work) = device_work(dispatch, ctx.fleet, ctx.params, dev) {
+                per_lane[dev % n_lanes].push(work);
+            }
+        }
+        let lane_items: Vec<usize> = per_lane
+            .iter()
+            .map(|ws| ws.iter().map(|w| w.items.len()).sum())
+            .collect();
+        let split = match &self.fault {
+            Some(plan) => Some(split_faults(plan, n_lanes, &lane_items)?),
+            None => None,
+        };
+
+        // Write ALL job frames before reading any reply. Each lane has
+        // its own pipe pair, so a worker blocked on its DONE write can
+        // never block these writes — the phase cannot deadlock.
+        let mut sent: BTreeMap<usize, JobMsg> = BTreeMap::new();
+        for (lane, work) in per_lane.into_iter().enumerate() {
+            if work.is_empty() {
+                continue;
+            }
+            let kill = match &split {
+                Some(s) => s.kill_after(lane),
+                None => None,
+            };
+            let msg = JobMsg {
+                dims: ctx.dims.clone(),
+                artifacts_dir: ctx.arts.dir.clone(),
+                batch: dispatch.batch,
+                items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
+                devices: work,
+                kill,
+            };
+            self.send_job(lane, &msg)?;
+            sent.insert(lane, msg);
+        }
+
+        // Drain replies in deterministic ring order over the job lanes
+        // (start at lane 1 when more than two are live — the ring
+        // reduction's gather pass; determinism never depends on it, the
+        // merge below is pinned ascending-layer regardless).
+        let start = if sent.len() > 2 { 1 } else { 0 };
+        let mut dones = Vec::new();
+        let mut dead: Vec<(usize, bool)> = Vec::new();
+        let mut deaths_exec: BTreeMap<usize, u64> = BTreeMap::new();
+        for lane in ring_order(n_lanes, start) {
+            let Some(msg) = sent.get(&lane) else { continue };
+            let h = self.workers[lane].as_mut().expect("job lanes were spawned");
+            match read_reply(h)? {
+                Reply::Done(done) if done.died => {
+                    // Belt and braces: a worker that *reports* death over
+                    // the wire (instead of exiting) is still dead.
+                    deaths_exec.insert(lane, done.executed);
+                    let rejoin = match &split {
+                        Some(s) => s.rejoin(lane),
+                        None => false,
+                    };
+                    dead.push((lane, rejoin));
+                    if let Some(h) = self.workers[lane].take() {
+                        reap(h);
+                    }
+                }
+                Reply::Done(done) => dones.push(done),
+                Reply::Dead => {
+                    // Injected fault, crash, or kill signal — all EOF
+                    // from here. The injected case replays the unit loop
+                    // for exact wasted-work accounting; a real crash
+                    // reports 0 (unknowable).
+                    let (rejoin, executed) = match &split {
+                        Some(s) => match s.kill_after(lane) {
+                            Some(k) => (s.rejoin(lane), killed_executed(msg, k)),
+                            None => (false, 0),
+                        },
+                        None => (false, 0),
+                    };
+                    deaths_exec.insert(lane, executed);
+                    dead.push((lane, rejoin));
+                    if let Some(h) = self.workers[lane].take() {
+                        reap(h);
+                    }
+                }
+            }
+        }
+        dead.sort_unstable_by_key(|&(lane, _)| lane);
+
+        if !dead.is_empty() {
+            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
+            // Elastic join: rejoining lanes come back as fresh processes
+            // (new HELLO handshake) before the recovery round.
+            for &(lane, rejoin) in &dead {
+                if rejoin {
+                    self.workers[lane] = Some(spawn_worker(&program, lane)?);
+                }
+            }
+            // Same no-deadlock discipline: all recovery frames out, then
+            // drain in lane order.
+            let mut rec_lanes = Vec::new();
+            for wave in &rec.waves {
+                for rl in &wave.lanes {
+                    let msg = JobMsg {
+                        dims: ctx.dims.clone(),
+                        artifacts_dir: ctx.arts.dir.clone(),
+                        batch: dispatch.batch,
+                        items: if dispatch.batch > 1 {
+                            dispatch.items.clone()
+                        } else {
+                            Vec::new()
+                        },
+                        devices: vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)],
+                        kill: None,
+                    };
+                    self.send_job(rl.lane, &msg)?;
+                    rec_lanes.push(rl.lane);
+                }
+            }
+            let mut recovered = Vec::new();
+            for lane in rec_lanes {
+                let h = self.workers[lane].as_mut().expect("recovery lane is live");
+                match read_reply(h)? {
+                    Reply::Done(done) if !done.died => {
+                        recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
+                        dones.push(done);
+                    }
+                    _ => bail!("recovery lane {lane} died mid-recovery"),
+                }
+            }
+            recovered.sort_unstable();
+            if recovered != rec.orphans {
+                bail!(
+                    "recovery executed {} items, the deaths orphaned {}",
+                    recovered.len(),
+                    rec.orphans.len()
+                );
+            }
+            self.report = Some(FaultReport {
+                deaths: dead
+                    .iter()
+                    .map(|&(lane, _)| Death {
+                        lane,
+                        devices: devices_of_lane(lane, n_lanes, dispatch.queues.len()),
+                        executed: deaths_exec[&lane],
+                    })
+                    .collect(),
+                orphan_layers: rec.orphan_layers,
+                orphans: rec.orphans,
+                recovered,
+                rejoined: dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect(),
+            });
+        } else if split.is_some() {
+            self.report = Some(FaultReport::default());
+        }
+
+        let (item_secs, wall_s, overlap_s, calls) =
+            merge_partials(dones, dispatch.items.len(), grads)?;
+
+        Ok(ExecOutcome {
+            item_secs,
+            wall_s,
+            host_s: t0.elapsed().as_secs_f64(),
+            overlap_s,
+            calls,
+        })
+    }
+}
+
+/// The child-process entry point (`adjsh __exec-worker`): answer the
+/// HELLO handshake, run jobs with worker-local state, and turn an
+/// injected fault into an abrupt exit — the coordinator must see exactly
+/// what a real crash looks like (EOF), not a polite message. Protocol
+/// errors (bad decode, kind skew) answer K_ERR so they surface as errors
+/// at the coordinator instead of masquerading as deaths and triggering
+/// recovery of a bug.
+pub fn process_worker_main() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = stdout.lock();
+    let mut state: Option<WorkerState> = None;
+    loop {
+        let Some((kind, payload)) = read_frame(&mut input)? else {
+            // Coordinator closed the pipe: clean shutdown.
+            return Ok(());
+        };
+        match kind {
+            K_HELLO => {
+                let v = decode_hello(&payload)?;
+                if v != WIRE_VERSION {
+                    write_frame(
+                        &mut output,
+                        K_ERR,
+                        &encode_err(&format!(
+                            "wire version skew: coordinator {v}, worker {WIRE_VERSION}"
+                        )),
+                    )?;
+                    output.flush()?;
+                    bail!("wire version skew: coordinator {v}, worker {WIRE_VERSION}");
+                }
+                write_frame(&mut output, K_HELLO_OK, &encode_hello(WIRE_VERSION))?;
+                output.flush()?;
+            }
+            K_JOB => {
+                let job = match decode_job(&payload) {
+                    Ok(job) => job,
+                    Err(e) => {
+                        write_frame(&mut output, K_ERR, &encode_err(&format!("{e:#}")))?;
+                        output.flush()?;
+                        continue;
+                    }
+                };
+                match run_job(&mut state, &job) {
+                    Ok(done) if done.died => {
+                        // The injected fault: exit without replying.
+                        std::process::exit(FAULT_EXIT);
+                    }
+                    Ok(done) => {
+                        write_frame(&mut output, K_DONE, &encode_done(&done))?;
+                        output.flush()?;
+                    }
+                    Err(e) => {
+                        write_frame(&mut output, K_ERR, &encode_err(&format!("{e:#}")))?;
+                        output.flush()?;
+                    }
+                }
+            }
+            K_SHUTDOWN => return Ok(()),
+            other => bail!("unexpected frame kind {other} in worker"),
+        }
+    }
+}

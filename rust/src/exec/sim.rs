@@ -1,0 +1,354 @@
+//! The deterministic single-threaded baseline backend — every item
+//! executes on the coordinator's runtime through the pooled zero-copy
+//! staging path (DESIGN.md §Host-Staging), per-device queue by queue in
+//! pinned ascending work-item id order. Bit-for-bit the seed's gradient
+//! math, and the reference the other backends' equivalence tests compare
+//! against.
+//!
+//! The sim backend also *models* the fault hook the live backends
+//! implement for real (DESIGN.md §Fault-Tolerance): an armed
+//! [`FaultPlan`] truncates the doomed lane's queue at the fault point,
+//! rolls the lane's layers back to zero bits (a dead lane's partials are
+//! lost), and re-executes the orphaned queues under the same
+//! [`plan_recovery`] waves the live executors run — so
+//! sim × {healthy, death, death+rejoin} is the bit-identity oracle for
+//! threaded and process runs of the same plan.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::adjoint::{
+    gather_group_args_into_from, gather_item_args_into, stage_for, stage_slot, ItemStage,
+};
+use crate::config::ModelDims;
+use crate::model::{GradSet, LayerParams};
+use crate::runtime::{ArgRef, Compiled, ConstKey, InFlight, StagedConst};
+use crate::sharding::{BatchGroup, WorkItem};
+use crate::tensor::Tensor;
+use crate::topology::Fleet;
+
+use super::fault::{doomed_groups, plan_recovery, split_faults, Death, FaultPlan, FaultReport};
+use super::{
+    batched_args, batched_entry_width, finish_group, Dispatch, ExecCtx, ExecOutcome, Executor,
+    ExecutorKind,
+};
+
+/// The single-threaded coordinator dispatch (the default backend). With
+/// no fault plan armed this is exactly the seed's sequential loop.
+#[derive(Debug, Default, Clone)]
+pub struct SimExecutor {
+    fault: Option<FaultPlan>,
+    report: Option<FaultReport>,
+}
+
+impl SimExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm a fault plan: lanes (= devices here) die at their fault point
+    /// and their layers recover through the shared re-plan path.
+    pub fn with_faults(fault: Option<FaultPlan>) -> Self {
+        Self { fault, report: None }
+    }
+}
+
+impl Executor for SimExecutor {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Sim
+    }
+
+    fn fault_report(&self) -> Option<&FaultReport> {
+        self.report.as_ref()
+    }
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome> {
+        self.report = None;
+        let t0 = Instant::now();
+        let batched = dispatch.batch > 1;
+        let entry = ctx
+            .arts
+            .entry(if batched { "layer_adjoint_grad_batched" } else { "layer_adjoint_grad" })?;
+        let m_static = if batched { batched_entry_width(&entry.spec)? } else { 1 };
+
+        // Per-layer W_c staged to a device literal once per phase at most
+        // — the content-hash cache makes repeat phases free.
+        let w_c: Vec<_> = (0..ctx.dims.k)
+            .map(|k| {
+                ctx.arts.staged_const(
+                    ConstKey::LayerParam { layer: k, field: 6 },
+                    ctx.params.layers[k].w_c(),
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        ctx.pool.prepare_outs(&entry.spec);
+        let (stages, outs) = ctx.pool.split_mut();
+
+        // Sim lanes are the devices themselves: one lane per queue.
+        let n_lanes = dispatch.queues.len();
+        let lane_items: Vec<usize> = dispatch.queues.iter().map(|q| q.len()).collect();
+        let split = match &self.fault {
+            Some(plan) => Some(split_faults(plan, n_lanes, &lane_items)?),
+            None => None,
+        };
+
+        let mut item_secs = vec![0.0f64; dispatch.items.len()];
+        let mut wall_s = 0.0;
+        let mut overlap_s = 0.0;
+        let mut calls = 0u64;
+        let mut deaths: Vec<Death> = Vec::new();
+
+        for (dev, queue) in dispatch.queues.iter().enumerate() {
+            let kill = match &split {
+                Some(s) => s.kill_after(dev),
+                None => None,
+            };
+            let groups = &dispatch.groups[dev];
+            // A killed lane executes whole dispatch units until the fault
+            // point — same accounting as a live worker's pre-unit check.
+            let doomed = match kill {
+                Some(k) => doomed_groups(groups, k),
+                None => groups.len(),
+            };
+            if batched {
+                run_groups_batched(
+                    ctx.dims,
+                    ctx.fleet,
+                    entry.as_ref(),
+                    m_static,
+                    &w_c,
+                    stages,
+                    outs,
+                    &dispatch.items,
+                    &groups[..doomed],
+                    dev,
+                    grads,
+                    &mut item_secs,
+                    &mut wall_s,
+                    &mut overlap_s,
+                    &mut calls,
+                )?;
+            } else {
+                // Groups are singletons tiling the queue at width 1, so
+                // `doomed` counts items directly.
+                run_queue_single(
+                    ctx.dims,
+                    ctx.fleet,
+                    entry.as_ref(),
+                    &w_c,
+                    stages,
+                    outs,
+                    &dispatch.items,
+                    &queue[..doomed],
+                    grads,
+                    &mut item_secs,
+                    &mut wall_s,
+                    &mut calls,
+                )?;
+            }
+            if kill.is_some() {
+                let executed: u64 = groups[..doomed].iter().map(|g| g.ids.len() as u64).sum();
+                deaths.push(Death { lane: dev, devices: vec![dev], executed });
+            }
+        }
+
+        if !deaths.is_empty() {
+            let split = split.as_ref().expect("deaths only happen with an armed plan");
+            let dead: Vec<(usize, bool)> =
+                deaths.iter().map(|d| (d.lane, split.rejoin(d.lane))).collect();
+            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
+            // A dead lane's partials are lost: roll its layers back to
+            // zero bits so the recovery re-accumulates `0 + g₀ + g₁ + …`
+            // — the exact float sequence of a healthy run.
+            for &layer in &rec.orphan_layers {
+                grads.layers[layer] = LayerParams::zeros_like(ctx.dims);
+            }
+            let mut recovered = Vec::new();
+            for wave in &rec.waves {
+                for rl in &wave.lanes {
+                    if batched {
+                        run_groups_batched(
+                            ctx.dims,
+                            ctx.fleet,
+                            entry.as_ref(),
+                            m_static,
+                            &w_c,
+                            stages,
+                            outs,
+                            &dispatch.items,
+                            &rl.groups,
+                            rl.lane,
+                            grads,
+                            &mut item_secs,
+                            &mut wall_s,
+                            &mut overlap_s,
+                            &mut calls,
+                        )?;
+                    } else {
+                        run_queue_single(
+                            ctx.dims,
+                            ctx.fleet,
+                            entry.as_ref(),
+                            &w_c,
+                            stages,
+                            outs,
+                            &dispatch.items,
+                            &rl.queue,
+                            grads,
+                            &mut item_secs,
+                            &mut wall_s,
+                            &mut calls,
+                        )?;
+                    }
+                    recovered.extend(rl.queue.iter().copied());
+                }
+            }
+            recovered.sort_unstable();
+            if recovered != rec.orphans {
+                bail!(
+                    "recovery executed {} items, the deaths orphaned {}",
+                    recovered.len(),
+                    rec.orphans.len()
+                );
+            }
+            let rejoined = dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect();
+            self.report = Some(FaultReport {
+                deaths,
+                orphan_layers: rec.orphan_layers,
+                orphans: rec.orphans,
+                recovered,
+                rejoined,
+            });
+        } else if split.is_some() {
+            // A plan was armed but every kill was ineffective (fault
+            // points past the queues): a uniform no-op, reported as such.
+            self.report = Some(FaultReport::default());
+        }
+
+        Ok(ExecOutcome {
+            item_secs,
+            wall_s,
+            host_s: t0.elapsed().as_secs_f64(),
+            overlap_s,
+            calls,
+        })
+    }
+}
+
+/// Execute a queue of single-item dispatches in ascending id order,
+/// accumulating into `grads`. Items gather from their *owner* device
+/// (`gather_item_args_into` resolves it), so the same path serves both
+/// the healthy per-device queues and the recovery waves.
+#[allow(clippy::too_many_arguments)]
+fn run_queue_single(
+    dims: &ModelDims,
+    fleet: &Fleet,
+    entry: &Compiled,
+    w_c: &[Arc<StagedConst>],
+    stages: &mut Vec<ItemStage>,
+    outs: &mut Vec<Tensor>,
+    items: &[WorkItem],
+    queue: &[usize],
+    grads: &mut GradSet,
+    item_secs: &mut [f64],
+    wall_s: &mut f64,
+    calls: &mut u64,
+) -> Result<()> {
+    use stage_slot::*;
+    for &id in queue {
+        let item = &items[id];
+        let devi = fleet.device_of_layer(item.layer);
+        let stage = stage_for(stages, devi);
+        gather_item_args_into(dims, fleet, item, stage)?;
+        let args = [
+            ArgRef::C(w_c[item.layer].as_ref()),
+            ArgRef::F(stage.view(XHAT)),
+            ArgRef::F(stage.view(HPREV)),
+            ArgRef::F(stage.view(H)),
+            ArgRef::F(stage.view(A_EXT)),
+            ArgRef::F(stage.view(C_EXT)),
+            ArgRef::F(stage.view(V_EXT)),
+        ];
+        let secs = entry.run_timed_into(&args, outs)?;
+        grads.accumulate_layer(item.layer, outs)?;
+        item_secs[id] = secs;
+        *wall_s += secs;
+        *calls += 1;
+    }
+    Ok(())
+}
+
+/// The batched dispatch for one lane: batch groups execute in ascending
+/// order through a double-buffered stage pair — group g+1 is gathered
+/// into the lane's other stage while group g is in flight
+/// (`Compiled::launch` / `InFlight::wait_into`). Gradient bits are
+/// unchanged from the single-item path: the entry folds each group's
+/// partials into the layer's running accumulators on-device, in pinned
+/// ascending item order (DESIGN.md §Batched-Backward). Groups gather
+/// from the layer's *owner* device — the lane's own store on the healthy
+/// path, the dead lane's surviving store on a recovery wave.
+#[allow(clippy::too_many_arguments)]
+fn run_groups_batched(
+    dims: &ModelDims,
+    fleet: &Fleet,
+    entry: &Compiled,
+    m_static: usize,
+    w_c: &[Arc<StagedConst>],
+    stages: &mut Vec<ItemStage>,
+    outs: &mut Vec<Tensor>,
+    items: &[WorkItem],
+    groups: &[BatchGroup],
+    stage_base: usize,
+    grads: &mut GradSet,
+    item_secs: &mut [f64],
+    wall_s: &mut f64,
+    overlap_s: &mut f64,
+    calls: &mut u64,
+) -> Result<()> {
+    let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
+    for (gi, group) in groups.iter().enumerate() {
+        // Stage pair per lane: parity picks the buffer not used by the
+        // in-flight group (see DESIGN.md §Batched-Backward).
+        let stage = stage_for(stages, stage_base * 2 + gi % 2);
+        let tg = Instant::now();
+        let owner = fleet.device_of_layer(group.layer);
+        gather_group_args_into_from(dims, &fleet.devices[owner], items, group, m_static, stage)?;
+        if pending.is_some() {
+            let hidden = tg.elapsed().as_secs_f64();
+            *overlap_s += hidden;
+            entry.note_overlap(hidden);
+        }
+        if let Some((fly, g)) = pending.take() {
+            finish_group(
+                fly,
+                outs,
+                &mut grads.layers[g.layer].0,
+                g,
+                &mut |id, s| item_secs[id] = s,
+                wall_s,
+            )?;
+        }
+        let args = batched_args(w_c[group.layer].as_ref(), stage, &grads.layers[group.layer].0)?;
+        pending = Some((entry.launch(&args)?, group));
+        *calls += 1;
+    }
+    if let Some((fly, g)) = pending.take() {
+        finish_group(
+            fly,
+            outs,
+            &mut grads.layers[g.layer].0,
+            g,
+            &mut |id, s| item_secs[id] = s,
+            wall_s,
+        )?;
+    }
+    Ok(())
+}

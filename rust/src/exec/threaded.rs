@@ -1,0 +1,548 @@
+//! The threaded backend: one worker thread per simulated device (capped
+//! by `--workers`), each owning its *own* PJRT runtime, compiled entries,
+//! device-constant cache, and staging arenas — fed its lanes' slice of
+//! the dispatch plan over a channel and answering with per-layer gradient
+//! partials. Devices really do work their independent VJP bundles
+//! concurrently — the wall-clock realization of the paper's distributed
+//! Alg. 4 claim.
+//!
+//! **Thread-pinning.** The xla handles (`Runtime`, `Compiled`,
+//! `StagedConst`) stay `!Send`; workers never receive handles — they
+//! receive [`JobMsg`] plans and `Arc<Tensor>` snapshots and build their
+//! own handles on their own thread. The same [`run_job`] body drives the
+//! process backend's child workers (which receive the identical message,
+//! decoded from the wire).
+//!
+//! **Fault hook.** An armed [`FaultPlan`] ships a kill count inside the
+//! victim's job: the worker checks `executed >= kill` before each
+//! dispatch unit (and once after the last — a unit straddling the fault
+//! point still runs) and answers `DoneMsg::dead` instead of partials.
+//! The coordinator re-plans the orphaned layers onto surviving lanes via
+//! [`plan_recovery`] and, for `+rejoin` faults, hands the lane back
+//! exactly its own layer range (DESIGN.md §Fault-Tolerance).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adjoint::{
+    gather_group_args_into_from, gather_item_args_into_from, stage_for, stage_slot, ItemStage,
+};
+use crate::model::GradSet;
+use crate::runtime::{ArgRef, Compiled, ConstCache, ConstKey, InFlight, Manifest, Runtime};
+use crate::sharding::BatchGroup;
+use crate::tensor::Tensor;
+use crate::topology::{ActKind, ActSource};
+
+use super::fault::{
+    devices_of_lane, plan_recovery, split_faults, Death, FaultPlan, FaultReport,
+};
+use super::wire::{DoneMsg, JobMsg};
+use super::{
+    batched_args, batched_entry_width, device_work, finish_group, lane_count, merge_partials,
+    recovery_work, Dispatch, ExecCtx, ExecOutcome, Executor, ExecutorKind,
+};
+
+/// Worker-local, thread- (or process-) pinned state that persists across
+/// phases: the worker's own PJRT runtime + compiled entries (rebuilt only
+/// if the artifact dir changes), its sharded device-constant cache, and
+/// its reusable staging arenas — the PR-2 zero-copy invariants,
+/// worker-local.
+pub(crate) struct WorkerState {
+    dir: PathBuf,
+    // Field order = drop order: the compiled executables and staged
+    // literals go before the client that owns their backing runtime.
+    //
+    // Both entries compile lazily on first dispatch of their kind (kept
+    // warm across phases), so a batched phase never pays a dead
+    // single-item compile and vice versa — the same skip serve's lanes
+    // apply to the dead `layer_step`.
+    entry: Option<Compiled>,
+    entry_batched: Option<Compiled>,
+    consts: ConstCache,
+    runtime: Runtime,
+    manifest: Manifest,
+    stages: Vec<ItemStage>,
+    outs: Vec<Tensor>,
+}
+
+impl WorkerState {
+    fn open(dir: &Path) -> Result<Self> {
+        let runtime = Runtime::cpu().context("worker PJRT client")?;
+        let manifest = Manifest::load(dir)?;
+        // The output buffer set is shared by both entries (identical
+        // gradient shapes — asserted again at decomposition time).
+        let spec = manifest.entry("layer_adjoint_grad")?;
+        let outs = spec.outputs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entry: None,
+            entry_batched: None,
+            consts: ConstCache::new(),
+            runtime,
+            manifest,
+            stages: Vec::new(),
+            outs,
+        })
+    }
+
+    /// Get (compiling on first use) the single-item entry.
+    fn single(&mut self) -> Result<&Compiled> {
+        if self.entry.is_none() {
+            let spec = self.manifest.entry("layer_adjoint_grad")?.clone();
+            self.entry = Some(self.runtime.compile_entry(&self.dir, &spec)?);
+        }
+        Ok(self.entry.as_ref().expect("just compiled"))
+    }
+
+    /// Get (compiling on first use) the batched entry.
+    fn batched(&mut self) -> Result<&Compiled> {
+        if self.entry_batched.is_none() {
+            let spec = self.manifest.entry("layer_adjoint_grad_batched")?.clone();
+            self.entry_batched = Some(self.runtime.compile_entry(&self.dir, &spec)?);
+        }
+        Ok(self.entry_batched.as_ref().expect("just compiled"))
+    }
+}
+
+/// Snapshot-backed activation source for worker-side gathers.
+struct SnapshotActs<'a>(&'a BTreeMap<(usize, ActKind), Arc<Tensor>>);
+
+impl ActSource for SnapshotActs<'_> {
+    fn act(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
+        self.0
+            .get(&(layer, kind))
+            .map(|t| t.as_ref())
+            .with_context(|| format!("worker snapshot: no activation ({layer}, {kind:?})"))
+    }
+}
+
+/// Run one job against worker-local state — the shared body of a
+/// threaded lane and a process child. Returns `DoneMsg::dead` when the
+/// job's injected fault fires (the process worker turns that into an
+/// abrupt exit, so the coordinator sees a broken pipe).
+pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<DoneMsg> {
+    use stage_slot::*;
+    let reopen = match state.as_ref() {
+        Some(s) => s.dir != job.artifacts_dir,
+        None => true,
+    };
+    if reopen {
+        *state = Some(WorkerState::open(&job.artifacts_dir)?);
+    }
+    let st = state.as_mut().expect("worker state just ensured");
+    if job.batch > 1 {
+        return run_job_batched(st, job);
+    }
+    st.single()?; // compile before the disjoint field borrows below
+    let WorkerState { entry, consts, stages, outs, .. } = st;
+    let entry = entry.as_ref().expect("single-item entry just ensured");
+
+    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut item_secs = Vec::new();
+    let mut wall_s = 0.0;
+    let mut calls = 0u64;
+    let mut executed = 0u64;
+
+    for work in &job.devices {
+        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> = work.acts.iter().cloned().collect();
+        let src = SnapshotActs(&acts);
+        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
+        let stage = stage_for(stages, work.device);
+        for &(id, item) in &work.items {
+            if let Some(k) = job.kill {
+                if executed >= k {
+                    return Ok(DoneMsg::dead(executed));
+                }
+            }
+            gather_item_args_into_from(&job.dims, &src, &item, stage)?;
+            let w_c_t = w_c
+                .get(&item.layer)
+                .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
+            let wc = consts.staged(ConstKey::LayerParam { layer: item.layer, field: 6 }, w_c_t)?;
+            let args = [
+                ArgRef::C(wc.as_ref()),
+                ArgRef::F(stage.view(XHAT)),
+                ArgRef::F(stage.view(HPREV)),
+                ArgRef::F(stage.view(H)),
+                ArgRef::F(stage.view(A_EXT)),
+                ArgRef::F(stage.view(C_EXT)),
+                ArgRef::F(stage.view(V_EXT)),
+            ];
+            let secs = entry.run_timed_into(&args, outs)?;
+            // Pinned reduction: the lane is serial and its queue is
+            // ascending-id, so this is the exact `0 + g₀ + g₁ + …`
+            // sequence the sim backend performs for this layer.
+            let acc = layer_grads
+                .entry(item.layer)
+                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
+            for (a, g) in acc.iter_mut().zip(outs.iter()) {
+                a.add_assign(g)?;
+            }
+            item_secs.push((id, secs));
+            wall_s += secs;
+            calls += 1;
+            executed += 1;
+        }
+    }
+    // A fault point landing inside (or right after) the last unit still
+    // kills the worker before it can answer — mirroring a crash between
+    // the final execution and the reply.
+    if let Some(k) = job.kill {
+        if executed >= k {
+            return Ok(DoneMsg::dead(executed));
+        }
+    }
+
+    Ok(DoneMsg {
+        layer_grads: layer_grads.into_iter().collect(),
+        item_secs,
+        wall_s,
+        overlap_s: 0.0,
+        calls,
+        died: false,
+        executed,
+    })
+}
+
+/// The batched worker loop: the sim backend's double-buffered group
+/// dispatch, worker-local — per device, gather group g+1 into the lane's
+/// other stage while group g is in flight on the worker's own runtime.
+/// The worker's per-layer partials are the running accumulators the
+/// batched entry folds into (seeded zero, exactly as the single-item
+/// worker's partials start), so the coordinator's ascending-layer merge
+/// is unchanged. The injected-fault check runs per batch group (one
+/// dispatch unit), draining the in-flight group before dying.
+fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
+    st.batched()?; // compile before the disjoint field borrows below
+    let WorkerState { entry_batched, consts, stages, outs, .. } = st;
+    let entry = entry_batched.as_ref().expect("batched entry just ensured");
+    let m_static = batched_entry_width(&entry.spec)?;
+
+    let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut item_secs = Vec::new();
+    let mut wall_s = 0.0;
+    let mut overlap_s = 0.0;
+    let mut calls = 0u64;
+    let mut executed = 0u64;
+
+    for work in &job.devices {
+        let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> = work.acts.iter().cloned().collect();
+        let src = SnapshotActs(&acts);
+        let w_c: BTreeMap<usize, Arc<Tensor>> = work.w_c.iter().cloned().collect();
+        let mut pending: Option<(InFlight<'_>, &BatchGroup)> = None;
+        for (gi, group) in work.groups.iter().enumerate() {
+            if let Some(k) = job.kill {
+                if executed >= k {
+                    if let Some((fly, _)) = pending.take() {
+                        let _ = fly.wait_into(outs);
+                    }
+                    return Ok(DoneMsg::dead(executed));
+                }
+            }
+            let stage = stage_for(stages, work.device * 2 + gi % 2);
+            let tg = Instant::now();
+            gather_group_args_into_from(&job.dims, &src, &job.items, group, m_static, stage)?;
+            if pending.is_some() {
+                let hidden = tg.elapsed().as_secs_f64();
+                overlap_s += hidden;
+                entry.note_overlap(hidden);
+            }
+            if let Some((fly, g)) = pending.take() {
+                let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
+                finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+            }
+            let w_c_t = w_c
+                .get(&group.layer)
+                .with_context(|| format!("worker job missing W_c for layer {}", group.layer))?;
+            let wc = consts.staged(ConstKey::LayerParam { layer: group.layer, field: 6 }, w_c_t)?;
+            let acc = layer_grads
+                .entry(group.layer)
+                .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape())).collect());
+            let args = batched_args(wc.as_ref(), stage, acc)?;
+            pending = Some((entry.launch(&args)?, group));
+            calls += 1;
+            executed += group.ids.len() as u64;
+        }
+        if let Some((fly, g)) = pending.take() {
+            let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
+            finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+        }
+    }
+    if let Some(k) = job.kill {
+        if executed >= k {
+            return Ok(DoneMsg::dead(executed));
+        }
+    }
+
+    Ok(DoneMsg {
+        layer_grads: layer_grads.into_iter().collect(),
+        item_secs,
+        wall_s,
+        overlap_s,
+        calls,
+        died: false,
+        executed,
+    })
+}
+
+struct WorkerJob {
+    lane: usize,
+    msg: JobMsg,
+    reply: mpsc::Sender<(usize, Result<DoneMsg>)>,
+}
+
+enum Msg {
+    Job(Box<WorkerJob>),
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+fn worker_main(rx: mpsc::Receiver<Msg>) {
+    let mut state: Option<WorkerState> = None;
+    while let Ok(Msg::Job(job)) = rx.recv() {
+        let result = run_job(&mut state, &job.msg);
+        // Receiver gone means the coordinator gave up on the phase;
+        // nothing useful to do with the result.
+        let _ = job.reply.send((job.lane, result));
+    }
+}
+
+/// Real concurrent backend: persistent worker threads (spawned lazily,
+/// kept across steps so each worker compiles its entry once), one lane
+/// per simulated device (device d runs on lane d mod lanes when
+/// `--workers` caps the count). Per-device in-flight concurrency is
+/// exactly one call — within the fleet's MIG-slot cap by construction —
+/// while devices overlap for real across threads.
+pub struct ThreadedExecutor {
+    requested: usize,
+    fault: Option<FaultPlan>,
+    report: Option<FaultReport>,
+    workers: Vec<WorkerHandle>,
+}
+
+impl ThreadedExecutor {
+    /// `workers` caps the thread count; 0 = one per device.
+    pub fn new(workers: usize) -> Self {
+        Self::with_faults(workers, None)
+    }
+
+    /// Arm a fault plan: victim lanes receive a kill count inside their
+    /// job and the coordinator runs the shared recovery path.
+    pub fn with_faults(workers: usize, fault: Option<FaultPlan>) -> Self {
+        Self { requested: workers, fault, report: None, workers: Vec::new() }
+    }
+
+    fn ensure_workers(&mut self, n: usize) -> Result<()> {
+        while self.workers.len() < n {
+            let (tx, rx) = mpsc::channel();
+            let join = std::thread::Builder::new()
+                .name(format!("adjsh-exec-{}", self.workers.len()))
+                .spawn(move || worker_main(rx))
+                .context("spawning executor worker")?;
+            self.workers.push(WorkerHandle { tx, join: Some(join) });
+        }
+        Ok(())
+    }
+
+    /// Ship one round of jobs and collect every reply. Each round owns
+    /// its channel end-to-end so a vanished worker surfaces as a recv
+    /// error instead of a hang.
+    fn run_round(&self, jobs: Vec<(usize, JobMsg)>) -> Result<Vec<(usize, DoneMsg)>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut outstanding = 0usize;
+        for (lane, msg) in jobs {
+            let job = WorkerJob { lane, msg, reply: reply_tx.clone() };
+            self.workers[lane]
+                .tx
+                .send(Msg::Job(Box::new(job)))
+                .map_err(|_| anyhow::anyhow!("executor worker {lane} is gone"))?;
+            outstanding += 1;
+        }
+        drop(reply_tx);
+        let mut replies = Vec::with_capacity(outstanding);
+        for _ in 0..outstanding {
+            let (lane, done) =
+                reply_rx.recv().context("executor worker dropped its reply channel")?;
+            replies.push((lane, done?));
+        }
+        Ok(replies)
+    }
+}
+
+impl Drop for ThreadedExecutor {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Executor for ThreadedExecutor {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Threaded
+    }
+
+    fn fault_report(&self) -> Option<&FaultReport> {
+        self.report.as_ref()
+    }
+
+    fn execute(
+        &mut self,
+        ctx: ExecCtx<'_>,
+        dispatch: &Dispatch,
+        grads: &mut GradSet,
+    ) -> Result<ExecOutcome> {
+        self.report = None;
+        let t0 = Instant::now();
+        let devices = ctx.fleet.cfg.devices;
+        let n_lanes = lane_count(self.requested, devices);
+        self.ensure_workers(n_lanes)?;
+
+        // Build each lane's job: its devices' ascending-id queues, Arc
+        // snapshots of their activation stores, and their layers' W_c.
+        let mut per_lane: Vec<Vec<_>> = (0..n_lanes).map(|_| Vec::new()).collect();
+        for dev in 0..dispatch.queues.len() {
+            if let Some(work) = device_work(dispatch, ctx.fleet, ctx.params, dev) {
+                per_lane[dev % n_lanes].push(work);
+            }
+        }
+        let lane_items: Vec<usize> = per_lane
+            .iter()
+            .map(|ws| ws.iter().map(|w| w.items.len()).sum())
+            .collect();
+        let split = match &self.fault {
+            Some(plan) => Some(split_faults(plan, n_lanes, &lane_items)?),
+            None => None,
+        };
+
+        let mut jobs = Vec::new();
+        for (lane, work) in per_lane.into_iter().enumerate() {
+            if work.is_empty() {
+                continue;
+            }
+            let kill = match &split {
+                Some(s) => s.kill_after(lane),
+                None => None,
+            };
+            jobs.push((
+                lane,
+                JobMsg {
+                    dims: ctx.dims.clone(),
+                    artifacts_dir: ctx.arts.dir.clone(),
+                    batch: dispatch.batch,
+                    // The global item table is only consulted by the
+                    // batched path (groups reference it by id).
+                    items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
+                    devices: work,
+                    kill,
+                },
+            ));
+        }
+
+        let mut dones = Vec::new();
+        let mut dead: Vec<(usize, bool)> = Vec::new();
+        let mut deaths_exec: BTreeMap<usize, u64> = BTreeMap::new();
+        for (lane, done) in self.run_round(jobs)? {
+            if done.died {
+                let split = match &split {
+                    Some(s) => s,
+                    None => bail!("lane {lane} died with no fault plan armed"),
+                };
+                deaths_exec.insert(lane, done.executed);
+                dead.push((lane, split.rejoin(lane)));
+            } else {
+                dones.push(done);
+            }
+        }
+        dead.sort_unstable_by_key(|&(lane, _)| lane);
+
+        if !dead.is_empty() {
+            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
+            // Orphaned layers never reached `grads` (a dead lane's
+            // partials die with it), so recovery lanes re-accumulate
+            // them from zero — no rollback needed here, unlike sim.
+            let mut jobs = Vec::new();
+            for wave in &rec.waves {
+                for rl in &wave.lanes {
+                    jobs.push((
+                        rl.lane,
+                        JobMsg {
+                            dims: ctx.dims.clone(),
+                            artifacts_dir: ctx.arts.dir.clone(),
+                            batch: dispatch.batch,
+                            items: if dispatch.batch > 1 {
+                                dispatch.items.clone()
+                            } else {
+                                Vec::new()
+                            },
+                            devices: vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)],
+                            kill: None,
+                        },
+                    ));
+                }
+            }
+            let mut recovered = Vec::new();
+            for (lane, done) in self.run_round(jobs)? {
+                if done.died {
+                    bail!("recovery lane {lane} died mid-recovery");
+                }
+                recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
+                dones.push(done);
+            }
+            recovered.sort_unstable();
+            if recovered != rec.orphans {
+                bail!(
+                    "recovery executed {} items, the deaths orphaned {}",
+                    recovered.len(),
+                    rec.orphans.len()
+                );
+            }
+            self.report = Some(FaultReport {
+                deaths: dead
+                    .iter()
+                    .map(|&(lane, _)| Death {
+                        lane,
+                        devices: devices_of_lane(lane, n_lanes, dispatch.queues.len()),
+                        executed: deaths_exec[&lane],
+                    })
+                    .collect(),
+                orphan_layers: rec.orphan_layers,
+                orphans: rec.orphans,
+                recovered,
+                rejoined: dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect(),
+            });
+        } else if split.is_some() {
+            self.report = Some(FaultReport::default());
+        }
+
+        // Deterministic merge: completion order is erased by collecting
+        // everything first, then reducing in ascending layer order. Each
+        // layer arrives from exactly one lane (device-partitioned; the
+        // recovery re-plan preserves this).
+        let (item_secs, wall_s, overlap_s, calls) =
+            merge_partials(dones, dispatch.items.len(), grads)?;
+
+        Ok(ExecOutcome {
+            item_secs,
+            wall_s,
+            host_s: t0.elapsed().as_secs_f64(),
+            overlap_s,
+            calls,
+        })
+    }
+}

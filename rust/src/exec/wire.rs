@@ -1,0 +1,621 @@
+//! The process executor's wire format (DESIGN.md §Fault-Tolerance): a
+//! thin length-prefixed frame protocol over the worker's stdio pipes,
+//! plus byte-exact codecs for the two payloads that matter — a lane's
+//! serialized [`BatchGroup`] dispatch ([`JobMsg`]) and its per-layer
+//! 7-tensor gradient partials ([`DoneMsg`]).
+//!
+//! Everything is fixed-width little-endian; floats travel as raw bit
+//! patterns (`to_bits`/`from_bits`), so a gradient partial that crosses
+//! the pipe is the same f32 sequence the worker computed — the process
+//! backend's bit-identity contract depends on exactly this. Decoding is
+//! defensive in the same way serve's snapshot loader is: magic and
+//! plausibility checks run *before* any allocation, every count is
+//! bounds-checked against the remaining frame, tensors re-validate
+//! shape·product == len through [`Tensor::new`], and [`Dec::finish`]
+//! rejects trailing bytes — a truncated or corrupt frame is an error,
+//! never a silent partial message.
+//!
+//! The same message structs are what the threaded backend sends over its
+//! in-process channels; only the process backend pays the encode/decode.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelDims;
+use crate::sharding::{BatchGroup, WorkItem};
+use crate::tensor::Tensor;
+use crate::topology::ActKind;
+
+/// Frame magic: every frame starts with these four bytes.
+pub const MAGIC: [u8; 4] = *b"ADJW";
+/// Protocol version exchanged in the HELLO handshake; a worker from a
+/// different build refuses to join rather than corrupting gradients.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Frame kinds.
+pub const K_HELLO: u8 = 1;
+pub const K_HELLO_OK: u8 = 2;
+pub const K_JOB: u8 = 3;
+pub const K_DONE: u8 = 4;
+pub const K_ERR: u8 = 5;
+pub const K_SHUTDOWN: u8 = 6;
+
+/// Plausibility cap on one frame's payload — far above any real phase,
+/// far below an allocation that could wedge the host.
+pub const MAX_FRAME: u64 = 1 << 32;
+/// Plausibility cap on any one sequence length inside a payload.
+const MAX_VEC: u64 = 1 << 24;
+const MAX_RANK: u64 = 8;
+
+/// One device's share of a phase, shipped to a worker lane: its queue
+/// (global item ids ascending — the pinned reduction order), the queue's
+/// batch-group packing, a snapshot of its activation store (including
+/// the replicated cotangent), and the `W_c` values its layers need.
+/// `device` doubles as the worker-side stage index.
+#[derive(Debug, Clone)]
+pub struct DeviceWorkMsg {
+    pub device: usize,
+    pub items: Vec<(usize, WorkItem)>,
+    /// The queue's [`BatchGroup`] packing (used when `JobMsg::batch > 1`).
+    pub groups: Vec<BatchGroup>,
+    pub acts: Vec<((usize, ActKind), Arc<Tensor>)>,
+    pub w_c: Vec<(usize, Arc<Tensor>)>,
+}
+
+/// One phase's job for one worker lane.
+#[derive(Debug, Clone)]
+pub struct JobMsg {
+    pub dims: ModelDims,
+    pub artifacts_dir: PathBuf,
+    /// Resolved batched dispatch width (`Dispatch::batch`).
+    pub batch: usize,
+    /// The phase's full work-item table (batch groups reference it by
+    /// global id); empty on the single-item path.
+    pub items: Vec<WorkItem>,
+    pub devices: Vec<DeviceWorkMsg>,
+    /// Injected fault: die (without partials) right before dispatching
+    /// the work unit that would start at or past this many items.
+    pub kill: Option<u64>,
+}
+
+/// A lane's answer: per-layer gradient partials (each layer lives on
+/// exactly one lane — the placement invariant), measured seconds per
+/// item, and lane totals. `died` marks an injected death on the threaded
+/// backend; a process worker never sends it — it exits without replying,
+/// which is what a real crash looks like.
+#[derive(Debug, Clone)]
+pub struct DoneMsg {
+    pub layer_grads: Vec<(usize, Vec<Tensor>)>,
+    pub item_secs: Vec<(usize, f64)>,
+    pub wall_s: f64,
+    pub overlap_s: f64,
+    pub calls: u64,
+    pub died: bool,
+    /// Work items the lane dispatched before dying (wasted work).
+    pub executed: u64,
+}
+
+impl DoneMsg {
+    /// What a dying lane reports: no partials, just the wasted-work count.
+    pub fn dead(executed: u64) -> Self {
+        DoneMsg {
+            layer_grads: Vec::new(),
+            item_secs: Vec::new(),
+            wall_s: 0.0,
+            overlap_s: 0.0,
+            calls: 0,
+            died: true,
+            executed,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames.
+// ---------------------------------------------------------------------------
+
+/// Write one frame: magic, kind byte, u64 LE payload length, payload.
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&[kind])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` only at a *clean* frame boundary (the peer
+/// closed the pipe between frames — how a worker death presents to the
+/// coordinator); EOF anywhere inside a frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut magic = [0u8; 4];
+    let mut got = 0;
+    while got < magic.len() {
+        let n = r.read(&mut magic[got..]).context("reading frame magic")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("truncated frame header ({got} of 4 magic bytes)");
+        }
+        got += n;
+    }
+    if magic != MAGIC {
+        bail!("bad frame magic {magic:02x?} (expected {MAGIC:02x?})");
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("reading frame kind")?;
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len).context("reading frame length")?;
+    let len = u64::from_le_bytes(len);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Some((kind[0], payload)))
+}
+
+// ---------------------------------------------------------------------------
+// Primitive codecs.
+// ---------------------------------------------------------------------------
+
+/// Little-endian payload encoder.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        self.usize(t.shape().len());
+        for &d in t.shape() {
+            self.usize(d);
+        }
+        self.usize(t.data().len());
+        for &x in t.data() {
+            self.f32(x);
+        }
+    }
+
+    /// Activation-key layer: the replicated cotangent uses `usize::MAX`
+    /// as its layer, which must survive the trip on 32- and 64-bit hosts
+    /// alike — so it crosses as the reserved value `u64::MAX`.
+    fn act_layer(&mut self, layer: usize) {
+        self.u64(if layer == usize::MAX { u64::MAX } else { layer as u64 });
+    }
+}
+
+/// Bounds-checked payload decoder; every read validates against the
+/// remaining frame *before* touching (or allocating) anything.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "truncated payload: wanted {n} bytes at offset {}, frame has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("bad bool byte {v} on the wire"),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        if v > u32::MAX as u64 {
+            bail!("implausible count {v} on the wire");
+        }
+        Ok(v as usize)
+    }
+
+    /// A sequence length: tighter plausibility cap, checked before any
+    /// allocation sized by it.
+    fn len(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        if v > MAX_VEC {
+            bail!("implausible sequence length {v} on the wire");
+        }
+        Ok(v as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_bits(u32::from_le_bytes(b.try_into().expect("4-byte slice"))))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        let b = self.take(n)?;
+        Ok(std::str::from_utf8(b)
+            .context("non-UTF8 string on the wire")?
+            .to_string())
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u64()?;
+        if rank > MAX_RANK {
+            bail!("implausible tensor rank {rank} on the wire");
+        }
+        let mut shape = Vec::with_capacity(rank as usize);
+        for _ in 0..rank {
+            shape.push(self.usize()?);
+        }
+        let n = self.len()?;
+        if (n as u64).saturating_mul(4) > self.remaining() as u64 {
+            bail!("tensor data ({n} floats) exceeds the remaining frame");
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f32()?);
+        }
+        // Tensor::new re-checks shape·product == len, so a corrupt shape
+        // cannot smuggle mismatched data through.
+        Tensor::new(shape, data)
+    }
+
+    fn act_layer(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        if v == u64::MAX {
+            return Ok(usize::MAX); // the cotangent key
+        }
+        if v > u32::MAX as u64 {
+            bail!("implausible activation layer {v} on the wire");
+        }
+        Ok(v as usize)
+    }
+
+    /// Reject trailing bytes: a valid message consumes its whole frame.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after the decoded message", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+fn act_kind_code(k: ActKind) -> u8 {
+    match k {
+        ActKind::H => 0,
+        ActKind::A => 1,
+        ActKind::C => 2,
+        ActKind::Xhat => 3,
+        ActKind::Cotangent => 4,
+    }
+}
+
+fn act_kind_from(code: u8) -> Result<ActKind> {
+    Ok(match code {
+        0 => ActKind::H,
+        1 => ActKind::A,
+        2 => ActKind::C,
+        3 => ActKind::Xhat,
+        4 => ActKind::Cotangent,
+        _ => bail!("unknown activation kind {code} on the wire"),
+    })
+}
+
+fn enc_item(e: &mut Enc, it: &WorkItem) {
+    e.usize(it.layer);
+    e.usize(it.chunk_start);
+    e.usize(it.chunk_len);
+}
+
+fn dec_item(d: &mut Dec<'_>) -> Result<WorkItem> {
+    Ok(WorkItem { layer: d.usize()?, chunk_start: d.usize()?, chunk_len: d.usize()? })
+}
+
+// ---------------------------------------------------------------------------
+// Message codecs.
+// ---------------------------------------------------------------------------
+
+pub fn encode_hello(version: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(version);
+    e.into_bytes()
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<u64> {
+    let mut d = Dec::new(payload);
+    let v = d.u64()?;
+    d.finish()?;
+    Ok(v)
+}
+
+pub fn encode_err(msg: &str) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.str(msg);
+    e.into_bytes()
+}
+
+pub fn decode_err(payload: &[u8]) -> Result<String> {
+    let mut d = Dec::new(payload);
+    let s = d.str()?;
+    d.finish()?;
+    Ok(s)
+}
+
+pub fn encode_job(job: &JobMsg) -> Result<Vec<u8>> {
+    let mut e = Enc::new();
+    e.str(&job.dims.name);
+    for v in [job.dims.v, job.dims.p, job.dims.n, job.dims.k, job.dims.t, job.dims.w, job.dims.c]
+    {
+        e.usize(v);
+    }
+    e.f32(job.dims.eps);
+    let dir = job
+        .artifacts_dir
+        .to_str()
+        .context("artifacts dir is not UTF-8 — cannot cross the wire")?;
+    e.str(dir);
+    e.usize(job.batch);
+    e.usize(job.items.len());
+    for it in &job.items {
+        enc_item(&mut e, it);
+    }
+    e.usize(job.devices.len());
+    for w in &job.devices {
+        e.usize(w.device);
+        e.usize(w.items.len());
+        for (id, it) in &w.items {
+            e.usize(*id);
+            enc_item(&mut e, it);
+        }
+        e.usize(w.groups.len());
+        for g in &w.groups {
+            e.usize(g.layer);
+            e.usize(g.ids.len());
+            for &id in &g.ids {
+                e.usize(id);
+            }
+        }
+        e.usize(w.acts.len());
+        for ((layer, kind), t) in &w.acts {
+            e.act_layer(*layer);
+            e.u8(act_kind_code(*kind));
+            e.tensor(t);
+        }
+        e.usize(w.w_c.len());
+        for (k, t) in &w.w_c {
+            e.usize(*k);
+            e.tensor(t);
+        }
+    }
+    match job.kill {
+        Some(k) => {
+            e.bool(true);
+            e.u64(k);
+        }
+        None => e.bool(false),
+    }
+    Ok(e.into_bytes())
+}
+
+pub fn decode_job(payload: &[u8]) -> Result<JobMsg> {
+    let mut d = Dec::new(payload);
+    let name = d.str()?;
+    let (v, p, n, k, t, w, c) =
+        (d.usize()?, d.usize()?, d.usize()?, d.usize()?, d.usize()?, d.usize()?, d.usize()?);
+    let eps = d.f32()?;
+    let dims = ModelDims { name, v, p, n, k, t, w, c, eps };
+    let artifacts_dir = PathBuf::from(d.str()?);
+    let batch = d.usize()?;
+    let n_items = d.len()?;
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        items.push(dec_item(&mut d)?);
+    }
+    let n_devices = d.len()?;
+    let mut devices = Vec::with_capacity(n_devices);
+    for _ in 0..n_devices {
+        let device = d.usize()?;
+        let n = d.len()?;
+        let mut dev_items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = d.usize()?;
+            dev_items.push((id, dec_item(&mut d)?));
+        }
+        let n = d.len()?;
+        let mut groups = Vec::with_capacity(n);
+        for _ in 0..n {
+            let layer = d.usize()?;
+            let n_ids = d.len()?;
+            let mut ids = Vec::with_capacity(n_ids);
+            for _ in 0..n_ids {
+                ids.push(d.usize()?);
+            }
+            groups.push(BatchGroup { layer, ids });
+        }
+        let n = d.len()?;
+        let mut acts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let layer = d.act_layer()?;
+            let kind = act_kind_from(d.u8()?)?;
+            acts.push(((layer, kind), Arc::new(d.tensor()?)));
+        }
+        let n = d.len()?;
+        let mut w_c = Vec::with_capacity(n);
+        for _ in 0..n {
+            let layer = d.usize()?;
+            w_c.push((layer, Arc::new(d.tensor()?)));
+        }
+        devices.push(DeviceWorkMsg { device, items: dev_items, groups, acts, w_c });
+    }
+    let kill = if d.bool()? { Some(d.u64()?) } else { None };
+    d.finish()?;
+    Ok(JobMsg { dims, artifacts_dir, batch, items, devices, kill })
+}
+
+pub fn encode_done(done: &DoneMsg) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.usize(done.layer_grads.len());
+    for (layer, grads) in &done.layer_grads {
+        e.usize(*layer);
+        e.usize(grads.len());
+        for t in grads {
+            e.tensor(t);
+        }
+    }
+    e.usize(done.item_secs.len());
+    for (id, secs) in &done.item_secs {
+        e.usize(*id);
+        e.f64(*secs);
+    }
+    e.f64(done.wall_s);
+    e.f64(done.overlap_s);
+    e.u64(done.calls);
+    e.bool(done.died);
+    e.u64(done.executed);
+    e.into_bytes()
+}
+
+pub fn decode_done(payload: &[u8]) -> Result<DoneMsg> {
+    let mut d = Dec::new(payload);
+    let n_layers = d.len()?;
+    let mut layer_grads = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let layer = d.usize()?;
+        let n = d.len()?;
+        if n > 16 {
+            bail!("implausible gradient-tensor count {n} for one layer");
+        }
+        let mut grads = Vec::with_capacity(n);
+        for _ in 0..n {
+            grads.push(d.tensor()?);
+        }
+        layer_grads.push((layer, grads));
+    }
+    let n = d.len()?;
+    let mut item_secs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = d.usize()?;
+        item_secs.push((id, d.f64()?));
+    }
+    let wall_s = d.f64()?;
+    let overlap_s = d.f64()?;
+    let calls = d.u64()?;
+    let died = d.bool()?;
+    let executed = d.u64()?;
+    d.finish()?;
+    Ok(DoneMsg { layer_grads, item_secs, wall_s, overlap_s, calls, died, executed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_and_err_roundtrip() {
+        assert_eq!(decode_hello(&encode_hello(7)).unwrap(), 7);
+        assert!(decode_hello(&[1, 2]).is_err()); // truncated
+        assert!(decode_hello(&encode_hello(7)[..7]).is_err());
+        let msg = "worker exploded: artifact missing";
+        assert_eq!(decode_err(&encode_err(msg)).unwrap(), msg);
+    }
+
+    #[test]
+    fn act_kind_codes_roundtrip() {
+        for k in [ActKind::H, ActKind::A, ActKind::C, ActKind::Xhat, ActKind::Cotangent] {
+            assert_eq!(act_kind_from(act_kind_code(k)).unwrap(), k);
+        }
+        assert!(act_kind_from(9).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, K_JOB, b"abc").unwrap();
+        write_frame(&mut buf, K_SHUTDOWN, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), Some((K_JOB, b"abc".to_vec())));
+        assert_eq!(read_frame(&mut cur).unwrap(), Some((K_SHUTDOWN, Vec::new())));
+        assert_eq!(read_frame(&mut cur).unwrap(), None); // clean boundary
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic_and_absurd_length() {
+        let mut cur = std::io::Cursor::new(b"XXXX\x01\0\0\0\0\0\0\0\0".to_vec());
+        assert!(read_frame(&mut cur).is_err());
+        let mut bad = MAGIC.to_vec();
+        bad.push(K_DONE);
+        bad.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut cur = std::io::Cursor::new(bad);
+        // Dies on the length check, never on an allocation.
+        assert!(read_frame(&mut cur).is_err());
+    }
+}

@@ -36,6 +36,9 @@ fn run() -> Result<()> {
     let mut cli = Cli::from_env()?;
     let cmd = cli.positional.first().cloned().unwrap_or_default();
     match cmd.as_str() {
+        // Internal: re-exec'd by ProcessExecutor as a worker lane; speaks
+        // the wire protocol on stdin/stdout until shutdown or EOF.
+        "__exec-worker" => adjoint_sharding::exec::process_worker_main(),
         "train" => cmd_train(&mut cli),
         "eval" => cmd_eval(&mut cli),
         "generate" => cmd_generate(&mut cli),
@@ -56,7 +59,8 @@ adjsh — adjoint sharding for very long context SSM training (repro)
 commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
             [--sched-policy fifo|lpt|layer-major] [--overlap]
-            [--executor sim|threaded] [--workers N] [--adjoint-batch M]
+            [--executor sim|threaded|process] [--workers N] [--adjoint-batch M]
+            [--fault-at lane@items[+rejoin],...] [--fault-seed N]
             [--checkpoint out.ckpt] [--resume in.ckpt]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
@@ -92,10 +96,31 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         "batched backward width: 0 = auto (artifact's M), 1 = single-item dispatch",
     )?;
     cfg.exec.kind = cli
-        .str_or("executor", "sim", "backward execution backend: sim|threaded")
+        .str_or("executor", "sim", "backward execution backend: sim|threaded|process")
         .parse()?;
     cfg.exec.workers =
-        cli.usize_or("workers", 0, "threaded executor worker cap (0 = one per device)")?;
+        cli.usize_or("workers", 0, "worker-backend lane cap (0 = one per device)")?;
+    let fault_at = cli.str_or(
+        "fault-at",
+        "",
+        "kill executor lanes mid-phase: lane@items[+rejoin],... ('' = off)",
+    );
+    let fault_seed = cli.usize_or(
+        "fault-seed",
+        0,
+        "derive a deterministic one-kill fault schedule from this seed (0 = off)",
+    )?;
+    cfg.fault = if !fault_at.is_empty() {
+        Some(fault_at.parse()?)
+    } else if fault_seed != 0 {
+        Some(adjoint_sharding::exec::FaultPlan::seeded(
+            fault_seed as u64,
+            cfg.topology.devices,
+            32,
+        ))
+    } else {
+        None
+    };
     cfg.serve.max_batch =
         cli.usize_or("max-batch", 8, "serve: max sessions per batched decode step")?;
     let snap = cli.str_or("snapshot-dir", "", "serve: session snapshot directory ('' = off)");

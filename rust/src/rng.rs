@@ -34,6 +34,12 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Bernoulli draw: true with probability `p` (deterministic fault
+    /// schedules and the like).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
     /// Uniform integer in [0, n).
     pub fn below(&mut self, n: u64) -> u64 {
         debug_assert!(n > 0);
@@ -103,6 +109,20 @@ mod tests {
         for _ in 0..1000 {
             let u = r.uniform();
             assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn chance_edges_and_determinism() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            assert!(!r.chance(0.0));
+            assert!(r.chance(1.0));
+        }
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.chance(0.5), b.chance(0.5));
         }
     }
 

@@ -72,6 +72,9 @@ pub fn build_backend(
             };
             Box::new(ThreadedBackend::new(dir, dims, params, lanes)?)
         }
+        ExecutorKind::Process => {
+            bail!("the process executor is train-only; serve supports sim|threaded")
+        }
     })
 }
 

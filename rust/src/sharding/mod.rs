@@ -104,6 +104,23 @@ pub fn plan_chunks(k: usize, t: usize, c: usize) -> Result<Vec<WorkItem>> {
     Ok(items)
 }
 
+/// The contiguous span `[lo, hi]` covered by an ascending, unique layer
+/// set, erroring when the set has gaps or is unordered. The executors'
+/// fault-recovery path leans on [`assign_layers`] placing a contiguous
+/// block per device: an orphaned device's layers form a *range* the
+/// re-planner can treat as a smaller instance of the same problem.
+pub fn layer_span(layers: &[usize]) -> Result<(usize, usize)> {
+    let Some((&lo, &hi)) = layers.first().zip(layers.last()) else {
+        bail!("empty layer set has no span");
+    };
+    for w in layers.windows(2) {
+        if w[1] != w[0] + 1 {
+            bail!("layer set not contiguous: {} then {}", w[0], w[1]);
+        }
+    }
+    Ok((lo, hi))
+}
+
 /// One batched backward dispatch group: up to M same-layer work items
 /// executed as a single `layer_adjoint_grad_batched` call, reduced
 /// on-device in ascending item-id order (the pinned accumulation order of
@@ -256,6 +273,21 @@ mod tests {
     fn chunk_size_must_divide() {
         assert!(plan_chunks(1, 32, 5).is_err());
         assert!(plan_chunks(1, 32, 0).is_err());
+    }
+
+    #[test]
+    fn layer_span_requires_contiguity() {
+        assert_eq!(layer_span(&[3]).unwrap(), (3, 3));
+        assert_eq!(layer_span(&[2, 3, 4]).unwrap(), (2, 4));
+        assert!(layer_span(&[]).is_err());
+        assert!(layer_span(&[1, 3]).is_err()); // gap
+        assert!(layer_span(&[2, 1]).is_err()); // unordered
+        assert!(layer_span(&[1, 1]).is_err()); // duplicate
+        // Every assign_layers block has a span, by construction.
+        let a = assign_layers(10, 4).unwrap();
+        for layers in &a.layers_of_device {
+            layer_span(layers).unwrap();
+        }
     }
 
     #[test]

@@ -80,7 +80,7 @@ impl Trainer {
         let head_bytes = 2 * params.omega.size_bytes() + opt.head_state_bytes();
         fleet.devices[head].account_persistent(head_bytes as u64);
 
-        let executor = cfg.exec.build();
+        let executor = cfg.exec.build_with(cfg.fault.clone());
         Ok(Self {
             cfg,
             arts,
@@ -146,6 +146,21 @@ impl Trainer {
                 self.last_bwd_host_s = Some((bwd.host_s, bwd.wall_s));
                 self.last_overlap_s = Some(bwd.overlap_s);
                 self.last_plan = Some(bwd.plan);
+                // An armed --fault-at plan reports what its kills did; the
+                // gradients above are already bit-identical to a healthy
+                // run (DESIGN.md §Fault-Tolerance).
+                if let Some(report) = self.executor.fault_report() {
+                    if !report.deaths.is_empty() {
+                        println!(
+                            "fault injection: {} lane death(s), {} orphaned item(s) over {} layer(s) \
+                             re-planned and recovered ({} lane(s) rejoined)",
+                            report.deaths.len(),
+                            report.orphans.len(),
+                            report.orphan_layers.len(),
+                            report.rejoined.len(),
+                        );
+                    }
+                }
                 step
             }
             GradMode::Bptt => {

@@ -1,8 +1,9 @@
-//! Executor equivalence (ISSUE 3): `SimExecutor` and `ThreadedExecutor`
-//! must be interchangeable — bit-identical gradients, identical
-//! `vjp_units`/`calls`, and a consistent `BackwardPlan` — across seeds,
-//! scheduling policies (fifo | lpt | layer-major), `--overlap` on/off,
-//! fleet sizes, and worker caps.
+//! Executor equivalence (ISSUE 3, extended by ISSUE 6): `SimExecutor`,
+//! `ThreadedExecutor`, and `ProcessExecutor` must be interchangeable —
+//! bit-identical gradients, identical `vjp_units`/`calls`, and a
+//! consistent `BackwardPlan` — across seeds, scheduling policies
+//! (fifo | lpt | layer-major), `--overlap` on/off, fleet sizes, worker
+//! caps, and batched dispatch widths.
 //!
 //! Host-side tests (dispatch-contract invariants) run everywhere; the
 //! PJRT equivalence sweep skips with a message when `make artifacts`
@@ -13,7 +14,9 @@ use std::path::{Path, PathBuf};
 use adjoint_sharding::adjoint::{self, StagePool};
 use adjoint_sharding::config::{ModelDims, SchedCfg, TopologyCfg};
 use adjoint_sharding::data::{Corpus, MarkovCorpus};
-use adjoint_sharding::exec::{plan_dispatch, Executor, SimExecutor, ThreadedExecutor};
+use adjoint_sharding::exec::{
+    plan_dispatch, Executor, ProcessExecutor, SimExecutor, ThreadedExecutor,
+};
 use adjoint_sharding::model::{GradSet, ParamSet};
 use adjoint_sharding::pipeline;
 use adjoint_sharding::runtime::{ArtifactSet, Runtime};
@@ -106,6 +109,12 @@ fn have(name: &str) -> bool {
     root().join(name).join("manifest.json").exists()
 }
 
+/// A process executor whose child workers re-exec the adjsh binary cargo
+/// built for this test run.
+fn process_executor(workers: usize) -> ProcessExecutor {
+    ProcessExecutor::new(workers).with_program(PathBuf::from(env!("CARGO_BIN_EXE_adjsh")))
+}
+
 fn assert_grads_bit_identical(a: &GradSet, b: &GradSet, ctx: &str) {
     for (k, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
         for (i, (ta, tb)) in la.0.iter().zip(&lb.0).enumerate() {
@@ -160,9 +169,11 @@ fn compare_backends(
         (grads, out)
     };
 
-    let (g_sim, o_sim) = run(&mut SimExecutor);
+    let (g_sim, o_sim) = run(&mut SimExecutor::new());
     let mut threaded = ThreadedExecutor::new(workers);
     let (g_thr, o_thr) = run(&mut threaded);
+    let mut process = process_executor(workers);
+    let (g_proc, o_proc) = run(&mut process);
 
     let ctx = format!(
         "{config} Υ={devices} seed={seed} policy={policy} overlap={overlap} workers={workers}"
@@ -170,12 +181,15 @@ fn compare_backends(
     assert_grads_bit_identical(&g_sim, &g_thr, &ctx);
     assert_eq!(o_sim.vjp_units, o_thr.vjp_units, "{ctx}: vjp_units");
     assert_eq!(o_sim.calls, o_thr.calls, "{ctx}: calls");
+    assert_grads_bit_identical(&g_sim, &g_proc, &format!("{ctx} [process]"));
+    assert_eq!(o_sim.vjp_units, o_proc.vjp_units, "{ctx}: process vjp_units");
+    assert_eq!(o_sim.calls, o_proc.calls, "{ctx}: process calls");
 
     // Plan consistency: both measured plans schedule the same item set on
     // the same device partition under the same caps (service times are
     // measured, so spans differ in *when*, never in *what* or *where*).
     let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
-    for (o, which) in [(&o_sim, "sim"), (&o_thr, "threaded")] {
+    for (o, which) in [(&o_sim, "sim"), (&o_thr, "threaded"), (&o_proc, "process")] {
         assert_eq!(
             o.plan.schedule.scheduled_items(),
             items.len(),
@@ -254,8 +268,9 @@ fn backward_grid(
     for &width in widths {
         let sched = SchedCfg { adjoint_batch: width, ..Default::default() };
         let mut runs: Vec<(&'static str, Box<dyn Executor>)> = vec![
-            ("sim", Box::new(SimExecutor)),
+            ("sim", Box::new(SimExecutor::new())),
             ("threaded", Box::new(ThreadedExecutor::new(0))),
+            ("process", Box::new(process_executor(0))),
         ];
         for (label, exec) in runs.iter_mut() {
             let mut grads = GradSet::zeros(&dims);
@@ -425,7 +440,7 @@ fn pre_batching_artifacts_fall_back_to_single_item_path() {
         &SchedCfg::default(),
         None,
         &mut pool,
-        &mut SimExecutor,
+        &mut SimExecutor::new(),
     )
     .unwrap();
     let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
@@ -438,7 +453,7 @@ fn pre_batching_artifacts_fall_back_to_single_item_path() {
 }
 
 #[test]
-fn threaded_trainer_steps_match_sim_trainer() {
+fn worker_trainer_steps_match_sim_trainer() {
     if !have("tiny") {
         eprintln!("SKIP: run `make artifacts`");
         return;
@@ -446,6 +461,10 @@ fn threaded_trainer_steps_match_sim_trainer() {
     use adjoint_sharding::config::RunConfig;
     use adjoint_sharding::exec::ExecutorKind;
     use adjoint_sharding::train::Trainer;
+
+    // The trainer builds its ProcessExecutor itself, so point the worker
+    // re-exec at the adjsh binary cargo built for this test run.
+    std::env::set_var("ADJSH_WORKER_BIN", env!("CARGO_BIN_EXE_adjsh"));
 
     let mut losses = Vec::new();
     for kind in ExecutorKind::ALL {
@@ -464,5 +483,7 @@ fn threaded_trainer_steps_match_sim_trainer() {
     }
     // Whole optimization trajectories coincide: identical grads → identical
     // Adam updates → identical next-step losses.
-    assert_eq!(losses[0], losses[1], "sim vs threaded training trajectories diverged");
+    for (i, kind) in ExecutorKind::ALL.iter().enumerate().skip(1) {
+        assert_eq!(losses[0], losses[i], "sim vs {kind} training trajectories diverged");
+    }
 }

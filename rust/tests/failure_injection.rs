@@ -1,10 +1,19 @@
 //! Failure injection: every misuse or corrupted input must surface as a
-//! clean `Err` (never a panic, never silent wrong numbers).
+//! clean `Err` (never a panic, never silent wrong numbers) — and, since
+//! ISSUE 6, injected *worker deaths* must surface as bit-identical
+//! gradients: live-executor tests kill lanes mid-run under the sim,
+//! threaded, and process backends and assert the recovered `GradSet`
+//! matches a healthy run exactly.
 
 use std::path::{Path, PathBuf};
 
-use adjoint_sharding::config::{ModelDims, RunConfig, TopologyCfg};
+use adjoint_sharding::adjoint::{self, put_synthetic_activations, StagePool};
+use adjoint_sharding::config::{ModelDims, RunConfig, SchedCfg, TopologyCfg};
 use adjoint_sharding::data::MarkovCorpus;
+use adjoint_sharding::exec::{
+    Executor, FaultPlan, FaultReport, ProcessExecutor, SimExecutor, ThreadedExecutor,
+};
+use adjoint_sharding::model::{GradSet, ParamSet};
 use adjoint_sharding::runtime::{ArtifactSet, Manifest, Runtime};
 use adjoint_sharding::tensor::{Arg, Tensor};
 use adjoint_sharding::topology::Fleet;
@@ -143,4 +152,195 @@ fn tensor_misuse_is_clean_error() {
     assert!(t.rel_l2(&other).is_err());
     let mut a = Tensor::zeros(&[2]);
     assert!(a.add_assign(&Tensor::zeros(&[3])).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Fault-plan plumbing (host-only, no artifacts needed).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_plan_parses_and_roundtrips() {
+    let plan: FaultPlan = "0@3+rejoin, 2@7".parse().unwrap();
+    assert_eq!(plan.kills.len(), 2);
+    assert!(plan.kills[0].rejoin && plan.kills[0].lane == 0 && plan.kills[0].after_items == 3);
+    assert!(!plan.kills[1].rejoin && plan.kills[1].lane == 2 && plan.kills[1].after_items == 7);
+    assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+
+    assert!("".parse::<FaultPlan>().is_err());
+    assert!("0".parse::<FaultPlan>().is_err());
+    assert!("x@3".parse::<FaultPlan>().is_err());
+    assert!("0@y".parse::<FaultPlan>().is_err());
+}
+
+#[test]
+fn seeded_fault_schedules_are_deterministic() {
+    let a = FaultPlan::seeded(9, 4, 32);
+    assert_eq!(a, FaultPlan::seeded(9, 4, 32));
+    assert_eq!(a.kills.len(), 1);
+    assert!(a.kills[0].lane < 4 && a.kills[0].after_items < 32);
+}
+
+// ---------------------------------------------------------------------------
+// Live executor fault injection (ISSUE 6): kill lanes mid-run under each
+// backend and assert the recovered GradSet is bit-identical to a healthy
+// run — every orphaned item re-executed exactly once. Skips without
+// artifacts.
+// ---------------------------------------------------------------------------
+
+/// A process executor whose child workers re-exec the adjsh binary cargo
+/// built for this test run.
+fn process_executor(fault: Option<FaultPlan>) -> ProcessExecutor {
+    ProcessExecutor::new(0)
+        .with_program(PathBuf::from(env!("CARGO_BIN_EXE_adjsh")))
+        .with_faults(fault)
+}
+
+/// One backward phase over fixed synthetic activations (seed-pinned, so
+/// every call sees identical inputs) on a 2-device fleet; returns the
+/// gradients plus the executor's fault report.
+fn faulted_backward(exec: &mut dyn Executor) -> (GradSet, Option<FaultReport>) {
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let params = ParamSet::init(&dims, 11);
+    let mut fleet = Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, dims.k).unwrap();
+    put_synthetic_activations(&dims, &mut fleet, 11);
+    let mut grads = GradSet::zeros(&dims);
+    let mut pool = StagePool::new();
+    adjoint::backward_pooled(
+        &arts,
+        &dims,
+        &params,
+        &mut fleet,
+        &mut grads,
+        &SchedCfg::default(),
+        None,
+        &mut pool,
+        exec,
+    )
+    .unwrap();
+    (grads, exec.fault_report().cloned())
+}
+
+fn assert_bit_identical(a: &GradSet, b: &GradSet, ctx: &str) {
+    for (k, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (i, (ta, tb)) in la.0.iter().zip(&lb.0).enumerate() {
+            assert_eq!(ta.data(), tb.data(), "{ctx}: layer {k} grad {i} differs");
+        }
+    }
+    assert_eq!(a.omega.data(), b.omega.data(), "{ctx}: dΩ differs");
+}
+
+/// The recovery account must show real deaths, and every orphaned item
+/// recovered exactly once (ascending unique ids, equal to the orphan set).
+fn assert_recovered_exactly_once(report: &Option<FaultReport>, ctx: &str) {
+    let r = match report {
+        Some(r) => r,
+        None => panic!("{ctx}: fault plan armed but no report"),
+    };
+    assert!(!r.deaths.is_empty(), "{ctx}: kill was ineffective");
+    assert!(!r.orphans.is_empty(), "{ctx}: death orphaned nothing");
+    assert!(
+        r.recovered.windows(2).all(|w| w[0] < w[1]),
+        "{ctx}: recovered ids not ascending-unique"
+    );
+    assert_eq!(r.recovered, r.orphans, "{ctx}: recovery must cover the orphans exactly once");
+}
+
+#[test]
+fn sim_death_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, none) = faulted_backward(&mut SimExecutor::new());
+    assert!(none.is_none(), "healthy run must not report faults");
+
+    // Lane 0 dies after 1 item — its layers re-accumulate on lane 1.
+    let plan: FaultPlan = "0@1".parse().unwrap();
+    let (grads, report) = faulted_backward(&mut SimExecutor::with_faults(Some(plan)));
+    assert_bit_identical(&grads, &healthy, "sim death at item 1");
+    assert_recovered_exactly_once(&report, "sim death at item 1");
+
+    // Same again with a rejoin: the dead lane takes back its own layers.
+    let plan: FaultPlan = "1@2+rejoin".parse().unwrap();
+    let (grads, report) = faulted_backward(&mut SimExecutor::with_faults(Some(plan)));
+    assert_bit_identical(&grads, &healthy, "sim death+rejoin at item 2");
+    assert_recovered_exactly_once(&report, "sim death+rejoin at item 2");
+    let r = report.unwrap();
+    assert_eq!(r.rejoined, vec![1], "rejoin must be recorded");
+    assert_eq!(r.deaths[0].lane, 1);
+}
+
+#[test]
+fn threaded_death_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    let plan: FaultPlan = "0@1".parse().unwrap();
+    let mut exec = ThreadedExecutor::with_faults(0, Some(plan));
+    let (grads, report) = faulted_backward(&mut exec);
+    assert_bit_identical(&grads, &healthy, "threaded death at item 1");
+    assert_recovered_exactly_once(&report, "threaded death at item 1");
+}
+
+#[test]
+fn process_death_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // The child process takes the injected fault exit mid-phase: the
+    // coordinator sees EOF, re-plans lane 0's layers onto lane 1.
+    let plan: FaultPlan = "0@1".parse().unwrap();
+    let mut exec = process_executor(Some(plan));
+    let (grads, report) = faulted_backward(&mut exec);
+    assert_bit_identical(&grads, &healthy, "process death at item 1");
+    assert_recovered_exactly_once(&report, "process death at item 1");
+}
+
+#[test]
+fn process_death_then_rejoin_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // +rejoin: the coordinator respawns the dead worker (fresh HELLO
+    // handshake) and hands it back exactly its own orphaned layers.
+    let plan: FaultPlan = "1@1+rejoin".parse().unwrap();
+    let mut exec = process_executor(Some(plan));
+    let (grads, report) = faulted_backward(&mut exec);
+    assert_bit_identical(&grads, &healthy, "process death+rejoin");
+    assert_recovered_exactly_once(&report, "process death+rejoin");
+    assert_eq!(report.unwrap().rejoined, vec![1], "rejoin must be recorded");
+}
+
+#[test]
+fn ineffective_fault_points_are_noops() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // Lane 7 doesn't exist; lane 0's fault point lies past its queue.
+    // Both kills are ineffective: no deaths, gradients untouched.
+    let plan: FaultPlan = "7@0,0@9999".parse().unwrap();
+    for (label, exec) in [
+        ("sim", Box::new(SimExecutor::with_faults(Some(plan.clone()))) as Box<dyn Executor>),
+        ("process", Box::new(process_executor(Some(plan)))),
+    ] {
+        let mut exec = exec;
+        let (grads, report) = faulted_backward(exec.as_mut());
+        let ctx = format!("{label} ineffective kills");
+        assert_bit_identical(&grads, &healthy, &ctx);
+        let r = match report {
+            Some(r) => r,
+            None => panic!("{ctx}: armed plan must still report"),
+        };
+        assert_eq!(r, FaultReport::default(), "{ctx}: expected an empty report");
+    }
 }

@@ -312,7 +312,7 @@ fn pooled_backward_matches_seed_grads() {
 
     // Pooled path (twice, to cover warm const-cache + reused pool).
     let mut pool = StagePool::new();
-    let mut exec = adjoint_sharding::exec::SimExecutor;
+    let mut exec = adjoint_sharding::exec::SimExecutor::new();
     for round in 0..2 {
         let mut g_new = GradSet::zeros(&dims);
         adjoint::backward_pooled(

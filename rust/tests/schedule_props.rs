@@ -280,6 +280,171 @@ fn prop_plan_batches_partitions_queues() {
 }
 
 #[test]
+fn prop_recovery_replan_covers_orphans_exactly_once() {
+    // ISSUE-6 invariants: for random fleets, fault points, and lane
+    // counts, the recovery re-plan (a) covers exactly the dead lanes'
+    // orphaned items, each exactly once; (b) keeps every recovery queue
+    // ascending in global id (the pinned reduction order) with groups
+    // tiling it; (c) sends work only to survivors — or back to the dead
+    // lane itself on rejoin; (d) never exceeds MIG slot caps.
+    use adjoint_sharding::config::{ModelDims, SchedCfg, TopologyCfg};
+    use adjoint_sharding::exec::fault::{plan_recovery, split_faults};
+    use adjoint_sharding::exec::{plan_dispatch, Fault, FaultPlan};
+    use adjoint_sharding::schedule::BackwardPlan;
+    use adjoint_sharding::topology::Fleet;
+    use std::collections::BTreeSet;
+
+    fn plan_respects_slots(plan: &BackwardPlan, slots: usize, ctx: &str) {
+        for d in &plan.schedule.devices {
+            for s in &d.spans {
+                let live = d
+                    .spans
+                    .iter()
+                    .filter(|o| o.start_s < s.end_s - 1e-12 && o.end_s > s.start_s + 1e-12)
+                    .count();
+                assert!(live <= slots, "{ctx}: {live} concurrent spans > {slots} MIG slots");
+            }
+        }
+    }
+
+    let mut rng = Rng::new(0xFA17);
+    let mut effective = 0usize;
+    let mut rejoins = 0usize;
+    let mut multi = 0usize;
+    for case in 0..CASES {
+        // Every 5th case forces the multi-death + rejoin shape (≥ 3
+        // lanes, two effective kills, one rejoining) so the teeth below
+        // hold by construction; the rest roam freely, including
+        // ineffective fault points.
+        let force_multi = case % 5 == 0;
+        let k = if force_multi { 4 + rng.below(5) as usize } else { 1 + rng.below(8) as usize };
+        let chunks = 1 + rng.below(6) as usize;
+        let c = 4usize;
+        let t = c * chunks;
+        let devices = if force_multi {
+            3 + rng.below((k - 2) as u64) as usize
+        } else {
+            1 + rng.below(k as u64) as usize
+        };
+        let slots = 1 + rng.below(4) as usize;
+        let batch = 1 + rng.below(4) as usize;
+        let dims =
+            ModelDims { name: "p".into(), v: 8, p: 4, n: 4, k, t, w: 4, c, eps: 1e-6 };
+        let topo = TopologyCfg { devices, mig_slots: slots, ..Default::default() };
+        let fleet = Fleet::new(topo.clone(), k).unwrap();
+        let items = plan_chunks(k, t, c).unwrap();
+        let dispatch =
+            plan_dispatch(&dims, &fleet, &items, &SchedCfg::default(), 4096, &[], batch)
+                .unwrap_or_else(|e| panic!("case {case}: dispatch {e}"));
+
+        // Sim lane model: one lane per device. Kill 1 lane (2 when the
+        // fleet is big enough), at a random fault point that may land
+        // past the queue (ineffective); the only lane must rejoin.
+        let n_lanes = devices;
+        let lane_items: Vec<usize> = dispatch.queues.iter().map(|q| q.len()).collect();
+        let n_dead = if force_multi { 2 } else { 1 };
+        let mut kills = Vec::new();
+        let mut lanes_hit = BTreeSet::new();
+        while kills.len() < n_dead {
+            let lane = rng.below(n_lanes as u64) as usize;
+            if !lanes_hit.insert(lane) {
+                continue;
+            }
+            // Forced cases pin the fault point inside the queue (always
+            // effective) and make exactly the first kill rejoin.
+            let after_items = if force_multi {
+                rng.below(lane_items[lane].max(1) as u64) as usize
+            } else {
+                rng.below((lane_items[lane].max(1) * 2) as u64) as usize
+            };
+            let rejoin =
+                if force_multi { kills.is_empty() } else { devices == 1 || rng.chance(0.5) };
+            kills.push(Fault { lane, after_items, rejoin });
+        }
+        let plan = FaultPlan { kills };
+        let split = split_faults(&plan, n_lanes, &lane_items)
+            .unwrap_or_else(|e| panic!("case {case}: split {e}"));
+        // The split keeps exactly the kills whose fault point lands
+        // inside the lane's queue.
+        for f in &plan.kills {
+            assert_eq!(
+                split.kill_after(f.lane).is_some(),
+                f.after_items < lane_items[f.lane],
+                "case {case}: effectiveness filter wrong for lane {}",
+                f.lane
+            );
+        }
+        let dead: Vec<(usize, bool)> =
+            split.kills.iter().map(|f| (f.lane, f.rejoin)).collect();
+        if dead.is_empty() {
+            continue; // every kill ineffective — nothing to recover
+        }
+        effective += 1;
+        if dead.len() > 1 {
+            multi += 1;
+        }
+
+        let rec = plan_recovery(&dims, &topo, &dispatch, n_lanes, &dead)
+            .unwrap_or_else(|e| panic!("case {case}: recovery {e}"));
+
+        // (a) orphans = exactly the dead lanes' queues, each item once.
+        let mut want_orphans: Vec<usize> =
+            dead.iter().flat_map(|&(l, _)| dispatch.queues[l].iter().copied()).collect();
+        want_orphans.sort_unstable();
+        assert_eq!(rec.orphans, want_orphans, "case {case}: orphan item set");
+        let want_layers: BTreeSet<usize> =
+            want_orphans.iter().map(|&id| items[id].layer).collect();
+        assert_eq!(
+            rec.orphan_layers,
+            want_layers.iter().copied().collect::<Vec<_>>(),
+            "case {case}: orphan layer range"
+        );
+
+        let mut covered = Vec::new();
+        let dead_set: BTreeSet<usize> = dead.iter().map(|&(l, _)| l).collect();
+        for (wi, wave) in rec.waves.iter().enumerate() {
+            // (d) each wave's sub-plan respects the MIG slot caps.
+            plan_respects_slots(&wave.plan, slots, &format!("case {case} wave {wi}"));
+            for rl in &wave.lanes {
+                // (c) recovery lands on a survivor, or on the dead lane
+                // itself iff it rejoins.
+                if dead_set.contains(&rl.lane) {
+                    assert!(
+                        dead.iter().any(|&(l, r)| l == rl.lane && r),
+                        "case {case}: wave {wi} routed work to dead lane {}",
+                        rl.lane
+                    );
+                    rejoins += 1;
+                }
+                // (b) ascending queue, groups tiling it, same-layer, ≤ batch.
+                assert!(
+                    rl.queue.windows(2).all(|w| w[0] < w[1]),
+                    "case {case}: recovery queue not ascending"
+                );
+                let flat: Vec<usize> =
+                    rl.groups.iter().flat_map(|g| g.ids.clone()).collect();
+                assert_eq!(flat, rl.queue, "case {case}: groups must tile the queue");
+                for g in &rl.groups {
+                    assert!(!g.ids.is_empty() && g.ids.len() <= batch, "case {case}: group size");
+                    assert!(
+                        g.ids.iter().all(|&id| items[id].layer == g.layer),
+                        "case {case}: group mixes layers"
+                    );
+                }
+                covered.extend(rl.queue.iter().copied());
+            }
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, want_orphans, "case {case}: waves must cover orphans exactly once");
+    }
+    // Teeth: the sweep must actually exercise the paths it claims to —
+    // guaranteed by the forced every-5th-case shape above.
+    assert!(effective >= CASES / 5, "too few effective kills ({effective})");
+    assert!(rejoins > 0, "rejoin path never exercised");
+    assert!(multi > 0, "multi-death path never exercised");
+}
+
+#[test]
 fn prop_makespan_fifo_matches_greedy_list_scheduling() {
     // Independent reimplementation of the seed's greedy list makespan.
     fn greedy(times: &[f64], slots: usize) -> f64 {

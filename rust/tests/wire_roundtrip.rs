@@ -1,0 +1,235 @@
+//! Wire-protocol roundtrips (ISSUE 6): `BatchGroup` dispatches and
+//! 7-tensor gradient partials must cross the process boundary
+//! byte-exactly — encode → decode → re-encode is the identity on bytes,
+//! including f32 subnormals, negative zero, and the `usize::MAX`
+//! cotangent key — and truncated or corrupt frames must be rejected as
+//! clean errors, mirroring the snapshot-corruption units in `serve.rs`.
+//! Host-only: no PJRT artifacts needed.
+
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use adjoint_sharding::config::ModelDims;
+use adjoint_sharding::exec::wire::{
+    decode_done, decode_err, decode_hello, decode_job, encode_done, encode_err, encode_hello,
+    encode_job, read_frame, write_frame, DeviceWorkMsg, DoneMsg, JobMsg, K_DONE, K_JOB, MAGIC,
+    WIRE_VERSION,
+};
+use adjoint_sharding::sharding::{BatchGroup, WorkItem};
+use adjoint_sharding::tensor::Tensor;
+use adjoint_sharding::topology::ActKind;
+
+fn dims() -> ModelDims {
+    ModelDims { name: "wire".into(), v: 16, p: 8, n: 4, k: 2, t: 32, w: 8, c: 8, eps: 1e-6 }
+}
+
+/// Float patterns that round-trip only if the codec moves raw bits, not
+/// values: negative zero, subnormals, extremes, and exact-precision
+/// casualties.
+fn nasty_floats() -> Vec<f32> {
+    vec![
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        -f32::MIN_POSITIVE / 4.0,
+        f32::MAX,
+        f32::MIN,
+        1.0 + f32::EPSILON,
+        std::f32::consts::PI,
+    ]
+}
+
+fn sample_job(kill: Option<u64>) -> JobMsg {
+    let floats = nasty_floats();
+    let acts = vec![
+        (
+            (0usize, ActKind::Xhat),
+            Arc::new(Tensor::new(vec![2, 4], floats.clone()).unwrap()),
+        ),
+        (
+            (1usize, ActKind::H),
+            Arc::new(Tensor::new(vec![8], floats.clone()).unwrap()),
+        ),
+        // The replicated cotangent rides under the sentinel layer key.
+        (
+            (usize::MAX, ActKind::Cotangent),
+            Arc::new(Tensor::new(vec![4, 2], floats.clone()).unwrap()),
+        ),
+    ];
+    let items = vec![
+        WorkItem { layer: 0, chunk_start: 0, chunk_len: 8 },
+        WorkItem { layer: 0, chunk_start: 8, chunk_len: 8 },
+        WorkItem { layer: 1, chunk_start: 0, chunk_len: 8 },
+    ];
+    JobMsg {
+        dims: dims(),
+        artifacts_dir: PathBuf::from("artifacts/tiny"),
+        batch: 2,
+        items: items.clone(),
+        devices: vec![DeviceWorkMsg {
+            device: 1,
+            items: vec![(0, items[0]), (1, items[1]), (2, items[2])],
+            groups: vec![
+                BatchGroup { layer: 0, ids: vec![0, 1] },
+                BatchGroup { layer: 1, ids: vec![2] },
+            ],
+            acts,
+            w_c: vec![(0, Arc::new(Tensor::new(vec![2, 4], floats).unwrap()))],
+        }],
+        kill,
+    }
+}
+
+fn sample_done() -> DoneMsg {
+    let grads: Vec<Tensor> = (0..7)
+        .map(|i| {
+            let data = nasty_floats().iter().map(|f| f * (i + 1) as f32).collect();
+            Tensor::new(vec![2, 4], data).unwrap()
+        })
+        .collect();
+    DoneMsg {
+        layer_grads: vec![(0, grads.clone()), (1, grads)],
+        item_secs: vec![(0, 1.5e-6), (1, f64::MIN_POSITIVE), (2, 0.25)],
+        wall_s: 0.125,
+        overlap_s: 1e-9,
+        calls: 3,
+        died: false,
+        executed: 3,
+    }
+}
+
+#[test]
+fn job_roundtrip_is_byte_exact() {
+    for kill in [None, Some(0u64), Some(7)] {
+        let job = sample_job(kill);
+        let bytes = encode_job(&job).unwrap();
+        let back = decode_job(&bytes).unwrap();
+        // Byte-exactness: re-encoding the decoded message reproduces the
+        // original payload bit for bit (tensor data crossed as raw bits).
+        assert_eq!(encode_job(&back).unwrap(), bytes, "kill={kill:?}");
+        // And the decoded structure matches field-wise.
+        assert_eq!(back.kill, kill);
+        assert_eq!(back.batch, job.batch);
+        assert_eq!(back.items, job.items);
+        assert_eq!(back.artifacts_dir, job.artifacts_dir);
+        assert_eq!(back.dims.name, job.dims.name);
+        assert_eq!(back.devices.len(), 1);
+        let (d, b) = (&job.devices[0], &back.devices[0]);
+        assert_eq!(b.device, d.device);
+        assert_eq!(b.items, d.items);
+        assert_eq!(b.groups, d.groups);
+        assert_eq!(b.w_c.len(), d.w_c.len());
+        for ((ka, ta), (kb, tb)) in d.acts.iter().zip(&b.acts) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta.shape(), tb.shape());
+            // Bit-compare, not float-compare: -0.0 == 0.0 would pass a
+            // value comparison while corrupting the gradient bits.
+            let bits_a: Vec<u32> = ta.data().iter().map(|f| f.to_bits()).collect();
+            let bits_b: Vec<u32> = tb.data().iter().map(|f| f.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+    }
+}
+
+#[test]
+fn done_roundtrip_is_byte_exact() {
+    for done in [sample_done(), DoneMsg::dead(5)] {
+        let bytes = encode_done(&done);
+        let back = decode_done(&bytes).unwrap();
+        assert_eq!(encode_done(&back), bytes);
+        assert_eq!(back.died, done.died);
+        assert_eq!(back.executed, done.executed);
+        assert_eq!(back.calls, done.calls);
+        assert_eq!(back.layer_grads.len(), done.layer_grads.len());
+        for ((la, ga), (lb, gb)) in done.layer_grads.iter().zip(&back.layer_grads) {
+            assert_eq!(la, lb);
+            assert_eq!(ga.len(), gb.len());
+            for (ta, tb) in ga.iter().zip(gb) {
+                let bits_a: Vec<u32> = ta.data().iter().map(|f| f.to_bits()).collect();
+                let bits_b: Vec<u32> = tb.data().iter().map(|f| f.to_bits()).collect();
+                assert_eq!(bits_a, bits_b);
+            }
+        }
+    }
+}
+
+#[test]
+fn hello_and_err_roundtrip_through_frames() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, K_JOB, &encode_hello(WIRE_VERSION)).unwrap();
+    write_frame(&mut buf, K_DONE, &encode_err("lane 1 lost its runtime")).unwrap();
+    let mut r = Cursor::new(buf);
+    let (k1, p1) = read_frame(&mut r).unwrap().unwrap();
+    assert_eq!(k1, K_JOB);
+    assert_eq!(decode_hello(&p1).unwrap(), WIRE_VERSION);
+    let (k2, p2) = read_frame(&mut r).unwrap().unwrap();
+    assert_eq!(k2, K_DONE);
+    assert_eq!(decode_err(&p2).unwrap(), "lane 1 lost its runtime");
+    // Clean EOF at a frame boundary is Ok(None) — how a finished worker
+    // hangs up — never an error.
+    assert!(read_frame(&mut r).unwrap().is_none());
+}
+
+#[test]
+fn truncated_frames_rejected_at_every_prefix() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, K_DONE, &encode_done(&sample_done())).unwrap();
+    for cut in 0..buf.len() {
+        let mut r = Cursor::new(&buf[..cut]);
+        let got = read_frame(&mut r);
+        if cut == 0 {
+            // Zero bytes at a frame boundary: clean EOF.
+            assert!(matches!(got, Ok(None)), "cut=0 must read as clean EOF");
+        } else {
+            // Any strict prefix is a torn frame: header or payload cut
+            // mid-way must surface as an error, never a short read.
+            assert!(got.is_err(), "cut={cut}/{} accepted a torn frame", buf.len());
+        }
+    }
+    // The full buffer reads back whole.
+    let mut r = Cursor::new(&buf[..]);
+    let (kind, payload) = read_frame(&mut r).unwrap().unwrap();
+    assert_eq!(kind, K_DONE);
+    assert!(decode_done(&payload).is_ok());
+}
+
+#[test]
+fn corrupt_frames_rejected() {
+    // Bad magic: a stream that isn't ours at all.
+    let mut bad = Vec::new();
+    write_frame(&mut bad, K_DONE, b"xyz").unwrap();
+    bad[0] ^= 0xFF;
+    assert!(read_frame(&mut Cursor::new(&bad[..])).is_err());
+    assert_ne!(bad[..4], MAGIC);
+
+    // Absurd length: must be rejected *before* any allocation.
+    let mut huge = Vec::new();
+    huge.extend_from_slice(&MAGIC);
+    huge.push(K_DONE);
+    huge.extend_from_slice(&u64::MAX.to_le_bytes());
+    assert!(read_frame(&mut Cursor::new(&huge[..])).is_err());
+}
+
+#[test]
+fn corrupt_payloads_rejected() {
+    // Every strict prefix of a JOB payload fails to decode: vectors are
+    // length-prefixed and scalars fixed-width, so a cut always lands
+    // inside some field — and the decoder bounds-checks every take.
+    let bytes = encode_job(&sample_job(Some(3))).unwrap();
+    for cut in 0..bytes.len() {
+        assert!(decode_job(&bytes[..cut]).is_err(), "job prefix {cut}/{} decoded", bytes.len());
+    }
+    // Trailing garbage is rejected by exact-consumption, not ignored.
+    let mut padded = bytes.clone();
+    padded.push(0);
+    assert!(decode_job(&padded).is_err(), "trailing byte accepted");
+
+    let done_bytes = encode_done(&sample_done());
+    for cut in 0..done_bytes.len() {
+        assert!(decode_done(&done_bytes[..cut]).is_err(), "done prefix {cut} decoded");
+    }
+    let mut padded = done_bytes.clone();
+    padded.extend_from_slice(&[0, 1, 2]);
+    assert!(decode_done(&padded).is_err(), "trailing bytes accepted");
+}

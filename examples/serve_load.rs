@@ -66,8 +66,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut recorded: Vec<BenchStats> = Vec::new();
     for exec in [
-        ExecCfg { kind: ExecutorKind::Sim, workers: 0 },
-        ExecCfg { kind: ExecutorKind::Threaded, workers },
+        ExecCfg { kind: ExecutorKind::Sim, ..ExecCfg::default() },
+        ExecCfg { kind: ExecutorKind::Threaded, workers, ..ExecCfg::default() },
     ] {
         let backend =
             build_backend(&exec, &cfg.artifacts_dir, &cfg.dims, Arc::clone(&params), max_batch)?;

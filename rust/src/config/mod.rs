@@ -229,6 +229,15 @@ pub struct RunConfig {
     pub seed: u64,
     pub log_every: usize,
     pub log_csv: Option<PathBuf>,
+    /// Write a crash-safe training checkpoint every N steps
+    /// (`--checkpoint-every`; 0 = off). Checkpoints carry the *full*
+    /// resumable state — params, sharded Adam moments, RNG, data-stream
+    /// position — so kill-and-resume is bit-identical (DESIGN.md
+    /// §Fault-Tolerance).
+    pub checkpoint_every: usize,
+    /// Where training checkpoints go (`--checkpoint-dir`; default
+    /// `checkpoints/` when periodic checkpointing is on).
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 impl RunConfig {
@@ -255,6 +264,8 @@ impl RunConfig {
             seed: 0,
             log_every: 10,
             log_csv: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         })
     }
 
@@ -343,6 +354,8 @@ mod tests {
             seed: 0,
             log_every: 1,
             log_csv: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         };
         assert!(cfg.validate().is_err()); // 3 devices > 2 layers
     }

@@ -32,23 +32,54 @@ use crate::topology::Fleet;
 
 use super::{plan_dispatch, Dispatch};
 
-/// One injected worker death: lane `lane` dies right before dispatching
+/// How an injected fault manifests at the fault point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultKind {
+    /// The worker dies: a threaded lane reports death, a process worker
+    /// exits without replying (pipe EOF).
+    #[default]
+    Kill,
+    /// The worker wedges: it stops making progress but stays alive, so
+    /// nothing arrives on the wire. Only the coordinator's deadline
+    /// escalation (`exec::supervise`) can turn this into a detected
+    /// death.
+    Hang,
+}
+
+/// One injected worker fault: lane `lane` faults right before dispatching
 /// its `after_items`-th work unit (an item at width 1, a whole batch
 /// group otherwise). `rejoin` restarts the worker and hands it back
 /// exactly its own orphaned layer range (elastic join); otherwise the
-/// orphans spread across the never-killed lanes.
+/// orphans spread across the never-killed lanes. `persistent` (`+loop`)
+/// re-arms the fault on every respawned incarnation of the lane — the
+/// crash-loop case the supervisor's breaker exists for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fault {
     pub lane: usize,
     pub after_items: usize,
     pub rejoin: bool,
+    pub kind: FaultKind,
+    pub persistent: bool,
+}
+
+impl Fault {
+    /// A plain one-shot kill — the PR 6 fault shape.
+    pub fn kill(lane: usize, after_items: usize, rejoin: bool) -> Self {
+        Fault { lane, after_items, rejoin, kind: FaultKind::Kill, persistent: false }
+    }
 }
 
 impl std::fmt::Display for Fault {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}@{}", self.lane, self.after_items)?;
+        if self.kind == FaultKind::Hang {
+            f.write_str("+hang")?;
+        }
         if self.rejoin {
             f.write_str("+rejoin")?;
+        }
+        if self.persistent {
+            f.write_str("+loop")?;
         }
         Ok(())
     }
@@ -58,13 +89,22 @@ impl std::str::FromStr for Fault {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> Result<Self> {
-        let (head, rejoin) = match s.strip_suffix("+rejoin") {
-            Some(h) => (h, true),
-            None => (s, false),
-        };
+        let mut parts = s.split('+');
+        let head = parts.next().unwrap_or_default();
+        let (mut rejoin, mut kind, mut persistent) = (false, FaultKind::Kill, false);
+        for flag in parts {
+            match flag.trim() {
+                "rejoin" => rejoin = true,
+                "hang" => kind = FaultKind::Hang,
+                "loop" => persistent = true,
+                other => {
+                    bail!("fault '{s}': unknown modifier '+{other}' (want hang/rejoin/loop)")
+                }
+            }
+        }
         let (lane, after) = head
             .split_once('@')
-            .with_context(|| format!("fault '{s}' must look like lane@k or lane@k+rejoin"))?;
+            .with_context(|| format!("fault '{s}' must look like lane@k[+hang][+rejoin][+loop]"))?;
         Ok(Fault {
             lane: lane
                 .trim()
@@ -75,6 +115,8 @@ impl std::str::FromStr for Fault {
                 .parse()
                 .with_context(|| format!("fault '{s}': bad item count"))?,
             rejoin,
+            kind,
+            persistent,
         })
     }
 }
@@ -123,7 +165,7 @@ impl FaultPlan {
         let lane = rng.below(lanes.max(1) as u64) as usize;
         let after_items = rng.below(max_after.max(1) as u64) as usize;
         let rejoin = rng.chance(0.5);
-        FaultPlan { kills: vec![Fault { lane, after_items, rejoin }] }
+        FaultPlan { kills: vec![Fault::kill(lane, after_items, rejoin)] }
     }
 }
 
@@ -141,6 +183,10 @@ pub struct Death {
 /// What one faulted phase did: who died, what was orphaned, what the
 /// recovery waves actually re-executed, who rejoined. Executors bail
 /// unless `recovered == orphans` — every orphaned item exactly once.
+/// The supervision fields record the escalation ladder: a lane that
+/// misses its progress deadline is first warned (`stragglers`), then
+/// force-killed (`hung` — always a subset of `deaths`); respawn
+/// attempts and crash-loop retirements land in `respawns`/`retired`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultReport {
     pub deaths: Vec<Death>,
@@ -152,6 +198,16 @@ pub struct FaultReport {
     pub recovered: Vec<usize>,
     /// Dead lanes that rejoined and recovered their own layer range.
     pub rejoined: Vec<usize>,
+    /// Lanes that missed a progress deadline and drew a straggler
+    /// warning (the first rung of the escalation ladder).
+    pub stragglers: Vec<usize>,
+    /// Lanes force-killed after exhausting the straggler grace period.
+    pub hung: Vec<usize>,
+    /// `(lane, attempts)` for lanes the supervisor respawned this phase.
+    pub respawns: Vec<(usize, u32)>,
+    /// Lanes permanently retired by the crash-loop breaker (this phase
+    /// or a previous one — retired lanes never run again).
+    pub retired: Vec<usize>,
 }
 
 /// A fault plan resolved against one phase's lane shape. A kill is
@@ -165,9 +221,23 @@ pub struct FaultSplit {
 }
 
 impl FaultSplit {
-    /// The lane's injected fault point, if it dies this phase.
+    /// The lane's effective fault, if any fires this phase.
+    pub fn fault_of(&self, lane: usize) -> Option<&Fault> {
+        self.kills.iter().find(|f| f.lane == lane)
+    }
+
+    /// The lane's injected kill point, if it dies this phase.
     pub fn kill_after(&self, lane: usize) -> Option<u64> {
-        self.kills.iter().find(|f| f.lane == lane).map(|f| f.after_items as u64)
+        self.fault_of(lane)
+            .filter(|f| f.kind == FaultKind::Kill)
+            .map(|f| f.after_items as u64)
+    }
+
+    /// The lane's injected hang point, if it wedges this phase.
+    pub fn hang_after(&self, lane: usize) -> Option<u64> {
+        self.fault_of(lane)
+            .filter(|f| f.kind == FaultKind::Hang)
+            .map(|f| f.after_items as u64)
     }
 
     pub fn rejoin(&self, lane: usize) -> bool {
@@ -433,12 +503,31 @@ mod tests {
 
     #[test]
     fn fault_parse_display_roundtrip() {
-        for s in ["0@3", "2@0+rejoin", "1@7,0@2+rejoin"] {
+        for s in [
+            "0@3",
+            "2@0+rejoin",
+            "1@7,0@2+rejoin",
+            "1@2+hang",
+            "0@1+hang+rejoin",
+            "1@0+rejoin+loop",
+            "2@3+hang+rejoin+loop",
+        ] {
             let plan: FaultPlan = s.parse().unwrap();
             assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
         }
         let plan: FaultPlan = "1@4+rejoin".parse().unwrap();
-        assert_eq!(plan.kills, vec![Fault { lane: 1, after_items: 4, rejoin: true }]);
+        assert_eq!(plan.kills, vec![Fault::kill(1, 4, true)]);
+        let plan: FaultPlan = "1@2+hang+loop".parse().unwrap();
+        assert_eq!(
+            plan.kills,
+            vec![Fault {
+                lane: 1,
+                after_items: 2,
+                rejoin: false,
+                kind: FaultKind::Hang,
+                persistent: true,
+            }]
+        );
         assert!("".parse::<FaultPlan>().is_err());
         assert!("x@y".parse::<FaultPlan>().is_err());
         assert!("1@".parse::<FaultPlan>().is_err());
@@ -466,10 +555,22 @@ mod tests {
         let plan: FaultPlan = "0@2,7@0,1@99".parse().unwrap();
         // Lane 7 doesn't exist; lane 1's fault point is past its queue.
         let split = split_faults(&plan, 2, &[4, 4]).unwrap();
-        assert_eq!(split.kills, vec![Fault { lane: 0, after_items: 2, rejoin: false }]);
+        assert_eq!(split.kills, vec![Fault::kill(0, 2, false)]);
         assert_eq!(split.kill_after(0), Some(2));
         assert_eq!(split.kill_after(1), None);
+        assert_eq!(split.hang_after(0), None);
         assert!(!split.rejoin(0));
+    }
+
+    #[test]
+    fn split_separates_hangs_from_kills() {
+        let plan: FaultPlan = "0@2+hang,1@1".parse().unwrap();
+        let split = split_faults(&plan, 3, &[4, 4, 4]).unwrap();
+        assert_eq!(split.hang_after(0), Some(2));
+        assert_eq!(split.kill_after(0), None, "a hang is not a kill");
+        assert_eq!(split.kill_after(1), Some(1));
+        assert_eq!(split.hang_after(1), None);
+        assert_eq!(split.fault_of(2), None);
     }
 
     #[test]

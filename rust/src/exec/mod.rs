@@ -66,12 +66,14 @@ use crate::topology::{ActKind, Fleet};
 pub mod fault;
 pub mod process;
 pub mod sim;
+pub mod supervise;
 pub mod threaded;
 pub mod wire;
 
-pub use fault::{Death, Fault, FaultPlan, FaultReport};
+pub use fault::{Death, Fault, FaultKind, FaultPlan, FaultReport};
 pub use process::{process_worker_main, ProcessExecutor, FAULT_EXIT};
 pub use sim::SimExecutor;
+pub use supervise::SuperviseCfg;
 pub use threaded::ThreadedExecutor;
 
 use fault::RecoveryLane;
@@ -133,18 +135,22 @@ impl std::str::FromStr for ExecutorKind {
 }
 
 /// Executor configuration carried by `RunConfig` (`--executor`,
-/// `--workers`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `--workers`, plus the supervision knobs `--worker-timeout`,
+/// `--respawn`, `--respawn-backoff`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExecCfg {
     pub kind: ExecutorKind,
     /// Worker lane cap for the threaded/process backends; 0 = one per
     /// device. Ignored by the sim backend.
     pub workers: usize,
+    /// Hang-detection deadlines and bounded-respawn policy, shared by
+    /// all backends (the sim backend models it).
+    pub supervise: SuperviseCfg,
 }
 
 impl Default for ExecCfg {
     fn default() -> Self {
-        Self { kind: ExecutorKind::Sim, workers: 0 }
+        Self { kind: ExecutorKind::Sim, workers: 0, supervise: SuperviseCfg::default() }
     }
 }
 
@@ -158,9 +164,18 @@ impl ExecCfg {
     /// on it — every backend shares the hook (DESIGN.md §Fault-Tolerance).
     pub fn build_with(&self, fault: Option<FaultPlan>) -> Box<dyn Executor> {
         match self.kind {
-            ExecutorKind::Sim => Box::new(SimExecutor::with_faults(fault)),
-            ExecutorKind::Threaded => Box::new(ThreadedExecutor::with_faults(self.workers, fault)),
-            ExecutorKind::Process => Box::new(ProcessExecutor::new(self.workers).with_faults(fault)),
+            ExecutorKind::Sim => {
+                Box::new(SimExecutor::with_faults(fault).with_supervision(self.supervise))
+            }
+            ExecutorKind::Threaded => Box::new(
+                ThreadedExecutor::with_faults(self.workers, fault)
+                    .with_supervision(self.supervise),
+            ),
+            ExecutorKind::Process => Box::new(
+                ProcessExecutor::new(self.workers)
+                    .with_faults(fault)
+                    .with_supervision(self.supervise),
+            ),
         }
     }
 }

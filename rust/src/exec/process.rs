@@ -17,18 +17,34 @@
 //! are collected first and merged host-side in pinned ascending layer
 //! order.
 //!
+//! **Supervision.** A lane's stdout is owned by a dedicated reader
+//! thread forwarding frames over a channel, so the coordinator's drain
+//! can wait with a timeout instead of blocking on a pipe. While a job
+//! runs, the worker's heartbeat thread sends unsolicited PONG frames
+//! carrying its monotone dispatched-unit counter; the coordinator's
+//! deadline clock ([`super::supervise`]) resets only when that counter
+//! advances. A lane that blows through its deadline gets a straggler
+//! warning and one grace period, then a force-kill (`SIGKILL`) — at
+//! which point the hang is an ordinary death and the shared recovery
+//! path re-plans its orphans.
+//!
 //! A dead lane triggers the shared recovery path: re-plan the orphaned
-//! layer range onto surviving lanes via `exec::plan_dispatch`, or — for
-//! `+rejoin` faults — respawn the worker (fresh HELLO handshake, the
-//! elastic join) and hand it back exactly its own layers. The recovered
+//! layer range onto surviving lanes, or — per the respawn policy —
+//! restart the worker (fresh HELLO handshake, the elastic join) with
+//! exponential backoff and hand it back exactly its own layers, retiring
+//! a lane that crash-loops past its attempt budget. The recovered
 //! `GradSet` is bit-identical to a healthy sim run: the dead lane's
 //! partials never reached the coordinator, and each orphaned layer is
 //! re-accumulated `0 + g₀ + g₁ + …` by exactly one lane.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufReader, Write};
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -37,11 +53,16 @@ use crate::model::GradSet;
 use super::fault::{
     devices_of_lane, plan_recovery, ring_order, split_faults, Death, FaultPlan, FaultReport,
 };
+use super::supervise::{
+    decide, job_vjp_units, persistent_fault, DeadlineClock, Escalation, LaneSupervisor,
+    SuperviseCfg, HEARTBEAT_INTERVAL_S,
+};
 use super::threaded::{run_job, WorkerState};
 use super::wire::{
-    decode_done, decode_err, decode_hello, decode_job, encode_done, encode_err, encode_hello,
-    encode_job, read_frame, write_frame, DoneMsg, JobMsg, K_DONE, K_ERR, K_HELLO, K_HELLO_OK,
-    K_JOB, K_SHUTDOWN, WIRE_VERSION,
+    decode_done, decode_err, decode_hello, decode_job, decode_ping, decode_pong, encode_done,
+    encode_err, encode_hello, encode_job, encode_ping, encode_pong, read_frame, write_frame,
+    DoneMsg, JobMsg, K_DONE, K_ERR, K_HELLO, K_HELLO_OK, K_JOB, K_PING, K_PONG, K_SHUTDOWN,
+    WIRE_VERSION,
 };
 use super::{
     device_work, lane_count, merge_partials, recovery_work, Dispatch, ExecCtx, ExecOutcome,
@@ -53,34 +74,139 @@ use super::{
 /// every mid-phase EOF the same way: the lane is dead.
 pub const FAULT_EXIT: i32 = 43;
 
+/// Wall budget for the HELLO/PING handshake with a fresh worker.
+const HANDSHAKE_TIMEOUT_S: f64 = 30.0;
+
+/// What a lane's reader thread forwards to the coordinator.
+enum LaneEvent {
+    Frame(u8, Vec<u8>),
+    /// Clean EOF on the worker's pipe: the process is gone.
+    Eof,
+    /// Torn frame or read error — treated exactly like EOF.
+    IoErr,
+}
+
+/// Reader-thread body: owns the worker's stdout, forwards every frame,
+/// and reports the pipe's end exactly once. Frame reads block here, not
+/// in the coordinator — which is what lets the drain loop run the
+/// deadline ladder while waiting.
+fn reader_main(mut stdout: BufReader<std::process::ChildStdout>, tx: mpsc::Sender<LaneEvent>) {
+    loop {
+        match read_frame(&mut stdout) {
+            Ok(Some((kind, payload))) => {
+                if tx.send(LaneEvent::Frame(kind, payload)).is_err() {
+                    return; // coordinator gave up on the lane
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send(LaneEvent::Eof);
+                return;
+            }
+            Err(_) => {
+                let _ = tx.send(LaneEvent::IoErr);
+                return;
+            }
+        }
+    }
+}
+
 struct ProcHandle {
     child: std::process::Child,
     stdin: std::process::ChildStdin,
-    stdout: BufReader<std::process::ChildStdout>,
+    rx: mpsc::Receiver<LaneEvent>,
+    reader: Option<JoinHandle<()>>,
+    /// Highest heartbeat counter seen from this worker — monotone over
+    /// the process lifetime, so per-job progress is `counter − base`.
+    units_seen: u64,
 }
 
 enum Reply {
     Done(DoneMsg),
     /// EOF (or a torn frame) on the worker's pipe: the process is gone.
     Dead,
+    /// The deadline ladder fired and the worker was force-killed;
+    /// `executed` is the progress its heartbeat last proved.
+    Hung { executed: u64 },
 }
 
-fn read_reply(h: &mut ProcHandle) -> Result<Reply> {
-    match read_frame(&mut h.stdout) {
-        Ok(Some((K_DONE, payload))) => Ok(Reply::Done(decode_done(&payload)?)),
-        Ok(Some((K_ERR, payload))) => bail!("worker error: {}", decode_err(&payload)?),
-        Ok(Some((kind, _))) => bail!("unexpected frame kind {kind} from worker"),
-        Ok(None) => Ok(Reply::Dead),
-        Err(_) => Ok(Reply::Dead),
+/// Wait for one frame during the handshake (bails on timeout or a dead
+/// pipe — a worker that can't handshake is a hard error, not a fault).
+fn recv_handshake(h: &ProcHandle, lane: usize, deadline: Instant) -> Result<(u8, Vec<u8>)> {
+    let left = deadline.saturating_duration_since(Instant::now());
+    match h.rx.recv_timeout(left) {
+        Ok(LaneEvent::Frame(kind, payload)) => Ok((kind, payload)),
+        Ok(LaneEvent::Eof) | Ok(LaneEvent::IoErr) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            bail!("worker {lane} exited during the handshake")
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => bail!("worker {lane}: handshake timed out"),
     }
 }
 
-/// Reap a dead worker: close the pipes, collect the exit status.
+/// Await one lane's job reply, running the deadline ladder against its
+/// heartbeat counter while waiting.
+fn await_reply(
+    h: &mut ProcHandle,
+    lane: usize,
+    deadline_s: f64,
+    stragglers: &mut Vec<usize>,
+) -> Result<Reply> {
+    let base = h.units_seen;
+    let mut clock = DeadlineClock::new(deadline_s);
+    clock.observe(base);
+    loop {
+        match h.rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(LaneEvent::Frame(kind, payload)) => match kind {
+                K_PONG => {
+                    let (_seq, units) = decode_pong(&payload)?;
+                    h.units_seen = h.units_seen.max(units);
+                    clock.observe(units);
+                }
+                K_DONE => return Ok(Reply::Done(decode_done(&payload)?)),
+                K_ERR => bail!("worker error: {}", decode_err(&payload)?),
+                other => bail!("unexpected frame kind {other} from worker {lane}"),
+            },
+            Ok(LaneEvent::Eof) | Ok(LaneEvent::IoErr) => return Ok(Reply::Dead),
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(Reply::Dead),
+            Err(mpsc::RecvTimeoutError::Timeout) => match clock.check() {
+                Escalation::Healthy => {}
+                Escalation::Straggler => {
+                    if !stragglers.contains(&lane) {
+                        stragglers.push(lane);
+                    }
+                    eprintln!(
+                        "[exec] lane {lane}: no progress inside its deadline — \
+                         straggler warning, granting one grace period"
+                    );
+                }
+                Escalation::Kill => {
+                    eprintln!(
+                        "[exec] lane {lane}: hung through the grace period — \
+                         killing the worker and recovering its range"
+                    );
+                    return Ok(Reply::Hung { executed: clock.units().saturating_sub(base) });
+                }
+            },
+        }
+    }
+}
+
+/// Reap a dead worker: close stdin, collect the exit status, join the
+/// reader thread (it exits on the EOF the death produced).
 fn reap(h: ProcHandle) {
-    let ProcHandle { mut child, stdin, stdout } = h;
+    let ProcHandle { mut child, stdin, rx, reader, .. } = h;
     drop(stdin);
-    drop(stdout);
     let _ = child.wait();
+    drop(rx);
+    if let Some(j) = reader {
+        let _ = j.join();
+    }
+}
+
+/// Force-kill a hung worker (`SIGKILL` — it is wedged, a polite shutdown
+/// frame would sit unread), then reap it.
+fn kill_worker(mut h: ProcHandle) {
+    let _ = h.child.kill();
+    reap(h);
 }
 
 fn spawn_worker(program: &Path, lane: usize) -> Result<ProcHandle> {
@@ -95,29 +221,46 @@ fn spawn_worker(program: &Path, lane: usize) -> Result<ProcHandle> {
         })?;
     let stdin = child.stdin.take().expect("piped stdin");
     let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-    let mut h = ProcHandle { child, stdin, stdout };
+    let (tx, rx) = mpsc::channel();
+    let reader = std::thread::Builder::new()
+        .name(format!("adjsh-lane-{lane}-rx"))
+        .spawn(move || reader_main(stdout, tx))
+        .context("spawning lane reader thread")?;
+    let mut h = ProcHandle { child, stdin, rx, reader: Some(reader), units_seen: 0 };
     // The join handshake: refuse a worker from a different build rather
     // than corrupting gradients with a skewed wire format.
     write_frame(&mut h.stdin, K_HELLO, &encode_hello(WIRE_VERSION))?;
     h.stdin.flush()?;
-    match read_frame(&mut h.stdout)? {
-        Some((K_HELLO_OK, payload)) => {
+    let deadline = Instant::now() + Duration::from_secs_f64(HANDSHAKE_TIMEOUT_S);
+    match recv_handshake(&h, lane, deadline)? {
+        (K_HELLO_OK, payload) => {
             let v = decode_hello(&payload)?;
             if v != WIRE_VERSION {
                 bail!("worker {lane} speaks wire version {v}, coordinator {WIRE_VERSION}");
             }
         }
-        Some((kind, _)) => bail!("worker {lane} answered HELLO with frame kind {kind}"),
-        None => bail!("worker {lane} exited during the HELLO handshake"),
+        (kind, _) => bail!("worker {lane} answered HELLO with frame kind {kind}"),
+    }
+    // Duplex probe: one explicit PING must come back before any job is
+    // trusted to the lane — proves the reply path end to end.
+    write_frame(&mut h.stdin, K_PING, &encode_ping(0))?;
+    h.stdin.flush()?;
+    match recv_handshake(&h, lane, deadline)? {
+        (K_PONG, payload) => {
+            let (_seq, units) = decode_pong(&payload)?;
+            h.units_seen = units;
+        }
+        (kind, _) => bail!("worker {lane} answered PING with frame kind {kind}"),
     }
     Ok(h)
 }
 
 /// Replay a killed worker's dispatch-unit loop to count the items it
 /// executed before dying — the coordinator can't ask a dead process, but
-/// the kill semantics are deterministic (check before each unit, and
+/// the fault semantics are deterministic (check before each unit, and
 /// once after the last), so the wasted-work accounting matches the sim
-/// and threaded backends exactly.
+/// and threaded backends exactly. A `+hang` fault sits at the same
+/// checkpoint, so the same replay prices a hung lane.
 fn killed_executed(job: &JobMsg, kill: u64) -> u64 {
     let mut executed = 0u64;
     for w in &job.devices {
@@ -147,12 +290,23 @@ pub struct ProcessExecutor {
     fault: Option<FaultPlan>,
     report: Option<FaultReport>,
     workers: Vec<Option<ProcHandle>>,
+    supervise: SuperviseCfg,
+    supervisor: LaneSupervisor,
 }
 
 impl ProcessExecutor {
     /// `workers` caps the process count; 0 = one per device.
     pub fn new(workers: usize) -> Self {
-        Self { requested: workers, program: None, fault: None, report: None, workers: Vec::new() }
+        let supervise = SuperviseCfg::default();
+        Self {
+            requested: workers,
+            program: None,
+            fault: None,
+            report: None,
+            workers: Vec::new(),
+            supervise,
+            supervisor: LaneSupervisor::new(supervise),
+        }
     }
 
     /// Pin the worker binary (tests point this at `CARGO_BIN_EXE_adjsh`).
@@ -166,6 +320,22 @@ impl ProcessExecutor {
     pub fn with_faults(mut self, fault: Option<FaultPlan>) -> Self {
         self.fault = fault;
         self
+    }
+
+    /// Set the supervision policy (deadlines + respawn schedule).
+    pub fn with_supervision(mut self, cfg: SuperviseCfg) -> Self {
+        self.set_supervision(cfg);
+        self
+    }
+
+    pub fn set_supervision(&mut self, cfg: SuperviseCfg) {
+        self.supervise = cfg;
+        self.supervisor = LaneSupervisor::new(cfg);
+    }
+
+    /// Re-arm (or disarm) the fault plan between phases.
+    pub fn arm_faults(&mut self, fault: Option<FaultPlan>) {
+        self.fault = fault;
     }
 
     /// Locate the worker binary: explicit override, `ADJSH_WORKER_BIN`,
@@ -249,9 +419,10 @@ impl Executor for ProcessExecutor {
             self.workers.resize_with(n_lanes, || None);
         }
         // Lazy (re)spawn: lanes persist across phases; a lane lost to a
-        // non-rejoin death last phase simply joins fresh here.
+        // non-rejoin death last phase simply joins fresh here. Retired
+        // lanes never come back.
         for lane in 0..n_lanes {
-            if self.workers[lane].is_none() {
+            if self.workers[lane].is_none() && !self.supervisor.is_retired(lane) {
                 self.workers[lane] = Some(spawn_worker(&program, lane)?);
             }
         }
@@ -271,26 +442,39 @@ impl Executor for ProcessExecutor {
             None => None,
         };
 
+        let mk_job = |work: Vec<_>, kill: Option<u64>, hang: Option<u64>| JobMsg {
+            dims: ctx.dims.clone(),
+            artifacts_dir: ctx.arts.dir.clone(),
+            batch: dispatch.batch,
+            items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
+            devices: work,
+            kill,
+            hang,
+        };
+
         // Write ALL job frames before reading any reply. Each lane has
         // its own pipe pair, so a worker blocked on its DONE write can
         // never block these writes — the phase cannot deadlock.
+        let mut stragglers: Vec<usize> = Vec::new();
         let mut sent: BTreeMap<usize, JobMsg> = BTreeMap::new();
+        let mut need: Vec<(usize, bool)> = Vec::new();
+        let mut predead = false;
         for (lane, work) in per_lane.into_iter().enumerate() {
             if work.is_empty() {
                 continue;
             }
-            let kill = match &split {
-                Some(s) => s.kill_after(lane),
-                None => None,
+            // A retired lane's range recovers up front, exactly like a
+            // death at unit zero.
+            if self.supervisor.is_retired(lane) {
+                need.push((lane, false));
+                predead = true;
+                continue;
+            }
+            let (kill, hang) = match &split {
+                Some(s) => (s.kill_after(lane), s.hang_after(lane)),
+                None => (None, None),
             };
-            let msg = JobMsg {
-                dims: ctx.dims.clone(),
-                artifacts_dir: ctx.arts.dir.clone(),
-                batch: dispatch.batch,
-                items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
-                devices: work,
-                kill,
-            };
+            let msg = mk_job(work, kill, hang);
             self.send_job(lane, &msg)?;
             sent.insert(lane, msg);
         }
@@ -301,24 +485,24 @@ impl Executor for ProcessExecutor {
         // merge below is pinned ascending-layer regardless).
         let start = if sent.len() > 2 { 1 } else { 0 };
         let mut dones = Vec::new();
-        let mut dead: Vec<(usize, bool)> = Vec::new();
+        let mut hung_lanes: Vec<usize> = Vec::new();
+        let mut respawns: BTreeMap<usize, u32> = BTreeMap::new();
         let mut deaths_exec: BTreeMap<usize, u64> = BTreeMap::new();
         for lane in ring_order(n_lanes, start) {
             let Some(msg) = sent.get(&lane) else { continue };
+            let deadline = self.supervise.deadline_s(job_vjp_units(msg));
             let h = self.workers[lane].as_mut().expect("job lanes were spawned");
-            match read_reply(h)? {
+            match await_reply(h, lane, deadline, &mut stragglers)? {
                 Reply::Done(done) if done.died => {
                     // Belt and braces: a worker that *reports* death over
                     // the wire (instead of exiting) is still dead.
                     deaths_exec.insert(lane, done.executed);
-                    let rejoin = match &split {
-                        Some(s) => s.rejoin(lane),
-                        None => false,
-                    };
-                    dead.push((lane, rejoin));
                     if let Some(h) = self.workers[lane].take() {
                         reap(h);
                     }
+                    let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    need.push((lane, rejoin));
                 }
                 Reply::Done(done) => dones.push(done),
                 Reply::Dead => {
@@ -326,7 +510,7 @@ impl Executor for ProcessExecutor {
                     // from here. The injected case replays the unit loop
                     // for exact wasted-work accounting; a real crash
                     // reports 0 (unknowable).
-                    let (rejoin, executed) = match &split {
+                    let (fr, executed) = match &split {
                         Some(s) => match s.kill_after(lane) {
                             Some(k) => (s.rejoin(lane), killed_executed(msg, k)),
                             None => (false, 0),
@@ -334,80 +518,153 @@ impl Executor for ProcessExecutor {
                         None => (false, 0),
                     };
                     deaths_exec.insert(lane, executed);
-                    dead.push((lane, rejoin));
                     if let Some(h) = self.workers[lane].take() {
                         reap(h);
                     }
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    need.push((lane, rejoin));
+                }
+                Reply::Hung { executed } => {
+                    // Injected hang: deterministic replay count (the
+                    // fault sits at the kill checkpoint); real hang: the
+                    // heartbeat's last proved progress.
+                    let executed = match split.as_ref().and_then(|s| s.hang_after(lane)) {
+                        Some(hh) => killed_executed(msg, hh),
+                        None => executed,
+                    };
+                    hung_lanes.push(lane);
+                    deaths_exec.insert(lane, executed);
+                    if let Some(h) = self.workers[lane].take() {
+                        kill_worker(h);
+                    }
+                    let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    need.push((lane, rejoin));
                 }
             }
         }
-        dead.sort_unstable_by_key(|&(lane, _)| lane);
+        need.sort_unstable_by_key(|&(lane, _)| lane);
 
-        if !dead.is_empty() {
-            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
-            // Elastic join: rejoining lanes come back as fresh processes
-            // (new HELLO handshake) before the recovery round.
-            for &(lane, rejoin) in &dead {
-                if rejoin {
-                    self.workers[lane] = Some(spawn_worker(&program, lane)?);
-                }
+        let had_deaths = !deaths_exec.is_empty() || predead;
+        let mut report_orphans: Vec<usize> = Vec::new();
+        let mut report_orphan_layers: Vec<usize> = Vec::new();
+        let mut recovered: Vec<usize> = Vec::new();
+        let mut rejoined: BTreeSet<usize> = BTreeSet::new();
+        let mut first_round = true;
+        // Supervised recovery (same loop as the threaded backend): each
+        // round re-plans the still-orphaned ranges, executes, and feeds
+        // crash-looped lanes back through the supervisor until every
+        // orphan is recovered or no lane remains.
+        while !need.is_empty() {
+            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &need)?;
+            if first_round {
+                report_orphans.clone_from(&rec.orphans);
+                report_orphan_layers.clone_from(&rec.orphan_layers);
+                first_round = false;
+            }
+            let respawning: BTreeSet<usize> =
+                need.iter().filter(|&&(_, rj)| rj).map(|&(l, _)| l).collect();
+            // Elastic join: respawning lanes come back as fresh processes
+            // (new HELLO handshake) before the recovery frames go out.
+            for &lane in &respawning {
+                self.workers[lane] = Some(spawn_worker(&program, lane)?);
             }
             // Same no-deadlock discipline: all recovery frames out, then
             // drain in lane order.
-            let mut rec_lanes = Vec::new();
+            let mut rec_sent: Vec<(usize, JobMsg)> = Vec::new();
             for wave in &rec.waves {
                 for rl in &wave.lanes {
-                    let msg = JobMsg {
-                        dims: ctx.dims.clone(),
-                        artifacts_dir: ctx.arts.dir.clone(),
-                        batch: dispatch.batch,
-                        items: if dispatch.batch > 1 {
-                            dispatch.items.clone()
-                        } else {
-                            Vec::new()
-                        },
-                        devices: vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)],
-                        kill: None,
-                    };
+                    if self.supervisor.is_retired(rl.lane) {
+                        bail!(
+                            "recovery re-plan targeted retired lane {} — \
+                             raise --respawn or use more workers",
+                            rl.lane
+                        );
+                    }
+                    let (kill, hang) = persistent_fault(&split, &respawning, rl.lane);
+                    let work = vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)];
+                    let msg = mk_job(work, kill, hang);
                     self.send_job(rl.lane, &msg)?;
-                    rec_lanes.push(rl.lane);
+                    rec_sent.push((rl.lane, msg));
                 }
             }
-            let mut recovered = Vec::new();
-            for lane in rec_lanes {
+            let mut next_need: Vec<(usize, bool)> = Vec::new();
+            for (lane, msg) in &rec_sent {
+                let lane = *lane;
+                let was_respawned = respawning.contains(&lane);
+                let deadline = self.supervise.deadline_s(job_vjp_units(msg));
                 let h = self.workers[lane].as_mut().expect("recovery lane is live");
-                match read_reply(h)? {
+                match await_reply(h, lane, deadline, &mut stragglers)? {
                     Reply::Done(done) if !done.died => {
                         recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
+                        if was_respawned {
+                            rejoined.insert(lane);
+                        }
                         dones.push(done);
                     }
-                    _ => bail!("recovery lane {lane} died mid-recovery"),
+                    Reply::Done(_) | Reply::Dead => {
+                        if !was_respawned {
+                            bail!("recovery lane {lane} died mid-recovery");
+                        }
+                        if let Some(h) = self.workers[lane].take() {
+                            reap(h);
+                        }
+                        let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        next_need.push((lane, rejoin));
+                    }
+                    Reply::Hung { .. } => {
+                        if !was_respawned {
+                            bail!("recovery lane {lane} hung mid-recovery");
+                        }
+                        if let Some(h) = self.workers[lane].take() {
+                            kill_worker(h);
+                        }
+                        if !hung_lanes.contains(&lane) {
+                            hung_lanes.push(lane);
+                        }
+                        let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        next_need.push((lane, rejoin));
+                    }
                 }
             }
+            next_need.sort_unstable_by_key(|&(lane, _)| lane);
+            need = next_need;
+        }
+
+        if had_deaths {
             recovered.sort_unstable();
-            if recovered != rec.orphans {
+            if recovered != report_orphans {
                 bail!(
                     "recovery executed {} items, the deaths orphaned {}",
                     recovered.len(),
-                    rec.orphans.len()
+                    report_orphans.len()
                 );
             }
+            stragglers.sort_unstable();
+            hung_lanes.sort_unstable();
             self.report = Some(FaultReport {
-                deaths: dead
+                deaths: deaths_exec
                     .iter()
-                    .map(|&(lane, _)| Death {
+                    .map(|(&lane, &executed)| Death {
                         lane,
                         devices: devices_of_lane(lane, n_lanes, dispatch.queues.len()),
-                        executed: deaths_exec[&lane],
+                        executed,
                     })
                     .collect(),
-                orphan_layers: rec.orphan_layers,
-                orphans: rec.orphans,
+                orphan_layers: report_orphan_layers,
+                orphans: report_orphans,
                 recovered,
-                rejoined: dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect(),
+                rejoined: rejoined.into_iter().collect(),
+                stragglers,
+                hung: hung_lanes,
+                respawns: respawns.into_iter().collect(),
+                retired: self.supervisor.retired_lanes(),
             });
-        } else if split.is_some() {
-            self.report = Some(FaultReport::default());
+        } else if split.is_some() || !stragglers.is_empty() {
+            stragglers.sort_unstable();
+            self.report = Some(FaultReport { stragglers, ..Default::default() });
         }
 
         let (item_secs, wall_s, overlap_s, calls) =
@@ -423,6 +680,17 @@ impl Executor for ProcessExecutor {
     }
 }
 
+/// Emit one frame as a single locked write, so the main loop's replies
+/// and the heartbeat thread's PONGs never interleave mid-frame.
+fn emit_frame(kind: u8, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(payload.len() + 13);
+    write_frame(&mut buf, kind, payload)?;
+    let mut out = std::io::stdout().lock();
+    out.write_all(&buf)?;
+    out.flush()?;
+    Ok(())
+}
+
 /// The child-process entry point (`adjsh __exec-worker`): answer the
 /// HELLO handshake, run jobs with worker-local state, and turn an
 /// injected fault into an abrupt exit — the coordinator must see exactly
@@ -430,11 +698,35 @@ impl Executor for ProcessExecutor {
 /// errors (bad decode, kind skew) answer K_ERR so they surface as errors
 /// at the coordinator instead of masquerading as deaths and triggering
 /// recovery of a bug.
+///
+/// While a job runs, a heartbeat thread sends unsolicited PONG frames
+/// carrying the monotone dispatched-unit counter [`run_job`] bumps — the
+/// coordinator's deadline clock only credits counter *advances*, so an
+/// injected or real hang (counter frozen, heartbeats still flowing) is
+/// detected all the same.
 pub fn process_worker_main() -> Result<()> {
+    let progress = Arc::new(AtomicU64::new(0));
+    let active = Arc::new(AtomicBool::new(false));
+    {
+        let progress = Arc::clone(&progress);
+        let active = Arc::clone(&active);
+        std::thread::spawn(move || {
+            let mut seq = 1u64;
+            loop {
+                std::thread::sleep(Duration::from_secs_f64(HEARTBEAT_INTERVAL_S));
+                if !active.load(Ordering::Relaxed) {
+                    continue; // quiet while idle — no job, no deadline
+                }
+                let units = progress.load(Ordering::Relaxed);
+                if emit_frame(K_PONG, &encode_pong(seq, units)).is_err() {
+                    return; // coordinator gone
+                }
+                seq += 1;
+            }
+        });
+    }
     let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
     let mut input = stdin.lock();
-    let mut output = stdout.lock();
     let mut state: Option<WorkerState> = None;
     loop {
         let Some((kind, payload)) = read_frame(&mut input)? else {
@@ -445,41 +737,34 @@ pub fn process_worker_main() -> Result<()> {
             K_HELLO => {
                 let v = decode_hello(&payload)?;
                 if v != WIRE_VERSION {
-                    write_frame(
-                        &mut output,
-                        K_ERR,
-                        &encode_err(&format!(
-                            "wire version skew: coordinator {v}, worker {WIRE_VERSION}"
-                        )),
-                    )?;
-                    output.flush()?;
-                    bail!("wire version skew: coordinator {v}, worker {WIRE_VERSION}");
+                    let msg = format!("wire version skew: coordinator {v}, worker {WIRE_VERSION}");
+                    emit_frame(K_ERR, &encode_err(&msg))?;
+                    bail!("{msg}");
                 }
-                write_frame(&mut output, K_HELLO_OK, &encode_hello(WIRE_VERSION))?;
-                output.flush()?;
+                emit_frame(K_HELLO_OK, &encode_hello(WIRE_VERSION))?;
+            }
+            K_PING => {
+                let seq = decode_ping(&payload)?;
+                emit_frame(K_PONG, &encode_pong(seq, progress.load(Ordering::Relaxed)))?;
             }
             K_JOB => {
                 let job = match decode_job(&payload) {
                     Ok(job) => job,
                     Err(e) => {
-                        write_frame(&mut output, K_ERR, &encode_err(&format!("{e:#}")))?;
-                        output.flush()?;
+                        emit_frame(K_ERR, &encode_err(&format!("{e:#}")))?;
                         continue;
                     }
                 };
-                match run_job(&mut state, &job) {
+                active.store(true, Ordering::Relaxed);
+                let result = run_job(&mut state, &job, &progress);
+                active.store(false, Ordering::Relaxed);
+                match result {
                     Ok(done) if done.died => {
                         // The injected fault: exit without replying.
                         std::process::exit(FAULT_EXIT);
                     }
-                    Ok(done) => {
-                        write_frame(&mut output, K_DONE, &encode_done(&done))?;
-                        output.flush()?;
-                    }
-                    Err(e) => {
-                        write_frame(&mut output, K_ERR, &encode_err(&format!("{e:#}")))?;
-                        output.flush()?;
-                    }
+                    Ok(done) => emit_frame(K_DONE, &encode_done(&done))?,
+                    Err(e) => emit_frame(K_ERR, &encode_err(&format!("{e:#}")))?,
                 }
             }
             K_SHUTDOWN => return Ok(()),

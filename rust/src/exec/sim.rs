@@ -13,7 +13,17 @@
 //! [`plan_recovery`] waves the live executors run — so
 //! sim × {healthy, death, death+rejoin} is the bit-identity oracle for
 //! threaded and process runs of the same plan.
+//!
+//! Supervision is modeled the same way ([`super::supervise`]): a `+hang`
+//! fault is a kill that additionally records the straggler warning and
+//! the hung lane; the bounded-respawn policy runs the real
+//! [`LaneSupervisor`] (attempts, retirement — minus the backoff sleeps,
+//! which are timing, not bits); a persistent (`+loop`) fault re-fires on
+//! every respawned incarnation, whose doomed partials the sim simply
+//! skips computing — a dead lane's partials are discarded whole, so the
+//! bits match the live backends either way.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -30,6 +40,7 @@ use crate::tensor::Tensor;
 use crate::topology::Fleet;
 
 use super::fault::{doomed_groups, plan_recovery, split_faults, Death, FaultPlan, FaultReport};
+use super::supervise::{persistent_fault, LaneSupervisor, RespawnDecision, SuperviseCfg};
 use super::{
     batched_args, batched_entry_width, finish_group, Dispatch, ExecCtx, ExecOutcome, Executor,
     ExecutorKind,
@@ -37,10 +48,17 @@ use super::{
 
 /// The single-threaded coordinator dispatch (the default backend). With
 /// no fault plan armed this is exactly the seed's sequential loop.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug)]
 pub struct SimExecutor {
     fault: Option<FaultPlan>,
     report: Option<FaultReport>,
+    supervisor: LaneSupervisor,
+}
+
+impl Default for SimExecutor {
+    fn default() -> Self {
+        Self::with_faults(None)
+    }
 }
 
 impl SimExecutor {
@@ -51,7 +69,40 @@ impl SimExecutor {
     /// Arm a fault plan: lanes (= devices here) die at their fault point
     /// and their layers recover through the shared re-plan path.
     pub fn with_faults(fault: Option<FaultPlan>) -> Self {
-        Self { fault, report: None }
+        Self { fault, report: None, supervisor: LaneSupervisor::new(SuperviseCfg::default()) }
+    }
+
+    /// Set the supervision policy (the sim models the respawn schedule;
+    /// deadlines are timing, not bits, and have nothing to model here).
+    pub fn with_supervision(mut self, cfg: SuperviseCfg) -> Self {
+        self.set_supervision(cfg);
+        self
+    }
+
+    pub fn set_supervision(&mut self, cfg: SuperviseCfg) {
+        self.supervisor = LaneSupervisor::new(cfg);
+    }
+
+    /// Re-arm (or disarm) the fault plan between phases.
+    pub fn arm_faults(&mut self, fault: Option<FaultPlan>) {
+        self.fault = fault;
+    }
+}
+
+/// The sim's version of the live backends' supervisor step: record the
+/// attempt, no backoff sleep.
+fn sim_decide(
+    sup: &mut LaneSupervisor,
+    respawns: &mut BTreeMap<usize, u32>,
+    lane: usize,
+    fault_rejoin: bool,
+) -> bool {
+    match sup.on_death(lane, fault_rejoin) {
+        RespawnDecision::Spread | RespawnDecision::Retire => false,
+        RespawnDecision::Respawn { attempt, .. } => {
+            respawns.insert(lane, attempt);
+            true
+        }
     }
 }
 
@@ -105,16 +156,33 @@ impl Executor for SimExecutor {
         let mut overlap_s = 0.0;
         let mut calls = 0u64;
         let mut deaths: Vec<Death> = Vec::new();
+        let mut hung_lanes: Vec<usize> = Vec::new();
+        let mut respawns: BTreeMap<usize, u32> = BTreeMap::new();
+        let mut need: Vec<(usize, bool)> = Vec::new();
+        let mut predead = false;
 
         for (dev, queue) in dispatch.queues.iter().enumerate() {
-            let kill = match &split {
-                Some(s) => s.kill_after(dev),
-                None => None,
+            if queue.is_empty() {
+                continue;
+            }
+            // A retired lane is never scheduled again: its range recovers
+            // up front, exactly like a death at unit zero.
+            if self.supervisor.is_retired(dev) {
+                need.push((dev, false));
+                predead = true;
+                continue;
+            }
+            let (kill, hang) = match &split {
+                Some(s) => (s.kill_after(dev), s.hang_after(dev)),
+                None => (None, None),
             };
+            // A hang is a kill that took the deadline ladder to detect:
+            // same truncation point, same discarded partials.
+            let fault_at = kill.or(hang);
             let groups = &dispatch.groups[dev];
             // A killed lane executes whole dispatch units until the fault
             // point — same accounting as a live worker's pre-unit check.
-            let doomed = match kill {
+            let doomed = match fault_at {
                 Some(k) => doomed_groups(groups, k),
                 None => groups.len(),
             };
@@ -154,78 +222,132 @@ impl Executor for SimExecutor {
                     &mut calls,
                 )?;
             }
-            if kill.is_some() {
+            if fault_at.is_some() {
                 let executed: u64 = groups[..doomed].iter().map(|g| g.ids.len() as u64).sum();
                 deaths.push(Death { lane: dev, devices: vec![dev], executed });
+                if hang.is_some() {
+                    // The live ladder warns (straggler) before it kills.
+                    hung_lanes.push(dev);
+                }
+                let fr = split.as_ref().is_some_and(|s| s.rejoin(dev));
+                let rejoin = sim_decide(&mut self.supervisor, &mut respawns, dev, fr);
+                need.push((dev, rejoin));
             }
         }
+        need.sort_unstable_by_key(|&(lane, _)| lane);
 
-        if !deaths.is_empty() {
-            let split = split.as_ref().expect("deaths only happen with an armed plan");
-            let dead: Vec<(usize, bool)> =
-                deaths.iter().map(|d| (d.lane, split.rejoin(d.lane))).collect();
-            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
-            // A dead lane's partials are lost: roll its layers back to
-            // zero bits so the recovery re-accumulates `0 + g₀ + g₁ + …`
-            // — the exact float sequence of a healthy run.
-            for &layer in &rec.orphan_layers {
-                grads.layers[layer] = LayerParams::zeros_like(ctx.dims);
-            }
-            let mut recovered = Vec::new();
-            for wave in &rec.waves {
-                for rl in &wave.lanes {
-                    if batched {
-                        run_groups_batched(
-                            ctx.dims,
-                            ctx.fleet,
-                            entry.as_ref(),
-                            m_static,
-                            &w_c,
-                            stages,
-                            outs,
-                            &dispatch.items,
-                            &rl.groups,
-                            rl.lane,
-                            grads,
-                            &mut item_secs,
-                            &mut wall_s,
-                            &mut overlap_s,
-                            &mut calls,
-                        )?;
-                    } else {
-                        run_queue_single(
-                            ctx.dims,
-                            ctx.fleet,
-                            entry.as_ref(),
-                            &w_c,
-                            stages,
-                            outs,
-                            &dispatch.items,
-                            &rl.queue,
-                            grads,
-                            &mut item_secs,
-                            &mut wall_s,
-                            &mut calls,
-                        )?;
+        if !deaths.is_empty() || predead {
+            let mut report_orphans: Vec<usize> = Vec::new();
+            let mut report_orphan_layers: Vec<usize> = Vec::new();
+            let mut recovered: Vec<usize> = Vec::new();
+            let mut rejoined: BTreeSet<usize> = BTreeSet::new();
+            let mut first_round = true;
+            // Supervised recovery, mirroring the live backends' loop:
+            // re-plan the still-orphaned ranges each round until every
+            // orphan is recovered or no lane remains.
+            while !need.is_empty() {
+                let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &need)?;
+                if first_round {
+                    report_orphans.clone_from(&rec.orphans);
+                    report_orphan_layers.clone_from(&rec.orphan_layers);
+                    first_round = false;
+                    // A dead lane's partials are lost: roll its layers
+                    // back to zero bits so the recovery re-accumulates
+                    // `0 + g₀ + g₁ + …` — the exact float sequence of a
+                    // healthy run.
+                    for &layer in &rec.orphan_layers {
+                        grads.layers[layer] = LayerParams::zeros_like(ctx.dims);
                     }
-                    recovered.extend(rl.queue.iter().copied());
                 }
+                let respawning: BTreeSet<usize> =
+                    need.iter().filter(|&&(_, rj)| rj).map(|&(l, _)| l).collect();
+                let mut next_need: Vec<(usize, bool)> = Vec::new();
+                for wave in &rec.waves {
+                    for rl in &wave.lanes {
+                        if self.supervisor.is_retired(rl.lane) {
+                            bail!(
+                                "recovery re-plan targeted retired lane {} — \
+                                 raise --respawn or use more workers",
+                                rl.lane
+                            );
+                        }
+                        let (kill, hang) = persistent_fault(&split, &respawning, rl.lane);
+                        if kill.is_some() || hang.is_some() {
+                            // A persistent fault re-fires on the respawned
+                            // incarnation. Its partials would be discarded
+                            // whole, so the sim skips the doomed work —
+                            // the bits match the live backends either way.
+                            if hang.is_some() && !hung_lanes.contains(&rl.lane) {
+                                hung_lanes.push(rl.lane);
+                            }
+                            let fr = split.as_ref().is_some_and(|s| s.rejoin(rl.lane));
+                            let rejoin =
+                                sim_decide(&mut self.supervisor, &mut respawns, rl.lane, fr);
+                            next_need.push((rl.lane, rejoin));
+                            continue;
+                        }
+                        if batched {
+                            run_groups_batched(
+                                ctx.dims,
+                                ctx.fleet,
+                                entry.as_ref(),
+                                m_static,
+                                &w_c,
+                                stages,
+                                outs,
+                                &dispatch.items,
+                                &rl.groups,
+                                rl.lane,
+                                grads,
+                                &mut item_secs,
+                                &mut wall_s,
+                                &mut overlap_s,
+                                &mut calls,
+                            )?;
+                        } else {
+                            run_queue_single(
+                                ctx.dims,
+                                ctx.fleet,
+                                entry.as_ref(),
+                                &w_c,
+                                stages,
+                                outs,
+                                &dispatch.items,
+                                &rl.queue,
+                                grads,
+                                &mut item_secs,
+                                &mut wall_s,
+                                &mut calls,
+                            )?;
+                        }
+                        recovered.extend(rl.queue.iter().copied());
+                        if respawning.contains(&rl.lane) {
+                            rejoined.insert(rl.lane);
+                        }
+                    }
+                }
+                next_need.sort_unstable_by_key(|&(lane, _)| lane);
+                need = next_need;
             }
             recovered.sort_unstable();
-            if recovered != rec.orphans {
+            if recovered != report_orphans {
                 bail!(
                     "recovery executed {} items, the deaths orphaned {}",
                     recovered.len(),
-                    rec.orphans.len()
+                    report_orphans.len()
                 );
             }
-            let rejoined = dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect();
+            hung_lanes.sort_unstable();
             self.report = Some(FaultReport {
                 deaths,
-                orphan_layers: rec.orphan_layers,
-                orphans: rec.orphans,
+                orphan_layers: report_orphan_layers,
+                orphans: report_orphans,
                 recovered,
-                rejoined,
+                rejoined: rejoined.into_iter().collect(),
+                stragglers: hung_lanes.clone(),
+                hung: hung_lanes,
+                respawns: respawns.into_iter().collect(),
+                retired: self.supervisor.retired_lanes(),
             });
         } else if split.is_some() {
             // A plan was armed but every kill was ineffective (fault

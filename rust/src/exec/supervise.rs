@@ -1,0 +1,376 @@
+//! Fleet supervision policy (DESIGN.md §Fault-Tolerance): per-dispatch
+//! progress deadlines with a straggler→kill escalation ladder, and a
+//! bounded-respawn schedule with exponential backoff and a crash-loop
+//! breaker.
+//!
+//! The live executors detect a *clean* death for free (a closed pipe, a
+//! worker-reported `died`). A *hang* — worker alive but wedged — produces
+//! no signal at all, so the coordinator has to manufacture one: every
+//! dispatched job gets a deadline derived from its analytic work volume
+//! (`WorkItem::vjp_units`, overridable with `--worker-timeout`), and the
+//! deadline clock only resets when the worker's monotone dispatched-unit
+//! counter advances (heartbeat PONGs on the process wire, a shared
+//! atomic on the threaded backend). Busy-but-alive is indistinguishable
+//! from wedged until the budget runs out, so the ladder is deliberately
+//! two-rung: first expiry records a straggler warning (surfaced through
+//! `Executor::fault_report`) and grants one grace period of the same
+//! length; second expiry force-kills the lane, at which point the hang
+//! becomes an ordinary detected death and the existing
+//! [`super::fault::plan_recovery`] path re-plans its orphans.
+//!
+//! Respawn policy: PR 6's `+rejoin` was a one-shot "restart the lane and
+//! hand back its range". [`LaneSupervisor`] generalizes it — up to
+//! `--respawn` attempts per lane, delays of `backoff · 2^(attempt−1)`,
+//! and a breaker that permanently retires a lane that dies on every
+//! incarnation, spreading its range over the survivors. The run fails
+//! loudly only when no live lane remains.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use super::fault::{FaultKind, FaultSplit};
+use super::wire::JobMsg;
+
+/// Baseline grace before any deadline can fire — covers worker spawn and
+/// first-job XLA compilation, which produce no unit progress.
+pub const DEADLINE_BASE_S: f64 = 30.0;
+/// Generous wall budget per analytic VJP unit on top of the base.
+pub const DEADLINE_PER_VJP_UNIT_S: f64 = 1e-4;
+/// Ceiling on one backoff delay, however many attempts preceded it.
+pub const BACKOFF_CAP_S: f64 = 10.0;
+/// Worker-side heartbeat period (unsolicited PONG frames).
+pub const HEARTBEAT_INTERVAL_S: f64 = 0.25;
+/// How long an *injected* hang (`lane@k+hang`) sleeps. Finite so an
+/// abandoned threaded worker eventually exits, but far beyond any
+/// deadline a test or run would configure.
+pub const HANG_SLEEP_S: f64 = 600.0;
+/// Injected hangs sleep in slices so a killed process dies promptly.
+pub const HANG_SLICE_S: f64 = 0.05;
+
+/// Worker-side body of an injected hang (`lane@k+hang`): sleep "forever"
+/// (far past any configured deadline) in short slices, so a force-killed
+/// process dies promptly and an abandoned thread eventually unwinds.
+pub fn injected_hang_sleep() {
+    let slices = (HANG_SLEEP_S / HANG_SLICE_S) as u64;
+    for _ in 0..slices {
+        std::thread::sleep(std::time::Duration::from_secs_f64(HANG_SLICE_S));
+    }
+}
+
+/// Supervision knobs, carried by `ExecCfg` into every backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuperviseCfg {
+    /// Per-dispatch no-progress deadline in seconds; `0` derives it from
+    /// the job's analytic work volume (`--worker-timeout` override).
+    pub worker_timeout_s: f64,
+    /// Max respawn attempts per lane before the crash-loop breaker
+    /// retires it (`--respawn`). `0` keeps PR 6 semantics: only an
+    /// explicit `+rejoin` fault restarts a lane, once.
+    pub respawn_max: usize,
+    /// Base of the exponential backoff schedule (`--respawn-backoff`):
+    /// attempt n waits `base · 2^(n−1)` seconds, capped.
+    pub respawn_backoff_s: f64,
+}
+
+impl Default for SuperviseCfg {
+    fn default() -> Self {
+        SuperviseCfg { worker_timeout_s: 0.0, respawn_max: 0, respawn_backoff_s: 0.1 }
+    }
+}
+
+impl SuperviseCfg {
+    /// The no-progress deadline for a dispatch of `units` analytic VJP
+    /// units: the explicit override if set, else base + per-unit budget.
+    pub fn deadline_s(&self, units: u64) -> f64 {
+        if self.worker_timeout_s > 0.0 {
+            self.worker_timeout_s
+        } else {
+            DEADLINE_BASE_S + units as f64 * DEADLINE_PER_VJP_UNIT_S
+        }
+    }
+
+    /// Backoff before respawn attempt `attempt` (1-based).
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let factor = 2f64.powi(attempt.saturating_sub(1).min(30) as i32);
+        (self.respawn_backoff_s * factor).min(BACKOFF_CAP_S)
+    }
+}
+
+/// Analytic work volume of one lane's job — the deadline input.
+pub fn job_vjp_units(job: &JobMsg) -> u64 {
+    job.devices
+        .iter()
+        .flat_map(|d| d.items.iter())
+        .map(|(_, it)| it.vjp_units(job.dims.w, job.dims.t))
+        .sum()
+}
+
+/// What the deadline clock says about a lane right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Escalation {
+    /// Within budget (or inside the post-warning grace period).
+    Healthy,
+    /// First expiry: record a straggler warning, grant one grace period.
+    Straggler,
+    /// Second expiry: force-kill the lane and recover its orphans.
+    Kill,
+}
+
+/// Per-lane no-progress clock implementing the two-rung ladder. The
+/// clock resets only when the observed unit counter *advances* — a
+/// heartbeat that merely proves the process exists does not buy time.
+#[derive(Debug)]
+pub struct DeadlineClock {
+    deadline_s: f64,
+    last_advance: Instant,
+    last_units: Option<u64>,
+    warned: bool,
+}
+
+impl DeadlineClock {
+    pub fn new(deadline_s: f64) -> Self {
+        DeadlineClock { deadline_s, last_advance: Instant::now(), last_units: None, warned: false }
+    }
+
+    /// Feed a progress observation (heartbeat payload or atomic counter).
+    pub fn observe(&mut self, units: u64) {
+        let advanced = match self.last_units {
+            Some(prev) => units > prev,
+            None => true,
+        };
+        if advanced {
+            self.last_units = Some(units);
+            self.last_advance = Instant::now();
+            self.warned = false;
+        }
+    }
+
+    /// Check the ladder against the wall clock.
+    pub fn check(&mut self) -> Escalation {
+        self.check_elapsed(self.last_advance.elapsed().as_secs_f64())
+    }
+
+    /// Ladder logic with the elapsed time injected — unit-testable
+    /// without sleeping.
+    pub fn check_elapsed(&mut self, since_progress_s: f64) -> Escalation {
+        if since_progress_s < self.deadline_s {
+            return Escalation::Healthy;
+        }
+        if !self.warned {
+            self.warned = true;
+            return Escalation::Straggler;
+        }
+        if since_progress_s >= 2.0 * self.deadline_s {
+            return Escalation::Kill;
+        }
+        Escalation::Healthy // inside the grace period
+    }
+
+    /// Last observed unit counter (0 if none arrived) — the wasted-work
+    /// estimate for a lane killed by the ladder.
+    pub fn units(&self) -> u64 {
+        self.last_units.unwrap_or(0)
+    }
+
+    /// Seconds until the next boundary the ladder could fire at — a
+    /// sensible `recv_timeout`.
+    pub fn until_next_s(&self) -> f64 {
+        let elapsed = self.last_advance.elapsed().as_secs_f64();
+        let boundary = if self.warned { 2.0 * self.deadline_s } else { self.deadline_s };
+        (boundary - elapsed).max(0.0)
+    }
+}
+
+/// What the supervisor decides when a lane dies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RespawnDecision {
+    /// Don't restart: spread the lane's orphans over the survivors this
+    /// phase (the lane may still run again next phase — PR 6's
+    /// non-rejoin path).
+    Spread,
+    /// Restart the lane after `delay_s` and hand back its own range.
+    Respawn { attempt: u32, delay_s: f64 },
+    /// Crash-loop breaker: the lane exhausted its attempts and is
+    /// permanently retired; spread its orphans and never schedule it
+    /// again.
+    Retire,
+}
+
+/// Bounded-respawn bookkeeping, persistent across phases so a lane that
+/// crashes every phase eventually trips the breaker.
+#[derive(Debug)]
+pub struct LaneSupervisor {
+    cfg: SuperviseCfg,
+    attempts: BTreeMap<usize, u32>,
+    retired: BTreeSet<usize>,
+}
+
+impl LaneSupervisor {
+    pub fn new(cfg: SuperviseCfg) -> Self {
+        LaneSupervisor { cfg, attempts: BTreeMap::new(), retired: BTreeSet::new() }
+    }
+
+    /// Decide a dead lane's fate. `fault_rejoin` marks an explicit
+    /// `+rejoin` fault, which grants one attempt even with `--respawn 0`.
+    pub fn on_death(&mut self, lane: usize, fault_rejoin: bool) -> RespawnDecision {
+        if self.retired.contains(&lane) {
+            return RespawnDecision::Retire;
+        }
+        let allowed = if self.cfg.respawn_max > 0 {
+            self.cfg.respawn_max as u32
+        } else {
+            u32::from(fault_rejoin)
+        };
+        let n = self.attempts.entry(lane).or_insert(0);
+        if *n < allowed {
+            *n += 1;
+            RespawnDecision::Respawn { attempt: *n, delay_s: self.cfg.backoff_s(*n) }
+        } else if allowed == 0 {
+            RespawnDecision::Spread
+        } else {
+            self.retired.insert(lane);
+            RespawnDecision::Retire
+        }
+    }
+
+    pub fn attempts(&self, lane: usize) -> u32 {
+        self.attempts.get(&lane).copied().unwrap_or(0)
+    }
+
+    pub fn is_retired(&self, lane: usize) -> bool {
+        self.retired.contains(&lane)
+    }
+
+    /// All permanently retired lanes, ascending.
+    pub fn retired_lanes(&self) -> Vec<usize> {
+        self.retired.iter().copied().collect()
+    }
+}
+
+/// Apply the supervisor's verdict for a dead lane (shared by the live
+/// backends): log it, record the attempt, sleep out the backoff, and
+/// return whether the lane rejoins with its own range (`true`) or its
+/// orphans spread over the survivors (`false`).
+pub(crate) fn decide(
+    sup: &mut LaneSupervisor,
+    respawns: &mut BTreeMap<usize, u32>,
+    lane: usize,
+    fault_rejoin: bool,
+) -> bool {
+    match sup.on_death(lane, fault_rejoin) {
+        RespawnDecision::Spread => false,
+        RespawnDecision::Retire => {
+            eprintln!(
+                "[exec] lane {lane}: crash-loop breaker tripped — lane retired, \
+                 spreading its range over the survivors"
+            );
+            false
+        }
+        RespawnDecision::Respawn { attempt, delay_s } => {
+            respawns.insert(lane, attempt);
+            eprintln!("[exec] lane {lane}: respawning (attempt {attempt}, {delay_s:.2}s backoff)");
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay_s));
+            true
+        }
+    }
+}
+
+/// A persistent (`+loop`) fault re-arms on every respawned incarnation
+/// of its lane; all other recovery work runs fault-free.
+pub(crate) fn persistent_fault(
+    split: &Option<FaultSplit>,
+    respawning: &BTreeSet<usize>,
+    lane: usize,
+) -> (Option<u64>, Option<u64>) {
+    if !respawning.contains(&lane) {
+        return (None, None);
+    }
+    match split.as_ref().and_then(|s| s.fault_of(lane)) {
+        Some(f) if f.persistent => match f.kind {
+            FaultKind::Kill => (Some(f.after_items as u64), None),
+            FaultKind::Hang => (None, Some(f.after_items as u64)),
+        },
+        _ => (None, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_derivation_and_override() {
+        let derived = SuperviseCfg::default();
+        assert_eq!(derived.deadline_s(0), DEADLINE_BASE_S);
+        let d = derived.deadline_s(10_000);
+        assert!(d > DEADLINE_BASE_S && d < DEADLINE_BASE_S + 2.0);
+        let forced = SuperviseCfg { worker_timeout_s: 1.5, ..Default::default() };
+        assert_eq!(forced.deadline_s(1 << 40), 1.5, "override ignores work volume");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = SuperviseCfg { respawn_backoff_s: 0.5, ..Default::default() };
+        assert_eq!(cfg.backoff_s(1), 0.5);
+        assert_eq!(cfg.backoff_s(2), 1.0);
+        assert_eq!(cfg.backoff_s(3), 2.0);
+        assert_eq!(cfg.backoff_s(100), BACKOFF_CAP_S, "schedule is capped");
+    }
+
+    #[test]
+    fn escalation_ladder_warns_then_kills() {
+        let mut clock = DeadlineClock::new(1.0);
+        assert_eq!(clock.check_elapsed(0.5), Escalation::Healthy);
+        assert_eq!(clock.check_elapsed(1.1), Escalation::Straggler);
+        // Inside the grace period: no second warning, no kill yet.
+        assert_eq!(clock.check_elapsed(1.5), Escalation::Healthy);
+        assert_eq!(clock.check_elapsed(2.1), Escalation::Kill);
+    }
+
+    #[test]
+    fn progress_resets_the_ladder() {
+        let mut clock = DeadlineClock::new(1.0);
+        assert_eq!(clock.check_elapsed(1.2), Escalation::Straggler);
+        clock.observe(3); // units advanced — fresh ladder
+        assert_eq!(clock.units(), 3);
+        assert_eq!(clock.check_elapsed(0.1), Escalation::Healthy);
+        assert_eq!(clock.check_elapsed(1.2), Escalation::Straggler, "ladder re-arms");
+        // A heartbeat with the *same* counter must not reset the clock.
+        let before = clock.last_advance;
+        clock.observe(3);
+        assert_eq!(clock.last_advance, before, "stale heartbeat bought no time");
+    }
+
+    #[test]
+    fn supervisor_matches_pr6_defaults() {
+        // respawn_max = 0: only +rejoin restarts, exactly once.
+        let mut sup = LaneSupervisor::new(SuperviseCfg::default());
+        assert_eq!(sup.on_death(0, false), RespawnDecision::Spread);
+        assert_eq!(sup.on_death(0, false), RespawnDecision::Spread, "spread is not retirement");
+        assert!(matches!(sup.on_death(1, true), RespawnDecision::Respawn { attempt: 1, .. }));
+        // The rejoined lane dying again exhausts its single attempt.
+        assert_eq!(sup.on_death(1, true), RespawnDecision::Retire);
+        assert!(sup.is_retired(1));
+        assert!(!sup.is_retired(0));
+    }
+
+    #[test]
+    fn supervisor_bounds_attempts_with_backoff() {
+        let cfg = SuperviseCfg { respawn_max: 3, respawn_backoff_s: 0.25, ..Default::default() };
+        let mut sup = LaneSupervisor::new(cfg);
+        for (attempt, delay) in [(1u32, 0.25f64), (2, 0.5), (3, 1.0)] {
+            match sup.on_death(2, false) {
+                RespawnDecision::Respawn { attempt: a, delay_s } => {
+                    assert_eq!(a, attempt);
+                    assert!((delay_s - delay).abs() < 1e-12);
+                }
+                other => panic!("expected respawn, got {other:?}"),
+            }
+        }
+        assert_eq!(sup.on_death(2, false), RespawnDecision::Retire);
+        assert_eq!(sup.attempts(2), 3);
+        assert_eq!(sup.retired_lanes(), vec![2]);
+        // Once retired, always retired — even across phases.
+        assert_eq!(sup.on_death(2, true), RespawnDecision::Retire);
+    }
+}

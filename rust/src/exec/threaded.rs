@@ -17,16 +17,22 @@
 //! victim's job: the worker checks `executed >= kill` before each
 //! dispatch unit (and once after the last — a unit straddling the fault
 //! point still runs) and answers `DoneMsg::dead` instead of partials.
-//! The coordinator re-plans the orphaned layers onto surviving lanes via
-//! [`plan_recovery`] and, for `+rejoin` faults, hands the lane back
-//! exactly its own layer range (DESIGN.md §Fault-Tolerance).
+//! A `+hang` fault wedges instead: the worker sleeps at the fault point,
+//! its shared progress counter freezes, and the coordinator's deadline
+//! ladder ([`super::supervise`]) warns then abandons the thread (a
+//! thread cannot be killed — the lane's handle is *replaced* and the
+//! wedged thread left to unwind on its own). Either way the coordinator
+//! re-plans the orphaned layers onto surviving lanes via
+//! [`plan_recovery`] and, per the respawn policy, hands a restarted lane
+//! back exactly its own layer range (DESIGN.md §Fault-Tolerance).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -39,8 +45,10 @@ use crate::sharding::BatchGroup;
 use crate::tensor::Tensor;
 use crate::topology::{ActKind, ActSource};
 
-use super::fault::{
-    devices_of_lane, plan_recovery, split_faults, Death, FaultPlan, FaultReport,
+use super::fault::{devices_of_lane, plan_recovery, split_faults, Death, FaultPlan, FaultReport};
+use super::supervise::{
+    decide, injected_hang_sleep, job_vjp_units, persistent_fault, DeadlineClock, Escalation,
+    LaneSupervisor, SuperviseCfg,
 };
 use super::wire::{DoneMsg, JobMsg};
 use super::{
@@ -122,11 +130,31 @@ impl ActSource for SnapshotActs<'_> {
     }
 }
 
+/// Injected-hang guard: at the same checkpoints the kill check runs, a
+/// `+hang` fault wedges the worker once (long finite sleep, progress
+/// counter frozen) and then lets it continue — by which time the
+/// coordinator has killed or abandoned the lane and discarded anything
+/// it might still say.
+fn hang_check(hang: &mut Option<u64>, executed: u64) {
+    if let Some(h) = *hang {
+        if executed >= h {
+            *hang = None;
+            injected_hang_sleep();
+        }
+    }
+}
+
 /// Run one job against worker-local state — the shared body of a
 /// threaded lane and a process child. Returns `DoneMsg::dead` when the
 /// job's injected fault fires (the process worker turns that into an
-/// abrupt exit, so the coordinator sees a broken pipe).
-pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<DoneMsg> {
+/// abrupt exit, so the coordinator sees a broken pipe). `progress` is
+/// the lane's monotone dispatched-unit counter, bumped once per unit —
+/// the heartbeat signal the coordinator's deadline clock watches.
+pub(crate) fn run_job(
+    state: &mut Option<WorkerState>,
+    job: &JobMsg,
+    progress: &AtomicU64,
+) -> Result<DoneMsg> {
     use stage_slot::*;
     let reopen = match state.as_ref() {
         Some(s) => s.dir != job.artifacts_dir,
@@ -137,7 +165,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
     }
     let st = state.as_mut().expect("worker state just ensured");
     if job.batch > 1 {
-        return run_job_batched(st, job);
+        return run_job_batched(st, job, progress);
     }
     st.single()?; // compile before the disjoint field borrows below
     let WorkerState { entry, consts, stages, outs, .. } = st;
@@ -148,6 +176,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
     let mut wall_s = 0.0;
     let mut calls = 0u64;
     let mut executed = 0u64;
+    let mut hang = job.hang;
 
     for work in &job.devices {
         let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> = work.acts.iter().cloned().collect();
@@ -160,6 +189,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
                     return Ok(DoneMsg::dead(executed));
                 }
             }
+            hang_check(&mut hang, executed);
             gather_item_args_into_from(&job.dims, &src, &item, stage)?;
             let w_c_t = w_c
                 .get(&item.layer)
@@ -188,6 +218,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
             wall_s += secs;
             calls += 1;
             executed += 1;
+            progress.fetch_add(1, Ordering::Relaxed);
         }
     }
     // A fault point landing inside (or right after) the last unit still
@@ -198,6 +229,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
             return Ok(DoneMsg::dead(executed));
         }
     }
+    hang_check(&mut hang, executed);
 
     Ok(DoneMsg {
         layer_grads: layer_grads.into_iter().collect(),
@@ -218,7 +250,7 @@ pub(crate) fn run_job(state: &mut Option<WorkerState>, job: &JobMsg) -> Result<D
 /// worker's partials start), so the coordinator's ascending-layer merge
 /// is unchanged. The injected-fault check runs per batch group (one
 /// dispatch unit), draining the in-flight group before dying.
-fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
+fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> Result<DoneMsg> {
     st.batched()?; // compile before the disjoint field borrows below
     let WorkerState { entry_batched, consts, stages, outs, .. } = st;
     let entry = entry_batched.as_ref().expect("batched entry just ensured");
@@ -230,6 +262,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
     let mut overlap_s = 0.0;
     let mut calls = 0u64;
     let mut executed = 0u64;
+    let mut hang = job.hang;
 
     for work in &job.devices {
         let acts: BTreeMap<(usize, ActKind), Arc<Tensor>> = work.acts.iter().cloned().collect();
@@ -245,6 +278,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
                     return Ok(DoneMsg::dead(executed));
                 }
             }
+            hang_check(&mut hang, executed);
             let stage = stage_for(stages, work.device * 2 + gi % 2);
             let tg = Instant::now();
             gather_group_args_into_from(&job.dims, &src, &job.items, group, m_static, stage)?;
@@ -268,6 +302,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
             pending = Some((entry.launch(&args)?, group));
             calls += 1;
             executed += group.ids.len() as u64;
+            progress.fetch_add(group.ids.len() as u64, Ordering::Relaxed);
         }
         if let Some((fly, g)) = pending.take() {
             let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
@@ -279,6 +314,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg) -> Result<DoneMsg> {
             return Ok(DoneMsg::dead(executed));
         }
     }
+    hang_check(&mut hang, executed);
 
     Ok(DoneMsg {
         layer_grads: layer_grads.into_iter().collect(),
@@ -305,16 +341,27 @@ enum Msg {
 struct WorkerHandle {
     tx: mpsc::Sender<Msg>,
     join: Option<JoinHandle<()>>,
+    /// The lane's monotone dispatched-unit counter, shared with the
+    /// worker thread — the coordinator's in-process heartbeat.
+    progress: Arc<AtomicU64>,
 }
 
-fn worker_main(rx: mpsc::Receiver<Msg>) {
+fn worker_main(rx: mpsc::Receiver<Msg>, progress: Arc<AtomicU64>) {
     let mut state: Option<WorkerState> = None;
     while let Ok(Msg::Job(job)) = rx.recv() {
-        let result = run_job(&mut state, &job.msg);
+        let result = run_job(&mut state, &job.msg, &progress);
         // Receiver gone means the coordinator gave up on the phase;
         // nothing useful to do with the result.
         let _ = job.reply.send((job.lane, result));
     }
+}
+
+/// How one lane's round ended.
+enum RoundOutcome {
+    Done(DoneMsg),
+    /// The deadline ladder force-abandoned the lane; `executed` is the
+    /// unit count its progress counter reached before freezing.
+    Hung { executed: u64 },
 }
 
 /// Real concurrent backend: persistent worker threads (spawned lazily,
@@ -328,6 +375,8 @@ pub struct ThreadedExecutor {
     fault: Option<FaultPlan>,
     report: Option<FaultReport>,
     workers: Vec<WorkerHandle>,
+    supervise: SuperviseCfg,
+    supervisor: LaneSupervisor,
 }
 
 impl ThreadedExecutor {
@@ -339,43 +388,138 @@ impl ThreadedExecutor {
     /// Arm a fault plan: victim lanes receive a kill count inside their
     /// job and the coordinator runs the shared recovery path.
     pub fn with_faults(workers: usize, fault: Option<FaultPlan>) -> Self {
-        Self { requested: workers, fault, report: None, workers: Vec::new() }
+        let supervise = SuperviseCfg::default();
+        Self {
+            requested: workers,
+            fault,
+            report: None,
+            workers: Vec::new(),
+            supervise,
+            supervisor: LaneSupervisor::new(supervise),
+        }
+    }
+
+    /// Set the supervision policy (deadlines + respawn schedule).
+    pub fn with_supervision(mut self, cfg: SuperviseCfg) -> Self {
+        self.set_supervision(cfg);
+        self
+    }
+
+    pub fn set_supervision(&mut self, cfg: SuperviseCfg) {
+        self.supervise = cfg;
+        self.supervisor = LaneSupervisor::new(cfg);
+    }
+
+    /// Re-arm (or disarm) the fault plan between phases.
+    pub fn arm_faults(&mut self, fault: Option<FaultPlan>) {
+        self.fault = fault;
+    }
+
+    fn spawn_worker(lane: usize) -> Result<WorkerHandle> {
+        let (tx, rx) = mpsc::channel();
+        let progress = Arc::new(AtomicU64::new(0));
+        let shared = Arc::clone(&progress);
+        let join = std::thread::Builder::new()
+            .name(format!("adjsh-exec-{lane}"))
+            .spawn(move || worker_main(rx, shared))
+            .context("spawning executor worker")?;
+        Ok(WorkerHandle { tx, join: Some(join), progress })
     }
 
     fn ensure_workers(&mut self, n: usize) -> Result<()> {
         while self.workers.len() < n {
-            let (tx, rx) = mpsc::channel();
-            let join = std::thread::Builder::new()
-                .name(format!("adjsh-exec-{}", self.workers.len()))
-                .spawn(move || worker_main(rx))
-                .context("spawning executor worker")?;
-            self.workers.push(WorkerHandle { tx, join: Some(join) });
+            self.workers.push(Self::spawn_worker(self.workers.len())?);
         }
         Ok(())
     }
 
-    /// Ship one round of jobs and collect every reply. Each round owns
-    /// its channel end-to-end so a vanished worker surfaces as a recv
-    /// error instead of a hang.
-    fn run_round(&self, jobs: Vec<(usize, JobMsg)>) -> Result<Vec<(usize, DoneMsg)>> {
+    /// Abandon a wedged lane: a thread cannot be killed, so its handle
+    /// (and job sender) is replaced with a fresh worker and the old
+    /// thread is detached — its finite injected sleep (or eventual
+    /// unwedging) ends with a send into a closed channel and a clean
+    /// exit. The fresh worker recompiles lazily on its next job.
+    fn replace_worker(&mut self, lane: usize) -> Result<()> {
+        let fresh = Self::spawn_worker(lane)?;
+        let _old = std::mem::replace(&mut self.workers[lane], fresh);
+        // Dropping `_old` drops its sender and detaches the JoinHandle.
+        Ok(())
+    }
+
+    /// Ship one round of jobs and collect every lane's outcome, running
+    /// the deadline ladder against each lane's progress counter while
+    /// waiting. Each round owns its channel end-to-end so a vanished
+    /// worker surfaces as a recv error instead of a hang.
+    fn run_round(
+        &mut self,
+        jobs: Vec<(usize, JobMsg)>,
+        stragglers: &mut Vec<usize>,
+    ) -> Result<Vec<(usize, RoundOutcome)>> {
+        struct Waiting {
+            clock: DeadlineClock,
+            base: u64,
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
-        let mut outstanding = 0usize;
+        let mut waiting: BTreeMap<usize, Waiting> = BTreeMap::new();
         for (lane, msg) in jobs {
+            let deadline = self.supervise.deadline_s(job_vjp_units(&msg));
+            let base = self.workers[lane].progress.load(Ordering::Relaxed);
             let job = WorkerJob { lane, msg, reply: reply_tx.clone() };
             self.workers[lane]
                 .tx
                 .send(Msg::Job(Box::new(job)))
                 .map_err(|_| anyhow::anyhow!("executor worker {lane} is gone"))?;
-            outstanding += 1;
+            waiting.insert(lane, Waiting { clock: DeadlineClock::new(deadline), base });
         }
         drop(reply_tx);
-        let mut replies = Vec::with_capacity(outstanding);
-        for _ in 0..outstanding {
-            let (lane, done) =
-                reply_rx.recv().context("executor worker dropped its reply channel")?;
-            replies.push((lane, done?));
+        let mut out = Vec::with_capacity(waiting.len());
+        let mut abandoned: BTreeSet<usize> = BTreeSet::new();
+        while !waiting.is_empty() {
+            match reply_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok((lane, done)) => {
+                    if abandoned.contains(&lane) {
+                        // A replaced lane woke up late; its partials are
+                        // already discarded — recovery owns its range.
+                        continue;
+                    }
+                    waiting.remove(&lane);
+                    out.push((lane, RoundOutcome::Done(done?)));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let mut to_kill = Vec::new();
+                    for (&lane, w) in waiting.iter_mut() {
+                        w.clock.observe(self.workers[lane].progress.load(Ordering::Relaxed));
+                        match w.clock.check() {
+                            Escalation::Healthy => {}
+                            Escalation::Straggler => {
+                                if !stragglers.contains(&lane) {
+                                    stragglers.push(lane);
+                                }
+                                eprintln!(
+                                    "[exec] lane {lane}: no progress inside its deadline — \
+                                     straggler warning, granting one grace period"
+                                );
+                            }
+                            Escalation::Kill => to_kill.push(lane),
+                        }
+                    }
+                    for lane in to_kill {
+                        let w = waiting.remove(&lane).expect("lane was waiting");
+                        let executed = w.clock.units().saturating_sub(w.base);
+                        eprintln!(
+                            "[exec] lane {lane}: hung through the grace period — \
+                             abandoning the thread and recovering its range"
+                        );
+                        self.replace_worker(lane)?;
+                        abandoned.insert(lane);
+                        out.push((lane, RoundOutcome::Hung { executed }));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!("executor worker dropped its reply channel");
+                }
+            }
         }
-        Ok(replies)
+        Ok(out)
     }
 }
 
@@ -430,104 +574,176 @@ impl Executor for ThreadedExecutor {
             None => None,
         };
 
+        let mk_job = |work: Vec<_>, kill: Option<u64>, hang: Option<u64>| JobMsg {
+            dims: ctx.dims.clone(),
+            artifacts_dir: ctx.arts.dir.clone(),
+            batch: dispatch.batch,
+            // The global item table is only consulted by the batched
+            // path (groups reference it by id).
+            items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
+            devices: work,
+            kill,
+            hang,
+        };
+
+        let mut stragglers: Vec<usize> = Vec::new();
         let mut jobs = Vec::new();
+        // Lanes the crash-loop breaker retired (this phase or earlier)
+        // get no job at all: their range recovers up front, exactly like
+        // a death at unit zero.
+        let mut need: Vec<(usize, bool)> = Vec::new();
+        let mut predead = false;
         for (lane, work) in per_lane.into_iter().enumerate() {
             if work.is_empty() {
                 continue;
             }
-            let kill = match &split {
-                Some(s) => s.kill_after(lane),
-                None => None,
+            if self.supervisor.is_retired(lane) {
+                need.push((lane, false));
+                predead = true;
+                continue;
+            }
+            let (kill, hang) = match &split {
+                Some(s) => (s.kill_after(lane), s.hang_after(lane)),
+                None => (None, None),
             };
-            jobs.push((
-                lane,
-                JobMsg {
-                    dims: ctx.dims.clone(),
-                    artifacts_dir: ctx.arts.dir.clone(),
-                    batch: dispatch.batch,
-                    // The global item table is only consulted by the
-                    // batched path (groups reference it by id).
-                    items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
-                    devices: work,
-                    kill,
-                },
-            ));
+            jobs.push((lane, mk_job(work, kill, hang)));
         }
 
         let mut dones = Vec::new();
-        let mut dead: Vec<(usize, bool)> = Vec::new();
+        let mut hung_lanes: Vec<usize> = Vec::new();
+        let mut respawns: BTreeMap<usize, u32> = BTreeMap::new();
         let mut deaths_exec: BTreeMap<usize, u64> = BTreeMap::new();
-        for (lane, done) in self.run_round(jobs)? {
-            if done.died {
-                let split = match &split {
-                    Some(s) => s,
-                    None => bail!("lane {lane} died with no fault plan armed"),
-                };
-                deaths_exec.insert(lane, done.executed);
-                dead.push((lane, split.rejoin(lane)));
-            } else {
-                dones.push(done);
+        for (lane, outcome) in self.run_round(jobs, &mut stragglers)? {
+            match outcome {
+                RoundOutcome::Done(done) if done.died => {
+                    let s = match &split {
+                        Some(s) => s,
+                        None => bail!("lane {lane} died with no fault plan armed"),
+                    };
+                    deaths_exec.insert(lane, done.executed);
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, s.rejoin(lane));
+                    need.push((lane, rejoin));
+                }
+                RoundOutcome::Done(done) => dones.push(done),
+                RoundOutcome::Hung { executed } => {
+                    // An injected hang is deterministic (the counter froze
+                    // at the fault point); a real hang reports whatever
+                    // progress the lane last proved.
+                    hung_lanes.push(lane);
+                    deaths_exec.insert(lane, executed);
+                    let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    need.push((lane, rejoin));
+                }
             }
         }
-        dead.sort_unstable_by_key(|&(lane, _)| lane);
+        need.sort_unstable_by_key(|&(lane, _)| lane);
 
-        if !dead.is_empty() {
-            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &dead)?;
-            // Orphaned layers never reached `grads` (a dead lane's
-            // partials die with it), so recovery lanes re-accumulate
-            // them from zero — no rollback needed here, unlike sim.
+        let had_deaths = !deaths_exec.is_empty() || predead;
+        let mut report_orphans: Vec<usize> = Vec::new();
+        let mut report_orphan_layers: Vec<usize> = Vec::new();
+        let mut recovered: Vec<usize> = Vec::new();
+        let mut rejoined: BTreeSet<usize> = BTreeSet::new();
+        let mut first_round = true;
+        // Supervised recovery: each round re-plans the still-orphaned
+        // ranges (rejoin waves for respawning lanes, one spread wave
+        // onto survivors), executes, and feeds crash-looped lanes back
+        // through the supervisor until every orphan is recovered or no
+        // lane remains. Orphaned layers never reached `grads` (a dead
+        // lane's partials die with it), so recovery lanes re-accumulate
+        // them from zero — no rollback needed here, unlike sim.
+        while !need.is_empty() {
+            let rec = plan_recovery(ctx.dims, &ctx.fleet.cfg, dispatch, n_lanes, &need)?;
+            if first_round {
+                report_orphans.clone_from(&rec.orphans);
+                report_orphan_layers.clone_from(&rec.orphan_layers);
+                first_round = false;
+            }
+            let respawning: BTreeSet<usize> =
+                need.iter().filter(|&&(_, rj)| rj).map(|&(l, _)| l).collect();
             let mut jobs = Vec::new();
             for wave in &rec.waves {
                 for rl in &wave.lanes {
-                    jobs.push((
-                        rl.lane,
-                        JobMsg {
-                            dims: ctx.dims.clone(),
-                            artifacts_dir: ctx.arts.dir.clone(),
-                            batch: dispatch.batch,
-                            items: if dispatch.batch > 1 {
-                                dispatch.items.clone()
-                            } else {
-                                Vec::new()
-                            },
-                            devices: vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)],
-                            kill: None,
-                        },
-                    ));
+                    if self.supervisor.is_retired(rl.lane) {
+                        bail!(
+                            "recovery re-plan targeted retired lane {} — \
+                             raise --respawn or use more workers",
+                            rl.lane
+                        );
+                    }
+                    let (kill, hang) = persistent_fault(&split, &respawning, rl.lane);
+                    let work = vec![recovery_work(dispatch, ctx.fleet, ctx.params, rl)];
+                    jobs.push((rl.lane, mk_job(work, kill, hang)));
                 }
             }
-            let mut recovered = Vec::new();
-            for (lane, done) in self.run_round(jobs)? {
-                if done.died {
-                    bail!("recovery lane {lane} died mid-recovery");
+            let mut next_need: Vec<(usize, bool)> = Vec::new();
+            for (lane, outcome) in self.run_round(jobs, &mut stragglers)? {
+                let was_respawned = respawning.contains(&lane);
+                match outcome {
+                    RoundOutcome::Done(done) if done.died => {
+                        if !was_respawned {
+                            bail!("recovery lane {lane} died mid-recovery");
+                        }
+                        let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        next_need.push((lane, rejoin));
+                    }
+                    RoundOutcome::Done(done) => {
+                        recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
+                        if was_respawned {
+                            rejoined.insert(lane);
+                        }
+                        dones.push(done);
+                    }
+                    RoundOutcome::Hung { .. } => {
+                        if !was_respawned {
+                            bail!("recovery lane {lane} hung mid-recovery");
+                        }
+                        if !hung_lanes.contains(&lane) {
+                            hung_lanes.push(lane);
+                        }
+                        let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
+                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        next_need.push((lane, rejoin));
+                    }
                 }
-                recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
-                dones.push(done);
             }
+            next_need.sort_unstable_by_key(|&(lane, _)| lane);
+            need = next_need;
+        }
+
+        if had_deaths {
             recovered.sort_unstable();
-            if recovered != rec.orphans {
+            if recovered != report_orphans {
                 bail!(
                     "recovery executed {} items, the deaths orphaned {}",
                     recovered.len(),
-                    rec.orphans.len()
+                    report_orphans.len()
                 );
             }
+            stragglers.sort_unstable();
+            hung_lanes.sort_unstable();
             self.report = Some(FaultReport {
-                deaths: dead
+                deaths: deaths_exec
                     .iter()
-                    .map(|&(lane, _)| Death {
+                    .map(|(&lane, &executed)| Death {
                         lane,
                         devices: devices_of_lane(lane, n_lanes, dispatch.queues.len()),
-                        executed: deaths_exec[&lane],
+                        executed,
                     })
                     .collect(),
-                orphan_layers: rec.orphan_layers,
-                orphans: rec.orphans,
+                orphan_layers: report_orphan_layers,
+                orphans: report_orphans,
                 recovered,
-                rejoined: dead.iter().filter(|&&(_, r)| r).map(|&(l, _)| l).collect(),
+                rejoined: rejoined.into_iter().collect(),
+                stragglers,
+                hung: hung_lanes,
+                respawns: respawns.into_iter().collect(),
+                retired: self.supervisor.retired_lanes(),
             });
-        } else if split.is_some() {
-            self.report = Some(FaultReport::default());
+        } else if split.is_some() || !stragglers.is_empty() {
+            stragglers.sort_unstable();
+            self.report = Some(FaultReport { stragglers, ..Default::default() });
         }
 
         // Deterministic merge: completion order is erased by collecting

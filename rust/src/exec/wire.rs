@@ -33,7 +33,8 @@ use crate::topology::ActKind;
 pub const MAGIC: [u8; 4] = *b"ADJW";
 /// Protocol version exchanged in the HELLO handshake; a worker from a
 /// different build refuses to join rather than corrupting gradients.
-pub const WIRE_VERSION: u64 = 1;
+/// v2: PING/PONG heartbeat frames + the `hang` fault field on [`JobMsg`].
+pub const WIRE_VERSION: u64 = 2;
 
 /// Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -42,6 +43,16 @@ pub const K_JOB: u8 = 3;
 pub const K_DONE: u8 = 4;
 pub const K_ERR: u8 = 5;
 pub const K_SHUTDOWN: u8 = 6;
+/// Liveness probe, coordinator → worker; the worker answers with a PONG
+/// echoing the sequence number.
+pub const K_PING: u8 = 7;
+/// Heartbeat, worker → coordinator: `(seq, executed)` where `executed`
+/// is the worker's monotone dispatched-unit counter. Sent as a PING
+/// reply and unsolicited on a timer while a job runs — the coordinator's
+/// deadline clock (`exec::supervise`) only resets when `executed`
+/// advances, so a wedged worker whose heartbeat thread is still alive is
+/// detected all the same.
+pub const K_PONG: u8 = 8;
 
 /// Plausibility cap on one frame's payload — far above any real phase,
 /// far below an allocation that could wedge the host.
@@ -79,6 +90,10 @@ pub struct JobMsg {
     /// Injected fault: die (without partials) right before dispatching
     /// the work unit that would start at or past this many items.
     pub kill: Option<u64>,
+    /// Injected fault: wedge (sleep, no reply, heartbeat counter frozen)
+    /// right before dispatching the work unit that would start at or
+    /// past this many items. Same unit accounting as `kill`.
+    pub hang: Option<u64>,
 }
 
 /// A lane's answer: per-layer gradient partials (each layer lives on
@@ -456,12 +471,14 @@ pub fn encode_job(job: &JobMsg) -> Result<Vec<u8>> {
             e.tensor(t);
         }
     }
-    match job.kill {
-        Some(k) => {
-            e.bool(true);
-            e.u64(k);
+    for fault in [job.kill, job.hang] {
+        match fault {
+            Some(k) => {
+                e.bool(true);
+                e.u64(k);
+            }
+            None => e.bool(false),
         }
-        None => e.bool(false),
     }
     Ok(e.into_bytes())
 }
@@ -517,8 +534,41 @@ pub fn decode_job(payload: &[u8]) -> Result<JobMsg> {
         devices.push(DeviceWorkMsg { device, items: dev_items, groups, acts, w_c });
     }
     let kill = if d.bool()? { Some(d.u64()?) } else { None };
+    let hang = if d.bool()? { Some(d.u64()?) } else { None };
     d.finish()?;
-    Ok(JobMsg { dims, artifacts_dir, batch, items, devices, kill })
+    Ok(JobMsg { dims, artifacts_dir, batch, items, devices, kill, hang })
+}
+
+/// PING payload: just the probe's sequence number.
+pub fn encode_ping(seq: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(seq);
+    e.into_bytes()
+}
+
+pub fn decode_ping(payload: &[u8]) -> Result<u64> {
+    let mut d = Dec::new(payload);
+    let seq = d.u64()?;
+    d.finish()?;
+    Ok(seq)
+}
+
+/// PONG payload: `(seq, executed)` — echoed sequence number (or the
+/// heartbeat counter for unsolicited beats) and the worker's monotone
+/// dispatched-unit counter.
+pub fn encode_pong(seq: u64, executed: u64) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(seq);
+    e.u64(executed);
+    e.into_bytes()
+}
+
+pub fn decode_pong(payload: &[u8]) -> Result<(u64, u64)> {
+    let mut d = Dec::new(payload);
+    let seq = d.u64()?;
+    let executed = d.u64()?;
+    d.finish()?;
+    Ok((seq, executed))
 }
 
 pub fn encode_done(done: &DoneMsg) -> Vec<u8> {
@@ -586,6 +636,16 @@ mod tests {
         assert!(decode_hello(&encode_hello(7)[..7]).is_err());
         let msg = "worker exploded: artifact missing";
         assert_eq!(decode_err(&encode_err(msg)).unwrap(), msg);
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        assert_eq!(decode_ping(&encode_ping(42)).unwrap(), 42);
+        assert_eq!(decode_pong(&encode_pong(3, 17)).unwrap(), (3, 17));
+        assert!(decode_pong(&encode_pong(3, 17)[..9]).is_err()); // truncated
+        let mut trailing = encode_ping(1);
+        trailing.push(0);
+        assert!(decode_ping(&trailing).is_err());
     }
 
     #[test]

@@ -60,8 +60,10 @@ commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
             [--sched-policy fifo|lpt|layer-major] [--overlap]
             [--executor sim|threaded|process] [--workers N] [--adjoint-batch M]
-            [--fault-at lane@items[+rejoin],...] [--fault-seed N]
-            [--checkpoint out.ckpt] [--resume in.ckpt]
+            [--fault-at lane@items[+hang][+rejoin][+loop],...] [--fault-seed N]
+            [--worker-timeout s] [--respawn N] [--respawn-backoff s]
+            [--checkpoint-every N] [--checkpoint-dir d]
+            [--checkpoint out.ckpt] [--resume ckpt-or-dir]
   eval      --config <name> [--batches N]
   generate  --config <name> [--resume ckpt] --prompt 1,2,3 --tokens N [--temperature t]
   serve     --config <name> [--resume ckpt] [--max-batch B] [--executor sim|threaded]
@@ -100,6 +102,21 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         .parse()?;
     cfg.exec.workers =
         cli.usize_or("workers", 0, "worker-backend lane cap (0 = one per device)")?;
+    cfg.exec.supervise.worker_timeout_s = cli.f64_or(
+        "worker-timeout",
+        0.0,
+        "per-dispatch no-progress deadline in seconds (0 = derive from work volume)",
+    )?;
+    cfg.exec.supervise.respawn_max = cli.usize_or(
+        "respawn",
+        0,
+        "max respawn attempts per lane before it is retired (0 = +rejoin faults only)",
+    )?;
+    cfg.exec.supervise.respawn_backoff_s = cli.f64_or(
+        "respawn-backoff",
+        0.1,
+        "base respawn backoff seconds; attempt n waits base·2^(n−1)",
+    )?;
     let fault_at = cli.str_or(
         "fault-at",
         "",
@@ -125,11 +142,29 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         cli.usize_or("max-batch", 8, "serve: max sessions per batched decode step")?;
     let snap = cli.str_or("snapshot-dir", "", "serve: session snapshot directory ('' = off)");
     cfg.serve.snapshot_dir = (!snap.is_empty()).then(|| PathBuf::from(snap));
+    cfg.checkpoint_every = cli.usize_or(
+        "checkpoint-every",
+        0,
+        "write a full-state training checkpoint every N steps (0 = off)",
+    )?;
+    let ckdir = cli.str_or("checkpoint-dir", "", "checkpoint directory ('' = checkpoints/)");
+    cfg.checkpoint_dir = (!ckdir.is_empty()).then(|| PathBuf::from(ckdir));
     cfg.optim.lr = cli.f64_or("lr", 1e-3, "Adam learning rate")? as f32;
     cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
     let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
     cfg.log_csv = (!csv.is_empty()).then(|| PathBuf::from(csv));
     Ok(cfg)
+}
+
+/// Sniff the 8-byte magic: is this a full-state training checkpoint
+/// (`ADJSHTC1`) as opposed to the legacy params-only format?
+fn is_train_checkpoint(path: &std::path::Path) -> bool {
+    use std::io::Read;
+    let mut magic = [0u8; 8];
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_exact(&mut magic))
+        .map(|()| &magic == adjoint_sharding::train::checkpoint::TRAIN_CKPT_MAGIC)
+        .unwrap_or(false)
 }
 
 fn make_corpus(cli: &mut Cli, vocab: usize, seed: u64) -> Box<dyn adjoint_sharding::data::Corpus> {
@@ -155,12 +190,27 @@ fn cmd_train(cli: &mut Cli) -> Result<()> {
         cfg.topology.devices,
         cfg.grad_mode
     );
-    let resume = cli.str_or("resume", "", "checkpoint to resume from ('' = fresh)");
+    let resume =
+        cli.str_or("resume", "", "checkpoint file or directory to resume from ('' = fresh)");
     let checkpoint = cli.str_or("checkpoint", "", "checkpoint path to save at end ('' = none)");
     let mut trainer = Trainer::new(rt, cfg, corpus)?;
     if !resume.is_empty() {
-        trainer.resume_from(std::path::Path::new(&resume))?;
-        println!("resumed from {resume}");
+        // A directory means "newest verified full-state checkpoint in
+        // there"; a file is sniffed by magic — full-state (bit-identical
+        // resume) vs legacy params-only.
+        let rp = std::path::Path::new(&resume);
+        if rp.is_dir() {
+            if trainer.resume_latest(rp)?.is_none() {
+                bail!("no loadable checkpoint in {resume}");
+            }
+        } else if is_train_checkpoint(rp) {
+            let ck = adjoint_sharding::train::checkpoint::load_train_checkpoint(rp)?;
+            trainer.resume_train_checkpoint(ck)?;
+            println!("resumed from {resume} (full training state)");
+        } else {
+            trainer.resume_from(rp)?;
+            println!("resumed from {resume} (params only; optimizer restarts)");
+        }
     }
     trainer.run(steps)?;
     if !checkpoint.is_empty() {

@@ -12,7 +12,7 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"ADJSHCK1";
 
-fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+pub(crate) fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
     w.write_all(&(t.rank() as u32).to_le_bytes())?;
     for &d in t.shape() {
         w.write_all(&(d as u64).to_le_bytes())?;
@@ -23,7 +23,7 @@ fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
     Ok(())
 }
 
-fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+pub(crate) fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
     let mut b4 = [0u8; 4];
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b4)?;

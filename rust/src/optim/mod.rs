@@ -48,6 +48,39 @@ impl Adam {
             + self.v.iter().map(|t| t.size_bytes()).sum::<usize>()
     }
 
+    /// The resumable state: step counter and both moment banks
+    /// (checkpointing reads them; the hyperparameters travel in config).
+    pub fn state(&self) -> (u64, &[Tensor], &[Tensor]) {
+        (self.step, &self.m, &self.v)
+    }
+
+    /// Restore state captured by [`Adam::state`]. Shapes must match the
+    /// shapes this optimizer was built with — a checkpoint from a
+    /// different topology is an error, not a silent mis-resume.
+    pub fn restore(&mut self, step: u64, m: Vec<Tensor>, v: Vec<Tensor>) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            bail!(
+                "optimizer state mismatch: checkpoint has {}+{} moment tensors, expected {}",
+                m.len(),
+                v.len(),
+                self.m.len()
+            );
+        }
+        for (have, want) in m.iter().zip(&self.m).chain(v.iter().zip(&self.v)) {
+            if have.shape() != want.shape() {
+                bail!(
+                    "optimizer moment shape mismatch: checkpoint {:?}, expected {:?}",
+                    have.shape(),
+                    want.shape()
+                );
+            }
+        }
+        self.step = step;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// One update over a parameter group. `params` and `grads` must align
     /// with the shapes this optimizer was built with.
     pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {

@@ -588,7 +588,7 @@ impl ServeLoop {
 // SessionSnapshot — the bit-exact pause/resume format.
 // ---------------------------------------------------------------------------
 
-const SNAP_MAGIC: &[u8; 8] = b"ADJSHSN1";
+const SNAP_MAGIC: &[u8; 8] = b"ADJSHSN2";
 
 /// Everything a paused session needs to resume its exact token stream:
 /// the K×N recurrent state, the pending logits row, the sampler RNG, the
@@ -613,14 +613,15 @@ pub struct SessionSnapshot {
 }
 
 impl SessionSnapshot {
+    /// Serialize with a `crc32 ‖ body_len` trailer
+    /// ([`crate::util::crc`], shared with the training-checkpoint
+    /// format): a torn write or flipped bit is refused on load, never
+    /// resumed into a silently-divergent token stream.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
         }
-        let mut w = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("creating {}", path.display()))?,
-        );
+        let mut w: Vec<u8> = Vec::new();
         w.write_all(SNAP_MAGIC)?;
         for d in [self.k as u64, self.n as u64, self.v as u64, self.remaining] {
             w.write_all(&d.to_le_bytes())?;
@@ -661,14 +662,30 @@ impl SessionSnapshot {
                 w.write_all(&x.to_le_bytes())?;
             }
         }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&w)?;
+        f.write_all(&crate::util::crc::crc32(&w).to_le_bytes())?;
+        f.write_all(&(w.len() as u64).to_le_bytes())?;
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Self> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("opening {}", path.display()))?,
-        );
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        if bytes.len() < 12 {
+            bail!("{} is too short to be a session snapshot", path.display());
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 12);
+        let crc = u32::from_le_bytes(trailer[..4].try_into().unwrap());
+        let len = u64::from_le_bytes(trailer[4..].try_into().unwrap());
+        if len != body.len() as u64 {
+            bail!("{}: snapshot truncated or torn (trailer length mismatch)", path.display());
+        }
+        if crate::util::crc::crc32(body) != crc {
+            bail!("{}: snapshot checksum mismatch — corrupt file", path.display());
+        }
+        let mut r: &[u8] = body;
         let mut b1 = [0u8; 1];
         let mut b4 = [0u8; 4];
         let mut b8 = [0u8; 8];
@@ -725,6 +742,9 @@ impl SessionSnapshot {
                 row.push(f32::from_le_bytes(b4));
             }
             h.push(row);
+        }
+        if !r.is_empty() {
+            bail!("{}: {} trailing bytes after snapshot body", path.display(), r.len());
         }
         Ok(Self { k, n, v, temperature, remaining, pending, rng_state, rng_spare, logits, h })
     }
@@ -784,6 +804,30 @@ mod tests {
         let mut s = snap();
         s.logits = Some(vec![0.0; 3]);
         assert!(s.save(&path).is_err(), "logits/V mismatch must not serialize");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_bit_flips_and_truncation() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("serve_snap_crc_{}.snap", std::process::id()));
+        snap().save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // A flip anywhere — header, payload, or trailer — must be refused.
+        let stride = (good.len() / 23).max(1);
+        for i in (0..good.len()).step_by(stride) {
+            let mut bad = good.clone();
+            bad[i] ^= 0x04;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(SessionSnapshot::load(&path).is_err(), "flip at byte {i} accepted");
+        }
+        // So must truncation at any offset.
+        for cut in (0..good.len()).step_by(stride) {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(SessionSnapshot::load(&path).is_err(), "truncation at {cut} accepted");
+        }
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(SessionSnapshot::load(&path).unwrap(), snap());
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,419 @@
+//! Crash-safe training checkpoints (DESIGN.md §Fault-Tolerance): the
+//! *full* resumable state — parameters, every sharded Adam shard's
+//! moments, the trainer RNG, and the data-stream position — in one
+//! framed, CRC-checksummed file, written atomically (tmp + fsync +
+//! rename + directory fsync). Killing a run at step k and resuming from
+//! the latest checkpoint replays the exact float sequence of the
+//! uninterrupted run: the corpus is sampled by step index, the optimizer
+//! moments are bit-exact, and the RNG state is restored verbatim.
+//!
+//! The trailer is `crc32(body) ‖ body_len` — 12 bytes the loader checks
+//! before parsing a single field, so a torn write (power loss mid-file,
+//! truncation at *any* byte offset) or a flipped bit is detected, never
+//! silently resumed. [`latest_good`] scans a checkpoint directory newest
+//! first and falls back past corrupt files to the most recent one that
+//! verifies.
+//!
+//! Unlike the legacy params-only `ADJSHCK1` format
+//! ([`crate::model::checkpoint`]), which restarts the optimizer, this
+//! format resumes *training*, not just the model.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::checkpoint::{read_tensor, write_tensor};
+use crate::model::{LayerParams, ParamSet};
+use crate::tensor::Tensor;
+use crate::util::crc::crc32;
+
+/// Magic for the full training-state format (v1).
+pub const TRAIN_CKPT_MAGIC: &[u8; 8] = b"ADJSHTC1";
+const VERSION: u32 = 1;
+/// Retention: how many recent checkpoints `save_train_checkpoint` keeps.
+const KEEP: usize = 3;
+/// Trailer size: crc32 (u32) + body length (u64).
+const TRAILER: usize = 12;
+
+/// One Adam shard's resumable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamState {
+    pub step: u64,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+/// Everything a bit-identical resume needs.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// Data-stream position = next step index (the corpus is sampled by
+    /// step index, so this alone pins the sample sequence).
+    pub step: u64,
+    /// The run seed (sanity-checked on resume — a checkpoint from a
+    /// different run is refused, not blended).
+    pub seed: u64,
+    pub params: ParamSet,
+    /// Per-layer Adam shards, aligned with `params.layers`.
+    pub opt_layers: Vec<AdamState>,
+    /// The head (Ω) shard.
+    pub opt_head: AdamState,
+    /// Trainer RNG state (`Rng::state()` output).
+    pub rng_state: u64,
+    pub rng_spare: Option<f64>,
+}
+
+fn write_adam(w: &mut impl Write, s: &AdamState) -> Result<()> {
+    w.write_all(&s.step.to_le_bytes())?;
+    w.write_all(&(s.m.len() as u32).to_le_bytes())?;
+    for t in s.m.iter().chain(&s.v) {
+        write_tensor(w, t)?;
+    }
+    Ok(())
+}
+
+/// Byte-slice reader tracking its position (the body is fully in memory
+/// after the CRC check, so parsing is just slicing).
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("checkpoint body truncated (wanted {n} more bytes)");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        // read_tensor consumes from any Read; adapt the slice.
+        let mut rest = &self.buf[self.pos..];
+        let before = rest.len();
+        let t = read_tensor(&mut rest)?;
+        self.pos += before - rest.len();
+        Ok(t)
+    }
+
+    fn adam(&mut self) -> Result<AdamState> {
+        let step = self.u64()?;
+        let n = self.u32()? as usize;
+        if n == 0 || n > 64 {
+            bail!("implausible moment-bank size {n} — corrupt checkpoint?");
+        }
+        let m = (0..n).map(|_| self.tensor()).collect::<Result<Vec<_>>>()?;
+        let v = (0..n).map(|_| self.tensor()).collect::<Result<Vec<_>>>()?;
+        Ok(AdamState { step, m, v })
+    }
+}
+
+/// Serialize the body (everything the trailer checksums).
+fn encode_body(ck: &TrainCheckpoint) -> Result<Vec<u8>> {
+    let mut w: Vec<u8> = Vec::new();
+    w.write_all(TRAIN_CKPT_MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&ck.step.to_le_bytes())?;
+    w.write_all(&ck.seed.to_le_bytes())?;
+    w.write_all(&(ck.params.layers.len() as u32).to_le_bytes())?;
+    for l in &ck.params.layers {
+        for t in &l.0 {
+            write_tensor(&mut w, t)?;
+        }
+    }
+    write_tensor(&mut w, &ck.params.omega)?;
+    write_tensor(&mut w, &ck.params.embed)?;
+    if ck.opt_layers.len() != ck.params.layers.len() {
+        bail!(
+            "optimizer has {} layer shards, params have {} layers",
+            ck.opt_layers.len(),
+            ck.params.layers.len()
+        );
+    }
+    for s in &ck.opt_layers {
+        write_adam(&mut w, s)?;
+    }
+    write_adam(&mut w, &ck.opt_head)?;
+    w.write_all(&ck.rng_state.to_le_bytes())?;
+    w.write_all(&[u8::from(ck.rng_spare.is_some())])?;
+    w.write_all(&ck.rng_spare.unwrap_or(0.0).to_bits().to_le_bytes())?;
+    Ok(w)
+}
+
+fn decode_body(body: &[u8]) -> Result<TrainCheckpoint> {
+    let mut r = Rd { buf: body, pos: 0 };
+    if r.take(8)? != TRAIN_CKPT_MAGIC {
+        bail!("not an adjsh training checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("training checkpoint version {version}, this build reads {VERSION}");
+    }
+    let step = r.u64()?;
+    let seed = r.u64()?;
+    let k = r.u32()? as usize;
+    if k == 0 || k > 10_000 {
+        bail!("implausible layer count {k} — corrupt checkpoint?");
+    }
+    let mut layers = Vec::with_capacity(k);
+    for _ in 0..k {
+        let tensors = (0..7).map(|_| r.tensor()).collect::<Result<Vec<_>>>()?;
+        layers.push(LayerParams(tensors));
+    }
+    let omega = r.tensor()?;
+    let embed = r.tensor()?;
+    let opt_layers = (0..k).map(|_| r.adam()).collect::<Result<Vec<_>>>()?;
+    let opt_head = r.adam()?;
+    let rng_state = r.u64()?;
+    let has_spare = r.take(1)?[0];
+    let spare_bits = r.u64()?;
+    if r.pos != body.len() {
+        bail!("{} trailing bytes after the checkpoint body", body.len() - r.pos);
+    }
+    Ok(TrainCheckpoint {
+        step,
+        seed,
+        params: ParamSet { layers, omega, embed },
+        opt_layers,
+        opt_head,
+        rng_state,
+        rng_spare: (has_spare != 0).then(|| f64::from_bits(spare_bits)),
+    })
+}
+
+/// Write one checkpoint file atomically: serialize to a temp file in the
+/// same directory, fsync it, rename over the target, fsync the
+/// directory. A crash at any point leaves either the old file, no file,
+/// or a `.tmp` the loader never looks at — never a half-written
+/// checkpoint under the real name.
+pub fn write_train_checkpoint(ck: &TrainCheckpoint, path: &Path) -> Result<()> {
+    let body = encode_body(ck)?;
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(d) = dir {
+        std::fs::create_dir_all(d)
+            .with_context(|| format!("creating checkpoint dir {}", d.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&body)?;
+        f.write_all(&crc32(&body).to_le_bytes())?;
+        f.write_all(&(body.len() as u64).to_le_bytes())?;
+        f.sync_all().context("fsync checkpoint")?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if let Some(d) = dir {
+        // Make the rename itself durable.
+        if let Ok(dh) = std::fs::File::open(d) {
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Load and verify one checkpoint file. The trailer (`crc32 ‖ len`) is
+/// checked against the body *before* any field is parsed, so truncation
+/// at any byte offset and any single-bit flip are detected here.
+pub fn load_train_checkpoint(path: &Path) -> Result<TrainCheckpoint> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < TRAILER {
+        bail!("{}: too short to be a training checkpoint", path.display());
+    }
+    let (body, trailer) = bytes.split_at(bytes.len() - TRAILER);
+    let crc = u32::from_le_bytes(trailer[..4].try_into().unwrap());
+    let len = u64::from_le_bytes(trailer[4..].try_into().unwrap());
+    if len != body.len() as u64 {
+        bail!(
+            "{}: trailer says {len} body bytes, file has {} — truncated or torn",
+            path.display(),
+            body.len()
+        );
+    }
+    if crc32(body) != crc {
+        bail!("{}: checksum mismatch — corrupt checkpoint", path.display());
+    }
+    decode_body(body).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// The canonical per-step checkpoint filename.
+pub fn checkpoint_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step_{step:08}.ckpt"))
+}
+
+/// All `step_*.ckpt` files in `dir`, newest step first.
+fn checkpoint_files(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut files: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| {
+            let path = e.path();
+            let name = path.file_name()?.to_str()?;
+            let step = name.strip_prefix("step_")?.strip_suffix(".ckpt")?.parse().ok()?;
+            Some((step, path))
+        })
+        .collect();
+    files.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    files
+}
+
+/// Save into `dir` as `step_<step>.ckpt` (atomic) and prune to the
+/// [`KEEP`] newest. Returns the written path.
+pub fn save_train_checkpoint(ck: &TrainCheckpoint, dir: &Path) -> Result<PathBuf> {
+    let path = checkpoint_path(dir, ck.step);
+    write_train_checkpoint(ck, &path)?;
+    for (_, old) in checkpoint_files(dir).into_iter().skip(KEEP) {
+        let _ = std::fs::remove_file(old);
+    }
+    Ok(path)
+}
+
+/// The newest checkpoint in `dir` that verifies, falling back past torn
+/// or corrupt files (each skip is reported on stderr). `Ok(None)` means
+/// the directory holds no loadable checkpoint.
+pub fn latest_good(dir: &Path) -> Result<Option<(PathBuf, TrainCheckpoint)>> {
+    for (_, path) in checkpoint_files(dir) {
+        match load_train_checkpoint(&path) {
+            Ok(ck) => return Ok(Some((path, ck))),
+            Err(e) => {
+                eprintln!("[ckpt] skipping {}: {e:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { name: "t".into(), v: 8, p: 4, n: 4, k: 2, t: 8, w: 8, c: 4, eps: 1e-6 }
+    }
+
+    fn sample_ckpt(step: u64) -> TrainCheckpoint {
+        let d = dims();
+        let params = ParamSet::init(&d, 7);
+        let shard = |shapes: &[Vec<usize>]| AdamState {
+            step,
+            m: shapes.iter().map(|s| Tensor::full(s, 0.25)).collect(),
+            v: shapes.iter().map(|s| Tensor::full(s, 0.5)).collect(),
+        };
+        let opt_layers = params
+            .layers
+            .iter()
+            .map(|l| shard(&l.0.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>()))
+            .collect();
+        let opt_head = shard(&[params.omega.shape().to_vec()]);
+        TrainCheckpoint {
+            step,
+            seed: 7,
+            params,
+            opt_layers,
+            opt_head,
+            rng_state: 0xDEAD_BEEF,
+            rng_spare: Some(0.125),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("adjsh_tckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let dir = tmpdir("rt");
+        let ck = sample_ckpt(41);
+        let path = save_train_checkpoint(&ck, &dir).unwrap();
+        let loaded = load_train_checkpoint(&path).unwrap();
+        assert_eq!(loaded.step, 41);
+        assert_eq!(loaded.seed, 7);
+        assert_eq!(loaded.rng_state, 0xDEAD_BEEF);
+        assert_eq!(loaded.rng_spare, Some(0.125));
+        assert_eq!(loaded.params.omega, ck.params.omega);
+        assert_eq!(loaded.params.embed, ck.params.embed);
+        for (a, b) in loaded.params.layers.iter().zip(&ck.params.layers) {
+            assert_eq!(a.0, b.0);
+        }
+        assert_eq!(loaded.opt_layers, ck.opt_layers);
+        assert_eq!(loaded.opt_head, ck.opt_head);
+    }
+
+    #[test]
+    fn truncation_at_any_offset_is_detected() {
+        let dir = tmpdir("trunc");
+        let ck = sample_ckpt(1);
+        let path = save_train_checkpoint(&ck, &dir).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Every prefix must fail verification — the trailer pins both
+        // length and checksum, so no torn write can slip through.
+        let stride = (bytes.len() / 97).max(1);
+        for cut in (0..bytes.len()).step_by(stride) {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_train_checkpoint(&path).is_err(), "truncation at {cut} not caught");
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_train_checkpoint(&path).is_ok());
+    }
+
+    #[test]
+    fn bit_flips_are_detected() {
+        let dir = tmpdir("flip");
+        let ck = sample_ckpt(2);
+        let path = save_train_checkpoint(&ck, &dir).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let stride = (good.len() / 31).max(1);
+        for i in (0..good.len()).step_by(stride) {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(load_train_checkpoint(&path).is_err(), "flip at byte {i} not caught");
+        }
+    }
+
+    #[test]
+    fn latest_good_falls_back_past_corruption() {
+        let dir = tmpdir("fallback");
+        save_train_checkpoint(&sample_ckpt(10), &dir).unwrap();
+        save_train_checkpoint(&sample_ckpt(20), &dir).unwrap();
+        // Corrupt the newest: resume should fall back to step 10.
+        let newest = checkpoint_path(&dir, 20);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, ck) = latest_good(&dir).unwrap().expect("older checkpoint survives");
+        assert_eq!(ck.step, 10);
+        assert_eq!(path, checkpoint_path(&dir, 10));
+        // An empty/corrupt-only dir yields None, not an error.
+        std::fs::remove_file(&path).unwrap();
+        assert!(latest_good(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn retention_keeps_newest_three() {
+        let dir = tmpdir("keep");
+        for step in [1, 2, 3, 4, 5] {
+            save_train_checkpoint(&sample_ckpt(step), &dir).unwrap();
+        }
+        let files = checkpoint_files(&dir);
+        let steps: Vec<u64> = files.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![5, 4, 3]);
+    }
+}

@@ -2,19 +2,24 @@
 //! sharded Adam update, with full metric/memory/comm accounting per step.
 //! This is the event loop the `adjsh train` command and the examples run.
 
+pub mod checkpoint;
+
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use self::checkpoint::{AdamState, TrainCheckpoint};
 use crate::adjoint;
 use crate::baselines;
 use crate::config::{GradMode, RunConfig};
 use crate::data::{Corpus, Sample};
 use crate::exec::Executor;
 use crate::metrics::{Recorder, StepRecord};
-use crate::model::{GradSet, ParamSet};
+use crate::model::{GradSet, LayerParams, ParamSet};
 use crate::optim::ShardedAdam;
+use crate::rng::Rng;
 use crate::pipeline;
 use crate::runtime::{ArtifactSet, Runtime};
 use crate::schedule::BackwardPlan;
@@ -39,6 +44,10 @@ pub struct Trainer {
     /// backend's workers record overlap on their own thread-local
     /// entries, invisible to the coordinator's `arts.all_stats()`.
     pub last_overlap_s: Option<f64>,
+    /// The trainer's stochastic stream (reserved for stochastic training
+    /// ops). Checkpointed verbatim so a resumed run continues the exact
+    /// sequence the uninterrupted run would have drawn.
+    pub rng: Rng,
     opt: ShardedAdam,
     corpus: Box<dyn Corpus>,
     step_idx: usize,
@@ -81,6 +90,7 @@ impl Trainer {
         fleet.devices[head].account_persistent(head_bytes as u64);
 
         let executor = cfg.exec.build_with(cfg.fault.clone());
+        let seed = cfg.seed;
         Ok(Self {
             cfg,
             arts,
@@ -90,6 +100,7 @@ impl Trainer {
             last_plan: None,
             last_bwd_host_s: None,
             last_overlap_s: None,
+            rng: Rng::new(seed),
             opt,
             corpus,
             step_idx: 0,
@@ -205,6 +216,15 @@ impl Trainer {
     pub fn run(&mut self, steps: usize) -> Result<()> {
         for i in 0..steps {
             let rec = self.step()?;
+            // Crash-safe checkpointing: full training state, written
+            // atomically so a kill at any instant resumes bit-identically
+            // from the latest durable step (DESIGN.md §Fault-Tolerance).
+            let every = self.cfg.checkpoint_every;
+            if every > 0 && self.step_idx % every == 0 {
+                let dir = self.checkpoint_dir();
+                let path = self.save_train_checkpoint(&dir)?;
+                println!("checkpoint: wrote {}", path.display());
+            }
             if i % self.cfg.log_every == 0 || i + 1 == steps {
                 println!(
                     "step {:>5}  loss {:.4}  |g| {:.3e}  wall {:.2}s  virt {:.4}s  peak {}  vjp {}",
@@ -267,26 +287,141 @@ impl Trainer {
         Ok(())
     }
 
-    /// Save a checkpoint (params + step counter); resume with
-    /// [`Trainer::resume_from`].
-    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+    /// Save a legacy params-only checkpoint (params + step counter);
+    /// resume with [`Trainer::resume_from`]. For crash-safe resume with
+    /// optimizer moments and RNG state, use
+    /// [`Trainer::save_train_checkpoint`] / [`Trainer::resume_latest`].
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
         self.params.save(path, self.step_idx as u64)
     }
 
-    /// Restore parameters and the data-stream position from a checkpoint
-    /// (the optimizer moments restart — standard for this format tier).
-    pub fn resume_from(&mut self, path: &std::path::Path) -> Result<()> {
-        let (params, step) = ParamSet::load(path)?;
-        if params.layers.len() != self.cfg.dims.k {
-            anyhow::bail!(
-                "checkpoint has {} layers, config wants {}",
-                params.layers.len(),
-                self.cfg.dims.k
+    /// Check a loaded parameter set against this run's topology: layer
+    /// count, every per-layer tensor shape, Ω, and the embedding. A
+    /// checkpoint from different dims is refused outright — never
+    /// partially adopted.
+    fn validate_param_shapes(&self, params: &ParamSet) -> Result<()> {
+        let d = &self.cfg.dims;
+        if params.layers.len() != d.k {
+            bail!("checkpoint has {} layers, config wants {}", params.layers.len(), d.k);
+        }
+        let want = LayerParams::shapes(d);
+        for (k, l) in params.layers.iter().enumerate() {
+            if l.0.len() != want.len() {
+                bail!("layer {k}: checkpoint has {} tensors, expected {}", l.0.len(), want.len());
+            }
+            for (i, t) in l.0.iter().enumerate() {
+                if t.shape() != want[i] {
+                    bail!(
+                        "layer {k} tensor {i}: checkpoint shape {:?}, config wants {:?}",
+                        t.shape(),
+                        want[i]
+                    );
+                }
+            }
+        }
+        if params.omega.shape() != [d.p, d.v] {
+            bail!(
+                "Ω shape mismatch: checkpoint {:?}, config wants [{}, {}]",
+                params.omega.shape(),
+                d.p,
+                d.v
             );
         }
+        if params.embed.shape() != [d.v, d.p] {
+            bail!(
+                "embedding shape mismatch: checkpoint {:?}, config wants [{}, {}]",
+                params.embed.shape(),
+                d.v,
+                d.p
+            );
+        }
+        Ok(())
+    }
+
+    /// Restore parameters and the data-stream position from a legacy
+    /// params-only checkpoint (the optimizer moments and RNG restart —
+    /// use the full-state format for bit-identical resume). Every tensor
+    /// shape is validated against `cfg.dims` before anything is adopted.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let (params, step) = ParamSet::load(path)?;
+        self.validate_param_shapes(&params)?;
         self.params = params;
         self.step_idx = step as usize;
         Ok(())
+    }
+
+    /// The checkpoint directory this run writes/reads:
+    /// `--checkpoint-dir`, defaulting to `checkpoints/`.
+    pub fn checkpoint_dir(&self) -> PathBuf {
+        self.cfg.checkpoint_dir.clone().unwrap_or_else(|| PathBuf::from("checkpoints"))
+    }
+
+    /// Snapshot the *full* training state — params, every sharded Adam
+    /// shard's moments, RNG, and the data-stream position (= step index).
+    pub fn train_checkpoint(&self) -> TrainCheckpoint {
+        let snap = |opt: &crate::optim::Adam| {
+            let (step, m, v) = opt.state();
+            AdamState { step, m: m.to_vec(), v: v.to_vec() }
+        };
+        let (rng_state, rng_spare) = self.rng.state();
+        TrainCheckpoint {
+            step: self.step_idx as u64,
+            seed: self.cfg.seed,
+            params: self.params.clone(),
+            opt_layers: self.opt.per_layer.iter().map(snap).collect(),
+            opt_head: snap(&self.opt.head),
+            rng_state,
+            rng_spare,
+        }
+    }
+
+    /// Write a full-state checkpoint into `dir` (atomic; keeps the newest
+    /// three). Returns the written path.
+    pub fn save_train_checkpoint(&self, dir: &Path) -> Result<PathBuf> {
+        checkpoint::save_train_checkpoint(&self.train_checkpoint(), dir)
+    }
+
+    /// Adopt a verified full-state checkpoint: params, optimizer moments,
+    /// RNG, and step index — after validating the seed and every tensor
+    /// shape against this run's config. Training continues bit-identically
+    /// to the run that wrote it.
+    pub fn resume_train_checkpoint(&mut self, ck: TrainCheckpoint) -> Result<()> {
+        if ck.seed != self.cfg.seed {
+            bail!("checkpoint is from seed {}, this run uses {}", ck.seed, self.cfg.seed);
+        }
+        self.validate_param_shapes(&ck.params)?;
+        if ck.opt_layers.len() != self.opt.per_layer.len() {
+            bail!(
+                "checkpoint has {} optimizer shards, config wants {}",
+                ck.opt_layers.len(),
+                self.opt.per_layer.len()
+            );
+        }
+        for (opt, s) in self.opt.per_layer.iter_mut().zip(ck.opt_layers) {
+            opt.restore(s.step, s.m, s.v)?;
+        }
+        self.opt.head.restore(ck.opt_head.step, ck.opt_head.m, ck.opt_head.v)?;
+        self.params = ck.params;
+        self.rng = Rng::from_state(ck.rng_state, ck.rng_spare);
+        self.step_idx = ck.step as usize;
+        Ok(())
+    }
+
+    /// Resume from the newest checkpoint in `dir` that verifies (torn or
+    /// corrupt files are skipped — see [`checkpoint::latest_good`]).
+    /// Returns the resumed step, or `None` if the directory holds no
+    /// loadable checkpoint (the run starts from scratch).
+    pub fn resume_latest(&mut self, dir: &Path) -> Result<Option<u64>> {
+        match checkpoint::latest_good(dir)? {
+            Some((path, ck)) => {
+                let step = ck.step;
+                self.resume_train_checkpoint(ck)
+                    .with_context(|| format!("resuming from {}", path.display()))?;
+                println!("resumed from {} (step {step})", path.display());
+                Ok(Some(step))
+            }
+            None => Ok(None),
+        }
     }
 
     /// Held-out loss over `n` fresh sequences (sampled past the train stream).

@@ -5,4 +5,5 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
 pub mod json;

@@ -3,7 +3,10 @@
 //! ISSUE 6, injected *worker deaths* must surface as bit-identical
 //! gradients: live-executor tests kill lanes mid-run under the sim,
 //! threaded, and process backends and assert the recovered `GradSet`
-//! matches a healthy run exactly.
+//! matches a healthy run exactly. ISSUE 7 extends the contract to
+//! *hung* workers (detected by the straggler→kill deadline ladder) and
+//! crash-looping workers (bounded respawn, then retirement) — same
+//! bit-identity requirement.
 
 use std::path::{Path, PathBuf};
 
@@ -11,7 +14,7 @@ use adjoint_sharding::adjoint::{self, put_synthetic_activations, StagePool};
 use adjoint_sharding::config::{ModelDims, RunConfig, SchedCfg, TopologyCfg};
 use adjoint_sharding::data::MarkovCorpus;
 use adjoint_sharding::exec::{
-    Executor, FaultPlan, FaultReport, ProcessExecutor, SimExecutor, ThreadedExecutor,
+    Executor, FaultPlan, FaultReport, ProcessExecutor, SimExecutor, SuperviseCfg, ThreadedExecutor,
 };
 use adjoint_sharding::model::{GradSet, ParamSet};
 use adjoint_sharding::runtime::{ArtifactSet, Manifest, Runtime};
@@ -317,6 +320,99 @@ fn process_death_then_rejoin_recovers_bit_identical() {
     assert_bit_identical(&grads, &healthy, "process death+rejoin");
     assert_recovered_exactly_once(&report, "process death+rejoin");
     assert_eq!(report.unwrap().rejoined, vec![1], "rejoin must be recorded");
+}
+
+// ---------------------------------------------------------------------------
+// Hung workers and crash loops (ISSUE 7): a lane that freezes mid-phase
+// must be detected by the deadline ladder (straggler warning, then kill)
+// and recovered bit-identically; a lane that dies on every respawn must
+// trip the crash-loop breaker and be retired while the run completes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_hang_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // Lane 0 wedges after 1 item: the sim models the kill escalation,
+    // so the hang prices out exactly like a death at the same point.
+    let plan: FaultPlan = "0@1+hang".parse().unwrap();
+    let (grads, report) = faulted_backward(&mut SimExecutor::with_faults(Some(plan)));
+    assert_bit_identical(&grads, &healthy, "sim hang at item 1");
+    assert_recovered_exactly_once(&report, "sim hang at item 1");
+    let r = report.unwrap();
+    assert_eq!(r.hung, vec![0], "hang must be recorded as hung, not just dead");
+    assert_eq!(r.stragglers, vec![0], "a hung lane is first flagged as a straggler");
+}
+
+#[test]
+fn threaded_hang_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // The worker thread really sleeps; a short per-dispatch deadline
+    // escalates straggler -> kill, and the lane's thread is abandoned.
+    let plan: FaultPlan = "0@1+hang".parse().unwrap();
+    let sup = SuperviseCfg { worker_timeout_s: 2.0, ..Default::default() };
+    let mut exec = ThreadedExecutor::with_faults(0, Some(plan)).with_supervision(sup);
+    let (grads, report) = faulted_backward(&mut exec);
+    assert_bit_identical(&grads, &healthy, "threaded hang at item 1");
+    assert_recovered_exactly_once(&report, "threaded hang at item 1");
+    let r = report.unwrap();
+    assert_eq!(r.hung, vec![0], "threaded hang must be recorded");
+    assert!(!r.stragglers.is_empty(), "hang must pass through the straggler rung");
+}
+
+#[test]
+fn process_hang_recovers_bit_identical() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // The child process wedges with live heartbeats but a frozen progress
+    // counter; the coordinator SIGKILLs it at 2x the deadline and re-plans.
+    let plan: FaultPlan = "1@1+hang".parse().unwrap();
+    let sup = SuperviseCfg { worker_timeout_s: 2.0, ..Default::default() };
+    let mut exec = process_executor(Some(plan)).with_supervision(sup);
+    let (grads, report) = faulted_backward(&mut exec);
+    assert_bit_identical(&grads, &healthy, "process hang at item 1");
+    assert_recovered_exactly_once(&report, "process hang at item 1");
+    let r = report.unwrap();
+    assert_eq!(r.hung, vec![1], "process hang must be recorded");
+    assert_eq!(r.deaths[0].lane, 1, "the hung lane is killed, so it shows as a death");
+}
+
+#[test]
+fn crash_loop_retires_lane_and_completes() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let (healthy, _) = faulted_backward(&mut SimExecutor::new());
+    // `+loop` re-arms the kill on every respawn: lane 1 dies at item 0,
+    // respawns twice (the budget), dies both times, and is retired; its
+    // whole range re-plans onto lane 0 and the run still completes.
+    let check = |label: &str, exec: &mut dyn Executor, healthy: &GradSet| {
+        let (grads, report) = faulted_backward(exec);
+        let ctx = format!("{label} crash loop on lane 1");
+        assert_bit_identical(&grads, healthy, &ctx);
+        assert_recovered_exactly_once(&report, &ctx);
+        let r = report.unwrap();
+        assert_eq!(r.respawns, vec![(1, 2)], "{ctx}: both respawn attempts must be recorded");
+        assert_eq!(r.retired, vec![1], "{ctx}: the crash-looping lane must be retired");
+        assert!(r.rejoined.is_empty(), "{ctx}: a retired lane never counts as rejoined");
+    };
+    let plan: FaultPlan = "1@0+loop".parse().unwrap();
+    let sup = SuperviseCfg { respawn_max: 2, respawn_backoff_s: 0.01, ..Default::default() };
+    let mut sim = SimExecutor::with_faults(Some(plan.clone())).with_supervision(sup);
+    check("sim", &mut sim, &healthy);
+    let mut thr = ThreadedExecutor::with_faults(0, Some(plan)).with_supervision(sup);
+    check("threaded", &mut thr, &healthy);
 }
 
 #[test]

@@ -359,7 +359,7 @@ fn prop_recovery_replan_covers_orphans_exactly_once() {
             };
             let rejoin =
                 if force_multi { kills.is_empty() } else { devices == 1 || rng.chance(0.5) };
-            kills.push(Fault { lane, after_items, rejoin });
+            kills.push(Fault::kill(lane, after_items, rejoin));
         }
         let plan = FaultPlan { kills };
         let split = split_faults(&plan, n_lanes, &lane_items)

@@ -126,8 +126,8 @@ fn sim_and_threaded_executors_serve_identical_streams() {
     let params = Arc::new(ParamSet::init(&dims, 13));
     let mut streams = Vec::new();
     for exec in [
-        ExecCfg { kind: ExecutorKind::Sim, workers: 0 },
-        ExecCfg { kind: ExecutorKind::Threaded, workers: 2 },
+        ExecCfg { kind: ExecutorKind::Sim, ..ExecCfg::default() },
+        ExecCfg { kind: ExecutorKind::Threaded, workers: 2, ..ExecCfg::default() },
     ] {
         let mut sl = mk_loop(&dir, &dims, &params, exec, 3, default_admission(&dims));
         assert_eq!(sl.executor_kind(), exec.kind);

@@ -1,0 +1,211 @@
+//! `cargo bench --bench offload` — the §Memory-Frontier profile
+//! (EXPERIMENTS.md): tier-transition cost (spill + restore roundtrip),
+//! truncated vs full-window staging, offload-aware planning overhead,
+//! and — when `make artifacts` has run — whole training steps under
+//! forced paging and truncation vs the untouched baseline.
+//!
+//! Always writes machine-readable results to `BENCH_offload.json`
+//! (placeholder-aware: `adjsh bench offload` refuses files with no
+//! measured rows). The host-side section needs no artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use adjoint_sharding::adjoint::{self, ItemStage};
+use adjoint_sharding::config::{GradMode, ModelDims, RunConfig, TopologyCfg};
+use adjoint_sharding::data::MarkovCorpus;
+use adjoint_sharding::runtime::Runtime;
+use adjoint_sharding::schedule::{self, PolicyKind, SchedItem};
+use adjoint_sharding::sharding::plan_chunks;
+use adjoint_sharding::topology::{ActKind, Fleet};
+use adjoint_sharding::train::Trainer;
+use adjoint_sharding::util::bench::{bench, write_json, BenchStats};
+
+/// Same host-bench dims as `hotpath.rs`, so the two profiles compose.
+fn host_dims() -> ModelDims {
+    ModelDims {
+        name: "offload-host".into(),
+        v: 64,
+        p: 32,
+        n: 32,
+        k: 4,
+        t: 512,
+        w: 64,
+        c: 64,
+        eps: 1e-6,
+    }
+}
+
+fn host_section(results: &mut Vec<BenchStats>) {
+    let dims = host_dims();
+    let topo = TopologyCfg { devices: 2, offload: true, ..Default::default() };
+    let mut fleet = Fleet::new(topo, dims.k).unwrap();
+    adjoint::put_synthetic_activations(&dims, &mut fleet, 7);
+    let items = plan_chunks(dims.k, dims.t, dims.c).unwrap();
+    let item = items[items.len() / 2];
+
+    println!(
+        "-- tier transitions + truncated staging (K={} T={} W={} C={}) --",
+        dims.k, dims.t, dims.w, dims.c
+    );
+
+    // One whole layer out to the host tier and back: the accounting cost
+    // a mid-phase eviction pays on the coordinator (the simulated D2H/H2D
+    // wire time is modeled separately by `memcost::OffloadModel`).
+    let s = bench("spill_restore_roundtrip(layer)", 3, 100, 0.5, || {
+        let d = &mut fleet.devices[0];
+        let moved = d.spill_layer(0);
+        for kind in [ActKind::Xhat, ActKind::H, ActKind::A, ActKind::C] {
+            d.restore(0, kind).unwrap();
+        }
+        moved
+    });
+    println!("{s}");
+    results.push(s);
+
+    // Truncated gather vs full-window gather: the `--truncate-window`
+    // staging path adds only a tail zero-fill on V_EXT.
+    let dev = fleet.device_of_layer(item.layer);
+    let mut stage = ItemStage::new();
+    adjoint::gather_item_args_into_from_truncated(
+        &dims,
+        &fleet.devices[dev],
+        &item,
+        dims.w,
+        &mut stage,
+    )
+    .unwrap(); // warm the arena
+    let s = bench("gather_into(full window)", 3, 50, 0.5, || {
+        adjoint::gather_item_args_into_from_truncated(
+            &dims,
+            &fleet.devices[dev],
+            &item,
+            dims.w,
+            &mut stage,
+        )
+        .unwrap();
+        stage.view(adjoint::stage_slot::V_EXT).len()
+    });
+    println!("{s}");
+    results.push(s);
+    let s = bench("gather_into(truncated W/4)", 3, 50, 0.5, || {
+        adjoint::gather_item_args_into_from_truncated(
+            &dims,
+            &fleet.devices[dev],
+            &item,
+            dims.w / 4,
+            &mut stage,
+        )
+        .unwrap();
+        stage.view(adjoint::stage_slot::V_EXT).len()
+    });
+    println!("{s}");
+    results.push(s);
+
+    // Planning overhead of spill-over-defer admission: same 256-item
+    // phase, defer-only vs with an evictable pool under a tight cap.
+    let sched_items: Vec<SchedItem> = (0..256)
+        .map(|i| SchedItem {
+            id: i,
+            device: i % 2,
+            layer: i / 32,
+            cost_s: 1e-3,
+            ready_at: 0.0,
+            mem_bytes: 600,
+        })
+        .collect();
+    let caps = vec![Some(1000u64); 2];
+    let spillable: Vec<BTreeMap<usize, u64>> = (0..2)
+        .map(|_| (0..8usize).map(|l| (l, 200u64)).collect())
+        .collect();
+    let policy = PolicyKind::Fifo.policy();
+    let s = bench("plan_backward(defer-only)", 3, 50, 0.5, || {
+        schedule::plan_backward(&sched_items, None, 0.0, 2, 7, &caps, policy.as_ref())
+            .unwrap()
+            .schedule
+            .scheduled_items()
+    });
+    println!("{s}");
+    results.push(s);
+    let s = bench("plan_backward_offload(spill-coldest)", 3, 50, 0.5, || {
+        schedule::plan_backward_offload(
+            &sched_items,
+            None,
+            0.0,
+            2,
+            7,
+            &caps,
+            policy.as_ref(),
+            &spillable,
+        )
+        .unwrap()
+        .schedule
+        .spilled_bytes()
+    });
+    println!("{s}");
+    results.push(s);
+}
+
+fn pjrt_section(root: &Path, config: &str, results: &mut Vec<BenchStats>) {
+    println!("\n-- whole training steps ('{config}') --\n");
+    // Baseline, forced paging (1-byte HBM cap spills every stored layer),
+    // and a W/4 truncation window. Wall time should be near-flat across
+    // the three: spills are tier flips on the accountant, and truncation
+    // keeps the kernel shapes (the slab is zero-tailed, not shrunk) — the
+    // win truncation buys is *modeled* VJP units, which `adjsh bench
+    // tbar-sweep` reports.
+    let variants: [(&str, Box<dyn Fn(&mut RunConfig)>); 3] = [
+        ("train_step(adjoint)", Box::new(|_: &mut RunConfig| {})),
+        (
+            "train_step(adjoint, forced-spill)",
+            Box::new(|cfg: &mut RunConfig| {
+                cfg.topology.offload = true;
+                cfg.topology.hbm_bytes = 1;
+            }),
+        ),
+        (
+            "train_step(adjoint, truncate W/4)",
+            Box::new(|cfg: &mut RunConfig| {
+                cfg.sched.truncate_window = (cfg.dims.w / 4).max(1);
+            }),
+        ),
+    ];
+    for (label, tweak) in variants {
+        let rt = Runtime::shared().expect("pjrt");
+        let mut cfg = RunConfig::load(root, config).unwrap();
+        cfg.grad_mode = GradMode::Adjoint;
+        cfg.log_every = usize::MAX;
+        tweak(&mut cfg);
+        let v = cfg.dims.v;
+        let mut tr = Trainer::new(rt, cfg, Box::new(MarkovCorpus::new(v, 0))).unwrap();
+        let s = bench(label, 2, 10, 1.5, || tr.step().unwrap().loss);
+        println!("{s}");
+        results.push(s);
+    }
+}
+
+fn main() {
+    let root = Path::new("artifacts");
+    let config = "small";
+    let have_artifacts = root.join(config).join("manifest.json").exists();
+
+    println!("== offload / truncation micro-benches ==\n");
+    let mut results: Vec<BenchStats> = Vec::new();
+    host_section(&mut results);
+    let note = if have_artifacts {
+        "host + PJRT sections; host dims K=4 T=512 W=64 C=64".to_string()
+    } else {
+        eprintln!(
+            "\nSKIP PJRT section: artifacts/{config} missing — run `make artifacts` \
+             (tier-transition benches above ran without it)"
+        );
+        "host section only; artifacts missing; host dims K=4 T=512 W=64 C=64".to_string()
+    };
+    if have_artifacts {
+        pjrt_section(root, config, &mut results);
+    }
+
+    let out = Path::new("BENCH_offload.json");
+    write_json(out, "offload", false, &note, &results).expect("writing bench json");
+    println!("\nwrote {}", out.display());
+}

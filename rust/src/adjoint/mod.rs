@@ -52,6 +52,26 @@ pub struct AdjointOutput {
     /// single-item path, one per [`BatchGroup`] (≈ items / M) when the
     /// batched entry dispatches.
     pub calls: u64,
+    /// Activation bytes the planner spilled to the pinned-host tier to
+    /// unblock memory-stalled phases (0 without `--offload`). Like the
+    /// spill/restore seconds below, this is MODELED from the analytic
+    /// plan's [`schedule::SpillDecision`]s plus `memcost`'s closed-form
+    /// link costs — the same on every backend by construction.
+    pub spilled_bytes: u64,
+    /// Modeled D2H seconds of those spills ([`memcost::OffloadModel`]).
+    pub spill_s: f64,
+    /// Modeled H2D seconds restoring spilled layers for their items'
+    /// stages. An upper bound on the *exposed* restore time: prefetch
+    /// hits ride the double-buffered stage pair and hide under in-flight
+    /// VJP compute (the same caveat `overlap_s` carries).
+    pub restore_s: f64,
+    /// Dispatches whose spilled-layer activations were prefetchable —
+    /// a prior group was in flight on the same lane, so the H2D restore
+    /// rides the stage-pair overlap window.
+    pub prefetch_hit: u64,
+    /// Dispatches that needed a spilled layer with nothing in flight to
+    /// hide the restore behind (lane-first groups, single-item path).
+    pub prefetch_miss: u64,
     /// The virtual-time plan the phase ran under: per-slot timelines,
     /// binding constraints, peak concurrent transients, critical path.
     /// Re-planned from *measured* item seconds after execution (the
@@ -212,10 +232,21 @@ fn slot_shape(slot: usize, c: usize, w: usize, n: usize, p: usize) -> [usize; 2]
 /// padding copy sequence, shared verbatim by [`gather_item_args_into_from`]
 /// (single-item, `out` = the whole slot) and
 /// [`gather_group_args_into_from`] (batched, `out` = the item's sub-slab).
+///
+/// `w` is the entry's static window (shapes are `c + w` rows regardless);
+/// `w_eff ≤ w` is the *effective* truncation window (`--truncate-window`,
+/// via [`ModelDims::effective_window`]): cotangent rows at relative index
+/// ≥ `c + w_eff` are zeroed, and the kernel's padding contract — a zero
+/// `v_ext` row kills every gradient term it touches *exactly*, because
+/// adding the resulting signed zeros leaves accumulators unchanged —
+/// clips those out-of-window terms while keeping every surviving term
+/// bit-identical to the full run's corresponding partial sum. With
+/// `w_eff == w` the staged bytes are byte-for-byte the untruncated ones.
 fn stage_item_slot(
     src: &dyn ActSource,
     item: &WorkItem,
     w: usize,
+    w_eff: usize,
     slot: usize,
     out: &mut [f32],
 ) -> Result<()> {
@@ -243,9 +274,19 @@ fn stage_item_slot(
         C_EXT => src
             .act(item.layer, ActKind::C)?
             .slice_rows_padded_into(i0, c + w, out),
-        V_EXT => src
-            .act(usize::MAX, ActKind::Cotangent)?
-            .slice_rows_padded_into(i0, c + w, out),
+        V_EXT => {
+            src.act(usize::MAX, ActKind::Cotangent)?
+                .slice_rows_padded_into(i0, c + w, out)?;
+            if w_eff < w {
+                // Truncated adjoint (§4.3): drop cotangent dependencies
+                // past the effective window. Only `v_ext` needs zeroing —
+                // an `a_ext`/`c_ext` row paired with a zero cotangent row
+                // contributes exactly zero already.
+                let cols = out.len() / (c + w);
+                out[(c + w_eff) * cols..].fill(0.0);
+            }
+            Ok(())
+        }
         _ => unreachable!("unknown stage slot {slot}"),
     }
 }
@@ -258,11 +299,26 @@ pub fn gather_item_args_into_from(
     item: &WorkItem,
     stage: &mut ItemStage,
 ) -> Result<()> {
+    gather_item_args_into_from_truncated(dims, src, item, dims.w, stage)
+}
+
+/// [`gather_item_args_into_from`] with an explicit effective window
+/// `w_eff ≤ dims.w` (`--truncate-window`, resolved by
+/// [`SchedCfg::window`]): staged shapes are unchanged (the artifact's
+/// static `c + w` slab), but cotangent rows past `c + w_eff` are zeroed
+/// — see [`stage_item_slot`]. `w_eff == dims.w` is a byte-for-byte no-op.
+pub fn gather_item_args_into_from_truncated(
+    dims: &ModelDims,
+    src: &dyn ActSource,
+    item: &WorkItem,
+    w_eff: usize,
+    stage: &mut ItemStage,
+) -> Result<()> {
     let w = dims.w;
     for slot in 0..stage_slot::COUNT {
         let [rows, cols] = slot_shape(slot, item.chunk_len, w, dims.n, dims.p);
         let buf = stage.fill(slot, rows, cols);
-        stage_item_slot(src, item, w, slot, buf)?;
+        stage_item_slot(src, item, w, w_eff, slot, buf)?;
     }
     Ok(())
 }
@@ -285,6 +341,22 @@ pub fn gather_group_args_into_from(
     items: &[WorkItem],
     group: &BatchGroup,
     m_static: usize,
+    stage: &mut ItemStage,
+) -> Result<()> {
+    gather_group_args_into_from_truncated(dims, src, items, group, m_static, dims.w, stage)
+}
+
+/// [`gather_group_args_into_from`] with an explicit effective window
+/// (see [`gather_item_args_into_from_truncated`]); member sub-slabs stay
+/// bit-identical to truncated single-item stages by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_group_args_into_from_truncated(
+    dims: &ModelDims,
+    src: &dyn ActSource,
+    items: &[WorkItem],
+    group: &BatchGroup,
+    m_static: usize,
+    w_eff: usize,
     stage: &mut ItemStage,
 ) -> Result<()> {
     if group.ids.is_empty() || group.ids.len() > m_static {
@@ -316,7 +388,7 @@ pub fn gather_group_args_into_from(
                     dims.c
                 );
             }
-            stage_item_slot(src, item, w, slot, &mut slab[mi * per..(mi + 1) * per])?;
+            stage_item_slot(src, item, w, w_eff, slot, &mut slab[mi * per..(mi + 1) * per])?;
         }
         slab[group.ids.len() * per..].fill(0.0);
     }
@@ -447,13 +519,23 @@ pub fn backward_pooled(
     let static_m = batched_spec.map(exec::batched_entry_width).transpose()?;
     let mut width = exec::resolve_adjoint_batch(sched.adjoint_batch, static_m);
 
-    // Admission headroom per device: the HBM budget minus what is already
-    // resident (activations, cotangents, params) when the phase starts.
+    // Admission headroom per device: the HBM budget minus what is
+    // *HBM-resident* (activations, cotangents, params) when the phase
+    // starts — `d.mem.live` tracks the HBM tier only, so bytes already
+    // spilled to the pinned-host tier don't shrink the transient charge's
+    // headroom (residency-aware admission). Under `--offload` the
+    // scheduler additionally widens this cap by whatever it pages out
+    // mid-phase (the spill-over-defer branch's freed bytes).
     let mem_caps: Vec<Option<u64>> = fleet
         .devices
         .iter()
         .map(|d| Some(fleet.cfg.hbm_bytes.saturating_sub(d.mem.live)))
         .collect();
+
+    // Snapshot the evictable tier before planning mutates residency: the
+    // dispatch plan and the measured re-plan below must see the same
+    // spill candidates for their decisions to agree.
+    let spillable = fleet.spillable_by_device();
 
     // One batched call always stages the *full* static-M slab (ragged
     // groups zero-pad, they don't shrink the literals), so if the
@@ -493,6 +575,18 @@ pub fn backward_pooled(
     let dispatch =
         exec::plan_dispatch(dims, fleet, &items, sched, transient_bytes, &mem_caps, width)?;
 
+    // Commit the plan's spill decisions to the fleet *before* execution:
+    // the chosen layers physically move to the pinned-host tier (byte
+    // accounting HBM → host; the `Arc`s stay put — workers' snapshots are
+    // tier-blind), so residency during the phase matches what the plan
+    // admitted against. Deterministic across backends because the
+    // decisions come from the analytic plan, never from measured time.
+    let spill_decisions: Vec<schedule::SpillDecision> =
+        dispatch.plan.schedule.spills().copied().collect();
+    for s in &spill_decisions {
+        fleet.devices[s.device].spill_layer(s.layer);
+    }
+
     // Execute every VJP bundle once; measured seconds become the virtual
     // service costs (the transient working set is "disposed after the
     // computation", §3.3 — its lifetime in virtual time is the span the
@@ -503,10 +597,54 @@ pub fn backward_pooled(
         grads,
     )?;
 
+    // Modeled offload accounting (see `AdjointOutput`): D2H spill cost
+    // per decision; H2D restore cost once per spilled layer that still
+    // has pending items (the coldest-first policy prefers layers with
+    // none — those never come back). A restore counts as a prefetch hit
+    // when the layer's first dispatch in its lane has a prior call to
+    // hide the H2D under (the double-buffered stage pair); lane-first
+    // dispatches and the single-item path (no stage pair) are misses.
+    let om = crate::memcost::OffloadModel::from_link(fleet.cfg.host_link_bytes_per_s);
+    let mut spilled_bytes = 0u64;
+    let mut spill_s = 0.0;
+    let mut restore_s = 0.0;
+    let (mut prefetch_hit, mut prefetch_miss) = (0u64, 0u64);
+    for s in &spill_decisions {
+        spilled_bytes += s.bytes;
+        spill_s += om.spill_s(s.bytes);
+        let first = if width > 1 {
+            dispatch.groups[s.device].iter().position(|g| g.layer == s.layer)
+        } else {
+            dispatch.queues[s.device].iter().position(|&id| items[id].layer == s.layer)
+        };
+        match first {
+            None => {} // never used again: spilled for good, no restore
+            Some(pos) => {
+                restore_s += om.restore_s(s.bytes);
+                if pos > 0 && width > 1 {
+                    prefetch_hit += 1;
+                } else {
+                    prefetch_miss += 1;
+                }
+            }
+        }
+    }
+    if !spill_decisions.is_empty() {
+        let entry_name =
+            if width > 1 { "layer_adjoint_grad_batched" } else { "layer_adjoint_grad" };
+        if let Some(e) = arts.cached_entry(entry_name) {
+            e.note_offload(prefetch_hit, prefetch_miss, spill_s, restore_s);
+        }
+    }
+
+    // Effective truncation window (`--truncate-window`, §4.3): the
+    // analytic unit count matches what the truncated gather executed —
+    // per layer it sums to `T + 2·vjp_count_truncated(T, w_eff)`.
+    let w_eff = sched.window(dims);
     let mut sched_items = Vec::with_capacity(items.len());
     let mut vjp_units = 0u64;
     for (id, item) in items.iter().enumerate() {
-        vjp_units += item.vjp_units(dims.w, dims.t);
+        vjp_units += item.vjp_units(w_eff, dims.t);
         sched_items.push(SchedItem {
             id,
             device: fleet.device_of_layer(item.layer),
@@ -532,7 +670,9 @@ pub fn backward_pooled(
     let seq_start_s = fwd_timing.map(|t| t.virtual_s).unwrap_or(0.0);
 
     let policy = sched.policy.policy();
-    let plan = schedule::plan_backward(
+    // Measured re-plan sees the same pre-spill snapshot the dispatch plan
+    // saw (reporting-only: its spill decisions are not re-applied).
+    let plan = schedule::plan_backward_offload(
         &sched_items,
         overlap_ready.as_deref(),
         seq_start_s,
@@ -540,6 +680,7 @@ pub fn backward_pooled(
         fleet.cfg.mig_slots,
         &mem_caps,
         policy.as_ref(),
+        &spillable,
     )?;
 
     // Charge each device's virtual clock with its occupied window (wall
@@ -560,6 +701,11 @@ pub fn backward_pooled(
         overlap_s: outcome.overlap_s,
         vjp_units,
         calls: outcome.calls,
+        spilled_bytes,
+        spill_s,
+        restore_s,
+        prefetch_hit,
+        prefetch_miss,
         plan,
     })
 }

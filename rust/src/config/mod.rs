@@ -76,6 +76,21 @@ impl ModelDims {
     pub fn num_chunks(&self) -> usize {
         self.t / self.c
     }
+
+    /// The effective adjoint window under `--truncate-window W`
+    /// (`SchedCfg::truncate_window`): 0 = off (the artifact's full
+    /// window `w`); otherwise `min(W, w)` — the lowered kernel's slab
+    /// shapes are fixed at `c + w` rows, so a tighter window is realized
+    /// by zeroing the cotangent rows past it (the zero-padding contract:
+    /// zero rows kill their gradient terms exactly, leaving the
+    /// surviving terms bit-identical — DESIGN.md §Truncated-Adjoint).
+    pub fn effective_window(&self, truncate: usize) -> usize {
+        if truncate == 0 {
+            self.w
+        } else {
+            truncate.min(self.w)
+        }
+    }
 }
 
 /// How gradients are computed each step.
@@ -113,6 +128,17 @@ pub struct TopologyCfg {
     pub link_bytes_per_s: f64,
     /// Per-message link latency, seconds.
     pub link_latency_s: f64,
+    /// Activation offload tier (`--offload`): when HBM headroom runs
+    /// out, cold activations spill to pinned host RAM instead of
+    /// deferring work (DESIGN.md §Offload). Off by default — the
+    /// accounting and plans are bit-for-bit the pre-offload ones.
+    pub offload: bool,
+    /// Pinned host-RAM budget for the offload tier, bytes, node-shared
+    /// across the simulated devices (`--host-gb`; P4-ish 1.1 TB default).
+    pub host_bytes: u64,
+    /// Modeled HBM ↔ pinned-host link bandwidth, bytes/s (PCIe-gen4-ish
+    /// default) — what a spill (D2H) or restore (H2D) pays per byte.
+    pub host_link_bytes_per_s: f64,
 }
 
 impl Default for TopologyCfg {
@@ -123,6 +149,9 @@ impl Default for TopologyCfg {
             hbm_bytes: 80 << 30,
             link_bytes_per_s: 300e9,
             link_latency_s: 5e-6,
+            offload: false,
+            host_bytes: 1100 << 30,
+            host_link_bytes_per_s: 25e9,
         }
     }
 }
@@ -147,6 +176,22 @@ pub struct SchedCfg {
     /// §Batched-Backward); the width only changes how many PJRT
     /// dispatches the phase pays.
     pub adjoint_batch: usize,
+    /// Truncated adjoint sharding (`--truncate-window W`, paper §4.3):
+    /// clip every token's cotangent lookback to W positions instead of
+    /// the artifact's full window, making backward time near-linear in T
+    /// at the cost of the out-of-window gradient terms. 0 = off. The
+    /// surviving in-window terms are bit-identical to the full run's
+    /// corresponding partial sums (DESIGN.md §Truncated-Adjoint), and
+    /// the measured `vjp_units` equal `vjp_count_truncated(t, W)`.
+    pub truncate_window: usize,
+}
+
+impl SchedCfg {
+    /// The effective backward window for `dims` under this config
+    /// (`dims.w` when truncation is off).
+    pub fn window(&self, dims: &ModelDims) -> usize {
+        dims.effective_window(self.truncate_window)
+    }
 }
 
 impl Default for SchedCfg {
@@ -158,7 +203,7 @@ impl Default for SchedCfg {
         // makespan over-packed, reporting honestly longer phases.
         // Batched dispatch defaults to auto: bit-identical gradients,
         // ~M× fewer PJRT calls.
-        Self { policy: PolicyKind::Fifo, overlap: false, adjoint_batch: 0 }
+        Self { policy: PolicyKind::Fifo, overlap: false, adjoint_batch: 0, truncate_window: 0 }
     }
 }
 

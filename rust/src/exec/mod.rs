@@ -292,6 +292,11 @@ pub fn plan_dispatch(
     mem_caps: &[Option<u64>],
     batch: usize,
 ) -> Result<Dispatch> {
+    // Analytic item weights use the *effective* window: under
+    // `--truncate-window` the out-of-window cotangent terms are zeroed
+    // away, so the modeled VJP work per item shrinks accordingly
+    // (`vjp_count_truncated` is the paper-count cross-check).
+    let w_eff = sched.window(dims);
     let sched_items: Vec<SchedItem> = items
         .iter()
         .enumerate()
@@ -299,13 +304,18 @@ pub fn plan_dispatch(
             id,
             device: fleet.device_of_layer(it.layer),
             layer: it.layer,
-            cost_s: it.vjp_units(dims.w, dims.t) as f64 * ANALYTIC_VJP_UNIT_S,
+            cost_s: it.vjp_units(w_eff, dims.t) as f64 * ANALYTIC_VJP_UNIT_S,
             ready_at: 0.0,
             mem_bytes: transient_bytes,
         })
         .collect();
     let policy = sched.policy.policy();
-    let plan = schedule::plan_backward(
+    // With `--offload` the fleet exposes its HBM-resident stored layers
+    // as an evictable tier: a memory-stalled phase spills the coldest
+    // layer to pinned host memory instead of deferring (empty = no
+    // offload, the plain admission path).
+    let spillable = fleet.spillable_by_device();
+    let plan = schedule::plan_backward_offload(
         &sched_items,
         None,
         0.0,
@@ -313,6 +323,7 @@ pub fn plan_dispatch(
         fleet.cfg.mig_slots,
         mem_caps,
         policy.as_ref(),
+        &spillable,
     )?;
 
     let mut queues = vec![Vec::new(); fleet.cfg.devices];

@@ -446,6 +446,7 @@ impl Executor for ProcessExecutor {
             dims: ctx.dims.clone(),
             artifacts_dir: ctx.arts.dir.clone(),
             batch: dispatch.batch,
+            truncate: dispatch.sched.truncate_window as u64,
             items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },
             devices: work,
             kill,

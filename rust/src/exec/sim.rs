@@ -30,7 +30,8 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::adjoint::{
-    gather_group_args_into_from, gather_item_args_into, stage_for, stage_slot, ItemStage,
+    gather_group_args_into_from_truncated, gather_item_args_into_from_truncated, stage_for,
+    stage_slot, ItemStage,
 };
 use crate::config::ModelDims;
 use crate::model::{GradSet, LayerParams};
@@ -128,6 +129,9 @@ impl Executor for SimExecutor {
             .arts
             .entry(if batched { "layer_adjoint_grad_batched" } else { "layer_adjoint_grad" })?;
         let m_static = if batched { batched_entry_width(&entry.spec)? } else { 1 };
+        // Effective truncation window the dispatch was planned under
+        // (`--truncate-window`, carried on the contract's SchedCfg).
+        let w_eff = dispatch.sched.window(ctx.dims);
 
         // Per-layer W_c staged to a device literal once per phase at most
         // — the content-hash cache makes repeat phases free.
@@ -189,6 +193,7 @@ impl Executor for SimExecutor {
             if batched {
                 run_groups_batched(
                     ctx.dims,
+                    w_eff,
                     ctx.fleet,
                     entry.as_ref(),
                     m_static,
@@ -209,6 +214,7 @@ impl Executor for SimExecutor {
                 // `doomed` counts items directly.
                 run_queue_single(
                     ctx.dims,
+                    w_eff,
                     ctx.fleet,
                     entry.as_ref(),
                     &w_c,
@@ -289,6 +295,7 @@ impl Executor for SimExecutor {
                         if batched {
                             run_groups_batched(
                                 ctx.dims,
+                                w_eff,
                                 ctx.fleet,
                                 entry.as_ref(),
                                 m_static,
@@ -307,6 +314,7 @@ impl Executor for SimExecutor {
                         } else {
                             run_queue_single(
                                 ctx.dims,
+                                w_eff,
                                 ctx.fleet,
                                 entry.as_ref(),
                                 &w_c,
@@ -372,6 +380,7 @@ impl Executor for SimExecutor {
 #[allow(clippy::too_many_arguments)]
 fn run_queue_single(
     dims: &ModelDims,
+    w_eff: usize,
     fleet: &Fleet,
     entry: &Compiled,
     w_c: &[Arc<StagedConst>],
@@ -389,7 +398,7 @@ fn run_queue_single(
         let item = &items[id];
         let devi = fleet.device_of_layer(item.layer);
         let stage = stage_for(stages, devi);
-        gather_item_args_into(dims, fleet, item, stage)?;
+        gather_item_args_into_from_truncated(dims, &fleet.devices[devi], item, w_eff, stage)?;
         let args = [
             ArgRef::C(w_c[item.layer].as_ref()),
             ArgRef::F(stage.view(XHAT)),
@@ -420,6 +429,7 @@ fn run_queue_single(
 #[allow(clippy::too_many_arguments)]
 fn run_groups_batched(
     dims: &ModelDims,
+    w_eff: usize,
     fleet: &Fleet,
     entry: &Compiled,
     m_static: usize,
@@ -442,7 +452,15 @@ fn run_groups_batched(
         let stage = stage_for(stages, stage_base * 2 + gi % 2);
         let tg = Instant::now();
         let owner = fleet.device_of_layer(group.layer);
-        gather_group_args_into_from(dims, &fleet.devices[owner], items, group, m_static, stage)?;
+        gather_group_args_into_from_truncated(
+            dims,
+            &fleet.devices[owner],
+            items,
+            group,
+            m_static,
+            w_eff,
+            stage,
+        )?;
         if pending.is_some() {
             let hidden = tg.elapsed().as_secs_f64();
             *overlap_s += hidden;

@@ -96,12 +96,15 @@ impl SuperviseCfg {
     }
 }
 
-/// Analytic work volume of one lane's job — the deadline input.
+/// Analytic work volume of one lane's job — the deadline input. Uses
+/// the job's *effective* window: truncated phases do less VJP work, so
+/// their deadlines tighten with the window.
 pub fn job_vjp_units(job: &JobMsg) -> u64 {
+    let w_eff = job.dims.effective_window(job.truncate as usize);
     job.devices
         .iter()
         .flat_map(|d| d.items.iter())
-        .map(|(_, it)| it.vjp_units(job.dims.w, job.dims.t))
+        .map(|(_, it)| it.vjp_units(w_eff, job.dims.t))
         .sum()
 }
 

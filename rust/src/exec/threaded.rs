@@ -37,7 +37,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::adjoint::{
-    gather_group_args_into_from, gather_item_args_into_from, stage_for, stage_slot, ItemStage,
+    gather_group_args_into_from_truncated, gather_item_args_into_from_truncated, stage_for,
+    stage_slot, ItemStage,
 };
 use crate::model::GradSet;
 use crate::runtime::{ArgRef, Compiled, ConstCache, ConstKey, InFlight, Manifest, Runtime};
@@ -170,6 +171,7 @@ pub(crate) fn run_job(
     st.single()?; // compile before the disjoint field borrows below
     let WorkerState { entry, consts, stages, outs, .. } = st;
     let entry = entry.as_ref().expect("single-item entry just ensured");
+    let w_eff = job.dims.effective_window(job.truncate as usize);
 
     let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = Vec::new();
@@ -190,7 +192,7 @@ pub(crate) fn run_job(
                 }
             }
             hang_check(&mut hang, executed);
-            gather_item_args_into_from(&job.dims, &src, &item, stage)?;
+            gather_item_args_into_from_truncated(&job.dims, &src, &item, w_eff, stage)?;
             let w_c_t = w_c
                 .get(&item.layer)
                 .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
@@ -255,6 +257,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
     let WorkerState { entry_batched, consts, stages, outs, .. } = st;
     let entry = entry_batched.as_ref().expect("batched entry just ensured");
     let m_static = batched_entry_width(&entry.spec)?;
+    let w_eff = job.dims.effective_window(job.truncate as usize);
 
     let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = Vec::new();
@@ -281,7 +284,15 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
             hang_check(&mut hang, executed);
             let stage = stage_for(stages, work.device * 2 + gi % 2);
             let tg = Instant::now();
-            gather_group_args_into_from(&job.dims, &src, &job.items, group, m_static, stage)?;
+            gather_group_args_into_from_truncated(
+                &job.dims,
+                &src,
+                &job.items,
+                group,
+                m_static,
+                w_eff,
+                stage,
+            )?;
             if pending.is_some() {
                 let hidden = tg.elapsed().as_secs_f64();
                 overlap_s += hidden;
@@ -578,6 +589,7 @@ impl Executor for ThreadedExecutor {
             dims: ctx.dims.clone(),
             artifacts_dir: ctx.arts.dir.clone(),
             batch: dispatch.batch,
+            truncate: dispatch.sched.truncate_window as u64,
             // The global item table is only consulted by the batched
             // path (groups reference it by id).
             items: if dispatch.batch > 1 { dispatch.items.clone() } else { Vec::new() },

@@ -34,7 +34,8 @@ pub const MAGIC: [u8; 4] = *b"ADJW";
 /// Protocol version exchanged in the HELLO handshake; a worker from a
 /// different build refuses to join rather than corrupting gradients.
 /// v2: PING/PONG heartbeat frames + the `hang` fault field on [`JobMsg`].
-pub const WIRE_VERSION: u64 = 2;
+/// v3: the `truncate` window field on [`JobMsg`] (`--truncate-window`).
+pub const WIRE_VERSION: u64 = 3;
 
 /// Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -83,6 +84,12 @@ pub struct JobMsg {
     pub artifacts_dir: PathBuf,
     /// Resolved batched dispatch width (`Dispatch::batch`).
     pub batch: usize,
+    /// Truncation window (`SchedCfg::truncate_window`): 0 = full window;
+    /// otherwise the worker zeroes staged cotangent rows past
+    /// `c + min(truncate, w)` (DESIGN.md §Truncated-Adjoint). Carried on
+    /// the wire so process workers clip exactly what the coordinator
+    /// planned.
+    pub truncate: u64,
     /// The phase's full work-item table (batch groups reference it by
     /// global id); empty on the single-item path.
     pub items: Vec<WorkItem>,
@@ -439,6 +446,7 @@ pub fn encode_job(job: &JobMsg) -> Result<Vec<u8>> {
         .context("artifacts dir is not UTF-8 — cannot cross the wire")?;
     e.str(dir);
     e.usize(job.batch);
+    e.u64(job.truncate);
     e.usize(job.items.len());
     for it in &job.items {
         enc_item(&mut e, it);
@@ -492,6 +500,7 @@ pub fn decode_job(payload: &[u8]) -> Result<JobMsg> {
     let dims = ModelDims { name, v, p, n, k, t, w, c, eps };
     let artifacts_dir = PathBuf::from(d.str()?);
     let batch = d.usize()?;
+    let truncate = d.u64()?;
     let n_items = d.len()?;
     let mut items = Vec::with_capacity(n_items);
     for _ in 0..n_items {
@@ -536,7 +545,7 @@ pub fn decode_job(payload: &[u8]) -> Result<JobMsg> {
     let kill = if d.bool()? { Some(d.u64()?) } else { None };
     let hang = if d.bool()? { Some(d.u64()?) } else { None };
     d.finish()?;
-    Ok(JobMsg { dims, artifacts_dir, batch, items, devices, kill, hang })
+    Ok(JobMsg { dims, artifacts_dir, batch, truncate, items, devices, kill, hang })
 }
 
 /// PING payload: just the probe's sequence number.

@@ -60,6 +60,7 @@ commands:
   train     --config <name> --steps N --grad-mode adjoint|bptt [--devices Υ]
             [--sched-policy fifo|lpt|layer-major] [--overlap]
             [--executor sim|threaded|process] [--workers N] [--adjoint-batch M]
+            [--truncate-window W] [--offload] [--hbm-gb G] [--host-gb G]
             [--fault-at lane@items[+hang][+rejoin][+loop],...] [--fault-seed N]
             [--worker-timeout s] [--respawn N] [--respawn-backoff s]
             [--checkpoint-every N] [--checkpoint-dir d]
@@ -70,8 +71,8 @@ commands:
             [--workers N] [--snapshot-dir d] [--sessions S] [--tokens N]
             [--prompt-len L] [--arrival-every K] [--temperature t] [--bench-json p]
   inspect   --config <name>
-  bench     fig1 | table1 | fig6 | schedule | hotpath | serve | vjp-count |
-            max-context | tbar-sweep | chunk-size | topology
+  bench     fig1 | table1 | fig6 | schedule | hotpath | serve | offload |
+            vjp-count | max-context | tbar-sweep | chunk-size | topology
   help
 
 common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>";
@@ -97,6 +98,25 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         0,
         "batched backward width: 0 = auto (artifact's M), 1 = single-item dispatch",
     )?;
+    cfg.sched.truncate_window = cli.usize_or(
+        "truncate-window",
+        0,
+        "truncated adjoint window T̄ (§4.3): clip cotangent terms past W tokens (0 = full)",
+    )?;
+    cfg.topology.offload = cli.bool_or(
+        "offload",
+        false,
+        "two-tier activation store: spill cold layers to pinned host memory under pressure",
+    )?;
+    let hbm_gb = cli.f64_or("hbm-gb", 0.0, "per-device HBM budget in GiB (0 = config default)")?;
+    if hbm_gb > 0.0 {
+        cfg.topology.hbm_bytes = (hbm_gb * (1u64 << 30) as f64) as u64;
+    }
+    let host_gb =
+        cli.f64_or("host-gb", 0.0, "pinned-host offload budget in GiB (0 = config default)")?;
+    if host_gb > 0.0 {
+        cfg.topology.host_bytes = (host_gb * (1u64 << 30) as f64) as u64;
+    }
     cfg.exec.kind = cli
         .str_or("executor", "sim", "backward execution backend: sim|threaded|process")
         .parse()?;
@@ -380,6 +400,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
         "fig1" => reports::fig1(cli),
         "hotpath" => reports::hotpath_profile(cli),
         "serve" => reports::serve_profile(cli),
+        "offload" => reports::offload_profile(cli),
         "table1" => reports::table1(cli),
         "fig6" => reports::fig6(cli),
         "schedule" => reports::fig6_schedule(cli),
@@ -389,7 +410,7 @@ fn cmd_bench(cli: &mut Cli) -> Result<()> {
         "chunk-size" => reports::chunk_size(cli),
         "topology" => reports::topology_scaling(cli),
         other => bail!(
-            "unknown bench '{other}' (fig1|table1|fig6|schedule|hotpath|serve|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
+            "unknown bench '{other}' (fig1|table1|fig6|schedule|hotpath|serve|offload|vjp-count|max-context|tbar-sweep|chunk-size|topology)"
         ),
     }
 }

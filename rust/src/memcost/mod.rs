@@ -165,6 +165,59 @@ impl MemEstimate {
     }
 }
 
+/// Closed-form transfer model for the HBM ↔ pinned-host link used by the
+/// activation offload tier (DESIGN.md §Offload). Spill (D2H) and restore
+/// (H2D) ride the same link, so both directions share one formula:
+/// a fixed launch latency plus bytes over sustained bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadModel {
+    /// Sustained link bandwidth, bytes/s (PCIe gen4 ×16 ≈ 25 GB/s).
+    pub link_bytes_per_s: f64,
+    /// Fixed per-transfer launch latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for OffloadModel {
+    fn default() -> Self {
+        // Matches `TopologyCfg::host_link_bytes_per_s`'s default.
+        Self { link_bytes_per_s: 25e9, latency_s: 10e-6 }
+    }
+}
+
+impl OffloadModel {
+    pub fn from_link(link_bytes_per_s: f64) -> Self {
+        Self { link_bytes_per_s, ..Self::default() }
+    }
+
+    /// Seconds to evict `bytes` of activations to pinned host memory.
+    pub fn spill_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.link_bytes_per_s
+    }
+
+    /// Seconds to page `bytes` back into HBM. The link is symmetric; the
+    /// separate name keeps call sites self-documenting.
+    pub fn restore_s(&self, bytes: u64) -> f64 {
+        self.spill_s(bytes)
+    }
+}
+
+/// Largest `t` with `fits(t)`, by bisection (0 when even t=1 doesn't fit).
+fn bisect_max_t(fits: impl Fn(u64) -> bool) -> u64 {
+    if !fits(1) {
+        return 0;
+    }
+    let (mut lo, mut hi) = (1u64, 1u64 << 32);
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 impl MemModel {
     /// Backprop on `devices` data-parallel-free devices (the paper's Fig. 1
     /// is one GPU): the whole autograd graph is live at once.
@@ -195,7 +248,32 @@ impl MemModel {
         window: u64,
         mig_slots: u64,
     ) -> MemEstimate {
+        let (stored, transient) = self.adjoint_act_parts(d, t, bs, devices, chunk, window, mig_slots);
         let theta = d.total_params() as u64;
+        let be = self.bytes_per_elem;
+        MemEstimate {
+            params: (theta as f64 * be / devices as f64) as u64,
+            grads: (theta as f64 * be / devices as f64) as u64,
+            optimizer: (2.0 * theta as f64 * be / devices as f64) as u64,
+            activations: (stored + transient) as u64,
+            logits: (2.0 * bs as f64 * chunk as f64 * d.v as f64 * be) as u64,
+        }
+    }
+
+    /// Activation bytes of the adjoint estimate, split into the two pieces
+    /// the offload tier treats differently: `stored` (per-(t,k) activations
+    /// + replicated cotangents — pageable) and `transient` (in-flight VJP
+    /// working set — must stay HBM-resident).
+    fn adjoint_act_parts(
+        &self,
+        d: &ModelDims,
+        t: u64,
+        bs: u64,
+        devices: u64,
+        chunk: u64,
+        window: u64,
+        mig_slots: u64,
+    ) -> (f64, f64) {
         let be = self.bytes_per_elem;
         let act_per_tk = self.as_act_n * d.n as f64 + self.as_act_p * d.p as f64;
         let stored = bs as f64 * t as f64 * d.k as f64 * act_per_tk * be / devices as f64
@@ -205,13 +283,35 @@ impl MemModel {
             + chunk as f64 * (2.0 * d.n as f64 + d.p as f64);
         let transient =
             mig_slots as f64 * (bs as f64 * ext * be + d.params_per_layer() as f64 * be);
-        MemEstimate {
+        (stored, transient)
+    }
+
+    /// Two-tier residency split under activation offload: stored activations
+    /// and replicated cotangents page to pinned host memory, while HBM keeps
+    /// the layer-sharded parameter state, logits, and the in-flight VJP
+    /// transients (whose staged slab doubles as the H2D restore buffer).
+    /// Returns `(hbm_estimate, host_bytes)`.
+    pub fn adjoint_offload(
+        &self,
+        d: &ModelDims,
+        t: u64,
+        bs: u64,
+        devices: u64,
+        chunk: u64,
+        window: u64,
+        mig_slots: u64,
+    ) -> (MemEstimate, u64) {
+        let (stored, transient) = self.adjoint_act_parts(d, t, bs, devices, chunk, window, mig_slots);
+        let theta = d.total_params() as u64;
+        let be = self.bytes_per_elem;
+        let hbm = MemEstimate {
             params: (theta as f64 * be / devices as f64) as u64,
             grads: (theta as f64 * be / devices as f64) as u64,
             optimizer: (2.0 * theta as f64 * be / devices as f64) as u64,
-            activations: (stored + transient) as u64,
+            activations: transient as u64,
             logits: (2.0 * bs as f64 * chunk as f64 * d.v as f64 * be) as u64,
-        }
+        };
+        (hbm, stored as u64)
     }
 
     /// Largest context length trainable under `budget_bytes`, by bisection.
@@ -225,27 +325,37 @@ impl MemModel {
         window: u64,
         mig_slots: u64,
     ) -> u64 {
-        let fits = |t: u64| {
+        bisect_max_t(|t| {
             let est = if adjoint {
                 self.adjoint(d, t, bs, devices, (t / 8).max(1), window.min(t), mig_slots)
             } else {
                 self.backprop(d, t, bs, devices)
             };
             est.total() <= budget_bytes
-        };
-        if !fits(1) {
-            return 0;
-        }
-        let (mut lo, mut hi) = (1u64, 1u64 << 32);
-        while lo + 1 < hi {
-            let mid = lo + (hi - lo) / 2;
-            if fits(mid) {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        lo
+        })
+    }
+
+    /// Offload-aware max-context: the adjoint run fits when the HBM-resident
+    /// set (params + transients + logits) stays under `hbm_budget` *and* the
+    /// paged activations stay under `host_budget`. Because the pageable
+    /// `stored` term dominates at long context, this frontier is strictly
+    /// beyond [`MemModel::max_context`] whenever that one is HBM-bound —
+    /// "max context = HBM bound" becomes "max context = host-RAM bound".
+    pub fn max_context_offload(
+        &self,
+        d: &ModelDims,
+        bs: u64,
+        devices: u64,
+        hbm_budget: u64,
+        host_budget: u64,
+        window: u64,
+        mig_slots: u64,
+    ) -> u64 {
+        bisect_max_t(|t| {
+            let (hbm, host) =
+                self.adjoint_offload(d, t, bs, devices, (t / 8).max(1), window.min(t), mig_slots);
+            hbm.total() <= hbm_budget && host <= host_budget
+        })
     }
 }
 
@@ -471,6 +581,56 @@ mod tests {
         let at = m.backprop(d, t_bp, 2, 1).total();
         let above = m.backprop(d, t_bp + 1, 2, 1).total();
         assert!(at <= budget && above > budget);
+    }
+
+    #[test]
+    fn offload_strictly_increases_max_context() {
+        // Acceptance criterion: under a capped HBM budget, the modeled max
+        // trainable context strictly increases when offload is enabled.
+        let m = MemModel::default();
+        for idx in [1usize, 3, 4] {
+            let (label, d) = &fig1_models()[idx];
+            let hbm = 40u64 << 30;
+            let host = 1100u64 << 30;
+            let t_as = m.max_context(d, 2, 1, hbm, true, 2048, 7);
+            let t_off = m.max_context_offload(d, 2, 1, hbm, host, 2048, 7);
+            assert!(
+                t_off > t_as,
+                "{label}: offload max ctx {t_off} ≤ HBM-only {t_as}"
+            );
+        }
+    }
+
+    #[test]
+    fn offload_residency_split_conserves_bytes() {
+        let m = MemModel::default();
+        let (_, d) = &fig1_models()[2];
+        let (t, bs, devices, chunk, window, slots) = (500_000u64, 2, 4, 4096, 2048, 7);
+        let full = m.adjoint(d, t, bs, devices, chunk, window, slots);
+        let (hbm, host) = m.adjoint_offload(d, t, bs, devices, chunk, window, slots);
+        // Same closed forms, re-partitioned: HBM + host ≈ single-tier total
+        // (float→u64 truncation happens once per side, so allow ±2 bytes).
+        let diff = (hbm.total() + host) as i128 - full.total() as i128;
+        assert!(diff.abs() <= 2, "split leaks {diff} bytes");
+        // The pageable stored term dominates at long context.
+        assert!(host > hbm.activations);
+        // Host tier holds activations only; parameter state stays in HBM.
+        assert_eq!(hbm.params, full.params);
+        assert_eq!(hbm.optimizer, full.optimizer);
+    }
+
+    #[test]
+    fn offload_transfer_costs_are_sane() {
+        let om = OffloadModel::default();
+        // Latency floor, then linear in bytes; link is symmetric.
+        assert!(om.spill_s(0) == om.latency_s);
+        assert!(om.spill_s(1 << 30) > om.spill_s(1 << 20));
+        assert_eq!(om.spill_s(1 << 26), om.restore_s(1 << 26));
+        // 1 GiB over 25 GB/s ≈ 43 ms.
+        let s = om.spill_s(1 << 30);
+        assert!(s > 0.03 && s < 0.06, "1 GiB spill modeled at {s} s");
+        let fast = OffloadModel::from_link(50e9);
+        assert!(fast.restore_s(1 << 30) < om.restore_s(1 << 30));
     }
 
     #[test]

@@ -120,6 +120,12 @@ pub fn forward(
         let a = it.next().unwrap();
         let c = it.next().unwrap();
         // Store this layer's *input* sequence ŷ_{k-1} (Table 4) — by move.
+        // Under `--offload` an over-budget device first pages its coldest
+        // stored layers out to pinned host memory to make room (a no-op
+        // otherwise; `check_budget` still flags genuine HBM overruns).
+        let stored =
+            (xhat.size_bytes() + h.size_bytes() + a.size_bytes() + c.size_bytes()) as u64;
+        fleet.make_room(dev, stored);
         fleet.devices[dev].put(k, ActKind::Xhat, xhat);
         xhat = xhat_next;
         y = y_next;
@@ -164,8 +170,17 @@ pub fn forward(
     virtual_s += bcast_s;
     timing.broadcast_s = bcast_s;
     let shared_cotangents = Arc::new(cotangents.clone());
-    for d in &mut fleet.devices {
-        d.put_shared(usize::MAX, ActKind::Cotangent, Arc::clone(&shared_cotangents));
+    let cot_bytes = shared_cotangents.size_bytes() as u64;
+    for dev in 0..fleet.devices.len() {
+        // The cotangent itself is never spillable (every item reads it),
+        // but its arrival may push a tight device over budget — page out
+        // stored layers first under `--offload`.
+        fleet.make_room(dev, cot_bytes);
+        fleet.devices[dev].put_shared(
+            usize::MAX,
+            ActKind::Cotangent,
+            Arc::clone(&shared_cotangents),
+        );
     }
 
     timing.virtual_s = virtual_s;

@@ -88,6 +88,17 @@ impl Runtime {
 /// completion event to subtract the slack. The complementary signal is
 /// the wait span inside the recorded call seconds shrinking toward the
 /// transfer floor (DESIGN.md §Batched-Backward).
+///
+/// The offload counters (`prefetch_hit`/`prefetch_miss`, `spill_s`/
+/// `restore_s`) are *modeled* by the backward orchestrator from the plan,
+/// the activation tiers, and the `memcost::OffloadModel` closed forms —
+/// never measured per worker — so they are identical across the sim,
+/// threaded, and process backends. A prefetch hit is a dispatch whose
+/// host-resident inputs were staged while the previous call was in
+/// flight (the H2D restore rides the double-buffered stage pair and
+/// hides under compute); `restore_s` therefore inherits `overlap_s`'s
+/// upper-bound caveat — it is transfer time that *can* hide, not a
+/// measured stall (DESIGN.md §Offload).
 #[derive(Debug, Clone, Copy)]
 pub struct ExecStats {
     pub calls: u64,
@@ -95,6 +106,10 @@ pub struct ExecStats {
     min_s: f64,
     max_s: f64,
     overlap_s: f64,
+    prefetch_hit: u64,
+    prefetch_miss: u64,
+    spill_s: f64,
+    restore_s: f64,
 }
 
 impl Default for ExecStats {
@@ -105,6 +120,10 @@ impl Default for ExecStats {
             min_s: f64::INFINITY,
             max_s: 0.0,
             overlap_s: 0.0,
+            prefetch_hit: 0,
+            prefetch_miss: 0,
+            spill_s: 0.0,
+            restore_s: 0.0,
         }
     }
 }
@@ -127,6 +146,37 @@ impl ExecStats {
     /// Host seconds hidden behind in-flight executions of this entry.
     pub fn overlap_s(&self) -> f64 {
         self.overlap_s
+    }
+
+    /// Credit one phase's modeled offload activity (see the type docs:
+    /// these are plan-derived, backend-independent numbers).
+    pub fn record_offload(&mut self, hits: u64, misses: u64, spill_s: f64, restore_s: f64) {
+        self.prefetch_hit += hits;
+        self.prefetch_miss += misses;
+        self.spill_s += spill_s;
+        self.restore_s += restore_s;
+    }
+
+    /// Dispatches whose host-tier inputs restored under in-flight compute.
+    pub fn prefetch_hit(&self) -> u64 {
+        self.prefetch_hit
+    }
+
+    /// Dispatches whose host-tier inputs restored synchronously (first
+    /// group of a lane, or the single-item path with no double buffer).
+    pub fn prefetch_miss(&self) -> u64 {
+        self.prefetch_miss
+    }
+
+    /// Modeled D2H eviction seconds (closed form over spilled bytes).
+    pub fn spill_s(&self) -> f64 {
+        self.spill_s
+    }
+
+    /// Modeled H2D restore seconds — an upper bound on *visible* restore
+    /// time; hits hide under compute like `overlap_s`.
+    pub fn restore_s(&self) -> f64 {
+        self.restore_s
     }
 
     pub fn mean_s(&self) -> f64 {
@@ -356,6 +406,12 @@ impl Compiled {
         self.stats.borrow_mut().record_overlap(secs);
     }
 
+    /// Record one phase's modeled offload activity against this entry
+    /// (see [`ExecStats::record_offload`]).
+    pub fn note_offload(&self, hits: u64, misses: u64, spill_s: f64, restore_s: f64) {
+        self.stats.borrow_mut().record_offload(hits, misses, spill_s, restore_s);
+    }
+
     /// Enqueue one execution without fetching its outputs: validate,
     /// stage non-constant args through the pooled literal slot, launch by
     /// reference. The returned [`InFlight`] owns the result buffers; the
@@ -569,6 +625,14 @@ impl ArtifactSet {
         })
     }
 
+    /// An entry point only if it is already compiled — stat-recording
+    /// paths that must not trigger a compile (e.g. the backward
+    /// orchestrator crediting modeled offload numbers while a threaded
+    /// backend did the actual executions) use this.
+    pub fn cached_entry(&self, name: &str) -> Option<Arc<Compiled>> {
+        self.cache.borrow().get(name).cloned()
+    }
+
     /// Get (compiling if needed) an entry point by name.
     // Arc over a !Send executable: deliberate thread-pinning, see Runtime.
     #[allow(clippy::arc_with_non_send_sync)]
@@ -636,6 +700,14 @@ mod tests {
         s.record_overlap(0.25);
         assert!((s.overlap_s() - 0.5).abs() < 1e-12);
         assert_eq!(s.calls, 3, "overlap must not count as a call");
+        // Offload accounting accrues separately from calls too.
+        assert_eq!((s.prefetch_hit(), s.prefetch_miss()), (0, 0));
+        s.record_offload(3, 1, 0.125, 0.0625);
+        s.record_offload(1, 0, 0.125, 0.0625);
+        assert_eq!((s.prefetch_hit(), s.prefetch_miss()), (4, 1));
+        assert!((s.spill_s() - 0.25).abs() < 1e-12);
+        assert!((s.restore_s() - 0.125).abs() < 1e-12);
+        assert_eq!(s.calls, 3, "offload must not count as calls");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! worker per device (`threaded`) — which takes its per-device item
 //! queues from the analytic plan built here (DESIGN.md §4, §Execution).
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use anyhow::{bail, Result};
@@ -65,6 +66,20 @@ pub enum StartBound {
     Slot,
     /// Waited for memory-aware admission (HBM headroom).
     Memory,
+}
+
+/// One planner-chosen eviction under the offload tier: the coldest
+/// HBM-resident layer paged to pinned host memory so admission could
+/// proceed instead of deferring the stalled item (DESIGN.md §Offload).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpillDecision {
+    pub device: usize,
+    /// Layer whose stored activations were paged out.
+    pub layer: usize,
+    /// HBM bytes freed (== host bytes consumed).
+    pub bytes: u64,
+    /// Virtual time of the eviction decision.
+    pub at_s: f64,
 }
 
 /// One dispatched item on a MIG slot of one device.
@@ -214,6 +229,9 @@ pub struct DeviceSchedule {
     pub busy_s: f64,
     /// Peak concurrent transient bytes admitted on this device.
     pub peak_transient_bytes: u64,
+    /// Evictions the offload-aware planner chose over deferral, in
+    /// decision order (empty without an offload tier).
+    pub spills: Vec<SpillDecision>,
 }
 
 impl DeviceSchedule {
@@ -289,6 +307,30 @@ pub fn schedule_device(
     mem_cap_bytes: Option<u64>,
     policy: &dyn SchedPolicy,
 ) -> Result<DeviceSchedule> {
+    schedule_device_offload(device, items, slots, mem_cap_bytes, policy, None)
+}
+
+/// [`schedule_device`] with an offload tier: `spillable` maps each
+/// HBM-resident *stored-activation* layer to its byte footprint (the
+/// replicated cotangent is excluded upstream — every item reads it).
+/// When a released item stalls purely on memory admission, the planner
+/// pages out the **coldest** resident layer — the one whose next use is
+/// furthest in the remaining plan (within a device the queues drain in
+/// ascending item order, so a layer's next use is its smallest pending
+/// id; a layer with no pending items is never used again and coldest of
+/// all) — raising the admission headroom by the freed bytes instead of
+/// deferring. Evictions are recorded on the returned schedule; their
+/// wall-clock cost is modeled separately ([`crate::memcost::OffloadModel`])
+/// because the H2D restore rides the double-buffered staging slab and
+/// hides under in-flight VJP compute (DESIGN.md §Offload).
+pub fn schedule_device_offload(
+    device: usize,
+    items: &[SchedItem],
+    slots: usize,
+    mem_cap_bytes: Option<u64>,
+    policy: &dyn SchedPolicy,
+    spillable: Option<&BTreeMap<usize, u64>>,
+) -> Result<DeviceSchedule> {
     if slots == 0 {
         bail!("scheduler needs at least one MIG slot");
     }
@@ -311,6 +353,11 @@ pub fn schedule_device(
     let mut peak = 0u64;
     let mut now = 0.0f64;
     let mut spans = Vec::with_capacity(items.len());
+    // Offload state: what is still resident (and evictable), and how much
+    // headroom past `mem_cap_bytes` the evictions so far have bought.
+    let mut resident: BTreeMap<usize, u64> = spillable.cloned().unwrap_or_default();
+    let mut spills: Vec<SpillDecision> = Vec::new();
+    let mut cap_bonus = 0u64;
 
     while !pending.is_empty() {
         // Retire completions up to `now` (frees admission memory; slots
@@ -339,7 +386,9 @@ pub fn schedule_device(
                 it.ready_at <= now + EPS
                     && match mem_cap_bytes {
                         None => true,
-                        Some(cap) => mem_live + it.mem_bytes <= cap || inflight.is_empty(),
+                        Some(cap) => {
+                            mem_live + it.mem_bytes <= cap + cap_bonus || inflight.is_empty()
+                        }
                     }
             })
             .map(|(i, _)| i)
@@ -375,6 +424,35 @@ pub fn schedule_device(
             continue;
         }
 
+        // Spill-over-defer (offload tier): a slot is free and a released
+        // item exists, yet nothing is admissible — the stall is purely
+        // memory. Page out the coldest resident layer and retry admission
+        // at the same instant instead of waiting for a completion.
+        if slot_open
+            && !resident.is_empty()
+            && mem_cap_bytes.is_some()
+            && pending.iter().any(|it| it.ready_at <= now + EPS)
+        {
+            let coldest = resident
+                .keys()
+                .copied()
+                .max_by_key(|&layer| {
+                    let next_use = pending
+                        .iter()
+                        .filter(|it| it.layer == layer)
+                        .map(|it| it.id)
+                        .min();
+                    // Furthest next use wins; unused-forever (None) is
+                    // coldest of all; ties go to the higher layer.
+                    (next_use.map_or(usize::MAX, |id| id), layer)
+                })
+                .expect("resident non-empty");
+            let bytes = resident.remove(&coldest).expect("coldest is resident");
+            cap_bonus += bytes;
+            spills.push(SpillDecision { device, layer: coldest, bytes, at_s: now });
+            continue;
+        }
+
         // Advance to the next event that can unblock work.
         let mut next = f64::INFINITY;
         for &(end, _) in &inflight {
@@ -401,7 +479,15 @@ pub fn schedule_device(
 
     let makespan_s = spans.iter().map(|s| s.end_s).fold(0.0, f64::max);
     let busy_s = spans.iter().map(|s| s.end_s - s.start_s).sum();
-    Ok(DeviceSchedule { device, slots, spans, makespan_s, busy_s, peak_transient_bytes: peak })
+    Ok(DeviceSchedule {
+        device,
+        slots,
+        spans,
+        makespan_s,
+        busy_s,
+        peak_transient_bytes: peak,
+        spills,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -459,6 +545,16 @@ impl Schedule {
         }
     }
 
+    /// All offload evictions across the fleet, flattened.
+    pub fn spills(&self) -> impl Iterator<Item = &SpillDecision> {
+        self.devices.iter().flat_map(|d| d.spills.iter())
+    }
+
+    /// Total HBM bytes the planner chose to page to host this phase.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spills().map(|s| s.bytes).sum()
+    }
+
     /// Dispatch counts by binding constraint: [ready, slot, memory].
     pub fn bound_counts(&self) -> [usize; 3] {
         let mut c = [0usize; 3];
@@ -486,11 +582,30 @@ pub fn schedule_items(
     policy: &dyn SchedPolicy,
     overlapped: bool,
 ) -> Result<Schedule> {
+    schedule_items_offload(items, devices, slots, mem_caps, policy, overlapped, &[])
+}
+
+/// [`schedule_items`] with a per-device offload tier: `spillable[dev]`
+/// lists device `dev`'s evictable resident layers (empty slice = no
+/// offload anywhere).
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_items_offload(
+    items: &[SchedItem],
+    devices: usize,
+    slots: usize,
+    mem_caps: &[Option<u64>],
+    policy: &dyn SchedPolicy,
+    overlapped: bool,
+    spillable: &[BTreeMap<usize, u64>],
+) -> Result<Schedule> {
     if devices == 0 {
         bail!("scheduler needs at least one device");
     }
     if !mem_caps.is_empty() && mem_caps.len() != devices {
         bail!("got {} memory caps for {devices} devices", mem_caps.len());
+    }
+    if !spillable.is_empty() && spillable.len() != devices {
+        bail!("got {} spill maps for {devices} devices", spillable.len());
     }
     let mut per_device: Vec<Vec<SchedItem>> = vec![Vec::new(); devices];
     for it in items {
@@ -502,7 +617,14 @@ pub fn schedule_items(
     let mut out = Vec::with_capacity(devices);
     for (dev, dev_items) in per_device.iter().enumerate() {
         let cap = mem_caps.get(dev).copied().flatten();
-        out.push(schedule_device(dev, dev_items, slots, cap, policy)?);
+        out.push(schedule_device_offload(
+            dev,
+            dev_items,
+            slots,
+            cap,
+            policy,
+            spillable.get(dev),
+        )?);
     }
     Ok(Schedule { policy: policy.name(), overlapped, devices: out })
 }
@@ -638,11 +760,30 @@ pub fn plan_backward(
     mem_caps: &[Option<u64>],
     policy: &dyn SchedPolicy,
 ) -> Result<BackwardPlan> {
+    plan_backward_offload(items, overlap_ready, seq_start_s, devices, slots, mem_caps, policy, &[])
+}
+
+/// [`plan_backward`] with a per-device offload tier (see
+/// [`schedule_items_offload`]): when memory admission would stall a
+/// phase, the planner spills the coldest resident layers instead of
+/// deferring, and the chosen plan carries the eviction record.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_backward_offload(
+    items: &[SchedItem],
+    overlap_ready: Option<&[f64]>,
+    seq_start_s: f64,
+    devices: usize,
+    slots: usize,
+    mem_caps: &[Option<u64>],
+    policy: &dyn SchedPolicy,
+    spillable: &[BTreeMap<usize, u64>],
+) -> Result<BackwardPlan> {
     let mut seq_items = items.to_vec();
     for it in &mut seq_items {
         it.ready_at = 0.0;
     }
-    let seq = schedule_items(&seq_items, devices, slots, mem_caps, policy, false)?;
+    let seq =
+        schedule_items_offload(&seq_items, devices, slots, mem_caps, policy, false, spillable)?;
     let seq_make = seq.makespan_s();
     let seq_end = seq_start_s + seq_make;
 
@@ -655,7 +796,8 @@ pub fn plan_backward(
             // Inputs certainly exist once the serial forward has finished.
             it.ready_at = r.clamp(0.0, seq_start_s.max(0.0));
         }
-        let ov = schedule_items(&ov_items, devices, slots, mem_caps, policy, true)?;
+        let ov =
+            schedule_items_offload(&ov_items, devices, slots, mem_caps, policy, true, spillable)?;
         let ov_end = ov.makespan_s().max(seq_start_s);
         if ov_end <= seq_end {
             return Ok(BackwardPlan {
@@ -742,6 +884,67 @@ mod tests {
         let d2 = schedule_device(0, &it, 4, Some(20), &Fifo).unwrap();
         assert!((d2.makespan_s - 2.0).abs() < 1e-12);
         assert_eq!(d2.peak_transient_bytes, 20);
+    }
+
+    #[test]
+    fn spill_over_defer_unblocks_memory_stall() {
+        // Four 10-byte items on 4 slots under a one-item cap. Deferral
+        // serializes them (makespan 4); with two evictable resident
+        // layers the planner spills instead and runs three wide.
+        let mut it = items(&[1.0, 1.0, 1.0, 1.0]);
+        for i in &mut it {
+            i.mem_bytes = 10;
+        }
+        let baseline = schedule_device(0, &it, 4, Some(10), &Fifo).unwrap();
+        assert!((baseline.makespan_s - 4.0).abs() < 1e-12);
+        assert!(baseline.spills.is_empty());
+
+        let resident = BTreeMap::from([(0usize, 10u64), (1usize, 10u64)]);
+        let d =
+            schedule_device_offload(0, &it, 4, Some(10), &Fifo, Some(&resident)).unwrap();
+        // Items 0–2 run concurrently (two spills buy 20 bytes of
+        // headroom); item 3 still defers once nothing is left to evict.
+        assert!((d.makespan_s - 2.0).abs() < 1e-12);
+        assert_eq!(d.spills.len(), 2);
+        assert!(d.spills.iter().all(|s| s.at_s.abs() < 1e-12 && s.bytes == 10));
+        assert_eq!(d.peak_transient_bytes, 30);
+    }
+
+    #[test]
+    fn spill_picks_furthest_next_use() {
+        // Pending drain is ascending by id: layer 2's only use (id 2)
+        // is further out than layer 0's next use (id 1) → evict 2 first.
+        let mut it = items(&[1.0, 1.0, 1.0]);
+        it[0].layer = 0;
+        it[1].layer = 0;
+        it[2].layer = 2;
+        for i in &mut it {
+            i.mem_bytes = 10;
+        }
+        let resident = BTreeMap::from([(0usize, 8u64), (2usize, 8u64)]);
+        let d =
+            schedule_device_offload(0, &it, 4, Some(10), &Fifo, Some(&resident)).unwrap();
+        let order: Vec<usize> = d.spills.iter().map(|s| s.layer).collect();
+        assert_eq!(order, vec![2, 0]);
+    }
+
+    #[test]
+    fn offload_tier_is_inert_without_pressure() {
+        // No cap → nothing ever stalls on memory → no spills.
+        let mut it = items(&[1.0, 1.0]);
+        for i in &mut it {
+            i.mem_bytes = 10;
+        }
+        let resident = BTreeMap::from([(0usize, 8u64)]);
+        let d = schedule_device_offload(0, &it, 2, None, &Fifo, Some(&resident)).unwrap();
+        assert!(d.spills.is_empty());
+        // Generous cap → likewise inert, and identical to the plain path.
+        let d2 =
+            schedule_device_offload(0, &it, 2, Some(1 << 20), &Fifo, Some(&resident)).unwrap();
+        let plain = schedule_device(0, &it, 2, Some(1 << 20), &Fifo).unwrap();
+        assert!(d2.spills.is_empty());
+        assert_eq!(d2.spans.len(), plain.spans.len());
+        assert!((d2.makespan_s - plain.makespan_s).abs() < 1e-12);
     }
 
     #[test]

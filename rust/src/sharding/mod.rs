@@ -51,6 +51,12 @@ impl WorkItem {
     /// sequence length `t_total`: for each token i in the chunk, one
     /// vjp_C plus min(w, T−i) (vjp_A + vjp_B) pairs.
     ///
+    /// `w` here is the *effective* lookahead: under `--truncate-window W`
+    /// the callers pass `ModelDims::effective_window(W) = min(W, w)`, and
+    /// per layer Σ over a full chunking of T equals
+    /// `T + 2·vjp_count_truncated(T, w)` — the §4.3 count, pinned by
+    /// `truncated_window_units_match_paper_count`.
+    ///
     /// Closed form, O(1) — the backward phase evaluates this once per
     /// item, and at paper scale (K·T/C items) the seed's O(C) loop was
     /// measurable coordinator overhead. Cross-checked against the literal
@@ -386,6 +392,34 @@ mod tests {
                     it.chunk_start
                 );
             }
+        }
+    }
+
+    #[test]
+    fn truncated_window_units_match_paper_count() {
+        // The identity `--truncate-window` rides on: per layer, the
+        // lookahead min(W, T−i) summed over tokens mirrors the paper's
+        // lookback count, so Σ_items vjp_units(W, T) =
+        // T (one vjp_C per token) + 2·vjp_count_truncated(T, W).
+        for (t, c, w) in [(64usize, 8usize, 16usize), (32, 8, 32), (40, 4, 1), (24, 8, 100)] {
+            let sum: u64 = plan_chunks(1, t, c)
+                .unwrap()
+                .iter()
+                .map(|it| it.vjp_units(w, t))
+                .sum();
+            assert_eq!(
+                sum,
+                t as u64 + 2 * vjp_count_truncated(t as u64, w as u64),
+                "t={t} c={c} w={w}"
+            );
+        }
+        // Monotone in the window: a wider lookahead never removes work.
+        let it = WorkItem { layer: 0, chunk_start: 8, chunk_len: 8 };
+        let mut prev = 0;
+        for w in 0..40 {
+            let u = it.vjp_units(w, 64);
+            assert!(u >= prev, "w={w} regressed {u} < {prev}");
+            prev = u;
         }
     }
 

@@ -52,6 +52,17 @@ pub enum ActKind {
 
 type ActKey = (usize, ActKind); // (layer, kind); Cotangent uses layer = usize::MAX
 
+/// Which memory tier an activation is resident in (DESIGN.md §Offload).
+/// HBM is the device budget `check_budget` enforces; Host is the pinned
+/// host-RAM offload tier — same `Arc<Tensor>` either way (the simulation
+/// keeps all data host-side; the tier changes only what the byte
+/// accountant charges and what a gather must pay to read it back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Hbm,
+    Host,
+}
+
 /// Read access to a device's activation store — the interface the
 /// adjoint gather runs against, implemented both by [`Device`] (the
 /// coordinator path) and by the executor workers' `Arc` snapshots, so
@@ -69,10 +80,18 @@ pub trait ActSource {
 pub struct Device {
     pub id: usize,
     pub mem: BytesTracker,
+    /// The pinned host-RAM offload tier (DESIGN.md §Offload): bytes
+    /// spilled out of HBM live here until restored or step end.
+    pub host: BytesTracker,
     pub busy_s: f64,
     /// Resident bytes that survive step boundaries (params, grads, Adam).
     pub persistent_bytes: u64,
-    store: BTreeMap<ActKey, Arc<Tensor>>,
+    /// Bytes this device moved HBM → host this step (spills) — reset by
+    /// [`Fleet::reset_clocks`] like the virtual clocks.
+    pub spilled_bytes: u64,
+    /// Bytes this device moved host → HBM this step (explicit restores).
+    pub restored_bytes: u64,
+    store: BTreeMap<ActKey, (Arc<Tensor>, Tier)>,
 }
 
 impl Device {
@@ -82,43 +101,132 @@ impl Device {
 
     /// Store an already-shared tensor (e.g. the cotangent broadcast —
     /// one host buffer, Υ logical placements). Accounting is identical
-    /// to [`Device::put`].
+    /// to [`Device::put`]. New activations are always born HBM-resident;
+    /// they reach the host tier only through an explicit [`Device::spill`].
     pub fn put_shared(&mut self, layer: usize, kind: ActKind, t: Arc<Tensor>) {
         self.mem.alloc(t.size_bytes() as u64);
-        if let Some(old) = self.store.insert((layer, kind), t) {
-            self.mem.free(old.size_bytes() as u64);
+        if let Some((old, tier)) = self.store.insert((layer, kind), (t, Tier::Hbm)) {
+            match tier {
+                Tier::Hbm => self.mem.free(old.size_bytes() as u64),
+                Tier::Host => self.host.free(old.size_bytes() as u64),
+            }
         }
     }
 
     pub fn get(&self, layer: usize, kind: ActKind) -> Result<&Tensor> {
         self.store
             .get(&(layer, kind))
-            .map(|t| t.as_ref())
+            .map(|(t, _)| t.as_ref())
             .with_context(|| format!("device {}: no activation ({layer}, {kind:?})", self.id))
     }
 
+    /// Which tier an activation is resident in (`None` = not stored).
+    pub fn tier(&self, layer: usize, kind: ActKind) -> Option<Tier> {
+        self.store.get(&(layer, kind)).map(|&(_, tier)| tier)
+    }
+
+    /// Spill one activation HBM → pinned host: the bytes leave the HBM
+    /// tracker and land on the host tracker; the `Arc` itself never
+    /// moves (the simulation's data is host-side already — the tier is
+    /// the accounting contract). Returns the bytes moved (0 if the key
+    /// was already host-resident). Errors on a key that isn't stored.
+    pub fn spill(&mut self, layer: usize, kind: ActKind) -> Result<u64> {
+        let slot = self
+            .store
+            .get_mut(&(layer, kind))
+            .with_context(|| format!("device {}: spill of absent ({layer}, {kind:?})", self.id))?;
+        if slot.1 == Tier::Host {
+            return Ok(0);
+        }
+        let bytes = slot.0.size_bytes() as u64;
+        slot.1 = Tier::Host;
+        self.mem.free(bytes);
+        self.host.alloc(bytes);
+        self.spilled_bytes += bytes;
+        Ok(bytes)
+    }
+
+    /// Restore one activation pinned host → HBM (the inverse transition,
+    /// used when an activation becomes hot again and HBM headroom allows
+    /// it). Returns the bytes moved (0 if already HBM-resident).
+    pub fn restore(&mut self, layer: usize, kind: ActKind) -> Result<u64> {
+        let slot = self
+            .store
+            .get_mut(&(layer, kind))
+            .with_context(|| format!("device {}: restore of absent ({layer}, {kind:?})", self.id))?;
+        if slot.1 == Tier::Hbm {
+            return Ok(0);
+        }
+        let bytes = slot.0.size_bytes() as u64;
+        slot.1 = Tier::Hbm;
+        self.host.free(bytes);
+        self.mem.alloc(bytes);
+        self.restored_bytes += bytes;
+        Ok(bytes)
+    }
+
+    /// HBM-resident activation bytes per layer — the spillable pool the
+    /// scheduler's coldest-first admission draws on (the replicated
+    /// cotangent, key `usize::MAX`, is included; callers that must keep
+    /// it hot filter it out).
+    pub fn hbm_act_bytes_by_layer(&self) -> BTreeMap<usize, u64> {
+        let mut by_layer: BTreeMap<usize, u64> = BTreeMap::new();
+        for ((layer, _), (t, tier)) in &self.store {
+            if *tier == Tier::Hbm {
+                *by_layer.entry(*layer).or_insert(0) += t.size_bytes() as u64;
+            }
+        }
+        by_layer
+    }
+
+    /// Host-tier residency of every stored key of `layer` — flips all of
+    /// the layer's HBM-resident activations to the host tier, returning
+    /// the bytes moved.
+    pub fn spill_layer(&mut self, layer: usize) -> u64 {
+        let keys: Vec<ActKey> =
+            self.store.keys().filter(|&&(l, _)| l == layer).copied().collect();
+        let mut moved = 0;
+        for (l, kind) in keys {
+            moved += self.spill(l, kind).expect("key just enumerated");
+        }
+        moved
+    }
+
     /// `Arc` handles to the whole store — the executor's per-phase
-    /// snapshot (clones bump refcounts only, never tensor data).
+    /// snapshot (clones bump refcounts only, never tensor data). The
+    /// snapshot is deliberately tier-blind: a worker gathers the same
+    /// bytes whether the accountant has them in HBM or spilled to host —
+    /// which is how spill state crosses the process boundary unchanged
+    /// (the wire's activation snapshots; DESIGN.md §Offload).
     pub fn shared_store(&self) -> Vec<((usize, ActKind), Arc<Tensor>)> {
         self.store
             .iter()
-            .map(|(&k, v)| (k, Arc::clone(v)))
+            .map(|(&k, (t, _))| (k, Arc::clone(t)))
             .collect()
     }
 
     pub fn clear_activations(&mut self) {
-        let freed: u64 = self.store.values().map(|t| t.size_bytes() as u64).sum();
-        self.mem.free(freed);
+        let mut hbm = 0u64;
+        let mut host = 0u64;
+        for (t, tier) in self.store.values() {
+            match tier {
+                Tier::Hbm => hbm += t.size_bytes() as u64,
+                Tier::Host => host += t.size_bytes() as u64,
+            }
+        }
+        self.mem.free(hbm);
+        self.host.free(host);
         self.store.clear();
     }
 
 
     /// Step boundary: every transient allocation (activation hand-offs,
-    /// broadcast copies, input streams) is released; only the persistent
-    /// resident set (Table 6) survives. Peaks persist.
+    /// broadcast copies, input streams) is released from both tiers;
+    /// only the persistent resident set (Table 6) survives. Peaks persist.
     pub fn end_step(&mut self) {
         self.store.clear();
         self.mem.live = self.persistent_bytes;
+        self.host.live = 0;
     }
 
     /// Persistent (parameter/optimizer) allocation — survives `end_step`.
@@ -215,14 +323,75 @@ impl Fleet {
         self.devices.iter().map(|d| d.mem.live).sum()
     }
 
-    /// Reset per-step virtual clocks (memory peaks persist across steps).
+    /// Peak pinned-host offload bytes across the node (Σ devices — the
+    /// host tier is node-shared, unlike per-device HBM).
+    pub fn peak_host_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.host.peak).sum()
+    }
+
+    /// Reset per-step virtual clocks and spill/restore byte counters
+    /// (memory peaks persist across steps).
     pub fn reset_clocks(&mut self) {
         for d in &mut self.devices {
             d.busy_s = 0.0;
+            d.spilled_bytes = 0;
+            d.restored_bytes = 0;
         }
     }
 
-    /// Check the modeled HBM budget; error lists the offending devices.
+    /// Per-device spillable pools for the backward planner's
+    /// spill-over-defer admission (`schedule::plan_backward_offload`):
+    /// each device's HBM-resident stored-activation bytes by layer, with
+    /// the replicated cotangent (`usize::MAX`) excluded — every work item
+    /// reads it, so it must stay hot. Empty when offload is off.
+    pub fn spillable_by_device(&self) -> Vec<BTreeMap<usize, u64>> {
+        if !self.cfg.offload {
+            return Vec::new();
+        }
+        self.devices
+            .iter()
+            .map(|d| {
+                let mut m = d.hbm_act_bytes_by_layer();
+                m.remove(&usize::MAX);
+                m
+            })
+            .collect()
+    }
+
+    /// Make room for `incoming` bytes on device `dev` by spilling coldest
+    /// activations to the host tier — no-op unless `cfg.offload` is on.
+    /// Coldness during the forward pass follows the backward plan's
+    /// consumption order: each device's queue drains layers in ascending
+    /// order, so the layer whose VJPs run last — the *largest* resident
+    /// layer id — is spilled first. The replicated cotangent
+    /// (`usize::MAX`) is read by every work item and is never spilled
+    /// here. Returns the spill transitions as `(layer, bytes)`.
+    pub fn make_room(&mut self, dev: usize, incoming: u64) -> Vec<(usize, u64)> {
+        let mut spilled = Vec::new();
+        if !self.cfg.offload {
+            return spilled;
+        }
+        let cap = self.cfg.hbm_bytes;
+        while self.devices[dev].mem.live.saturating_add(incoming) > cap {
+            let coldest = self.devices[dev]
+                .hbm_act_bytes_by_layer()
+                .into_iter()
+                .filter(|&(layer, _)| layer != usize::MAX)
+                .next_back();
+            match coldest {
+                Some((layer, _)) => {
+                    let bytes = self.devices[dev].spill_layer(layer);
+                    spilled.push((layer, bytes));
+                }
+                None => break, // nothing left to spill — check_budget reports
+            }
+        }
+        spilled
+    }
+
+    /// Check the modeled memory budgets; error lists the offending
+    /// devices. HBM peaks are checked per device; the host offload tier
+    /// (when enabled) is checked as a node-shared pool.
     pub fn check_budget(&self) -> Result<()> {
         let over: Vec<_> = self
             .devices
@@ -235,6 +404,13 @@ impl Fleet {
                 "simulated OOM: devices over the {}-byte budget: {:?}",
                 self.cfg.hbm_bytes,
                 over
+            );
+        }
+        if self.cfg.offload && self.peak_host_bytes() > self.cfg.host_bytes {
+            bail!(
+                "simulated host-RAM OOM: offload tier peaked at {} bytes, budget {}",
+                self.peak_host_bytes(),
+                self.cfg.host_bytes
             );
         }
         Ok(())
@@ -321,6 +497,90 @@ mod tests {
         let src: &dyn ActSource = &d;
         assert_eq!(src.act(1, ActKind::A).unwrap().data(), &[0.0; 4]);
         assert!(src.act(3, ActKind::C).is_err());
+    }
+
+    #[test]
+    fn spill_restore_moves_bytes_between_tiers() {
+        let mut d = Device::default();
+        d.put(0, ActKind::H, Tensor::ones(&[4, 4])); // 64 B
+        d.put(1, ActKind::A, Tensor::zeros(&[2, 2])); // 16 B
+        assert_eq!(d.tier(0, ActKind::H), Some(Tier::Hbm));
+
+        assert_eq!(d.spill(0, ActKind::H).unwrap(), 64);
+        assert_eq!(d.tier(0, ActKind::H), Some(Tier::Host));
+        assert_eq!(d.mem.live, 16);
+        assert_eq!(d.host.live, 64);
+        assert_eq!(d.spilled_bytes, 64);
+        // Idempotent: already host-resident moves nothing.
+        assert_eq!(d.spill(0, ActKind::H).unwrap(), 0);
+        // The data itself is unchanged — the tier is pure accounting.
+        assert_eq!(d.get(0, ActKind::H).unwrap().data(), &[1.0; 16]);
+
+        assert_eq!(d.restore(0, ActKind::H).unwrap(), 64);
+        assert_eq!(d.tier(0, ActKind::H), Some(Tier::Hbm));
+        assert_eq!(d.mem.live, 80);
+        assert_eq!(d.host.live, 0);
+        assert_eq!(d.restored_bytes, 64);
+        assert_eq!(d.restore(0, ActKind::H).unwrap(), 0);
+
+        assert!(d.spill(9, ActKind::H).is_err());
+        assert!(d.restore(9, ActKind::H).is_err());
+    }
+
+    #[test]
+    fn clear_and_end_step_drain_both_tiers() {
+        let mut d = Device::default();
+        d.account_persistent(8);
+        d.put(0, ActKind::H, Tensor::zeros(&[4, 4]));
+        d.put(1, ActKind::A, Tensor::zeros(&[4, 4]));
+        d.spill(1, ActKind::A).unwrap();
+        assert_eq!(d.mem.live, 8 + 64);
+        assert_eq!(d.host.live, 64);
+        d.end_step();
+        assert_eq!(d.mem.live, 8);
+        assert_eq!(d.host.live, 0);
+        assert_eq!(d.host.peak, 64);
+    }
+
+    #[test]
+    fn make_room_spills_coldest_layer_first() {
+        let mut c = cfg(1);
+        c.hbm_bytes = 200;
+        c.offload = true;
+        let mut f = Fleet::new(c, 4).unwrap();
+        for layer in 0..3 {
+            f.devices[0].put(layer, ActKind::H, Tensor::zeros(&[4, 4])); // 64 B each
+        }
+        f.devices[0].put_shared(
+            usize::MAX,
+            ActKind::Cotangent,
+            std::sync::Arc::new(Tensor::zeros(&[1, 4])),
+        );
+        // live = 208; asking room for 64 more must spill the *largest*
+        // layer id (used last by the ascending backward queue), never
+        // the cotangent.
+        let spilled = f.make_room(0, 64);
+        assert_eq!(spilled, vec![(2, 64)]);
+        assert_eq!(f.devices[0].tier(2, ActKind::H), Some(Tier::Host));
+        assert_eq!(f.devices[0].tier(usize::MAX, ActKind::Cotangent), Some(Tier::Hbm));
+        assert!(f.devices[0].mem.live + 64 <= 200);
+        // Without offload, make_room is a no-op.
+        f.cfg.offload = false;
+        assert!(f.make_room(0, 1 << 20).is_empty());
+    }
+
+    #[test]
+    fn host_budget_check_fires_only_with_offload() {
+        let mut c = cfg(1);
+        c.hbm_bytes = 1 << 20;
+        c.host_bytes = 32;
+        c.offload = true;
+        let mut f = Fleet::new(c, 1).unwrap();
+        f.devices[0].put(0, ActKind::H, Tensor::zeros(&[4, 4]));
+        f.devices[0].spill(0, ActKind::H).unwrap();
+        assert!(f.check_budget().is_err());
+        f.cfg.offload = false;
+        assert!(f.check_budget().is_ok());
     }
 
     #[test]

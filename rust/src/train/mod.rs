@@ -44,6 +44,14 @@ pub struct Trainer {
     /// backend's workers record overlap on their own thread-local
     /// entries, invisible to the coordinator's `arts.all_stats()`.
     pub last_overlap_s: Option<f64>,
+    /// The latest step's modeled offload accounting as
+    /// `(spilled_bytes, spill_s, restore_s, prefetch_hit, prefetch_miss)`
+    /// (`AdjointOutput`'s offload fields) — `None` until an adjoint step
+    /// ran, all-zero when nothing spilled. Like `last_overlap_s`, the
+    /// hidden-restore claim is an *upper bound*: a prefetch hit means the
+    /// H2D rode the stage-pair window, not that the device was certainly
+    /// still busy when it landed.
+    pub last_offload: Option<(u64, f64, f64, u64, u64)>,
     /// The trainer's stochastic stream (reserved for stochastic training
     /// ops). Checkpointed verbatim so a resumed run continues the exact
     /// sequence the uninterrupted run would have drawn.
@@ -100,6 +108,7 @@ impl Trainer {
             last_plan: None,
             last_bwd_host_s: None,
             last_overlap_s: None,
+            last_offload: None,
             rng: Rng::new(seed),
             opt,
             corpus,
@@ -156,6 +165,13 @@ impl Trainer {
                 let step = (fwd.loss, fwd.virtual_s + bwd.virtual_s, bwd.vjp_units);
                 self.last_bwd_host_s = Some((bwd.host_s, bwd.wall_s));
                 self.last_overlap_s = Some(bwd.overlap_s);
+                self.last_offload = Some((
+                    bwd.spilled_bytes,
+                    bwd.spill_s,
+                    bwd.restore_s,
+                    bwd.prefetch_hit,
+                    bwd.prefetch_miss,
+                ));
                 self.last_plan = Some(bwd.plan);
                 // An armed --fault-at plan reports what its kills did; the
                 // gradients above are already bit-identical to a healthy
@@ -259,6 +275,25 @@ impl Trainer {
                 println!(
                     "batched dispatch: up to {} of host staging overlapped device compute last step",
                     crate::util::bench::fmt_dur(ov),
+                );
+            }
+            // Offload tier (last step, modeled from the plan + link
+            // model): spilled volume, transfer costs, and how many
+            // restores the async prefetch could hide. "Hidden" carries
+            // the same upper-bound caveat as `overlap_s` above — a hit
+            // means the H2D rode the double-buffered stage pair, not a
+            // measured completion event.
+            if let Some((bytes, sp, rs, hit, miss)) =
+                self.last_offload.filter(|&(b, ..)| b > 0)
+            {
+                println!(
+                    "offload: spilled {} (D2H {}), restores H2D {} — prefetch hid {}/{} \
+                     (upper bound, as with overlap)",
+                    crate::metrics::fmt_bytes(bytes),
+                    crate::util::bench::fmt_dur(sp),
+                    crate::util::bench::fmt_dur(rs),
+                    hit,
+                    hit + miss,
                 );
             }
         }

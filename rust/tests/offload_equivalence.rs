@@ -1,0 +1,463 @@
+//! Offload + truncation equivalence (ISSUE 8): the pinned-host
+//! activation tier and `--truncate-window` must never change gradient
+//! bits — spilling changes *where* bytes are accounted and *when* phases
+//! run, never which items execute or in what order, and truncation's
+//! surviving in-window terms are bit-identical to the full run's
+//! corresponding partial sums.
+//!
+//! Host-side tests (tier transitions, spill-over-defer planning, §4.3
+//! count identities) run everywhere; the PJRT sweeps skip with a message
+//! when `make artifacts` hasn't run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use adjoint_sharding::adjoint::{self, StagePool};
+use adjoint_sharding::config::{ModelDims, SchedCfg, TopologyCfg};
+use adjoint_sharding::data::{Corpus, MarkovCorpus};
+use adjoint_sharding::exec::{Executor, ProcessExecutor, SimExecutor, ThreadedExecutor};
+use adjoint_sharding::memcost::{self, MemModel};
+use adjoint_sharding::model::{GradSet, ParamSet};
+use adjoint_sharding::pipeline;
+use adjoint_sharding::runtime::{ArtifactSet, Runtime};
+use adjoint_sharding::schedule::{self, PolicyKind, SchedItem};
+use adjoint_sharding::sharding::vjp_count_truncated;
+use adjoint_sharding::tensor::Tensor;
+use adjoint_sharding::topology::{ActKind, Fleet, Tier};
+
+// ---------------------------------------------------------------------------
+// Host-side: tier transitions are bit-exact and byte-conserving.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_restore_roundtrip_is_bit_exact_and_conserves_bytes() {
+    let mut c = TopologyCfg { devices: 1, ..Default::default() };
+    c.offload = true;
+    let mut f = Fleet::new(c, 2).unwrap();
+    let d = &mut f.devices[0];
+    let t = Tensor::new(vec![2, 4], vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE / 2.0, -3.25, 7.0, 0.125, -0.5]).unwrap();
+    let bits: Vec<u32> = t.data().iter().map(|x| x.to_bits()).collect();
+    let bytes = t.size_bytes() as u64;
+    d.put(0, ActKind::H, t);
+
+    let (hbm0, host0) = (d.mem.live, d.host.live);
+    assert_eq!(d.tier(0, ActKind::H), Some(Tier::Hbm));
+
+    // Spill: bytes leave HBM, land on host, counters record the move.
+    assert_eq!(d.spill(0, ActKind::H).unwrap(), bytes);
+    assert_eq!(d.tier(0, ActKind::H), Some(Tier::Host));
+    assert_eq!(d.mem.live, hbm0 - bytes);
+    assert_eq!(d.host.live, host0 + bytes);
+    assert_eq!(d.spilled_bytes, bytes);
+    // Idempotent: re-spilling a host-resident key moves nothing.
+    assert_eq!(d.spill(0, ActKind::H).unwrap(), 0);
+    assert_eq!(d.spilled_bytes, bytes);
+
+    // The data is bit-identical while spilled — the tier is an accounting
+    // contract, never a lossy copy.
+    let spilled_bits: Vec<u32> =
+        d.get(0, ActKind::H).unwrap().data().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(spilled_bits, bits);
+
+    // Restore: the exact inverse transition.
+    assert_eq!(d.restore(0, ActKind::H).unwrap(), bytes);
+    assert_eq!(d.tier(0, ActKind::H), Some(Tier::Hbm));
+    assert_eq!(d.mem.live, hbm0);
+    assert_eq!(d.host.live, host0);
+    assert_eq!(d.restored_bytes, bytes);
+    assert_eq!(d.restore(0, ActKind::H).unwrap(), 0);
+    let back: Vec<u32> =
+        d.get(0, ActKind::H).unwrap().data().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(back, bits);
+
+    // Absent keys are hard errors, not silent no-ops.
+    assert!(d.spill(7, ActKind::A).is_err());
+    assert!(d.restore(7, ActKind::A).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Host-side: the planner spills the coldest layer instead of stalling.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planner_spills_instead_of_deferring_and_shortens_makespan() {
+    // 4 equal items on one device, 2 slots, but the memory cap admits
+    // only one 600-byte transient at a time: the defer-only plan
+    // serializes (makespan 4), the offload plan pages out the one
+    // resident layer (400 B of headroom) and runs two-wide (makespan 2).
+    let items: Vec<SchedItem> = (0..4)
+        .map(|i| SchedItem {
+            id: i,
+            device: 0,
+            layer: 0,
+            cost_s: 1.0,
+            ready_at: 0.0,
+            mem_bytes: 600,
+        })
+        .collect();
+    let caps = vec![Some(1000u64)];
+    let policy = PolicyKind::Fifo.policy();
+
+    let plain = schedule::plan_backward(&items, None, 0.0, 1, 2, &caps, policy.as_ref()).unwrap();
+    assert!((plain.schedule.makespan_s() - 4.0).abs() < 1e-9, "defer-only must serialize");
+    assert_eq!(plain.schedule.spilled_bytes(), 0);
+
+    let spillable: Vec<BTreeMap<usize, u64>> = vec![[(9usize, 400u64)].into_iter().collect()];
+    let off = schedule::plan_backward_offload(
+        &items, None, 0.0, 1, 2, &caps, policy.as_ref(), &spillable,
+    )
+    .unwrap();
+    let spills: Vec<_> = off.schedule.spills().collect();
+    assert_eq!(spills.len(), 1, "exactly one eviction buys the needed headroom");
+    assert_eq!((spills[0].device, spills[0].layer, spills[0].bytes), (0, 9, 400));
+    assert_eq!(off.schedule.spilled_bytes(), 400);
+    assert!(
+        (off.schedule.makespan_s() - 2.0).abs() < 1e-9,
+        "spill-over-defer must run two-wide, got {}",
+        off.schedule.makespan_s()
+    );
+    // Same item set either way — spilling never changes membership.
+    assert_eq!(off.schedule.scheduled_items(), plain.schedule.scheduled_items());
+}
+
+// ---------------------------------------------------------------------------
+// Host-side: §4.3 count identities + the offload memory frontier.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_unit_identity_holds_for_every_window() {
+    // Σ over a layer's chunk items of vjp_units(W_eff, T) must equal
+    // T + 2·vjp_count_truncated(T, W_eff) — the identity the end-to-end
+    // sweep below measures through real executions.
+    let dims = ModelDims {
+        name: "trunc".into(),
+        v: 16,
+        p: 8,
+        n: 4,
+        k: 3,
+        t: 48,
+        w: 16,
+        c: 8,
+        eps: 1e-6,
+    };
+    for win in 0..=dims.w + 4 {
+        let sched = SchedCfg { truncate_window: win, ..Default::default() };
+        let w_eff = sched.window(&dims);
+        let per_layer: u64 = adjoint_sharding::sharding::plan_chunks(1, dims.t, dims.c)
+            .unwrap()
+            .iter()
+            .map(|it| it.vjp_units(w_eff, dims.t))
+            .sum();
+        assert_eq!(
+            per_layer,
+            dims.t as u64 + 2 * vjp_count_truncated(dims.t as u64, w_eff as u64),
+            "window {win}"
+        );
+    }
+}
+
+#[test]
+fn offload_widens_the_modeled_memory_frontier() {
+    // Acceptance (ISSUE 8): under a capped HBM budget, the modeled max
+    // trainable context strictly increases once stored activations may
+    // page to host RAM — and a starved host tier gives the offload
+    // frontier nothing to win with. Same 1.27B Fig-1 model the
+    // `max-context` report prints.
+    let (_, dims) = memcost::fig1_models().into_iter().last().unwrap();
+    let m = MemModel::default();
+    let hbm = 40u64 << 30;
+    let hbm_only = m.max_context(&dims, 2, 8, hbm, true, 2048, 7);
+    let offload = m.max_context_offload(&dims, 2, 8, hbm, 1100 << 30, 2048, 7);
+    assert!(
+        offload > hbm_only,
+        "offload must widen the frontier: {offload} vs {hbm_only}"
+    );
+    let starved = m.max_context_offload(&dims, 2, 8, hbm, 0, 2048, 7);
+    assert!(starved <= hbm_only, "no host budget, no win: {starved} vs {hbm_only}");
+}
+
+// ---------------------------------------------------------------------------
+// PJRT sweeps — skip without artifacts.
+// ---------------------------------------------------------------------------
+
+fn root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    root().join(name).join("manifest.json").exists()
+}
+
+fn process_executor(workers: usize) -> ProcessExecutor {
+    ProcessExecutor::new(workers).with_program(PathBuf::from(env!("CARGO_BIN_EXE_adjsh")))
+}
+
+fn assert_grads_bit_identical(a: &GradSet, b: &GradSet, ctx: &str) {
+    for (k, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (i, (ta, tb)) in la.0.iter().zip(&lb.0).enumerate() {
+            assert_eq!(ta.data(), tb.data(), "{ctx}: layer {k} grad {i} differs");
+        }
+    }
+    assert_eq!(a.omega.data(), b.omega.data(), "{ctx}: dΩ differs");
+}
+
+fn grads_differ(a: &GradSet, b: &GradSet) -> bool {
+    a.layers
+        .iter()
+        .zip(&b.layers)
+        .any(|(la, lb)| la.0.iter().zip(&lb.0).any(|(ta, tb)| ta.data() != tb.data()))
+}
+
+/// Forward once into a fresh fleet under `topo`, then backward with
+/// `exec` under `sched`; returns the grads, the phase output, and the
+/// total bytes the fleet spilled (forward `make_room` + plan evictions).
+fn run_once(
+    config: &str,
+    topo: TopologyCfg,
+    sched: &SchedCfg,
+    seed: u64,
+    exec: &mut dyn Executor,
+) -> (GradSet, adjoint_sharding::adjoint::AdjointOutput, u64) {
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join(config)).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let params = ParamSet::init(&dims, seed);
+    let corpus = MarkovCorpus::new(dims.v, seed ^ 0x0FF1);
+    let s = corpus.sample(0, dims.t);
+    let mut fleet = Fleet::new(topo, dims.k).unwrap();
+    pipeline::forward(&arts, &dims, &params, &mut fleet, &s.tokens, &s.targets).unwrap();
+    let mut grads = GradSet::zeros(&dims);
+    let mut pool = StagePool::new();
+    let out = adjoint::backward_pooled(
+        &arts, &dims, &params, &mut fleet, &mut grads, sched, None, &mut pool, exec,
+    )
+    .unwrap();
+    let spilled: u64 = fleet.devices.iter().map(|d| d.spilled_bytes).sum();
+    (grads, out, spilled)
+}
+
+#[test]
+fn forced_spill_gradients_bit_identical_across_executors() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let sched = SchedCfg::default();
+    let uncapped = TopologyCfg { devices: 2, ..Default::default() };
+    let (g_ref, o_ref, s_ref) =
+        run_once("tiny", uncapped, &sched, 11, &mut SimExecutor::new());
+    assert_eq!(s_ref, 0, "uncapped run must not spill");
+
+    // A 1-byte HBM cap forces every stored layer out to the host tier as
+    // soon as it lands — maximal paging pressure on every executor.
+    let capped = TopologyCfg { devices: 2, offload: true, hbm_bytes: 1, ..Default::default() };
+    let mut runs: Vec<(&'static str, Box<dyn Executor>)> = vec![
+        ("sim", Box::new(SimExecutor::new())),
+        ("threaded", Box::new(ThreadedExecutor::new(0))),
+        ("process", Box::new(process_executor(0))),
+    ];
+    for (label, exec) in runs.iter_mut() {
+        let (g, o, spilled) =
+            run_once("tiny", capped.clone(), &sched, 11, exec.as_mut());
+        assert!(spilled > 0, "{label}: forced-spill run must actually page out");
+        assert_grads_bit_identical(&g, &g_ref, &format!("forced-spill {label}"));
+        assert_eq!(o.vjp_units, o_ref.vjp_units, "{label}: vjp_units");
+        assert_eq!(o.calls, o_ref.calls, "{label}: calls");
+    }
+}
+
+#[test]
+fn mid_phase_plan_evictions_stay_bit_identical_and_report_stats() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    // Reference: untouched fleet, no offload.
+    let sched = SchedCfg::default();
+    let (g_ref, ..) = run_once(
+        "tiny",
+        TopologyCfg { devices: 2, ..Default::default() },
+        &sched,
+        13,
+        &mut SimExecutor::new(),
+    );
+
+    // Same forward, then tighten the budget *between* forward and
+    // backward so the activations are all HBM-resident (nothing spilled
+    // by make_room) and the stall lands on the backward planner: its
+    // spill-over-defer branch must fire, the evictions must be committed
+    // to the fleet, and the modeled D2H/H2D stats must be reported.
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    let params = ParamSet::init(&dims, 13);
+    let corpus = MarkovCorpus::new(dims.v, 13 ^ 0x0FF1);
+    let s = corpus.sample(0, dims.t);
+    let mut fleet =
+        Fleet::new(TopologyCfg { devices: 2, ..Default::default() }, dims.k).unwrap();
+    pipeline::forward(&arts, &dims, &params, &mut fleet, &s.tokens, &s.targets).unwrap();
+
+    let headroom = memcost::adjoint_single_transient_bytes(&dims) * 3 / 2;
+    let max_live = fleet.devices.iter().map(|d| d.mem.live).max().unwrap();
+    fleet.cfg.offload = true;
+    fleet.cfg.hbm_bytes = max_live + headroom;
+
+    let mut grads = GradSet::zeros(&dims);
+    let mut pool = StagePool::new();
+    let out = adjoint::backward_pooled(
+        &arts,
+        &dims,
+        &params,
+        &mut fleet,
+        &mut grads,
+        &sched,
+        None,
+        &mut pool,
+        &mut SimExecutor::new(),
+    )
+    .unwrap();
+
+    assert!(out.spilled_bytes > 0, "tight cap must trigger plan evictions");
+    assert!(out.spill_s > 0.0, "modeled D2H time must be charged");
+    // A restore is modeled iff the spilled layer still has pending work,
+    // and every modeled restore is classified as prefetch hit or miss.
+    assert!(
+        (out.restore_s > 0.0) == (out.prefetch_hit + out.prefetch_miss > 0),
+        "restores ({}) and prefetch accounting ({}+{}) must agree",
+        out.restore_s,
+        out.prefetch_hit,
+        out.prefetch_miss
+    );
+    // The evictions were committed: those layers are host-resident now.
+    let host_resident: u64 = fleet.devices.iter().map(|d| d.host.live).sum();
+    assert!(host_resident > 0, "committed spills must land on the host tier");
+    assert_grads_bit_identical(&grads, &g_ref, "mid-phase evictions");
+}
+
+#[test]
+fn truncate_window_sweep_matches_paper_count_and_wide_window_is_noop() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    drop(arts);
+    let topo = || TopologyCfg { devices: 2, ..Default::default() };
+
+    let (g_full, o_full, _) = run_once(
+        "tiny",
+        topo(),
+        &SchedCfg::default(),
+        17,
+        &mut SimExecutor::new(),
+    );
+
+    let mut prev_units = 0u64;
+    for win in [1usize, 2, dims.w / 2, dims.w, dims.w + 100] {
+        let sched = SchedCfg { truncate_window: win, ..Default::default() };
+        let w_eff = sched.window(&dims);
+        let (g, o, _) = run_once("tiny", topo(), &sched, 17, &mut SimExecutor::new());
+
+        // Acceptance (ISSUE 8): measured units equal the §4.3 closed form
+        // exactly — per layer T vjp_C's + 2·vjp_count_truncated(T, W).
+        let expect = dims.k as u64
+            * (dims.t as u64 + 2 * vjp_count_truncated(dims.t as u64, w_eff as u64));
+        assert_eq!(o.vjp_units, expect, "window {win}: measured units vs closed form");
+        assert!(o.vjp_units >= prev_units, "window {win}: units must be window-monotone");
+        prev_units = o.vjp_units;
+
+        if w_eff >= dims.w {
+            // W ≥ w clips nothing: an exact no-op, bit for bit.
+            assert_grads_bit_identical(&g, &g_full, &format!("window {win} ≥ W"));
+            assert_eq!(o.vjp_units, o_full.vjp_units);
+        } else if win <= 2 {
+            // A tight window must actually drop out-of-window terms.
+            assert!(grads_differ(&g, &g_full), "window {win}: truncation changed nothing");
+        }
+    }
+}
+
+#[test]
+fn truncated_backward_bit_identical_across_executors() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::shared().unwrap();
+    let arts = ArtifactSet::load(rt, &root().join("tiny")).unwrap();
+    let dims = ModelDims::from_config_json(&arts.manifest.raw_config).unwrap();
+    drop(arts);
+    let win = (dims.w / 4).max(1);
+    let sched = SchedCfg { truncate_window: win, ..Default::default() };
+    let topo = || TopologyCfg { devices: 2, ..Default::default() };
+
+    let (g_sim, o_sim, _) = run_once("tiny", topo(), &sched, 19, &mut SimExecutor::new());
+    let (g_thr, o_thr, _) =
+        run_once("tiny", topo(), &sched, 19, &mut ThreadedExecutor::new(0));
+    let (g_proc, o_proc, _) =
+        run_once("tiny", topo(), &sched, 19, &mut process_executor(0));
+
+    assert_grads_bit_identical(&g_sim, &g_thr, "truncated sim vs threaded");
+    assert_grads_bit_identical(&g_sim, &g_proc, "truncated sim vs process");
+    assert_eq!(o_sim.vjp_units, o_thr.vjp_units);
+    assert_eq!(o_sim.vjp_units, o_proc.vjp_units);
+    assert_eq!(o_sim.calls, o_thr.calls);
+    assert_eq!(o_sim.calls, o_proc.calls);
+}
+
+#[test]
+fn trainer_with_offload_and_truncation_matches_across_executors() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    use adjoint_sharding::config::RunConfig;
+    use adjoint_sharding::exec::ExecutorKind;
+    use adjoint_sharding::train::Trainer;
+
+    std::env::set_var("ADJSH_WORKER_BIN", env!("CARGO_BIN_EXE_adjsh"));
+
+    // --offload with a starving HBM cap + --truncate-window together,
+    // end to end through the trainer: whole optimization trajectories
+    // must coincide across executors (identical grads → identical Adam
+    // updates → identical next-step losses), and the forward-pass loss
+    // is truncation-blind (backward-only change), so step-1 losses also
+    // match the untruncated baseline below.
+    let mut losses = Vec::new();
+    for kind in ExecutorKind::ALL {
+        let rt = Runtime::shared().unwrap();
+        let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
+        cfg.topology.devices = 2.min(cfg.dims.k);
+        cfg.topology.offload = true;
+        cfg.topology.hbm_bytes = 1;
+        cfg.sched.truncate_window = (cfg.dims.w / 4).max(1);
+        cfg.exec.kind = kind;
+        cfg.log_every = usize::MAX;
+        let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 29));
+        let mut tr = Trainer::new(rt, cfg, corpus).unwrap();
+        let mut run_losses = Vec::new();
+        for _ in 0..3 {
+            run_losses.push(tr.step().unwrap().loss);
+        }
+        losses.push(run_losses);
+    }
+    for (i, kind) in ExecutorKind::ALL.iter().enumerate().skip(1) {
+        assert_eq!(
+            losses[0], losses[i],
+            "offload+truncation trajectories diverged: sim vs {kind}"
+        );
+    }
+
+    // Step 1 runs on identical params, and truncation touches only the
+    // backward phase — its first forward loss equals the full-window one.
+    let rt = Runtime::shared().unwrap();
+    let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
+    cfg.topology.devices = 2.min(cfg.dims.k);
+    cfg.log_every = usize::MAX;
+    let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 29));
+    let mut tr = Trainer::new(rt, cfg, corpus).unwrap();
+    let full_first = tr.step().unwrap().loss;
+    assert_eq!(losses[0][0], full_first, "truncation must not touch the forward pass");
+}

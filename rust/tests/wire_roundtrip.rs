@@ -66,6 +66,7 @@ fn sample_job(kill: Option<u64>) -> JobMsg {
         dims: dims(),
         artifacts_dir: PathBuf::from("artifacts/tiny"),
         batch: 2,
+        truncate: 3,
         items: items.clone(),
         devices: vec![DeviceWorkMsg {
             device: 1,
@@ -78,6 +79,7 @@ fn sample_job(kill: Option<u64>) -> JobMsg {
             w_c: vec![(0, Arc::new(Tensor::new(vec![2, 4], floats).unwrap()))],
         }],
         kill,
+        hang: None,
     }
 }
 
@@ -110,7 +112,9 @@ fn job_roundtrip_is_byte_exact() {
         assert_eq!(encode_job(&back).unwrap(), bytes, "kill={kill:?}");
         // And the decoded structure matches field-wise.
         assert_eq!(back.kill, kill);
+        assert_eq!(back.hang, job.hang);
         assert_eq!(back.batch, job.batch);
+        assert_eq!(back.truncate, job.truncate);
         assert_eq!(back.items, job.items);
         assert_eq!(back.artifacts_dir, job.artifacts_dir);
         assert_eq!(back.dims.name, job.dims.name);

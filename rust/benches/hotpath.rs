@@ -23,7 +23,7 @@ use adjoint_sharding::sharding::plan_chunks;
 use adjoint_sharding::tensor::Tensor;
 use adjoint_sharding::topology::Fleet;
 use adjoint_sharding::train::Trainer;
-use adjoint_sharding::util::bench::{bench, write_json, BenchStats};
+use adjoint_sharding::util::bench::{bench, write_json, BenchStats, Provenance};
 
 /// Host-bench dims: big enough that per-item staging cost is visible,
 /// small enough to iterate quickly.
@@ -317,7 +317,8 @@ fn main() {
     }
 
     let out = Path::new("BENCH_hotpath.json");
-    write_json(out, "hotpath", false, &note, &results).expect("writing bench json");
+    let prov = Provenance::collect(&host_note("hotpath"), 0, &note);
+    write_json(out, "hotpath", false, &note, &prov, &results).expect("writing bench json");
     println!("\nwrote {}", out.display());
 }
 

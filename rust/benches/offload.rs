@@ -19,7 +19,7 @@ use adjoint_sharding::schedule::{self, PolicyKind, SchedItem};
 use adjoint_sharding::sharding::plan_chunks;
 use adjoint_sharding::topology::{ActKind, Fleet};
 use adjoint_sharding::train::Trainer;
-use adjoint_sharding::util::bench::{bench, write_json, BenchStats};
+use adjoint_sharding::util::bench::{bench, write_json, BenchStats, Provenance};
 
 /// Same host-bench dims as `hotpath.rs`, so the two profiles compose.
 fn host_dims() -> ModelDims {
@@ -206,6 +206,7 @@ fn main() {
     }
 
     let out = Path::new("BENCH_offload.json");
-    write_json(out, "offload", false, &note, &results).expect("writing bench json");
+    let prov = Provenance::collect("offload host dims K=4 T=512 W=64 C=64", 0, &note);
+    write_json(out, "offload", false, &note, &prov, &results).expect("writing bench json");
     println!("\nwrote {}", out.display());
 }

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ModelDims, SchedCfg};
 use crate::exec::{self, ExecCtx, Executor, SimExecutor};
 use crate::model::{GradSet, ParamSet};
+use crate::obs::trace::{plan_spans, TraceEvent, TraceKind};
 use crate::pipeline::ForwardTiming;
 use crate::runtime::{ArtifactSet, EntrySpec};
 use crate::schedule::{self, BackwardPlan, SchedItem};
@@ -77,6 +78,14 @@ pub struct AdjointOutput {
     /// Re-planned from *measured* item seconds after execution (the
     /// dispatch itself followed the analytic plan — DESIGN.md §Execution).
     pub plan: BackwardPlan,
+    /// Phase trace (DESIGN.md §Observability): plan-derived `Launch`
+    /// spans on the virtual timeline (one per scheduled slot span, the
+    /// same on every backend), `Spill`/`Restore` spans and
+    /// `SpillDecision` instants carrying the *actual* bytes the
+    /// topology tier moved, plus whatever the executor recorded
+    /// (worker wall spans, supervision instants, the merge's `Reduce`).
+    /// Pure telemetry — nothing downstream of the gradient path reads it.
+    pub trace: Vec<TraceEvent>,
 }
 
 /// Arena slot indices of the six *variable* `layer_adjoint_grad` inputs
@@ -581,21 +590,46 @@ pub fn backward_pooled(
     // tier-blind), so residency during the phase matches what the plan
     // admitted against. Deterministic across backends because the
     // decisions come from the analytic plan, never from measured time.
+    // Trace backbone: plan-derived Launch spans on the virtual timeline.
+    // Pure function of the analytic plan, so the same on every backend —
+    // and on sim, byte-identical across runs (DESIGN.md §Observability).
+    let mut trace: Vec<TraceEvent> = plan_spans(&dispatch.plan.schedule);
+
+    let om = crate::memcost::OffloadModel::from_link(fleet.cfg.host_link_bytes_per_s);
     let spill_decisions: Vec<schedule::SpillDecision> =
         dispatch.plan.schedule.spills().copied().collect();
     for s in &spill_decisions {
-        fleet.devices[s.device].spill_layer(s.layer);
+        // Spill spans carry the bytes the tier *actually* moved, so
+        // Σ spill-span bytes equals the topology accountant exactly
+        // (the counters-conservation test).
+        let moved = fleet.devices[s.device].spill_layer(s.layer);
+        trace.push(TraceEvent::instant_virt(
+            s.device,
+            TraceKind::SpillDecision,
+            s.at_s,
+            s.layer,
+            moved,
+        ));
+        trace.push(TraceEvent::span_virt(
+            s.device,
+            TraceKind::Spill,
+            s.at_s,
+            s.at_s + om.spill_s(moved),
+            s.layer,
+            moved,
+        ));
     }
 
     // Execute every VJP bundle once; measured seconds become the virtual
     // service costs (the transient working set is "disposed after the
     // computation", §3.3 — its lifetime in virtual time is the span the
     // scheduler assigns below).
-    let outcome = executor.execute(
+    let mut outcome = executor.execute(
         ExecCtx { arts, dims, params, fleet, pool },
         &dispatch,
         grads,
     )?;
+    trace.append(&mut outcome.trace);
 
     // Modeled offload accounting (see `AdjointOutput`): D2H spill cost
     // per decision; H2D restore cost once per spilled layer that still
@@ -604,7 +638,6 @@ pub fn backward_pooled(
     // when the layer's first dispatch in its lane has a prior call to
     // hide the H2D under (the double-buffered stage pair); lane-first
     // dispatches and the single-item path (no stage pair) are misses.
-    let om = crate::memcost::OffloadModel::from_link(fleet.cfg.host_link_bytes_per_s);
     let mut spilled_bytes = 0u64;
     let mut spill_s = 0.0;
     let mut restore_s = 0.0;
@@ -621,6 +654,14 @@ pub fn backward_pooled(
             None => {} // never used again: spilled for good, no restore
             Some(pos) => {
                 restore_s += om.restore_s(s.bytes);
+                trace.push(TraceEvent::span_virt(
+                    s.device,
+                    TraceKind::Restore,
+                    s.at_s,
+                    s.at_s + om.restore_s(s.bytes),
+                    s.layer,
+                    s.bytes,
+                ));
                 if pos > 0 && width > 1 {
                     prefetch_hit += 1;
                 } else {
@@ -707,6 +748,7 @@ pub fn backward_pooled(
         prefetch_hit,
         prefetch_miss,
         plan,
+        trace,
     })
 }
 

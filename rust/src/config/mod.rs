@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::exec::{ExecCfg, FaultPlan};
+use crate::obs::LogLevel;
 use crate::schedule::PolicyKind;
 use crate::util::json::Json;
 
@@ -249,6 +250,19 @@ impl Default for OptimCfg {
     }
 }
 
+/// Observability settings (`--trace`, `--log-level`; DESIGN.md
+/// §Observability).
+#[derive(Debug, Clone, Default)]
+pub struct ObsCfg {
+    /// Write the run's Chrome trace-event JSON here (`--trace out.json`;
+    /// load in chrome://tracing or Perfetto). Recording is always on
+    /// internally — this only gates the file write, which is how
+    /// "tracing never changes gradients" holds by construction.
+    pub trace: Option<PathBuf>,
+    /// Structured-log threshold (`--log-level error|warn|info|debug`).
+    pub log_level: LogLevel,
+}
+
 /// Everything a training run needs.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -283,6 +297,8 @@ pub struct RunConfig {
     /// Where training checkpoints go (`--checkpoint-dir`; default
     /// `checkpoints/` when periodic checkpointing is on).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Trace/log settings (`--trace`, `--log-level`).
+    pub obs: ObsCfg,
 }
 
 impl RunConfig {
@@ -311,6 +327,7 @@ impl RunConfig {
             log_csv: None,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            obs: ObsCfg::default(),
         })
     }
 
@@ -401,6 +418,7 @@ mod tests {
             log_csv: None,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            obs: ObsCfg::default(),
         };
         assert!(cfg.validate().is_err()); // 3 devices > 2 layers
     }

@@ -57,6 +57,7 @@ use anyhow::{bail, Context, Result};
 use crate::adjoint::{stage_slot, ItemStage, StagePool};
 use crate::config::{ModelDims, SchedCfg};
 use crate::model::{GradSet, ParamSet};
+use crate::obs::trace::{wall_ns_since, TraceEvent, TraceKind, COORD_LANE, NO_KEY};
 use crate::runtime::{ArgRef, ArtifactSet, EntrySpec, InFlight, StagedConst};
 use crate::schedule::{self, BackwardPlan, SchedItem};
 use crate::sharding::{plan_batches, BatchGroup, WorkItem};
@@ -402,6 +403,11 @@ pub struct ExecOutcome {
     /// PJRT executions dispatched (one per item single-item, one per
     /// batch group batched).
     pub calls: u64,
+    /// The phase's trace events: lane-measured wall spans (gather/launch,
+    /// stamps relative to each lane's job start) plus coordinator-side
+    /// supervision instants and the merge's reduce span. Pure telemetry —
+    /// collected unconditionally, never read on the gradient path.
+    pub trace: Vec<TraceEvent>,
 }
 
 /// An execution backend for the planned backward phase.
@@ -578,17 +584,20 @@ fn lane_snapshot_acts(
 /// layer order. Each layer must arrive from exactly one lane (the
 /// placement invariant — recovery re-plans preserve it), and every
 /// wire-supplied index is bounds-checked before use. Returns the merged
-/// `(item_secs, wall_s, overlap_s, calls)` accounting.
+/// `(item_secs, wall_s, overlap_s, calls, trace)` accounting — the lanes'
+/// trace events in lane-arrival order plus the merge's own reduce span.
 pub(crate) fn merge_partials(
     dones: Vec<DoneMsg>,
     n_items: usize,
     grads: &mut GradSet,
-) -> Result<(Vec<f64>, f64, f64, u64)> {
+) -> Result<(Vec<f64>, f64, f64, u64, Vec<TraceEvent>)> {
+    let merge_start = std::time::Instant::now();
     let mut by_layer: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = vec![0.0f64; n_items];
     let mut wall_s = 0.0;
     let mut overlap_s = 0.0;
     let mut calls = 0u64;
+    let mut trace = Vec::new();
     for done in dones {
         for (layer, g) in done.layer_grads {
             if layer >= grads.layers.len() {
@@ -607,11 +616,20 @@ pub(crate) fn merge_partials(
         wall_s += done.wall_s;
         overlap_s += done.overlap_s;
         calls += done.calls;
+        trace.extend(done.trace);
     }
     for (layer, g) in &by_layer {
         grads.accumulate_layer(*layer, g)?;
     }
-    Ok((item_secs, wall_s, overlap_s, calls))
+    trace.push(TraceEvent::span_wall(
+        COORD_LANE,
+        TraceKind::Reduce,
+        0,
+        wall_ns_since(merge_start),
+        NO_KEY,
+        0,
+    ));
+    Ok((item_secs, wall_s, overlap_s, calls, trace))
 }
 
 #[cfg(test)]
@@ -764,6 +782,7 @@ mod tests {
             calls: 1,
             died: false,
             executed: 1,
+            trace: Vec::new(),
         };
         let mut grads = GradSet::zeros(&d);
         // Two lanes claiming the same layer: placement violated.
@@ -776,10 +795,15 @@ mod tests {
         assert!(merge_partials(vec![bad_item], 4, &mut grads).is_err());
         // The happy path accumulates.
         let mut grads = GradSet::zeros(&d);
-        let (item_secs, wall, _, calls) =
+        let (item_secs, wall, _, calls, trace) =
             merge_partials(vec![mk(0), mk(1)], 4, &mut grads).unwrap();
         assert_eq!(item_secs.len(), 4);
         assert!(wall > 0.0);
         assert_eq!(calls, 2);
+        // The merge records exactly one coordinator reduce span.
+        let reduces: Vec<_> =
+            trace.iter().filter(|e| e.kind == TraceKind::Reduce).collect();
+        assert_eq!(reduces.len(), 1);
+        assert_eq!(reduces[0].lane, COORD_LANE);
     }
 }

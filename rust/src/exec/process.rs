@@ -49,6 +49,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::model::GradSet;
+use crate::obs::trace::{TraceEvent, TraceKind, NO_KEY};
 
 use super::fault::{
     devices_of_lane, plan_recovery, ring_order, split_faults, Death, FaultPlan, FaultReport,
@@ -149,6 +150,7 @@ fn await_reply(
     lane: usize,
     deadline_s: f64,
     stragglers: &mut Vec<usize>,
+    events: &mut Vec<TraceEvent>,
 ) -> Result<Reply> {
     let base = h.units_seen;
     let mut clock = DeadlineClock::new(deadline_s);
@@ -173,12 +175,14 @@ fn await_reply(
                     if !stragglers.contains(&lane) {
                         stragglers.push(lane);
                     }
+                    events.push(TraceEvent::instant(lane, TraceKind::StragglerWarn, NO_KEY, 0));
                     eprintln!(
                         "[exec] lane {lane}: no progress inside its deadline — \
                          straggler warning, granting one grace period"
                     );
                 }
                 Escalation::Kill => {
+                    events.push(TraceEvent::instant(lane, TraceKind::Kill, NO_KEY, 0));
                     eprintln!(
                         "[exec] lane {lane}: hung through the grace period — \
                          killing the worker and recovering its range"
@@ -457,6 +461,7 @@ impl Executor for ProcessExecutor {
         // its own pipe pair, so a worker blocked on its DONE write can
         // never block these writes — the phase cannot deadlock.
         let mut stragglers: Vec<usize> = Vec::new();
+        let mut events: Vec<TraceEvent> = Vec::new();
         let mut sent: BTreeMap<usize, JobMsg> = BTreeMap::new();
         let mut need: Vec<(usize, bool)> = Vec::new();
         let mut predead = false;
@@ -493,7 +498,7 @@ impl Executor for ProcessExecutor {
             let Some(msg) = sent.get(&lane) else { continue };
             let deadline = self.supervise.deadline_s(job_vjp_units(msg));
             let h = self.workers[lane].as_mut().expect("job lanes were spawned");
-            match await_reply(h, lane, deadline, &mut stragglers)? {
+            match await_reply(h, lane, deadline, &mut stragglers, &mut events)? {
                 Reply::Done(done) if done.died => {
                     // Belt and braces: a worker that *reports* death over
                     // the wire (instead of exiting) is still dead.
@@ -502,7 +507,7 @@ impl Executor for ProcessExecutor {
                         reap(h);
                     }
                     let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                     need.push((lane, rejoin));
                 }
                 Reply::Done(done) => dones.push(done),
@@ -522,7 +527,7 @@ impl Executor for ProcessExecutor {
                     if let Some(h) = self.workers[lane].take() {
                         reap(h);
                     }
-                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                     need.push((lane, rejoin));
                 }
                 Reply::Hung { executed } => {
@@ -539,7 +544,7 @@ impl Executor for ProcessExecutor {
                         kill_worker(h);
                     }
                     let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                     need.push((lane, rejoin));
                 }
             }
@@ -595,7 +600,7 @@ impl Executor for ProcessExecutor {
                 let was_respawned = respawning.contains(&lane);
                 let deadline = self.supervise.deadline_s(job_vjp_units(msg));
                 let h = self.workers[lane].as_mut().expect("recovery lane is live");
-                match await_reply(h, lane, deadline, &mut stragglers)? {
+                match await_reply(h, lane, deadline, &mut stragglers, &mut events)? {
                     Reply::Done(done) if !done.died => {
                         recovered.extend(done.item_secs.iter().map(|&(id, _)| id));
                         if was_respawned {
@@ -611,7 +616,8 @@ impl Executor for ProcessExecutor {
                             reap(h);
                         }
                         let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        let rejoin =
+                            decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                         next_need.push((lane, rejoin));
                     }
                     Reply::Hung { .. } => {
@@ -625,7 +631,8 @@ impl Executor for ProcessExecutor {
                             hung_lanes.push(lane);
                         }
                         let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        let rejoin =
+                            decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                         next_need.push((lane, rejoin));
                     }
                 }
@@ -668,8 +675,10 @@ impl Executor for ProcessExecutor {
             self.report = Some(FaultReport { stragglers, ..Default::default() });
         }
 
-        let (item_secs, wall_s, overlap_s, calls) =
+        let (item_secs, wall_s, overlap_s, calls, merged) =
             merge_partials(dones, dispatch.items.len(), grads)?;
+        let mut trace = events;
+        trace.extend(merged);
 
         Ok(ExecOutcome {
             item_secs,
@@ -677,6 +686,7 @@ impl Executor for ProcessExecutor {
             host_s: t0.elapsed().as_secs_f64(),
             overlap_s,
             calls,
+            trace,
         })
     }
 }

@@ -35,6 +35,7 @@ use crate::adjoint::{
 };
 use crate::config::ModelDims;
 use crate::model::{GradSet, LayerParams};
+use crate::obs::trace::{TraceEvent, TraceKind, NO_KEY};
 use crate::runtime::{ArgRef, Compiled, ConstKey, InFlight, StagedConst};
 use crate::sharding::{BatchGroup, WorkItem};
 use crate::tensor::Tensor;
@@ -91,17 +92,24 @@ impl SimExecutor {
 }
 
 /// The sim's version of the live backends' supervisor step: record the
-/// attempt, no backoff sleep.
+/// attempt (and its stamp-free trace instant — deterministic, so the sim
+/// trace stays a pure function of the config), no backoff sleep.
 fn sim_decide(
     sup: &mut LaneSupervisor,
     respawns: &mut BTreeMap<usize, u32>,
     lane: usize,
     fault_rejoin: bool,
+    events: &mut Vec<TraceEvent>,
 ) -> bool {
     match sup.on_death(lane, fault_rejoin) {
-        RespawnDecision::Spread | RespawnDecision::Retire => false,
+        RespawnDecision::Spread => false,
+        RespawnDecision::Retire => {
+            events.push(TraceEvent::instant(lane, TraceKind::LaneRetire, 0, 0));
+            false
+        }
         RespawnDecision::Respawn { attempt, .. } => {
             respawns.insert(lane, attempt);
+            events.push(TraceEvent::instant(lane, TraceKind::Respawn, attempt as usize, 0));
             true
         }
     }
@@ -161,6 +169,7 @@ impl Executor for SimExecutor {
         let mut calls = 0u64;
         let mut deaths: Vec<Death> = Vec::new();
         let mut hung_lanes: Vec<usize> = Vec::new();
+        let mut trace: Vec<TraceEvent> = Vec::new();
         let mut respawns: BTreeMap<usize, u32> = BTreeMap::new();
         let mut need: Vec<(usize, bool)> = Vec::new();
         let mut predead = false;
@@ -234,9 +243,11 @@ impl Executor for SimExecutor {
                 if hang.is_some() {
                     // The live ladder warns (straggler) before it kills.
                     hung_lanes.push(dev);
+                    trace.push(TraceEvent::instant(dev, TraceKind::StragglerWarn, NO_KEY, 0));
+                    trace.push(TraceEvent::instant(dev, TraceKind::Kill, NO_KEY, 0));
                 }
                 let fr = split.as_ref().is_some_and(|s| s.rejoin(dev));
-                let rejoin = sim_decide(&mut self.supervisor, &mut respawns, dev, fr);
+                let rejoin = sim_decide(&mut self.supervisor, &mut respawns, dev, fr, &mut trace);
                 need.push((dev, rejoin));
             }
         }
@@ -285,10 +296,22 @@ impl Executor for SimExecutor {
                             // the bits match the live backends either way.
                             if hang.is_some() && !hung_lanes.contains(&rl.lane) {
                                 hung_lanes.push(rl.lane);
+                                trace.push(TraceEvent::instant(
+                                    rl.lane,
+                                    TraceKind::StragglerWarn,
+                                    NO_KEY,
+                                    0,
+                                ));
+                                trace.push(TraceEvent::instant(rl.lane, TraceKind::Kill, NO_KEY, 0));
                             }
                             let fr = split.as_ref().is_some_and(|s| s.rejoin(rl.lane));
-                            let rejoin =
-                                sim_decide(&mut self.supervisor, &mut respawns, rl.lane, fr);
+                            let rejoin = sim_decide(
+                                &mut self.supervisor,
+                                &mut respawns,
+                                rl.lane,
+                                fr,
+                                &mut trace,
+                            );
                             next_need.push((rl.lane, rejoin));
                             continue;
                         }
@@ -369,6 +392,7 @@ impl Executor for SimExecutor {
             host_s: t0.elapsed().as_secs_f64(),
             overlap_s,
             calls,
+            trace,
         })
     }
 }

@@ -28,6 +28,8 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
+use crate::obs::trace::{TraceEvent, TraceKind};
+
 use super::fault::{FaultKind, FaultSplit};
 use super::wire::JobMsg;
 
@@ -251,18 +253,20 @@ impl LaneSupervisor {
 }
 
 /// Apply the supervisor's verdict for a dead lane (shared by the live
-/// backends): log it, record the attempt, sleep out the backoff, and
-/// return whether the lane rejoins with its own range (`true`) or its
-/// orphans spread over the survivors (`false`).
+/// backends): log it, record the attempt and its trace instant, sleep
+/// out the backoff, and return whether the lane rejoins with its own
+/// range (`true`) or its orphans spread over the survivors (`false`).
 pub(crate) fn decide(
     sup: &mut LaneSupervisor,
     respawns: &mut BTreeMap<usize, u32>,
     lane: usize,
     fault_rejoin: bool,
+    events: &mut Vec<TraceEvent>,
 ) -> bool {
     match sup.on_death(lane, fault_rejoin) {
         RespawnDecision::Spread => false,
         RespawnDecision::Retire => {
+            events.push(TraceEvent::instant(lane, TraceKind::LaneRetire, 0, 0));
             eprintln!(
                 "[exec] lane {lane}: crash-loop breaker tripped — lane retired, \
                  spreading its range over the survivors"
@@ -271,6 +275,7 @@ pub(crate) fn decide(
         }
         RespawnDecision::Respawn { attempt, delay_s } => {
             respawns.insert(lane, attempt);
+            events.push(TraceEvent::instant(lane, TraceKind::Respawn, attempt as usize, 0));
             eprintln!("[exec] lane {lane}: respawning (attempt {attempt}, {delay_s:.2}s backoff)");
             std::thread::sleep(std::time::Duration::from_secs_f64(delay_s));
             true

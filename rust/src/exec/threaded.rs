@@ -41,6 +41,7 @@ use crate::adjoint::{
     stage_slot, ItemStage,
 };
 use crate::model::GradSet;
+use crate::obs::trace::{virt_ns, wall_ns_since, TraceEvent, TraceKind, NO_KEY};
 use crate::runtime::{ArgRef, Compiled, ConstCache, ConstKey, InFlight, Manifest, Runtime};
 use crate::sharding::BatchGroup;
 use crate::tensor::Tensor;
@@ -173,6 +174,10 @@ pub(crate) fn run_job(
     let entry = entry.as_ref().expect("single-item entry just ensured");
     let w_eff = job.dims.effective_window(job.truncate as usize);
 
+    // Wall-stamped lane telemetry, relative to this job's start; it rides
+    // the DONE reply (wire v4), never a frame of its own.
+    let epoch = Instant::now();
+    let mut trace: Vec<TraceEvent> = Vec::new();
     let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = Vec::new();
     let mut wall_s = 0.0;
@@ -192,7 +197,16 @@ pub(crate) fn run_job(
                 }
             }
             hang_check(&mut hang, executed);
+            let g0 = wall_ns_since(epoch);
             gather_item_args_into_from_truncated(&job.dims, &src, &item, w_eff, stage)?;
+            trace.push(TraceEvent::span_wall(
+                work.device,
+                TraceKind::Gather,
+                g0,
+                wall_ns_since(epoch).saturating_sub(g0),
+                item.layer,
+                0,
+            ));
             let w_c_t = w_c
                 .get(&item.layer)
                 .with_context(|| format!("worker job missing W_c for layer {}", item.layer))?;
@@ -206,7 +220,16 @@ pub(crate) fn run_job(
                 ArgRef::F(stage.view(C_EXT)),
                 ArgRef::F(stage.view(V_EXT)),
             ];
+            let l0 = wall_ns_since(epoch);
             let secs = entry.run_timed_into(&args, outs)?;
+            trace.push(TraceEvent::span_wall(
+                work.device,
+                TraceKind::Launch,
+                l0,
+                wall_ns_since(epoch).saturating_sub(l0),
+                item.layer,
+                0,
+            ));
             // Pinned reduction: the lane is serial and its queue is
             // ascending-id, so this is the exact `0 + g₀ + g₁ + …`
             // sequence the sim backend performs for this layer.
@@ -241,6 +264,7 @@ pub(crate) fn run_job(
         calls,
         died: false,
         executed,
+        trace,
     })
 }
 
@@ -259,6 +283,8 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
     let m_static = batched_entry_width(&entry.spec)?;
     let w_eff = job.dims.effective_window(job.truncate as usize);
 
+    let epoch = Instant::now();
+    let mut trace: Vec<TraceEvent> = Vec::new();
     let mut layer_grads: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     let mut item_secs = Vec::new();
     let mut wall_s = 0.0;
@@ -284,6 +310,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
             hang_check(&mut hang, executed);
             let stage = stage_for(stages, work.device * 2 + gi % 2);
             let tg = Instant::now();
+            let g0 = wall_ns_since(epoch);
             gather_group_args_into_from_truncated(
                 &job.dims,
                 &src,
@@ -293,6 +320,14 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
                 w_eff,
                 stage,
             )?;
+            trace.push(TraceEvent::span_wall(
+                work.device,
+                TraceKind::Gather,
+                g0,
+                wall_ns_since(epoch).saturating_sub(g0),
+                group.layer,
+                0,
+            ));
             if pending.is_some() {
                 let hidden = tg.elapsed().as_secs_f64();
                 overlap_s += hidden;
@@ -300,7 +335,24 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
             }
             if let Some((fly, g)) = pending.take() {
                 let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
-                finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+                let secs = finish_group(
+                    fly,
+                    outs,
+                    acc,
+                    g,
+                    &mut |id, s| item_secs.push((id, s)),
+                    &mut wall_s,
+                )?;
+                let end = wall_ns_since(epoch);
+                let dur = virt_ns(secs);
+                trace.push(TraceEvent::span_wall(
+                    work.device,
+                    TraceKind::Launch,
+                    end.saturating_sub(dur),
+                    dur,
+                    g.layer,
+                    0,
+                ));
             }
             let w_c_t = w_c
                 .get(&group.layer)
@@ -317,7 +369,18 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
         }
         if let Some((fly, g)) = pending.take() {
             let acc = layer_grads.get_mut(&g.layer).expect("acc staged before launch");
-            finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+            let secs =
+                finish_group(fly, outs, acc, g, &mut |id, s| item_secs.push((id, s)), &mut wall_s)?;
+            let end = wall_ns_since(epoch);
+            let dur = virt_ns(secs);
+            trace.push(TraceEvent::span_wall(
+                work.device,
+                TraceKind::Launch,
+                end.saturating_sub(dur),
+                dur,
+                g.layer,
+                0,
+            ));
         }
     }
     if let Some(k) = job.kill {
@@ -335,6 +398,7 @@ fn run_job_batched(st: &mut WorkerState, job: &JobMsg, progress: &AtomicU64) -> 
         calls,
         died: false,
         executed,
+        trace,
     })
 }
 
@@ -464,6 +528,7 @@ impl ThreadedExecutor {
         &mut self,
         jobs: Vec<(usize, JobMsg)>,
         stragglers: &mut Vec<usize>,
+        events: &mut Vec<TraceEvent>,
     ) -> Result<Vec<(usize, RoundOutcome)>> {
         struct Waiting {
             clock: DeadlineClock,
@@ -505,6 +570,12 @@ impl ThreadedExecutor {
                                 if !stragglers.contains(&lane) {
                                     stragglers.push(lane);
                                 }
+                                events.push(TraceEvent::instant(
+                                    lane,
+                                    TraceKind::StragglerWarn,
+                                    NO_KEY,
+                                    0,
+                                ));
                                 eprintln!(
                                     "[exec] lane {lane}: no progress inside its deadline — \
                                      straggler warning, granting one grace period"
@@ -516,6 +587,7 @@ impl ThreadedExecutor {
                     for lane in to_kill {
                         let w = waiting.remove(&lane).expect("lane was waiting");
                         let executed = w.clock.units().saturating_sub(w.base);
+                        events.push(TraceEvent::instant(lane, TraceKind::Kill, NO_KEY, 0));
                         eprintln!(
                             "[exec] lane {lane}: hung through the grace period — \
                              abandoning the thread and recovering its range"
@@ -623,9 +695,10 @@ impl Executor for ThreadedExecutor {
 
         let mut dones = Vec::new();
         let mut hung_lanes: Vec<usize> = Vec::new();
+        let mut events: Vec<TraceEvent> = Vec::new();
         let mut respawns: BTreeMap<usize, u32> = BTreeMap::new();
         let mut deaths_exec: BTreeMap<usize, u64> = BTreeMap::new();
-        for (lane, outcome) in self.run_round(jobs, &mut stragglers)? {
+        for (lane, outcome) in self.run_round(jobs, &mut stragglers, &mut events)? {
             match outcome {
                 RoundOutcome::Done(done) if done.died => {
                     let s = match &split {
@@ -633,7 +706,13 @@ impl Executor for ThreadedExecutor {
                         None => bail!("lane {lane} died with no fault plan armed"),
                     };
                     deaths_exec.insert(lane, done.executed);
-                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, s.rejoin(lane));
+                    let rejoin = decide(
+                        &mut self.supervisor,
+                        &mut respawns,
+                        lane,
+                        s.rejoin(lane),
+                        &mut events,
+                    );
                     need.push((lane, rejoin));
                 }
                 RoundOutcome::Done(done) => dones.push(done),
@@ -644,7 +723,7 @@ impl Executor for ThreadedExecutor {
                     hung_lanes.push(lane);
                     deaths_exec.insert(lane, executed);
                     let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                    let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                     need.push((lane, rejoin));
                 }
             }
@@ -689,7 +768,7 @@ impl Executor for ThreadedExecutor {
                 }
             }
             let mut next_need: Vec<(usize, bool)> = Vec::new();
-            for (lane, outcome) in self.run_round(jobs, &mut stragglers)? {
+            for (lane, outcome) in self.run_round(jobs, &mut stragglers, &mut events)? {
                 let was_respawned = respawning.contains(&lane);
                 match outcome {
                     RoundOutcome::Done(done) if done.died => {
@@ -697,7 +776,8 @@ impl Executor for ThreadedExecutor {
                             bail!("recovery lane {lane} died mid-recovery");
                         }
                         let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        let rejoin =
+                            decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                         next_need.push((lane, rejoin));
                     }
                     RoundOutcome::Done(done) => {
@@ -715,7 +795,8 @@ impl Executor for ThreadedExecutor {
                             hung_lanes.push(lane);
                         }
                         let fr = split.as_ref().is_some_and(|s| s.rejoin(lane));
-                        let rejoin = decide(&mut self.supervisor, &mut respawns, lane, fr);
+                        let rejoin =
+                            decide(&mut self.supervisor, &mut respawns, lane, fr, &mut events);
                         next_need.push((lane, rejoin));
                     }
                 }
@@ -762,8 +843,10 @@ impl Executor for ThreadedExecutor {
         // everything first, then reducing in ascending layer order. Each
         // layer arrives from exactly one lane (device-partitioned; the
         // recovery re-plan preserves this).
-        let (item_secs, wall_s, overlap_s, calls) =
+        let (item_secs, wall_s, overlap_s, calls, merged) =
             merge_partials(dones, dispatch.items.len(), grads)?;
+        let mut trace = events;
+        trace.extend(merged);
 
         Ok(ExecOutcome {
             item_secs,
@@ -771,6 +854,7 @@ impl Executor for ThreadedExecutor {
             host_s: t0.elapsed().as_secs_f64(),
             overlap_s,
             calls,
+            trace,
         })
     }
 }

@@ -25,6 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelDims;
+use crate::obs::trace::{TraceEvent, TraceKind};
 use crate::sharding::{BatchGroup, WorkItem};
 use crate::tensor::Tensor;
 use crate::topology::ActKind;
@@ -35,7 +36,9 @@ pub const MAGIC: [u8; 4] = *b"ADJW";
 /// different build refuses to join rather than corrupting gradients.
 /// v2: PING/PONG heartbeat frames + the `hang` fault field on [`JobMsg`].
 /// v3: the `truncate` window field on [`JobMsg`] (`--truncate-window`).
-pub const WIRE_VERSION: u64 = 3;
+/// v4: per-lane trace events batched onto the DONE reply (`trace` field
+///     on [`DoneMsg`]) — tracing never adds a round-trip.
+pub const WIRE_VERSION: u64 = 4;
 
 /// Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -118,6 +121,11 @@ pub struct DoneMsg {
     pub died: bool,
     /// Work items the lane dispatched before dying (wasted work).
     pub executed: u64,
+    /// The lane's wall-stamped trace events (stamps relative to the
+    /// job's start), batched here so tracing never adds a round-trip
+    /// (wire v4). Pure telemetry: nothing downstream of the gradient
+    /// path reads it.
+    pub trace: Vec<TraceEvent>,
 }
 
 impl DoneMsg {
@@ -131,6 +139,7 @@ impl DoneMsg {
             calls: 0,
             died: true,
             executed,
+            trace: Vec::new(),
         }
     }
 }
@@ -600,6 +609,17 @@ pub fn encode_done(done: &DoneMsg) -> Vec<u8> {
     e.u64(done.calls);
     e.bool(done.died);
     e.u64(done.executed);
+    e.usize(done.trace.len());
+    for ev in &done.trace {
+        e.act_layer(ev.lane); // COORD_LANE crosses as u64::MAX, like the cotangent key
+        e.u8(ev.kind.code());
+        e.u64(ev.virt_ns);
+        e.u64(ev.virt_dur_ns);
+        e.u64(ev.wall_ns);
+        e.u64(ev.wall_dur_ns);
+        e.act_layer(ev.key);
+        e.u64(ev.bytes);
+    }
     e.into_bytes()
 }
 
@@ -630,8 +650,21 @@ pub fn decode_done(payload: &[u8]) -> Result<DoneMsg> {
     let calls = d.u64()?;
     let died = d.bool()?;
     let executed = d.u64()?;
+    let n = d.len()?;
+    let mut trace = Vec::with_capacity(n);
+    for _ in 0..n {
+        let lane = d.act_layer()?;
+        let kind = TraceKind::from_code(d.u8()?)?;
+        let virt_ns = d.u64()?;
+        let virt_dur_ns = d.u64()?;
+        let wall_ns = d.u64()?;
+        let wall_dur_ns = d.u64()?;
+        let key = d.act_layer()?;
+        let bytes = d.u64()?;
+        trace.push(TraceEvent { lane, kind, virt_ns, virt_dur_ns, wall_ns, wall_dur_ns, key, bytes });
+    }
     d.finish()?;
-    Ok(DoneMsg { layer_grads, item_secs, wall_s, overlap_s, calls, died, executed })
+    Ok(DoneMsg { layer_grads, item_secs, wall_s, overlap_s, calls, died, executed, trace })
 }
 
 #[cfg(test)]

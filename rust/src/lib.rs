@@ -24,6 +24,7 @@ pub mod generate;
 pub mod memcost;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod reports;

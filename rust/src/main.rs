@@ -45,6 +45,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&mut cli),
         "inspect" => cmd_inspect(&mut cli),
         "bench" => cmd_bench(&mut cli),
+        "trace" => cmd_trace(&mut cli),
         "" | "help" => {
             println!("{}", HELP);
             Ok(())
@@ -73,9 +74,13 @@ commands:
   inspect   --config <name>
   bench     fig1 | table1 | fig6 | schedule | hotpath | serve | offload |
             vjp-count | max-context | tbar-sweep | chunk-size | topology
+  trace     summary <trace.json> — per-lane utilization, overlap %, and
+            spill traffic from a recorded `--trace` file
   help
 
-common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>";
+common flags: --artifacts <dir> (default: ./artifacts), --seed, --csv <path>,
+              --trace <out.json> (Chrome trace of the run),
+              --log-level error|warn|info|debug";
 
 fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
     let artifacts = PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"));
@@ -173,7 +178,39 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
     cfg.log_every = cli.usize_or("log-every", 10, "log cadence")?;
     let csv = cli.str_or("csv", "", "CSV output path ('' = none)");
     cfg.log_csv = (!csv.is_empty()).then(|| PathBuf::from(csv));
+    let trace = cli.str_or(
+        "trace",
+        "",
+        "write the run's Chrome trace-event JSON here ('' = off; recording is always on)",
+    );
+    cfg.obs.trace = (!trace.is_empty()).then(|| PathBuf::from(trace));
+    cfg.obs.log_level = cli
+        .str_or("log-level", "info", "structured-log threshold: error|warn|info|debug")
+        .parse()?;
     Ok(cfg)
+}
+
+/// `adjsh trace summary <trace.json>` — parse a recorded Chrome trace
+/// back (`util::json`; the lossless `args` stamps) and print per-lane
+/// utilization, overlap %, the span-kind breakdown, and spill traffic.
+fn cmd_trace(cli: &mut Cli) -> Result<()> {
+    let sub = cli.positional.get(1).cloned().unwrap_or_default();
+    if sub != "summary" {
+        bail!("unknown trace subcommand '{sub}' (expected: trace summary <trace.json>)");
+    }
+    let path = match cli.positional.get(2) {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(cli.str_or("trace", "", "recorded trace file to summarize")),
+    };
+    if path.as_os_str().is_empty() {
+        bail!("trace summary needs a file: adjsh trace summary <trace.json>");
+    }
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let events = adjoint_sharding::obs::parse_chrome_trace(&text)?;
+    let summary = adjoint_sharding::obs::summarize(&events);
+    print!("{}", summary.render());
+    Ok(())
 }
 
 /// Sniff the 8-byte magic: is this a full-state training checkpoint
@@ -353,17 +390,24 @@ fn cmd_serve(cli: &mut Cli) -> Result<()> {
         let shown = f.tokens.len().min(16);
         println!("session {} stream (first {shown} tokens): {:?}", f.sid, &f.tokens[..shown]);
     }
+    if !sl.counters.is_empty() {
+        let logger = adjoint_sharding::obs::Logger::new(cfg.obs.log_level);
+        logger.info("metrics", &sl.counters.fields());
+    }
     if !bench_json.is_empty() {
         let path = std::path::PathBuf::from(&bench_json);
+        let desc = format!(
+            "adjsh serve --config {} --sessions {sessions} --tokens {n_new} --max-batch {} \
+             --executor {}",
+            cfg.dims.name, cfg.serve.max_batch, cfg.exec.kind
+        );
+        let prov = adjoint_sharding::util::bench::Provenance::collect(&desc, cfg.seed, "serve");
         adjoint_sharding::util::bench::write_json(
             &path,
             "serve",
             false,
-            &format!(
-                "adjsh serve --config {} --sessions {sessions} --tokens {n_new} --max-batch {} \
-                 --executor {}",
-                cfg.dims.name, cfg.serve.max_batch, cfg.exec.kind
-            ),
+            &desc,
+            &prov,
             &sl.metrics.to_bench_stats(),
         )?;
         println!("wrote {}", path.display());

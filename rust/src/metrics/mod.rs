@@ -137,15 +137,48 @@ impl Quantiles {
         self.samples.iter().cloned().fold(f64::NAN, f64::max)
     }
 
-    /// Nearest-rank percentile, q ∈ [0, 1]; NaN when empty. Sorts a copy
-    /// on each query — queries happen at report time, not on the hot path.
+    /// Nearest-rank percentile, q ∈ [0, 1]; NaN when empty. Sorts once
+    /// per query — report sites reading several percentiles should take
+    /// one [`Quantiles::sorted`] view and query that instead.
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.sorted().percentile(q)
+    }
+
+    /// Sort once, query many: the p50/p95/p99 triple every report reads
+    /// costs a single sort through this view.
+    pub fn sorted(&self) -> SortedQuantiles {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        SortedQuantiles { samples: s }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
+/// A [`Quantiles`] snapshot with the sort already paid — same
+/// nearest-rank pick, so every percentile equals what [`Quantiles`]
+/// itself would return (pinned by the regression test below).
+#[derive(Debug, Clone)]
+pub struct SortedQuantiles {
+    samples: Vec<f64>,
+}
+
+impl SortedQuantiles {
     pub fn percentile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        s[((s.len() as f64 * q) as usize).min(s.len() - 1)]
+        self.samples[((self.samples.len() as f64 * q) as usize).min(self.samples.len() - 1)]
     }
 
     pub fn p50(&self) -> f64 {
@@ -234,6 +267,25 @@ mod tests {
         assert_eq!(q.min(), 1.0);
         assert_eq!(q.max(), 100.0);
         assert!((q.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_view_matches_per_query_percentiles() {
+        // The one-sort report view must agree with the per-query path on
+        // every percentile (the PR 9 cached-sort fix changes cost, not
+        // results).
+        let mut q = Quantiles::new();
+        assert!(q.sorted().p50().is_nan());
+        for i in (1..=100u64).rev() {
+            q.push(i as f64);
+        }
+        let s = q.sorted();
+        assert_eq!(s.p50(), 51.0);
+        assert_eq!(s.p95(), 96.0);
+        assert_eq!(s.p99(), 100.0);
+        for pct in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(s.percentile(pct), q.percentile(pct));
+        }
     }
 
     #[test]

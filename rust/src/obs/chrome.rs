@@ -1,0 +1,230 @@
+//! Chrome trace-event JSON emission and parse-back (`--trace out.json`,
+//! loadable in `chrome://tracing` / Perfetto).
+//!
+//! One track per device lane (`tid` = lane; the coordinator track is
+//! `tid: -1`). Spans are complete events (`"ph":"X"`), instants are
+//! `"ph":"i"`. `ts`/`dur` are microseconds with nanosecond precision,
+//! hand-formatted from the integer ns stamps so the emitted bytes are a
+//! pure function of the events — a deterministic (sim) trace serializes
+//! byte-identically across runs. The viewer timeline prefers the
+//! virtual-time stamps when the event has any, else wall clock; the raw
+//! ns quadruple always rides in `args`, so [`parse_chrome_trace`] is
+//! lossless regardless of which clock drew the picture.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::trace::{TraceEvent, TraceKind, COORD_LANE};
+
+/// Integer-ns → "microseconds.with_ns" (`12345` → `12.345`), the
+/// byte-stable `ts`/`dur` token.
+fn fmt_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Lane/key sentinels cross into JSON as `-1` (a `u64::MAX`-sized number
+/// would not survive the f64 round-trip).
+fn signed(v: usize) -> i64 {
+    if v == usize::MAX {
+        -1
+    } else {
+        v as i64
+    }
+}
+
+fn unsigned(v: i64) -> usize {
+    if v < 0 {
+        usize::MAX
+    } else {
+        v as usize
+    }
+}
+
+/// Timeline the viewer draws the event on: virtual when modeled, wall
+/// otherwise.
+fn view_stamps(e: &TraceEvent) -> (u64, u64) {
+    if e.virt_ns > 0 || e.virt_dur_ns > 0 {
+        (e.virt_ns, e.virt_dur_ns)
+    } else {
+        (e.wall_ns, e.wall_dur_ns)
+    }
+}
+
+fn event_json(e: &TraceEvent) -> String {
+    let (ts, dur) = view_stamps(e);
+    let mut s = format!(
+        "{{\"name\":\"{}\",\"ph\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{}",
+        e.kind.label(),
+        if e.kind.is_span() { "X" } else { "i" },
+        signed(e.lane),
+        fmt_us(ts),
+    );
+    if e.kind.is_span() {
+        s.push_str(&format!(",\"dur\":{}", fmt_us(dur)));
+    } else {
+        s.push_str(",\"s\":\"t\"");
+    }
+    s.push_str(&format!(
+        ",\"args\":{{\"lane\":{},\"key\":{},\"bytes\":{},\"virt_ns\":{},\"virt_dur_ns\":{},\"wall_ns\":{},\"wall_dur_ns\":{}}}}}",
+        signed(e.lane),
+        signed(e.key),
+        e.bytes,
+        e.virt_ns,
+        e.virt_dur_ns,
+        e.wall_ns,
+        e.wall_dur_ns,
+    ));
+    s
+}
+
+fn track_name(lane: usize) -> String {
+    if lane == COORD_LANE {
+        "coordinator".to_string()
+    } else {
+        format!("lane {lane}")
+    }
+}
+
+/// Serialize events to one Chrome trace-event JSON document. Track
+/// metadata first (sorted, coordinator last), then the events in
+/// recording order.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut lanes: BTreeSet<i64> = events.iter().map(|e| signed(e.lane)).collect();
+    let coord = lanes.remove(&-1);
+    let mut parts: Vec<String> = Vec::with_capacity(events.len() + lanes.len() + 1);
+    for &lane in &lanes {
+        parts.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{lane},\"args\":{{\"name\":\"{}\"}}}}",
+            track_name(unsigned(lane)),
+        ));
+    }
+    if coord {
+        parts.push(
+            "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":-1,\"args\":{\"name\":\"coordinator\"}}"
+                .to_string(),
+        );
+    }
+    for e in events {
+        parts.push(event_json(e));
+    }
+    format!("{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}", parts.join(","))
+}
+
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(events))
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+fn i64_field(args: &Json, key: &str) -> Result<i64> {
+    let n = args.get(key)?.as_f64()?;
+    if n.fract() != 0.0 {
+        anyhow::bail!("trace arg '{key}' is not an integer: {n}");
+    }
+    Ok(n as i64)
+}
+
+fn u64_field(args: &Json, key: &str) -> Result<u64> {
+    let v = i64_field(args, key)?;
+    if v < 0 {
+        anyhow::bail!("trace arg '{key}' is negative: {v}");
+    }
+    Ok(v as u64)
+}
+
+/// Parse a Chrome trace document (ours — the schema `chrome_trace_json`
+/// emits) back into events, via `util::json`. Metadata records are
+/// skipped; every real event reconstructs exactly from its `args`.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<TraceEvent>> {
+    let doc = Json::parse(text).context("parsing Chrome trace JSON")?;
+    let records = doc.get("traceEvents")?.as_arr()?;
+    let mut out = Vec::with_capacity(records.len());
+    for rec in records {
+        if rec.get("ph")?.as_str()? == "M" {
+            continue;
+        }
+        let kind = TraceKind::from_label(rec.get("name")?.as_str()?)?;
+        let args = rec.get("args")?;
+        out.push(TraceEvent {
+            lane: unsigned(i64_field(args, "lane")?),
+            kind,
+            virt_ns: u64_field(args, "virt_ns")?,
+            virt_dur_ns: u64_field(args, "virt_dur_ns")?,
+            wall_ns: u64_field(args, "wall_ns")?,
+            wall_dur_ns: u64_field(args, "wall_dur_ns")?,
+            key: unsigned(i64_field(args, "key")?),
+            bytes: u64_field(args, "bytes")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::NO_KEY;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::span_virt(0, TraceKind::Launch, 1e-6, 4e-6, 3, 0),
+            TraceEvent::span_virt(1, TraceKind::Spill, 2e-6, 3e-6, 1, 4096),
+            TraceEvent::span_wall(COORD_LANE, TraceKind::Reduce, 1_000, 2_500, NO_KEY, 0),
+            TraceEvent::instant_virt(1, TraceKind::SpillDecision, 2e-6, 1, 4096),
+            TraceEvent::instant(0, TraceKind::Respawn, 2, 0),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let events = sample();
+        let json = chrome_trace_json(&events);
+        let back = parse_chrome_trace(&json).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn serialization_is_byte_stable() {
+        let events = sample();
+        assert_eq!(chrome_trace_json(&events), chrome_trace_json(&events.clone()));
+    }
+
+    #[test]
+    fn document_parses_as_plain_json_with_tracks() {
+        let json = chrome_trace_json(&sample());
+        let doc = Json::parse(&json).unwrap();
+        let recs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 track-name records (lane 0, lane 1, coordinator) + 5 events.
+        assert_eq!(recs.len(), 8);
+        let names: Vec<&str> = recs
+            .iter()
+            .filter(|r| r.get("ph").unwrap().as_str().unwrap() == "M")
+            .map(|r| r.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["lane 0", "lane 1", "coordinator"]);
+    }
+
+    #[test]
+    fn ts_formatting_is_ns_precise_microseconds() {
+        assert_eq!(fmt_us(0), "0.000");
+        assert_eq!(fmt_us(999), "0.999");
+        assert_eq!(fmt_us(12_345), "12.345");
+        assert_eq!(fmt_us(1_000_000_000), "1000000.000");
+    }
+
+    #[test]
+    fn corrupt_documents_are_rejected() {
+        assert!(parse_chrome_trace("not json").is_err());
+        assert!(parse_chrome_trace("{\"traceEvents\":[{\"ph\":\"X\"}]}").is_err());
+        let bad_kind = "{\"traceEvents\":[{\"name\":\"nope\",\"ph\":\"i\",\"args\":{}}]}";
+        assert!(parse_chrome_trace(bad_kind).is_err());
+    }
+}

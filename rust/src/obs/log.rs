@@ -1,0 +1,151 @@
+//! Leveled structured logger (`--log-level`): every line is a stable
+//! `key=value` sequence (`level=… event=… k=v …`), so CI and scripts can
+//! grep for an event name without parsing prose. Errors and warnings go
+//! to stderr, info/debug to stdout — the same split the ad-hoc
+//! `println!`/`eprintln!` lines used before PR 9.
+
+use anyhow::{bail, Result};
+
+/// Verbosity ladder. Ordering is severity-descending: a logger at
+/// `Info` emits `Error`, `Warn`, and `Info` lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum LogLevel {
+    Error,
+    Warn,
+    #[default]
+    Info,
+    Debug,
+}
+
+impl LogLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+impl std::fmt::Display for LogLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for LogLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "error" => Ok(LogLevel::Error),
+            "warn" | "warning" => Ok(LogLevel::Warn),
+            "info" => Ok(LogLevel::Info),
+            "debug" => Ok(LogLevel::Debug),
+            _ => bail!("unknown log level '{s}' (error|warn|info|debug)"),
+        }
+    }
+}
+
+/// A copyable handle: cheap to pass by value everywhere a summary line
+/// used to be printed.
+#[derive(Debug, Clone, Copy)]
+pub struct Logger {
+    level: LogLevel,
+}
+
+impl Default for Logger {
+    fn default() -> Self {
+        Logger { level: LogLevel::Info }
+    }
+}
+
+impl Logger {
+    pub fn new(level: LogLevel) -> Self {
+        Logger { level }
+    }
+
+    pub fn level(&self) -> LogLevel {
+        self.level
+    }
+
+    pub fn enabled(&self, lvl: LogLevel) -> bool {
+        lvl <= self.level
+    }
+
+    /// Render one line without printing it (unit-testable).
+    pub fn format_line(lvl: LogLevel, event: &str, fields: &[(&str, String)]) -> String {
+        let mut line = format!("level={lvl} event={event}");
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(v);
+        }
+        line
+    }
+
+    pub fn log(&self, lvl: LogLevel, event: &str, fields: &[(&str, String)]) {
+        if !self.enabled(lvl) {
+            return;
+        }
+        let line = Self::format_line(lvl, event, fields);
+        match lvl {
+            LogLevel::Error | LogLevel::Warn => eprintln!("{line}"),
+            LogLevel::Info | LogLevel::Debug => println!("{line}"),
+        }
+    }
+
+    pub fn error(&self, event: &str, fields: &[(&str, String)]) {
+        self.log(LogLevel::Error, event, fields);
+    }
+
+    pub fn warn(&self, event: &str, fields: &[(&str, String)]) {
+        self.log(LogLevel::Warn, event, fields);
+    }
+
+    pub fn info(&self, event: &str, fields: &[(&str, String)]) {
+        self.log(LogLevel::Info, event, fields);
+    }
+
+    pub fn debug(&self, event: &str, fields: &[(&str, String)]) {
+        self.log(LogLevel::Debug, event, fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!("info".parse::<LogLevel>().unwrap(), LogLevel::Info);
+        assert_eq!("warning".parse::<LogLevel>().unwrap(), LogLevel::Warn);
+        assert!("loud".parse::<LogLevel>().is_err());
+        assert!(LogLevel::Error < LogLevel::Debug);
+        assert_eq!(LogLevel::default(), LogLevel::Info);
+        for l in [LogLevel::Error, LogLevel::Warn, LogLevel::Info, LogLevel::Debug] {
+            assert_eq!(l.label().parse::<LogLevel>().unwrap(), l);
+        }
+    }
+
+    #[test]
+    fn enablement_follows_the_ladder() {
+        let lg = Logger::new(LogLevel::Warn);
+        assert!(lg.enabled(LogLevel::Error));
+        assert!(lg.enabled(LogLevel::Warn));
+        assert!(!lg.enabled(LogLevel::Info));
+        assert!(!lg.enabled(LogLevel::Debug));
+    }
+
+    #[test]
+    fn line_format_is_grep_stable() {
+        let line = Logger::format_line(
+            LogLevel::Info,
+            "offload",
+            &[("spilled_bytes", "4096".into()), ("prefetch_hit", "3".into())],
+        );
+        assert_eq!(line, "level=info event=offload spilled_bytes=4096 prefetch_hit=3");
+    }
+}

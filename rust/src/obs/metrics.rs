@@ -1,0 +1,90 @@
+//! Named monotonic counters and gauges, snapshotted into the trainer and
+//! serve reports. Keys are sorted (`BTreeMap`) so every rendering of a
+//! registry is byte-stable — the same grep contract the logger keeps.
+
+use std::collections::BTreeMap;
+
+/// A flat registry of named `u64` metrics. Counters only move up
+/// ([`MetricsRegistry::inc`]); gauges overwrite ([`MetricsRegistry::set`]).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    values: BTreeMap<String, u64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bump a monotonic counter.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.values.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Overwrite a gauge.
+    pub fn set(&mut self, name: &str, value: u64) {
+        self.values.insert(name.to_string(), value);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.values.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Sorted `(name, value)` snapshot for a report.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.values.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Logger-compatible field list.
+    pub fn fields(&self) -> Vec<(&str, String)> {
+        self.values.iter().map(|(k, &v)| (k.as_str(), v.to_string())).collect()
+    }
+
+    /// One stable `k=v k=v …` line (sorted by key).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(k);
+            out.push('=');
+            out.push_str(&v.to_string());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut m = MetricsRegistry::new();
+        assert!(m.is_empty());
+        m.inc("dispatches", 3);
+        m.inc("dispatches", 2);
+        m.set("lanes", 4);
+        m.set("lanes", 2);
+        assert_eq!(m.get("dispatches"), 5);
+        assert_eq!(m.get("lanes"), 2);
+        assert_eq!(m.get("absent"), 0);
+    }
+
+    #[test]
+    fn render_is_sorted_and_stable() {
+        let mut m = MetricsRegistry::new();
+        m.inc("zeta", 1);
+        m.inc("alpha", 2);
+        assert_eq!(m.render(), "alpha=2 zeta=1");
+        assert_eq!(
+            m.snapshot(),
+            vec![("alpha".to_string(), 2), ("zeta".to_string(), 1)]
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Observability: typed tracing, structured logging, and metrics
+//! (DESIGN.md §Observability).
+//!
+//! Recording is *always on* and side-effect-free on the gradient path —
+//! executors and the trainer collect [`TraceEvent`]s unconditionally, in
+//! plain `Vec`s that never influence dispatch order, reduction order, or
+//! a single float. `--trace out.json` only decides whether the collected
+//! events are serialized ([`chrome::write_chrome_trace`], loadable in
+//! `chrome://tracing`/Perfetto) at the end of the run. That structure
+//! makes the determinism contract trivial: gradients are bit-identical
+//! with tracing on because tracing has no off switch to differ from.
+//!
+//! Three clocks, one stream:
+//! - *virtual* stamps come from the deterministic analytic plan (sim and
+//!   the plan backbone every backend shares) — integer ns, a pure
+//!   function of the config, byte-identical across runs;
+//! - *wall* stamps are measured by live lanes relative to their own
+//!   epoch (job start for workers, run start for the trainer), zeroed by
+//!   a deterministic recorder;
+//! - process workers batch their wall-stamped events onto the existing
+//!   DONE reply (wire v4), so tracing adds zero round-trips.
+
+pub mod chrome;
+pub mod log;
+pub mod metrics;
+pub mod summary;
+pub mod trace;
+
+pub use chrome::{chrome_trace_json, parse_chrome_trace, write_chrome_trace};
+pub use log::{LogLevel, Logger};
+pub use metrics::MetricsRegistry;
+pub use summary::{summarize, TraceSummary};
+pub use trace::{
+    plan_spans, span_multiset, spill_span_bytes, TraceEvent, TraceKind, TraceRecorder, COORD_LANE,
+    NO_KEY,
+};

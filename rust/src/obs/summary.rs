@@ -1,0 +1,341 @@
+//! `adjsh trace summary` — fold a trace back into the numbers the paper
+//! argues with: per-lane utilization, overlap % (how much the device
+//! lanes hid behind each other), per-kind critical-path breakdown, and
+//! spill traffic.
+//!
+//! The summary prefers the virtual timeline whenever the trace has any
+//! modeled span (sim and the plan backbone), falling back to wall clock
+//! for purely measured traces. Spans on the coordinator track
+//! ([`COORD_LANE`]) are reported separately and excluded from the
+//! device-lane overlap math.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::fmt_bytes;
+
+use super::trace::{TraceEvent, TraceKind, COORD_LANE};
+
+/// Which clock the summary was computed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Timeline {
+    Virtual,
+    Wall,
+}
+
+impl Timeline {
+    pub fn label(self) -> &'static str {
+        match self {
+            Timeline::Virtual => "virtual",
+            Timeline::Wall => "wall",
+        }
+    }
+}
+
+/// One lane's aggregate over the chosen timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneRow {
+    pub lane: usize,
+    pub spans: usize,
+    /// Sum of span durations on this lane.
+    pub busy_ns: u64,
+    /// Earliest span start on this lane.
+    pub start_ns: u64,
+    /// Latest span end on this lane.
+    pub end_ns: u64,
+}
+
+impl LaneRow {
+    /// Active window: first span start → last span end.
+    pub fn window_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// busy / window, in [0, 1]; 0 for an empty window.
+    pub fn utilization(&self) -> f64 {
+        let w = self.window_ns();
+        if w == 0 {
+            0.0
+        } else {
+            (self.busy_ns as f64 / w as f64).min(1.0)
+        }
+    }
+}
+
+/// Per-span-kind totals — the critical-path breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct KindRow {
+    pub kind: TraceKind,
+    pub count: usize,
+    pub total_ns: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub timeline: Timeline,
+    pub events: usize,
+    /// Device lanes, sorted by lane id. Coordinator excluded.
+    pub lanes: Vec<LaneRow>,
+    /// The coordinator track, when it recorded any span.
+    pub coord: Option<LaneRow>,
+    /// Device-lane makespan: global last span end − first span start.
+    pub makespan_ns: u64,
+    /// Sum of all device-lane span durations.
+    pub busy_ns: u64,
+    /// `100 · (1 − makespan/busy)` — the fraction of device-lane work
+    /// hidden behind other lanes; 0 when execution is effectively serial.
+    pub overlap_pct: f64,
+    /// Span kinds (all tracks), sorted by wire code.
+    pub by_kind: Vec<KindRow>,
+    /// Instant-event counts (all tracks), sorted by wire code.
+    pub instants: Vec<(TraceKind, usize)>,
+    pub spilled_bytes: u64,
+    pub restored_bytes: u64,
+}
+
+/// The stamps of `e` on timeline `t`.
+fn stamps(e: &TraceEvent, t: Timeline) -> (u64, u64) {
+    match t {
+        Timeline::Virtual => (e.virt_ns, e.virt_dur_ns),
+        Timeline::Wall => (e.wall_ns, e.wall_dur_ns),
+    }
+}
+
+pub fn summarize(events: &[TraceEvent]) -> TraceSummary {
+    let timeline = if events.iter().any(|e| e.kind.is_span() && e.virt_dur_ns > 0) {
+        Timeline::Virtual
+    } else {
+        Timeline::Wall
+    };
+
+    let mut lanes: BTreeMap<usize, LaneRow> = BTreeMap::new();
+    let mut by_kind: BTreeMap<u8, KindRow> = BTreeMap::new();
+    let mut instants: BTreeMap<u8, (TraceKind, usize)> = BTreeMap::new();
+    let mut spilled_bytes = 0u64;
+    let mut restored_bytes = 0u64;
+
+    for e in events {
+        match e.kind {
+            TraceKind::Spill => spilled_bytes += e.bytes,
+            TraceKind::Restore => restored_bytes += e.bytes,
+            _ => {}
+        }
+        if !e.kind.is_span() {
+            instants.entry(e.kind.code()).or_insert((e.kind, 0)).1 += 1;
+            continue;
+        }
+        let (start, dur) = stamps(e, timeline);
+        let end = start.saturating_add(dur);
+        let row = lanes.entry(e.lane).or_insert(LaneRow {
+            lane: e.lane,
+            spans: 0,
+            busy_ns: 0,
+            start_ns: u64::MAX,
+            end_ns: 0,
+        });
+        row.spans += 1;
+        row.busy_ns += dur;
+        row.start_ns = row.start_ns.min(start);
+        row.end_ns = row.end_ns.max(end);
+        let k = by_kind
+            .entry(e.kind.code())
+            .or_insert(KindRow { kind: e.kind, count: 0, total_ns: 0 });
+        k.count += 1;
+        k.total_ns += dur;
+    }
+
+    let coord = lanes.remove(&COORD_LANE);
+    let lanes: Vec<LaneRow> = lanes.into_values().collect();
+    let busy_ns: u64 = lanes.iter().map(|l| l.busy_ns).sum();
+    let start = lanes.iter().map(|l| l.start_ns).min().unwrap_or(0);
+    let end = lanes.iter().map(|l| l.end_ns).max().unwrap_or(0);
+    let makespan_ns = end.saturating_sub(start);
+    let overlap_pct = if busy_ns > makespan_ns && busy_ns > 0 {
+        100.0 * (1.0 - makespan_ns as f64 / busy_ns as f64)
+    } else {
+        0.0
+    };
+
+    TraceSummary {
+        timeline,
+        events: events.len(),
+        lanes,
+        coord,
+        makespan_ns,
+        busy_ns,
+        overlap_pct,
+        by_kind: by_kind.into_values().collect(),
+        instants: instants.into_values().collect(),
+        spilled_bytes,
+        restored_bytes,
+    }
+}
+
+/// Human-readable duration; stable (format depends only on the value).
+pub fn fmt_dur(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+impl TraceSummary {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace summary ({} timeline, {} events)\n",
+            self.timeline.label(),
+            self.events
+        ));
+        for l in &self.lanes {
+            out.push_str(&format!(
+                "  lane {}: spans={} busy={} window={} util={:.1}%\n",
+                l.lane,
+                l.spans,
+                fmt_dur(l.busy_ns),
+                fmt_dur(l.window_ns()),
+                100.0 * l.utilization(),
+            ));
+        }
+        if let Some(c) = &self.coord {
+            out.push_str(&format!(
+                "  coordinator: spans={} busy={}\n",
+                c.spans,
+                fmt_dur(c.busy_ns)
+            ));
+        }
+        out.push_str(&format!(
+            "  makespan={} busy={} overlap={:.1}%\n",
+            fmt_dur(self.makespan_ns),
+            fmt_dur(self.busy_ns),
+            self.overlap_pct,
+        ));
+        if !self.by_kind.is_empty() {
+            out.push_str("  span breakdown:");
+            for k in &self.by_kind {
+                out.push_str(&format!(
+                    " {}={}x{}",
+                    k.kind.label(),
+                    k.count,
+                    fmt_dur(k.total_ns)
+                ));
+            }
+            out.push('\n');
+        }
+        if !self.instants.is_empty() {
+            out.push_str("  instants:");
+            for (k, n) in &self.instants {
+                out.push_str(&format!(" {}={}", k.label(), n));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "  spill traffic: spilled={} restored={}\n",
+            fmt_bytes(self.spilled_bytes),
+            fmt_bytes(self.restored_bytes),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::NO_KEY;
+
+    fn two_lane_trace() -> Vec<TraceEvent> {
+        vec![
+            // lane 0: two launches back to back over [0, 2us] then [2, 4us]
+            TraceEvent::span_virt(0, TraceKind::Launch, 0.0, 2e-6, 0, 0),
+            TraceEvent::span_virt(0, TraceKind::Launch, 2e-6, 4e-6, 1, 0),
+            // lane 1: one launch [0, 3us], then idle until a spill [3, 4us]
+            TraceEvent::span_virt(1, TraceKind::Launch, 0.0, 3e-6, 2, 0),
+            TraceEvent::span_virt(1, TraceKind::Spill, 3e-6, 4e-6, 2, 4096),
+            // coordinator reduce + supervision instants
+            TraceEvent::span_wall(COORD_LANE, TraceKind::Reduce, 0, 1_000, NO_KEY, 0),
+            TraceEvent::instant(1, TraceKind::Respawn, 1, 0),
+            TraceEvent::instant(1, TraceKind::Respawn, 2, 0),
+            TraceEvent::instant(0, TraceKind::Kill, NO_KEY, 0),
+        ]
+    }
+
+    #[test]
+    fn lane_math_and_overlap() {
+        let s = summarize(&two_lane_trace());
+        assert_eq!(s.timeline, Timeline::Virtual);
+        assert_eq!(s.lanes.len(), 2);
+        // lane 0: busy 4us over window 4us
+        assert_eq!(s.lanes[0].busy_ns, 4_000);
+        assert_eq!(s.lanes[0].window_ns(), 4_000);
+        assert!((s.lanes[0].utilization() - 1.0).abs() < 1e-12);
+        // lane 1: busy 4us over window 4us
+        assert_eq!(s.lanes[1].busy_ns, 4_000);
+        // device lanes: busy 8us, makespan 4us → 50% overlap
+        assert_eq!(s.busy_ns, 8_000);
+        assert_eq!(s.makespan_ns, 4_000);
+        assert!((s.overlap_pct - 50.0).abs() < 1e-9);
+        // coordinator tracked separately (wall timeline span still counted
+        // on the virtual summary window as zero-duration busy).
+        assert!(s.coord.is_some());
+        assert_eq!(s.spilled_bytes, 4096);
+        assert_eq!(s.restored_bytes, 0);
+    }
+
+    #[test]
+    fn serial_trace_has_zero_overlap() {
+        let evs = vec![
+            TraceEvent::span_virt(0, TraceKind::Launch, 0.0, 1e-6, 0, 0),
+            TraceEvent::span_virt(0, TraceKind::Launch, 1e-6, 2e-6, 1, 0),
+        ];
+        let s = summarize(&evs);
+        assert_eq!(s.overlap_pct, 0.0);
+        assert_eq!(s.makespan_ns, s.busy_ns);
+    }
+
+    #[test]
+    fn wall_fallback_when_nothing_is_modeled() {
+        let evs = vec![TraceEvent::span_wall(0, TraceKind::Gather, 100, 50, NO_KEY, 0)];
+        let s = summarize(&evs);
+        assert_eq!(s.timeline, Timeline::Wall);
+        assert_eq!(s.busy_ns, 50);
+        assert_eq!(s.lanes[0].start_ns, 100);
+    }
+
+    #[test]
+    fn instants_and_breakdown_are_counted() {
+        let s = summarize(&two_lane_trace());
+        let launches = s.by_kind.iter().find(|k| k.kind == TraceKind::Launch).unwrap();
+        assert_eq!(launches.count, 3);
+        assert_eq!(launches.total_ns, 7_000);
+        assert_eq!(
+            s.instants,
+            vec![(TraceKind::Kill, 1), (TraceKind::Respawn, 2)]
+        );
+        let text = s.render();
+        assert!(text.contains("lane 0:"));
+        assert!(text.contains("overlap=50.0%"));
+        assert!(text.contains("respawn=2"));
+        assert!(text.contains("spilled=4.00 KiB"));
+    }
+
+    #[test]
+    fn empty_trace_summarizes_cleanly() {
+        let s = summarize(&[]);
+        assert_eq!(s.busy_ns, 0);
+        assert_eq!(s.overlap_pct, 0.0);
+        assert!(s.lanes.is_empty());
+        assert!(s.render().contains("0 events"));
+    }
+
+    #[test]
+    fn fmt_dur_picks_units() {
+        assert_eq!(fmt_dur(5), "5ns");
+        assert_eq!(fmt_dur(1_500), "1.500us");
+        assert_eq!(fmt_dur(2_000_000), "2.000ms");
+        assert_eq!(fmt_dur(3_500_000_000), "3.500s");
+    }
+}

@@ -1,0 +1,430 @@
+//! Typed trace events and the per-run recorder (DESIGN.md
+//! §Observability).
+//!
+//! Every event carries *both* clocks: the deterministic virtual-time
+//! stamps the scheduler models (`virt_ns`) and the wall-clock stamps a
+//! live lane measures (`wall_ns`). The two never mix — a plan-derived
+//! span has virtual stamps and zero wall, a worker-measured gather has
+//! wall stamps and zero virtual — so a trace is simultaneously a model
+//! timeline and a measurement, and the sim backend's trace (recorded
+//! with [`TraceRecorder::new`]`(true)`, which zeroes every wall stamp)
+//! is a pure function of the config: byte-identical across runs.
+//!
+//! Determinism contract: recording is unconditional and side-effect-free
+//! on the gradient path — no event ever influences dispatch order,
+//! reduction order, or a single float. `--trace` only decides whether
+//! the collected events are written out at the end of the run.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::schedule::Schedule;
+
+/// Lane id of coordinator-side events (the merge/reduce/checkpoint
+/// track). Crosses the wire as `u64::MAX`.
+pub const COORD_LANE: usize = usize::MAX;
+/// `key` value meaning "no layer / session attached".
+pub const NO_KEY: usize = usize::MAX;
+
+/// What happened. The first seven kinds are *spans* (they have a
+/// duration); the rest are *instants* (a decision or a warning at a
+/// point in time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceKind {
+    /// Host staging: gathering one item/group's arguments into a stage.
+    Gather,
+    /// A PJRT execution (modeled slot span or measured call).
+    Launch,
+    /// Blocking on an in-flight execution's outputs.
+    Wait,
+    /// The coordinator's ascending-layer merge of lane partials.
+    Reduce,
+    /// Paging a layer's activations HBM → pinned host.
+    Spill,
+    /// Paging a layer's activations back host → HBM.
+    Restore,
+    /// Writing a training checkpoint.
+    Checkpoint,
+    /// Memory admission deferred ready work (serve: session blocked).
+    AdmissionDefer,
+    /// The planner chose to evict a layer instead of deferring.
+    SpillDecision,
+    /// A lane blew its no-progress deadline (first rung of the ladder).
+    StragglerWarn,
+    /// The deadline ladder force-killed a lane.
+    Kill,
+    /// The supervisor respawned a dead lane (`key` = attempt number).
+    Respawn,
+    /// The crash-loop breaker permanently retired a lane.
+    LaneRetire,
+    /// The serving loop admitted a session to the batch.
+    ServeAdmit,
+    /// The serving loop evicted/retired a session from the batch.
+    ServeEvict,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 15] = [
+        TraceKind::Gather,
+        TraceKind::Launch,
+        TraceKind::Wait,
+        TraceKind::Reduce,
+        TraceKind::Spill,
+        TraceKind::Restore,
+        TraceKind::Checkpoint,
+        TraceKind::AdmissionDefer,
+        TraceKind::SpillDecision,
+        TraceKind::StragglerWarn,
+        TraceKind::Kill,
+        TraceKind::Respawn,
+        TraceKind::LaneRetire,
+        TraceKind::ServeAdmit,
+        TraceKind::ServeEvict,
+    ];
+
+    /// Stable single-byte wire code.
+    pub fn code(self) -> u8 {
+        match self {
+            TraceKind::Gather => 0,
+            TraceKind::Launch => 1,
+            TraceKind::Wait => 2,
+            TraceKind::Reduce => 3,
+            TraceKind::Spill => 4,
+            TraceKind::Restore => 5,
+            TraceKind::Checkpoint => 6,
+            TraceKind::AdmissionDefer => 7,
+            TraceKind::SpillDecision => 8,
+            TraceKind::StragglerWarn => 9,
+            TraceKind::Kill => 10,
+            TraceKind::Respawn => 11,
+            TraceKind::LaneRetire => 12,
+            TraceKind::ServeAdmit => 13,
+            TraceKind::ServeEvict => 14,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.code() == code)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace-event code {code} on the wire"))
+    }
+
+    /// Stable grep-able label — the Chrome event name.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::Gather => "gather",
+            TraceKind::Launch => "launch",
+            TraceKind::Wait => "wait",
+            TraceKind::Reduce => "reduce",
+            TraceKind::Spill => "spill",
+            TraceKind::Restore => "restore",
+            TraceKind::Checkpoint => "checkpoint",
+            TraceKind::AdmissionDefer => "admission_defer",
+            TraceKind::SpillDecision => "spill_decision",
+            TraceKind::StragglerWarn => "straggler_warn",
+            TraceKind::Kill => "kill",
+            TraceKind::Respawn => "respawn",
+            TraceKind::LaneRetire => "lane_retire",
+            TraceKind::ServeAdmit => "serve_admit",
+            TraceKind::ServeEvict => "serve_evict",
+        }
+    }
+
+    pub fn from_label(label: &str) -> Result<Self> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.label() == label)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace-event label '{label}'"))
+    }
+
+    /// Spans have a duration; instants are points.
+    pub fn is_span(self) -> bool {
+        self.code() <= TraceKind::Checkpoint.code()
+    }
+}
+
+/// Virtual seconds → integer nanoseconds, the byte-stable stamp unit
+/// (integer formatting never drifts the way float formatting could).
+pub fn virt_ns(s: f64) -> u64 {
+    if !s.is_finite() || s <= 0.0 {
+        0
+    } else {
+        (s * 1e9).round() as u64
+    }
+}
+
+/// Wall nanoseconds since `epoch`, saturating.
+pub fn wall_ns_since(epoch: Instant) -> u64 {
+    epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// One trace event. Plain integers end to end so equality, hashing into
+/// a multiset, and wire framing are all exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Device lane (== simulated device id) or [`COORD_LANE`].
+    pub lane: usize,
+    pub kind: TraceKind,
+    /// Virtual-time start in ns (0 when the event is not modeled).
+    pub virt_ns: u64,
+    /// Virtual duration in ns (0 for instants and unmodeled spans).
+    pub virt_dur_ns: u64,
+    /// Wall-clock start in ns, relative to the recording side's epoch
+    /// (job start for a worker, run start for the trainer). Zeroed by a
+    /// deterministic recorder.
+    pub wall_ns: u64,
+    pub wall_dur_ns: u64,
+    /// Layer, session id, or attempt count — kind-dependent; [`NO_KEY`]
+    /// when nothing applies.
+    pub key: usize,
+    /// Bytes moved (spill/restore traffic); 0 otherwise.
+    pub bytes: u64,
+}
+
+impl TraceEvent {
+    /// A modeled (virtual-time) span.
+    pub fn span_virt(
+        lane: usize,
+        kind: TraceKind,
+        start_s: f64,
+        end_s: f64,
+        key: usize,
+        bytes: u64,
+    ) -> Self {
+        let start = virt_ns(start_s);
+        TraceEvent {
+            lane,
+            kind,
+            virt_ns: start,
+            virt_dur_ns: virt_ns(end_s).saturating_sub(start),
+            wall_ns: 0,
+            wall_dur_ns: 0,
+            key,
+            bytes,
+        }
+    }
+
+    /// A measured (wall-clock) span.
+    pub fn span_wall(
+        lane: usize,
+        kind: TraceKind,
+        wall_ns: u64,
+        wall_dur_ns: u64,
+        key: usize,
+        bytes: u64,
+    ) -> Self {
+        TraceEvent { lane, kind, virt_ns: 0, virt_dur_ns: 0, wall_ns, wall_dur_ns, key, bytes }
+    }
+
+    /// An instant pinned on the virtual timeline.
+    pub fn instant_virt(lane: usize, kind: TraceKind, at_s: f64, key: usize, bytes: u64) -> Self {
+        TraceEvent {
+            lane,
+            kind,
+            virt_ns: virt_ns(at_s),
+            virt_dur_ns: 0,
+            wall_ns: 0,
+            wall_dur_ns: 0,
+            key,
+            bytes,
+        }
+    }
+
+    /// An instant with no stamps at all (a deterministic decision whose
+    /// time is not modeled — respawn, retirement).
+    pub fn instant(lane: usize, kind: TraceKind, key: usize, bytes: u64) -> Self {
+        TraceEvent {
+            lane,
+            kind,
+            virt_ns: 0,
+            virt_dur_ns: 0,
+            wall_ns: 0,
+            wall_dur_ns: 0,
+            key,
+            bytes,
+        }
+    }
+
+    /// End of the span on the virtual timeline.
+    pub fn virt_end_ns(&self) -> u64 {
+        self.virt_ns.saturating_add(self.virt_dur_ns)
+    }
+}
+
+/// Collects a run's events. `deterministic` (the sim backend / trainer
+/// default under `--executor sim`) zeroes every wall stamp on entry, so
+/// the recorded stream — and therefore the emitted Chrome JSON — is a
+/// pure function of the deterministic virtual-time plan.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    deterministic: bool,
+    epoch: Instant,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new(deterministic: bool) -> Self {
+        TraceRecorder { deterministic, epoch: Instant::now(), events: Vec::new() }
+    }
+
+    pub fn deterministic(&self) -> bool {
+        self.deterministic
+    }
+
+    /// Wall ns since this recorder's epoch — 0 in deterministic mode.
+    pub fn wall_now_ns(&self) -> u64 {
+        if self.deterministic {
+            0
+        } else {
+            wall_ns_since(self.epoch)
+        }
+    }
+
+    pub fn push(&mut self, mut e: TraceEvent) {
+        if self.deterministic {
+            e.wall_ns = 0;
+            e.wall_dur_ns = 0;
+        }
+        self.events.push(e);
+    }
+
+    pub fn extend(&mut self, events: Vec<TraceEvent>) {
+        for e in events {
+            self.push(e);
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn take(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// The backward plan's modeled execution timeline as one [`Launch`] span
+/// per scheduled slot span — the deterministic backbone every backend's
+/// trace shares ([`TraceKind::Launch`], one track per device lane).
+pub fn plan_spans(sched: &Schedule) -> Vec<TraceEvent> {
+    let mut out = Vec::with_capacity(sched.devices.iter().map(|d| d.spans.len()).sum());
+    for d in &sched.devices {
+        for s in &d.spans {
+            out.push(TraceEvent::span_virt(
+                d.device,
+                TraceKind::Launch,
+                s.start_s,
+                s.end_s,
+                s.layer,
+                0,
+            ));
+        }
+    }
+    out
+}
+
+/// Sum of bytes over all spill spans — the counters-conservation side
+/// the tests compare against `topology`'s `spilled_bytes` accounting.
+pub fn spill_span_bytes(events: &[TraceEvent]) -> u64 {
+    events.iter().filter(|e| e.kind == TraceKind::Spill).map(|e| e.bytes).sum()
+}
+
+/// Structural-equality view: the span multiset as sorted tuples, wall
+/// stamps excluded (they are measurement, not structure). Two backends
+/// ran "the same plan" iff these match.
+pub fn span_multiset(events: &[TraceEvent]) -> Vec<(usize, u8, u64, u64, usize, u64)> {
+    let mut v: Vec<_> = events
+        .iter()
+        .filter(|e| e.kind.is_span())
+        .map(|e| (e.lane, e.kind.code(), e.virt_ns, e.virt_dur_ns, e.key, e.bytes))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Decode guard for wire-supplied events (shared with `exec::wire`).
+pub fn kind_from_wire(code: u8) -> Result<TraceKind> {
+    match TraceKind::from_code(code) {
+        Ok(k) => Ok(k),
+        Err(_) => bail!("unknown trace-event code {code} on the wire"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_codes_and_labels_roundtrip() {
+        for k in TraceKind::ALL {
+            assert_eq!(TraceKind::from_code(k.code()).unwrap(), k);
+            assert_eq!(TraceKind::from_label(k.label()).unwrap(), k);
+        }
+        assert!(TraceKind::from_code(200).is_err());
+        assert!(TraceKind::from_label("explode").is_err());
+        // Span/instant split is exactly the first seven codes.
+        let spans: Vec<_> = TraceKind::ALL.into_iter().filter(|k| k.is_span()).collect();
+        assert_eq!(spans.len(), 7);
+        assert!(spans.contains(&TraceKind::Checkpoint));
+        assert!(!TraceKind::ServeAdmit.is_span());
+    }
+
+    #[test]
+    fn virt_ns_is_stable_and_guarded() {
+        assert_eq!(virt_ns(0.0), 0);
+        assert_eq!(virt_ns(-1.0), 0);
+        assert_eq!(virt_ns(f64::NAN), 0);
+        assert_eq!(virt_ns(1e-6), 1_000);
+        assert_eq!(virt_ns(1.5), 1_500_000_000);
+    }
+
+    #[test]
+    fn deterministic_recorder_zeroes_wall_stamps() {
+        let mut r = TraceRecorder::new(true);
+        assert_eq!(r.wall_now_ns(), 0);
+        r.push(TraceEvent::span_wall(0, TraceKind::Gather, 123, 456, NO_KEY, 0));
+        r.push(TraceEvent::span_virt(1, TraceKind::Launch, 1e-6, 3e-6, 2, 0));
+        assert_eq!(r.events()[0].wall_ns, 0);
+        assert_eq!(r.events()[0].wall_dur_ns, 0);
+        assert_eq!(r.events()[1].virt_ns, 1_000);
+        assert_eq!(r.events()[1].virt_dur_ns, 2_000);
+        // A live recorder keeps them.
+        let mut live = TraceRecorder::new(false);
+        live.push(TraceEvent::span_wall(0, TraceKind::Gather, 123, 456, NO_KEY, 0));
+        assert_eq!(live.events()[0].wall_ns, 123);
+        assert_eq!(live.take().len(), 1);
+        assert!(live.is_empty());
+    }
+
+    #[test]
+    fn span_multiset_ignores_wall_and_instants() {
+        let a = vec![
+            TraceEvent::span_virt(0, TraceKind::Launch, 0.0, 1e-6, 3, 0),
+            TraceEvent::instant(0, TraceKind::Respawn, 1, 0),
+        ];
+        let mut b = vec![TraceEvent::span_virt(0, TraceKind::Launch, 0.0, 1e-6, 3, 0)];
+        b[0].wall_ns = 999; // measurement differs, structure doesn't
+        assert_eq!(span_multiset(&a), span_multiset(&b));
+        assert_eq!(span_multiset(&a).len(), 1);
+    }
+
+    #[test]
+    fn spill_bytes_sum_only_counts_spill_spans() {
+        let evs = vec![
+            TraceEvent::span_virt(0, TraceKind::Spill, 0.0, 1e-6, 1, 100),
+            TraceEvent::span_virt(0, TraceKind::Restore, 0.0, 1e-6, 1, 40),
+            TraceEvent::instant_virt(0, TraceKind::SpillDecision, 0.0, 1, 100),
+        ];
+        assert_eq!(spill_span_bytes(&evs), 100);
+    }
+}

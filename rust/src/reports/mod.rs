@@ -399,7 +399,8 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
         "BENCH_hotpath.json",
         "recorded hot-path profile to render",
     ));
-    let rows = render_bench_json(&path, "hot-path profile", "make bench-json")?;
+    let compare = cli.str_or("compare", "", "second BENCH json to diff against (same config)");
+    let rows = render_bench_json(&path, "hot-path profile", "make bench-json", opt_path(&compare))?;
     // Dispatch-amortization pair (ISSUE 5): the single-item loop and the
     // batched entry do the same per-group work, so mean ratio = speedup
     // and 1/mean = groups/s (the batched row's "calls/s" is true PJRT
@@ -440,10 +441,12 @@ pub fn serve_profile(cli: &mut Cli) -> Result<()> {
         "BENCH_serve.json",
         "recorded serve profile to render",
     ));
+    let compare = cli.str_or("compare", "", "second BENCH json to diff against (same config)");
     render_bench_json(
         &path,
         "serve profile",
         "adjsh serve --bench-json BENCH_serve.json",
+        opt_path(&compare),
     )?;
     Ok(())
 }
@@ -459,10 +462,12 @@ pub fn offload_profile(cli: &mut Cli) -> Result<()> {
         "BENCH_offload.json",
         "recorded offload profile to render",
     ));
+    let compare = cli.str_or("compare", "", "second BENCH json to diff against (same config)");
     let rows = render_bench_json(
         &path,
         "offload profile",
         "cargo bench --bench offload",
+        opt_path(&compare),
     )?;
     let mean = |name: &str| {
         rows.iter()
@@ -490,17 +495,39 @@ pub fn offload_profile(cli: &mut Cli) -> Result<()> {
     Ok(())
 }
 
+/// `""` → `None` for the optional `--compare` flag.
+fn opt_path(s: &str) -> Option<std::path::PathBuf> {
+    if s.is_empty() { None } else { Some(std::path::PathBuf::from(s)) }
+}
+
+/// A recording's `"provenance"` block as
+/// `(commit, config_hash, seed, host_note)` — `None` on pre-PR-9 files
+/// (schema 1) that predate provenance stamping.
+fn bench_provenance(j: &Json) -> Option<(String, u64, u64, String)> {
+    let p = j.opt("provenance")?;
+    Some((
+        p.get("commit").ok()?.as_str().ok()?.to_string(),
+        p.get("config_hash").ok()?.as_usize().ok()? as u64,
+        p.get("seed").ok()?.as_usize().ok()? as u64,
+        p.get("host_note").ok()?.as_str().ok()?.to_string(),
+    ))
+}
+
 /// Shared `BENCH_*.json` table renderer: refuses machine-detectable
 /// placeholders (the `"placeholder": true` convention) so an unmeasured
 /// committed file can never be mistaken for data. `regen` names the
 /// command that records real rows. The p99 column is optional — older
-/// recordings (schema 1 without p99_ns) render with a dash. Returns the
-/// `(name, mean_ns)` rows so callers can derive cross-row columns (the
-/// hotpath dispatch-amortization speedup).
+/// recordings (schema 1 without p99_ns) render with a dash. With
+/// `compare`, a second recording is diffed against the first —
+/// *refused* unless both carry provenance with equal config hashes
+/// (numbers from different configs are not a perf trajectory). Returns
+/// the `(name, mean_ns)` rows so callers can derive cross-row columns
+/// (the hotpath dispatch-amortization speedup).
 fn render_bench_json(
     path: &std::path::Path,
     what: &str,
     regen: &str,
+    compare: Option<std::path::PathBuf>,
 ) -> Result<Vec<(String, f64)>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {} (run `{regen}`?)", path.display()))?;
@@ -525,6 +552,9 @@ fn render_bench_json(
         path.display(),
         j.opt("note").and_then(|n| n.as_str().ok()).unwrap_or("")
     );
+    if let Some((commit, hash, seed, host)) = bench_provenance(&j) {
+        println!("provenance: commit={commit} config_hash={hash} seed={seed} host={host:?}\n");
+    }
     let mut t = Table::new(&["bench", "iters", "mean", "p50", "p95", "p99", "min"]);
     let mut rows = Vec::with_capacity(results.len());
     for r in results {
@@ -548,6 +578,42 @@ fn render_bench_json(
         ]);
     }
     t.print();
+    if let Some(other_path) = compare {
+        let other_text = std::fs::read_to_string(&other_path)
+            .with_context(|| format!("reading --compare file {}", other_path.display()))?;
+        let other = Json::parse(&other_text)?;
+        let (Some((_, hash_a, ..)), Some((commit_b, hash_b, ..))) =
+            (bench_provenance(&j), bench_provenance(&other))
+        else {
+            bail!(
+                "refusing to compare: both recordings must carry a provenance block \
+                 (re-record with `{regen}` — pre-provenance files are not comparable)"
+            );
+        };
+        if hash_a != hash_b {
+            bail!(
+                "refusing to compare {} and {}: config hashes differ ({hash_a} vs {hash_b}) — \
+                 the runs measured different configurations",
+                path.display(),
+                other_path.display()
+            );
+        }
+        println!("\n== vs {} (commit {commit_b}) ==\n", other_path.display());
+        let mut dt = Table::new(&["bench", "mean", "compare mean", "ratio"]);
+        for o in other.get("results")?.as_arr()? {
+            let name = o.get("name")?.as_str()?.to_string();
+            let mean_b = o.get("mean_ns")?.as_f64()?;
+            if let Some((_, mean_a)) = rows.iter().find(|(n, _)| *n == name) {
+                dt.row(&[
+                    name,
+                    crate::util::bench::fmt_dur(mean_a * 1e-9),
+                    crate::util::bench::fmt_dur(mean_b * 1e-9),
+                    format!("{:.2}×", mean_b / mean_a),
+                ]);
+            }
+        }
+        dt.print();
+    }
     Ok(rows)
 }
 

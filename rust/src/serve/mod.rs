@@ -45,6 +45,8 @@ use crate::generate::sample;
 use crate::memcost::ServeAdmission;
 use crate::metrics::Quantiles;
 use crate::model::ParamSet;
+use crate::obs::trace::{TraceEvent, TraceKind, COORD_LANE, NO_KEY};
+use crate::obs::{MetricsRegistry, TraceRecorder};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 use crate::util::bench::BenchStats;
@@ -162,14 +164,18 @@ impl ServeMetrics {
     /// Rows for `util::bench::write_json` (`BENCH_serve.json`); empty
     /// quantiles are skipped so the JSON never carries NaNs.
     pub fn to_bench_stats(&self) -> Vec<BenchStats> {
-        let row = |name: &str, q: &Quantiles| BenchStats {
-            name: name.to_string(),
-            iters: q.len(),
-            mean_s: q.mean(),
-            p50_s: q.p50(),
-            p95_s: q.p95(),
-            p99_s: q.p99(),
-            min_s: q.min(),
+        // One sort per metric covers the whole p50/p95/p99 triple.
+        let row = |name: &str, q: &Quantiles| {
+            let s = q.sorted();
+            BenchStats {
+                name: name.to_string(),
+                iters: q.len(),
+                mean_s: q.mean(),
+                p50_s: s.p50(),
+                p95_s: s.p95(),
+                p99_s: s.p99(),
+                min_s: q.min(),
+            }
         };
         [
             ("serve_step_wall", &self.step_s),
@@ -206,13 +212,14 @@ impl ServeMetrics {
         let mut t = Table::new(&["metric", "n", "mean", "p50", "p95", "p99"]);
         let mut push = |name: &str, q: &Quantiles| {
             if !q.is_empty() {
+                let s = q.sorted();
                 t.row(&[
                     name.to_string(),
                     q.len().to_string(),
                     fmt_dur(q.mean()),
-                    fmt_dur(q.p50()),
-                    fmt_dur(q.p95()),
-                    fmt_dur(q.p99()),
+                    fmt_dur(s.p50()),
+                    fmt_dur(s.p95()),
+                    fmt_dur(s.p99()),
                 ]);
             }
         };
@@ -253,6 +260,13 @@ pub struct ServeLoop {
     step_idx: u64,
     finished: Vec<FinishedSession>,
     pub metrics: ServeMetrics,
+    /// Always-on serve event trace: `ServeAdmit`/`ServeEvict` instants
+    /// keyed by session id and one `AdmissionDefer` per deferred tick,
+    /// all on the coordinator track (DESIGN.md §Observability).
+    pub trace: TraceRecorder,
+    /// Named serve counters (admissions, evictions, deferrals),
+    /// rendered into the `adjsh serve` report's `event=metrics` line.
+    pub counters: MetricsRegistry,
 }
 
 impl ServeLoop {
@@ -265,6 +279,7 @@ impl ServeLoop {
         if cfg.max_batch == 0 {
             bail!("serving needs max_batch ≥ 1");
         }
+        let deterministic = backend.kind() == ExecutorKind::Sim;
         Ok(Self {
             backend,
             dims: dims.clone(),
@@ -277,6 +292,8 @@ impl ServeLoop {
             step_idx: 0,
             finished: Vec::new(),
             metrics: ServeMetrics::default(),
+            trace: TraceRecorder::new(deterministic),
+            counters: MetricsRegistry::new(),
         })
     }
 
@@ -360,6 +377,13 @@ impl ServeLoop {
                 },
             );
             self.metrics.admitted += 1;
+            self.trace.push(TraceEvent::instant(
+                COORD_LANE,
+                TraceKind::ServeAdmit,
+                sid as usize,
+                0,
+            ));
+            self.counters.inc("serve_admissions", 1);
             self.metrics.peak_sessions = self.metrics.peak_sessions.max(self.sessions.len());
             let bytes = self.admission.bytes_at(self.sessions.len() as u64);
             if bytes > self.admission.hbm_bytes {
@@ -372,6 +396,13 @@ impl ServeLoop {
         }
         if blocked {
             self.metrics.deferred += 1;
+            self.trace.push(TraceEvent::instant(
+                COORD_LANE,
+                TraceKind::AdmissionDefer,
+                NO_KEY,
+                0,
+            ));
+            self.counters.inc("serve_deferrals", 1);
         }
         Ok(())
     }
@@ -459,6 +490,13 @@ impl ServeLoop {
             .collect();
         for sid in done {
             self.backend.evict(sid)?;
+            self.trace.push(TraceEvent::instant(
+                COORD_LANE,
+                TraceKind::ServeEvict,
+                sid as usize,
+                0,
+            ));
+            self.counters.inc("serve_evictions", 1);
             let sess = self.sessions.remove(&sid).expect("session just listed");
             let wall = sess.t_admit.elapsed().as_secs_f64();
             if sess.n_new > 0 && wall > 0.0 {
@@ -527,6 +565,13 @@ impl ServeLoop {
     pub fn evict_to_snapshot(&mut self, sid: u64, path: &Path) -> Result<Vec<i32>> {
         self.snapshot(sid, path)?;
         self.backend.evict(sid)?;
+        self.trace.push(TraceEvent::instant(
+            COORD_LANE,
+            TraceKind::ServeEvict,
+            sid as usize,
+            0,
+        ));
+        self.counters.inc("serve_evictions", 1);
         let sess = self.sessions.remove(&sid).expect("snapshot checked liveness");
         Ok(sess.out)
     }
@@ -579,6 +624,13 @@ impl ServeLoop {
             },
         );
         self.metrics.admitted += 1;
+        self.trace.push(TraceEvent::instant(
+            COORD_LANE,
+            TraceKind::ServeAdmit,
+            sid as usize,
+            0,
+        ));
+        self.counters.inc("serve_admissions", 1);
         self.metrics.peak_sessions = self.metrics.peak_sessions.max(self.sessions.len());
         Ok(sid)
     }

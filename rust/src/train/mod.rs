@@ -15,9 +15,11 @@ use crate::adjoint;
 use crate::baselines;
 use crate::config::{GradMode, RunConfig};
 use crate::data::{Corpus, Sample};
-use crate::exec::Executor;
+use crate::exec::{Executor, ExecutorKind};
 use crate::metrics::{Recorder, StepRecord};
 use crate::model::{GradSet, LayerParams, ParamSet};
+use crate::obs::trace::{TraceEvent, TraceKind, COORD_LANE};
+use crate::obs::{Logger, MetricsRegistry, TraceRecorder};
 use crate::optim::ShardedAdam;
 use crate::rng::Rng;
 use crate::pipeline;
@@ -52,6 +54,17 @@ pub struct Trainer {
     /// H2D rode the stage-pair window, not that the device was certainly
     /// still busy when it landed.
     pub last_offload: Option<(u64, f64, f64, u64, u64)>,
+    /// The run's always-on event trace (DESIGN.md §Observability):
+    /// plan spans, spill/restore traffic, supervision instants, worker
+    /// wall spans, checkpoint writes. Deterministic (wall stamps zeroed)
+    /// under `--executor sim`, so sim traces are byte-identical across
+    /// runs. `--trace` only gates whether the Chrome JSON is written.
+    pub trace: TraceRecorder,
+    /// Structured `key=value` logger (`--log-level`).
+    pub logger: Logger,
+    /// Named run counters (dispatches, spilled_bytes, prefetch hits and
+    /// misses, respawns), snapshotted into the end-of-run report.
+    pub metrics: MetricsRegistry,
     /// The trainer's stochastic stream (reserved for stochastic training
     /// ops). Checkpointed verbatim so a resumed run continues the exact
     /// sequence the uninterrupted run would have drawn.
@@ -99,6 +112,8 @@ impl Trainer {
 
         let executor = cfg.exec.build_with(cfg.fault.clone());
         let seed = cfg.seed;
+        let deterministic = cfg.exec.kind == ExecutorKind::Sim;
+        let logger = Logger::new(cfg.obs.log_level);
         Ok(Self {
             cfg,
             arts,
@@ -109,6 +124,9 @@ impl Trainer {
             last_bwd_host_s: None,
             last_overlap_s: None,
             last_offload: None,
+            trace: TraceRecorder::new(deterministic),
+            logger,
+            metrics: MetricsRegistry::new(),
             rng: Rng::new(seed),
             opt,
             corpus,
@@ -172,19 +190,28 @@ impl Trainer {
                     bwd.prefetch_hit,
                     bwd.prefetch_miss,
                 ));
+                self.metrics.inc("dispatches", bwd.calls);
+                self.metrics.inc("spilled_bytes", bwd.spilled_bytes);
+                self.metrics.inc("prefetch_hits", bwd.prefetch_hit);
+                self.metrics.inc("prefetch_misses", bwd.prefetch_miss);
+                self.trace.extend(bwd.trace);
                 self.last_plan = Some(bwd.plan);
                 // An armed --fault-at plan reports what its kills did; the
                 // gradients above are already bit-identical to a healthy
                 // run (DESIGN.md §Fault-Tolerance).
                 if let Some(report) = self.executor.fault_report() {
+                    let respawned: u64 =
+                        report.respawns.iter().map(|&(_, n)| u64::from(n)).sum();
+                    self.metrics.inc("respawns", respawned);
                     if !report.deaths.is_empty() {
-                        println!(
-                            "fault injection: {} lane death(s), {} orphaned item(s) over {} layer(s) \
-                             re-planned and recovered ({} lane(s) rejoined)",
-                            report.deaths.len(),
-                            report.orphans.len(),
-                            report.orphan_layers.len(),
-                            report.rejoined.len(),
+                        self.logger.warn(
+                            "fault_report",
+                            &[
+                                ("deaths", report.deaths.len().to_string()),
+                                ("orphans", report.orphans.len().to_string()),
+                                ("orphan_layers", report.orphan_layers.len().to_string()),
+                                ("rejoined", report.rejoined.len().to_string()),
+                            ],
                         );
                     }
                 }
@@ -238,8 +265,24 @@ impl Trainer {
             let every = self.cfg.checkpoint_every;
             if every > 0 && self.step_idx % every == 0 {
                 let dir = self.checkpoint_dir();
+                let c0 = self.trace.wall_now_ns();
                 let path = self.save_train_checkpoint(&dir)?;
-                println!("checkpoint: wrote {}", path.display());
+                let dur = self.trace.wall_now_ns().saturating_sub(c0);
+                self.trace.push(TraceEvent::span_wall(
+                    COORD_LANE,
+                    TraceKind::Checkpoint,
+                    c0,
+                    dur,
+                    self.step_idx,
+                    0,
+                ));
+                self.logger.info(
+                    "checkpoint",
+                    &[
+                        ("step", self.step_idx.to_string()),
+                        ("path", path.display().to_string()),
+                    ],
+                );
             }
             if i % self.cfg.log_every == 0 || i + 1 == steps {
                 println!(
@@ -279,21 +322,21 @@ impl Trainer {
             }
             // Offload tier (last step, modeled from the plan + link
             // model): spilled volume, transfer costs, and how many
-            // restores the async prefetch could hide. "Hidden" carries
-            // the same upper-bound caveat as `overlap_s` above — a hit
-            // means the H2D rode the double-buffered stage pair, not a
-            // measured completion event.
+            // restores the async prefetch could hide. Prefetch hits are
+            // an upper bound on truly hidden restores — same caveat as
+            // `overlap_s` above.
             if let Some((bytes, sp, rs, hit, miss)) =
                 self.last_offload.filter(|&(b, ..)| b > 0)
             {
-                println!(
-                    "offload: spilled {} (D2H {}), restores H2D {} — prefetch hid {}/{} \
-                     (upper bound, as with overlap)",
-                    crate::metrics::fmt_bytes(bytes),
-                    crate::util::bench::fmt_dur(sp),
-                    crate::util::bench::fmt_dur(rs),
-                    hit,
-                    hit + miss,
+                self.logger.info(
+                    "offload",
+                    &[
+                        ("spilled_bytes", bytes.to_string()),
+                        ("spill_s", format!("{sp:.6}")),
+                        ("restore_s", format!("{rs:.6}")),
+                        ("prefetch_hit", hit.to_string()),
+                        ("prefetch_miss", miss.to_string()),
+                    ],
                 );
             }
         }
@@ -318,6 +361,22 @@ impl Trainer {
         if let Some(path) = self.cfg.log_csv.clone() {
             self.recorder.write_csv(&path)?;
             println!("wrote {}", path.display());
+        }
+        // End-of-run observability: the Chrome trace file (`--trace`;
+        // recording was on the whole time regardless) and one stable
+        // `event=metrics` line with every registry counter.
+        if let Some(path) = self.cfg.obs.trace.clone() {
+            crate::obs::write_chrome_trace(&path, self.trace.events())?;
+            self.logger.info(
+                "trace",
+                &[
+                    ("path", path.display().to_string()),
+                    ("events", self.trace.len().to_string()),
+                ],
+            );
+        }
+        if !self.metrics.is_empty() {
+            self.logger.info("metrics", &self.metrics.fields());
         }
         Ok(())
     }
@@ -452,7 +511,13 @@ impl Trainer {
                 let step = ck.step;
                 self.resume_train_checkpoint(ck)
                     .with_context(|| format!("resuming from {}", path.display()))?;
-                println!("resumed from {} (step {step})", path.display());
+                self.logger.info(
+                    "resume",
+                    &[
+                        ("path", path.display().to_string()),
+                        ("step", step.to_string()),
+                    ],
+                );
                 Ok(Some(step))
             }
             None => Ok(None),

@@ -45,23 +45,75 @@ impl BenchStats {
     }
 }
 
+/// Run provenance stamped into every `BENCH_*.json` (the `"provenance"`
+/// block): the commit that produced the numbers, a hash of the run
+/// config, the seed, and a free-form host note. `reports` prints it and
+/// refuses to compare runs whose config hashes differ — numbers from
+/// different configs are not a perf trajectory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
+    pub commit: String,
+    /// CRC-32 of the caller's config-description string: equal hashes ⇒
+    /// the runs measured the same configuration.
+    pub config_hash: u32,
+    pub seed: u64,
+    /// Free-form host context (toolchain availability, artifact caveats).
+    pub host_note: String,
+}
+
+impl Provenance {
+    /// Stamp the current checkout: hash `config_desc` (any stable string
+    /// describing the measured configuration) and read the git HEAD.
+    pub fn collect(config_desc: &str, seed: u64, host_note: &str) -> Self {
+        Provenance {
+            commit: git_commit(),
+            config_hash: crate::util::crc::crc32(config_desc.as_bytes()),
+            seed,
+            host_note: host_note.to_string(),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"commit\":{:?},\"config_hash\":{},\"seed\":{},\"host_note\":{:?}}}",
+            self.commit, self.config_hash, self.seed, self.host_note,
+        )
+    }
+}
+
+fn git_commit() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Write a bench run's results as `BENCH_<bench>.json`-style output:
-/// `{"bench", "schema", "placeholder", "note", "results": [{name, iters,
-/// mean_ns, p50_ns, p95_ns, p99_ns, min_ns}]}`. `note` records run context
-/// (artifact availability, host caveats) so numbers are comparable across
-/// PRs. `placeholder` marks a file with no measured rows (e.g. committed
-/// from a host without the toolchain) — machine-detectable, so
-/// `reports::hotpath_profile` refuses to plot it.
+/// `{"bench", "schema", "placeholder", "note", "provenance", "results":
+/// [{name, iters, mean_ns, p50_ns, p95_ns, p99_ns, min_ns}]}`. `note`
+/// records run context (artifact availability, host caveats) so numbers
+/// are comparable across PRs; `provenance` records *which* commit,
+/// config, and seed produced them. `placeholder` marks a file with no
+/// measured rows (e.g. committed from a host without the toolchain) —
+/// machine-detectable, so `reports::hotpath_profile` refuses to plot it.
 pub fn write_json(
     path: &Path,
     bench: &str,
     placeholder: bool,
     note: &str,
+    prov: &Provenance,
     results: &[BenchStats],
 ) -> anyhow::Result<()> {
     let mut s = String::new();
     s.push_str(&format!(
-        "{{\n  \"bench\": {bench:?},\n  \"schema\": 1,\n  \"placeholder\": {placeholder},\n  \"note\": {note:?},\n  \"results\": [\n"
+        "{{\n  \"bench\": {bench:?},\n  \"schema\": 2,\n  \"placeholder\": {placeholder},\n  \"note\": {note:?},\n  \"provenance\": {},\n  \"results\": [\n",
+        prov.to_json(),
     ));
     for (i, r) in results.iter().enumerate() {
         s.push_str("    ");
@@ -222,13 +274,22 @@ mod tests {
         ];
         let dir = std::env::temp_dir();
         let path = dir.join(format!("bench_json_test_{}.json", std::process::id()));
-        write_json(&path, "hotpath", false, "unit test", &stats).unwrap();
+        let prov = Provenance::collect("dims=test T=32", 7, "unit test host");
+        write_json(&path, "hotpath", false, "unit test", &prov, &stats).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         let j = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "hotpath");
-        assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 2);
         assert!(!j.get("placeholder").unwrap().as_bool().unwrap());
+        let p = j.get("provenance").unwrap();
+        assert!(!p.get("commit").unwrap().as_str().unwrap().is_empty());
+        assert_eq!(
+            p.get("config_hash").unwrap().as_usize().unwrap() as u32,
+            prov.config_hash
+        );
+        assert_eq!(p.get("seed").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(p.get("host_note").unwrap().as_str().unwrap(), "unit test host");
         let rs = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(rs.len(), 2);
         assert_eq!(rs[0].get("name").unwrap().as_str().unwrap(), "alpha\"quoted\"");

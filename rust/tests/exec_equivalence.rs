@@ -18,6 +18,7 @@ use adjoint_sharding::exec::{
     plan_dispatch, Executor, ProcessExecutor, SimExecutor, ThreadedExecutor,
 };
 use adjoint_sharding::model::{GradSet, ParamSet};
+use adjoint_sharding::obs::trace::span_multiset;
 use adjoint_sharding::pipeline;
 use adjoint_sharding::runtime::{ArtifactSet, Runtime};
 use adjoint_sharding::schedule::{BackwardPlan, DeviceSchedule, PolicyKind};
@@ -209,6 +210,20 @@ fn compare_backends(
     for (ds, dt) in o_sim.plan.schedule.devices.iter().zip(&o_thr.plan.schedule.devices) {
         assert_eq!(ds.spans.len(), dt.spans.len(), "{ctx}: per-device span counts");
     }
+
+    // Trace structural equality (PR 9): the modeled spans (analytic plan
+    // backbone + offload model) are a pure function of the config, so all
+    // three backends must record the identical span multiset. Wall-only
+    // spans — worker Gather/Launch, the coordinator Reduce — exist only
+    // on live backends and are excluded by the virt_dur filter.
+    let modeled = |o: &adjoint::AdjointOutput| {
+        let evs: Vec<_> = o.trace.iter().copied().filter(|e| e.virt_dur_ns > 0).collect();
+        span_multiset(&evs)
+    };
+    let reference = modeled(&o_sim);
+    assert!(!reference.is_empty(), "{ctx}: sim recorded no modeled spans");
+    assert_eq!(reference, modeled(&o_thr), "{ctx}: threaded modeled spans diverged");
+    assert_eq!(reference, modeled(&o_proc), "{ctx}: process modeled spans diverged");
 }
 
 #[test]
@@ -486,4 +501,46 @@ fn worker_trainer_steps_match_sim_trainer() {
     for (i, kind) in ExecutorKind::ALL.iter().enumerate().skip(1) {
         assert_eq!(losses[0], losses[i], "sim vs {kind} training trajectories diverged");
     }
+}
+
+#[test]
+fn traced_run_bit_identical_to_untraced() {
+    if !have("tiny") {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    use adjoint_sharding::config::RunConfig;
+    use adjoint_sharding::exec::ExecutorKind;
+    use adjoint_sharding::train::Trainer;
+
+    std::env::set_var("ADJSH_WORKER_BIN", env!("CARGO_BIN_EXE_adjsh"));
+    let trace_path =
+        std::env::temp_dir().join(format!("adjsh_trace_{}.json", std::process::id()));
+    for kind in ExecutorKind::ALL {
+        // Recording is always on; `--trace` only gates the file write at
+        // the end of the run — so the traced run must land on the exact
+        // same parameters (identical grads → identical eval-loss bits).
+        let mut evals = Vec::new();
+        for traced in [false, true] {
+            let rt = Runtime::shared().unwrap();
+            let mut cfg = RunConfig::load(&root(), "tiny").unwrap();
+            cfg.topology.devices = 2.min(cfg.dims.k);
+            cfg.exec.kind = kind;
+            cfg.log_every = usize::MAX;
+            cfg.obs.trace = traced.then(|| trace_path.clone());
+            let corpus = Box::new(MarkovCorpus::new(cfg.dims.v, 11));
+            let mut tr = Trainer::new(rt, cfg, corpus).unwrap();
+            tr.run(2).unwrap();
+            evals.push(tr.eval_loss(1).unwrap());
+        }
+        assert_eq!(
+            evals[0].to_bits(),
+            evals[1].to_bits(),
+            "{kind}: --trace perturbed the training trajectory"
+        );
+        let text = std::fs::read_to_string(&trace_path).unwrap();
+        let events = adjoint_sharding::obs::parse_chrome_trace(&text).unwrap();
+        assert!(!events.is_empty(), "{kind}: traced run wrote an empty trace");
+    }
+    std::fs::remove_file(&trace_path).ok();
 }

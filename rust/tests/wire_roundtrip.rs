@@ -16,6 +16,7 @@ use adjoint_sharding::exec::wire::{
     encode_job, read_frame, write_frame, DeviceWorkMsg, DoneMsg, JobMsg, K_DONE, K_JOB, MAGIC,
     WIRE_VERSION,
 };
+use adjoint_sharding::obs::trace::{TraceEvent, TraceKind, COORD_LANE, NO_KEY};
 use adjoint_sharding::sharding::{BatchGroup, WorkItem};
 use adjoint_sharding::tensor::Tensor;
 use adjoint_sharding::topology::ActKind;
@@ -98,6 +99,13 @@ fn sample_done() -> DoneMsg {
         calls: 3,
         died: false,
         executed: 3,
+        // Wire v4: trace frames batched with the DONE reply. The sentinel
+        // lane/key (usize::MAX) must survive the u64 crossing.
+        trace: vec![
+            TraceEvent::span_wall(1, TraceKind::Gather, 42, 1_000, NO_KEY, 0),
+            TraceEvent::span_wall(1, TraceKind::Launch, 1_042, 9_000, 0, 0),
+            TraceEvent::instant(COORD_LANE, TraceKind::StragglerWarn, NO_KEY, 7),
+        ],
     }
 }
 
@@ -145,6 +153,13 @@ fn done_roundtrip_is_byte_exact() {
         assert_eq!(back.died, done.died);
         assert_eq!(back.executed, done.executed);
         assert_eq!(back.calls, done.calls);
+        // v4: trace events cross structurally intact, sentinels included.
+        assert_eq!(back.trace, done.trace);
+        for e in &back.trace {
+            if e.lane == COORD_LANE {
+                assert_eq!(e.key, NO_KEY, "sentinel lane/key must survive the wire");
+            }
+        }
         assert_eq!(back.layer_grads.len(), done.layer_grads.len());
         for ((la, ga), (lb, gb)) in done.layer_grads.iter().zip(&back.layer_grads) {
             assert_eq!(la, lb);

@@ -1,16 +1,18 @@
-//! Serving load demo (DESIGN.md §Serving): a synthetic open-loop arrival
-//! workload through the continuous-batching [`ServeLoop`] — S sessions
-//! with staggered arrivals, each prompt + N generated tokens — under
-//! both executors, printing aggregate tokens/s and latency percentiles
-//! (p50/p95/p99) and recording them as `BENCH_serve.json` via the
-//! repo's machine-readable bench convention (EXPERIMENTS.md §Serve).
-//! When the artifact set is missing, a `"placeholder": true` file is
-//! written instead so the gap stays machine-detectable.
+//! Serving capacity demo (DESIGN.md §Serving; EXPERIMENTS.md
+//! §Serve-Capacity): drive the continuous-batching [`ServeLoop`] with
+//! the seeded open-loop load generator, sweeping offered load across
+//! rate multipliers under both executors, and record the capacity curve
+//! — offered load vs attained throughput, p99 TTFT / inter-token
+//! latency, SLO attainment — as schema-3 `BENCH_serve.json` via the
+//! repo's machine-readable bench convention. Render with
+//! `adjsh bench serve`. When the artifact set is missing, a
+//! `"placeholder": true` file is written instead so the gap stays
+//! machine-detectable.
 //!
 //!     make artifacts && cargo run --release --example serve_load
 //!
-//! Flags: --config, --artifacts, --sessions, --tokens, --prompt-len,
-//!        --max-batch, --arrival-every, --workers, --seed, --out
+//! Flags: --config, --artifacts, --sessions, --mix, --rate, --sweep,
+//!        --max-batch, --prefill-chunk, --workers, --seed, --out
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -19,35 +21,52 @@ use adjoint_sharding::config::{RunConfig, ServeCfg};
 use adjoint_sharding::exec::{ExecCfg, ExecutorKind};
 use adjoint_sharding::memcost::ServeAdmission;
 use adjoint_sharding::model::ParamSet;
-use adjoint_sharding::rng::Rng;
-use adjoint_sharding::serve::{build_backend, Request, ServeLoop};
-use adjoint_sharding::util::bench::{write_json, BenchStats};
+use adjoint_sharding::serve::loadgen::{self, ArrivalMix, LoadGenCfg, Slo};
+use adjoint_sharding::serve::{build_backend, ServeLoop};
+use adjoint_sharding::util::bench::{write_json, write_json_capacity, CapacityRow, Provenance};
 use adjoint_sharding::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     let mut cli = Cli::from_env()?;
     let artifacts = PathBuf::from(cli.str_or("artifacts", "artifacts", "artifacts root"));
     let config = cli.str_or("config", "tiny", "artifact config name");
-    let sessions = cli.usize_or("sessions", 12, "sessions in the synthetic workload")?;
-    let n_new = cli.usize_or("tokens", 24, "tokens generated per session")?;
-    let prompt_len = cli.usize_or("prompt-len", 4, "synthetic prompt length")?;
+    let sessions = cli.usize_or("sessions", 12, "sessions offered per sweep point")?;
+    let mix = ArrivalMix::parse(&cli.str_or(
+        "mix",
+        "mixed",
+        "arrival mix: short-chat|long-doc|bursty|mixed",
+    ))?;
+    let rate = cli.f64_or("rate", 25.0, "offered arrivals per 100 loop steps at 1x")?;
+    let sweep = cli.str_or("sweep", "0.5,1,2,4", "offered-rate multipliers");
+    let multipliers: Vec<f64> = sweep
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow::anyhow!("bad multiplier '{s}'")))
+        .collect::<anyhow::Result<_>>()?;
     let max_batch = cli.usize_or("max-batch", 4, "sessions per batched decode step")?;
-    let arrival_every = cli.usize_or("arrival-every", 2, "loop steps between arrivals")?;
+    let prefill_chunk =
+        cli.usize_or("prefill-chunk", 8, "prompt tokens per chunked-prefill call (0 = off)")?;
     let workers = cli.usize_or("workers", 2, "threaded-backend lane cap")?;
     let seed = cli.usize_or("seed", 0, "rng seed")? as u64;
     let out = PathBuf::from(cli.str_or("out", "BENCH_serve.json", "bench JSON output path"));
 
+    let desc = format!(
+        "serve_load: {sessions} sessions/point, mix {}, rate {rate}/100 steps × {sweep}, \
+         max-batch {max_batch}, prefill-chunk {prefill_chunk}, config {config}",
+        mix.label()
+    );
     if !artifacts.join(&config).join("manifest.json").exists() {
         eprintln!(
             "no artifacts for '{config}' under {} — run `make artifacts` first",
             artifacts.display()
         );
+        let prov = Provenance::collect(&desc, seed, "no artifacts — placeholder");
         write_json(
             &out,
             "serve",
             true,
             "placeholder — serve_load ran without artifacts (`make artifacts` missing), \
              so no serving rows could be measured; rerun on a host with jax + cargo.",
+            &prov,
             &[],
         )?;
         println!("wrote placeholder {}", out.display());
@@ -56,59 +75,61 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = RunConfig::load(&artifacts, &config)?;
     let params = Arc::new(ParamSet::init(&cfg.dims, seed));
-    let admission = ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes);
+    let lg = LoadGenCfg {
+        mix,
+        sessions,
+        per_100_steps: rate,
+        seed,
+        vocab: cfg.dims.v,
+        temperature: 0.8,
+        slo: Slo::default(),
+    };
     println!(
-        "config '{}': per-session state {} B (context-independent), HBM cap admits {} sessions",
+        "config '{}': HBM cap admits {} sessions; offering mix {} at {rate}/100 steps × {sweep}",
         cfg.dims.name,
-        admission.session_bytes,
-        admission.max_sessions()
+        ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes).max_sessions(),
+        mix.label()
     );
 
-    let mut recorded: Vec<BenchStats> = Vec::new();
+    let mut curve: Vec<CapacityRow> = Vec::new();
+    let mut last_stats = Vec::new();
     for exec in [
         ExecCfg { kind: ExecutorKind::Sim, ..ExecCfg::default() },
         ExecCfg { kind: ExecutorKind::Threaded, workers, ..ExecCfg::default() },
     ] {
-        let backend =
-            build_backend(&exec, &cfg.artifacts_dir, &cfg.dims, Arc::clone(&params), max_batch)?;
-        let serve_cfg = ServeCfg { max_batch, snapshot_dir: None };
-        let mut sl = ServeLoop::new(backend, &cfg.dims, admission, &serve_cfg)?;
-
-        let mut wl = Rng::new(seed ^ 0x5EED_F00D);
-        for i in 0..sessions {
-            let prompt = (0..prompt_len.max(1))
-                .map(|_| wl.below(cfg.dims.v as u64) as i32)
-                .collect();
-            sl.submit(Request {
-                prompt,
-                n_new,
-                temperature: 0.8,
-                seed: seed.wrapping_add(i as u64 * 7919 + 1),
-                not_before_step: (i * arrival_every) as u64,
-            })?;
-        }
-        sl.run_until_idle()?;
-
         println!("\n== executor {} ==", exec.kind);
-        sl.metrics.print_report();
-        let fin = sl.take_finished();
-        assert_eq!(fin.len(), sessions, "every session must complete");
-        for mut row in sl.metrics.to_bench_stats() {
-            row.name = format!("{}[{}]", row.name, exec.kind);
-            recorded.push(row);
+        for &m in &multipliers {
+            let backend = build_backend(
+                &exec,
+                &cfg.artifacts_dir,
+                &cfg.dims,
+                Arc::clone(&params),
+                max_batch,
+            )?;
+            let serve_cfg =
+                ServeCfg { max_batch, prefill_chunk, ..ServeCfg::default() };
+            let admission = if prefill_chunk > 0 {
+                ServeAdmission::with_prefill(&cfg.dims, cfg.topology.hbm_bytes, prefill_chunk as u64)
+            } else {
+                ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes)
+            };
+            let mut sl = ServeLoop::new(backend, &cfg.dims, admission, &serve_cfg)?;
+            let label = format!("{}@{m}x[{}]", mix.label(), exec.kind);
+            let row = loadgen::run_point(&mut sl, &lg, &label, rate * m)?;
+            println!(
+                "  {label}: attained {:.1} tok/s, p99 TTFT {:.2}ms, p99 ITL {:.2}ms, SLO {:.1}%",
+                row.attained_tok_s,
+                row.p99_ttft_s * 1e3,
+                row.p99_itl_s * 1e3,
+                row.slo_pct
+            );
+            curve.push(row);
+            last_stats = sl.metrics.to_bench_stats();
         }
     }
 
-    write_json(
-        &out,
-        "serve",
-        false,
-        &format!(
-            "serve_load: {sessions} sessions × {n_new} tokens, prompt {prompt_len}, \
-             max-batch {max_batch}, arrivals every {arrival_every} steps, config {config}"
-        ),
-        &recorded,
-    )?;
-    println!("\nwrote {}", out.display());
+    let prov = Provenance::collect(&desc, seed, "serve_load example");
+    write_json_capacity(&out, "serve", false, &desc, &prov, &last_stats, &curve)?;
+    println!("\nwrote {} — render with `adjsh bench serve --bench-json {}`", out.display(), out.display());
     Ok(())
 }

@@ -12,6 +12,8 @@ Per config we emit:
   layer_fwd.hlo.txt           Alg. 1 inner body (one layer, full sequence)
   layer_step.hlo.txt          single-token decode step (one layer, one session)
   layer_step_batched.hlo.txt  SERVE_BATCH-session decode step (serving ABI)
+  layer_prefill_chunk.hlo.txt PREFILL_CHUNK-token prompt chunk for one
+                              session (chunked-prefill serving ABI)
   head_loss.hlo.txt           loss + dl/dy_K + dΩ (Alg. 1 lines 13–15)
   layer_adjoint_grad.hlo.txt  Alg. 3 work item (one layer, one token chunk)
   layer_adjoint_grad_batched.hlo.txt
@@ -33,7 +35,9 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model as M
-from .configs import CONFIGS, ModelConfig, PROBE_BS, PROBE_N, PROBE_P, SERVE_BATCH
+from .configs import (
+    CONFIGS, ModelConfig, PREFILL_CHUNK, PROBE_BS, PROBE_N, PROBE_P, SERVE_BATCH,
+)
 from .kernels import ref
 
 
@@ -129,6 +133,19 @@ def lower_config(cfg: ModelConfig, out_dir: str) -> dict:
         ("h_prev_b", _spec((SERVE_BATCH, N))),
     ]
     emit("layer_step_batched", layer_step_batched_flat, specs)
+
+    # ---- layer_prefill_chunk (C-token prompt chunk, one session) ----------
+    def layer_prefill_chunk_flat(W_a, b_a, W_b, b_b, W_g, b_g, W_c,
+                                 xhat_c, y_prev_c, h0):
+        p = M.LayerParams(W_a, b_a, W_b, b_b, W_g, b_g, W_c)
+        return M.layer_prefill_chunk(p, xhat_c, y_prev_c, h0, cfg.eps)
+
+    specs = _param_specs(cfg) + [
+        ("xhat_c", _spec((PREFILL_CHUNK, P))),
+        ("y_prev_c", _spec((PREFILL_CHUNK, P))),
+        ("h0", _spec((N,))),
+    ]
+    emit("layer_prefill_chunk", layer_prefill_chunk_flat, specs)
 
     # ---- head_loss -------------------------------------------------------
     specs = [

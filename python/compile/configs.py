@@ -91,6 +91,14 @@ CONFIGS = {
 # ``make artifacts``, and `adjsh serve` follows).
 SERVE_BATCH = 8
 
+# Static token width of the ``layer_prefill_chunk`` serving entry: one
+# PJRT call advances a session's recurrent state over this many prompt
+# tokens (lax.scan of ``layer_step``, so each row stays bit-identical to
+# token-at-a-time feeding). Ragged prompts pad the tail — the scan is
+# causal, so garbage rows past the real length never reach earlier rows.
+# As with SERVE_BATCH, Rust reads the actual width from the manifest.
+PREFILL_CHUNK = 16
+
 # Table-1 / §4.5 probe dims: the paper's worked example uses P=128, N=225,
 # bs=8 on a selective *diagonal* SSM; we lower one VJP unit per SSM family.
 PROBE_P = 128

@@ -161,6 +161,37 @@ def layer_step_batched(p: LayerParams, xhat_b: jax.Array, y_prev_b: jax.Array,
     return jax.lax.map(row, (xhat_b, y_prev_b, h_prev_b))
 
 
+def layer_prefill_chunk(p: LayerParams, xhat_c: jax.Array, y_prev_c: jax.Array,
+                        h0: jax.Array, eps: float):
+    """Chunked prefill: advance *one* session's recurrent state through one
+    layer over a C-token prompt chunk in a single call — the serving ABI
+    behind the chunked-prefill path in ``rust/src/serve``. Without this,
+    prompts feed one token per loop tick and a long document monopolizes a
+    batch slot for its whole prompt length.
+
+    Shapes: xhat_c (C, P), y_prev_c (C, P), h0 (N,) → y (C, P),
+    yhat (C, P), h_rows (C, N). Unlike ``layer_step_batched`` the rows are
+    *sequentially dependent* (one session's consecutive tokens), so the
+    lowering is ``lax.scan`` carrying h — and the scan body is exactly
+    ``layer_step``, so each row's float sequence is bit-identical to
+    feeding the chunk token-at-a-time (the ``layer_step_batched`` recipe
+    applied along time instead of batch; ``test_model.py`` asserts it).
+
+    All C per-row outputs are returned, not just the final carry, so
+    ragged chunks need no second entry: the caller pads the tail rows with
+    garbage, and because the scan is causal row j only depends on rows
+    ≤ j — the Rust side feeds a chunk of ``len ≤ C`` real tokens and reads
+    h and y at row ``len-1``, bit-equal to a full-width chunk of the same
+    prefix (also asserted)."""
+    def body(h, args):
+        xhat_t, y_prev_t = args
+        y_t, yhat_t, h_t = layer_step(p, xhat_t, y_prev_t, h, eps)
+        return h_t, (y_t, yhat_t, h_t)
+
+    _, (y, yhat, h_rows) = jax.lax.scan(body, h0, (xhat_c, y_prev_c))
+    return y, yhat, h_rows
+
+
 # ---------------------------------------------------------------------------
 # Head: loss + cotangents (the dl/dy_K^t the adjoint phase consumes)
 # ---------------------------------------------------------------------------

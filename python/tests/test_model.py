@@ -240,3 +240,54 @@ def test_layer_step_batched_rows_match_single_step():
         assert np.array_equal(np.asarray(yb[b]), np.asarray(y1)), b
         assert np.array_equal(np.asarray(yhatb[b]), np.asarray(yhat1)), b
         assert np.array_equal(np.asarray(hb[b]), np.asarray(h1)), b
+
+
+def test_layer_prefill_chunk_matches_token_at_a_time():
+    """The chunked-prefill serving ABI contract: row t of the chunk entry
+    equals feeding the same tokens through ``layer_step`` one at a time,
+    carrying h — bit for bit (the lax.scan body *is* layer_step, so the
+    per-row float sequence is identical; the Rust serve tests re-assert
+    this against the AOT artifact)."""
+    P, N, C = 16, 16, 8
+    p = M.init_layer(jax.random.PRNGKey(5), P, N)
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    xhat_c = jax.random.normal(ks[0], (C, P))
+    y_prev_c = jax.random.normal(ks[1], (C, P))
+    h0 = jax.random.normal(ks[2], (N,))
+
+    step = jax.jit(lambda x, y, h: M.layer_step(p, x, y, h, 1e-6))
+    chunk = jax.jit(lambda x, y, h: M.layer_prefill_chunk(p, x, y, h, 1e-6))
+
+    yc, yhatc, hc = chunk(xhat_c, y_prev_c, h0)
+    assert yc.shape == (C, P) and yhatc.shape == (C, P) and hc.shape == (C, N)
+    h = h0
+    for t in range(C):
+        y1, yhat1, h = step(xhat_c[t], y_prev_c[t], h)
+        assert np.array_equal(np.asarray(yc[t]), np.asarray(y1)), t
+        assert np.array_equal(np.asarray(yhatc[t]), np.asarray(yhat1)), t
+        assert np.array_equal(np.asarray(hc[t]), np.asarray(h)), t
+
+
+def test_layer_prefill_chunk_is_causal_under_ragged_padding():
+    """Ragged-chunk contract: the scan is causal, so rows past the real
+    prompt length may hold arbitrary garbage without perturbing a single
+    bit of the earlier rows — the Rust side pads short chunks and reads h
+    and y at row len-1."""
+    P, N, C, live = 16, 16, 8, 3
+    p = M.init_layer(jax.random.PRNGKey(7), P, N)
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    xhat_c = jax.random.normal(ks[0], (C, P))
+    y_prev_c = jax.random.normal(ks[1], (C, P))
+    h0 = jax.random.normal(ks[2], (N,))
+
+    chunk = jax.jit(lambda x, y, h: M.layer_prefill_chunk(p, x, y, h, 1e-6))
+    y_a, yhat_a, h_a = chunk(xhat_c, y_prev_c, h0)
+
+    # Same live prefix, different garbage tail.
+    xg = xhat_c.at[live:].set(jax.random.normal(ks[3], (C - live, P)) * 1e3)
+    yg = y_prev_c.at[live:].set(jax.random.normal(ks[4], (C - live, P)) * 1e3)
+    y_b, yhat_b, h_b = chunk(xg, yg, h0)
+
+    assert np.array_equal(np.asarray(y_a[:live]), np.asarray(y_b[:live]))
+    assert np.array_equal(np.asarray(yhat_a[:live]), np.asarray(yhat_b[:live]))
+    assert np.array_equal(np.asarray(h_a[:live]), np.asarray(h_b[:live]))

@@ -218,11 +218,24 @@ pub struct ServeCfg {
     /// Directory session snapshots are written to / restored from
     /// (`--snapshot-dir`; None = snapshotting off).
     pub snapshot_dir: Option<PathBuf>,
+    /// Chunked prefill (`--prefill-chunk N`): feed up to N prompt tokens
+    /// of one session per tick through the `layer_prefill_chunk` entry
+    /// instead of one token through the decode batch. 0 = off
+    /// (token-at-a-time prefill, the pre-chunking behavior). The
+    /// effective chunk is `min(N, artifact width)` — streams are
+    /// bit-identical at every setting (DESIGN.md §Serving).
+    pub prefill_chunk: usize,
+    /// Session paging (`--page-dir DIR`): under memory pressure, page
+    /// the coldest idle session's state to a CRC-framed snapshot file in
+    /// DIR and admit the arrival, restoring transparently on next
+    /// scheduling. None = off (arrivals defer instead). Paged streams
+    /// are bit-identical to never-paged ones (DESIGN.md §Serving).
+    pub page_dir: Option<PathBuf>,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        Self { max_batch: 8, snapshot_dir: None }
+        Self { max_batch: 8, snapshot_dir: None, prefill_chunk: 0, page_dir: None }
     }
 }
 

@@ -71,6 +71,9 @@ commands:
   serve     --config <name> [--resume ckpt] [--max-batch B] [--executor sim|threaded]
             [--workers N] [--snapshot-dir d] [--sessions S] [--tokens N]
             [--prompt-len L] [--arrival-every K] [--temperature t] [--bench-json p]
+            [--prefill-chunk C] [--page-dir d] [--mock-backend]
+            [--loadgen] [--mix short-chat|long-doc|bursty|mixed] [--rate R]
+            [--sweep 0.5,1,2,4] [--slo-ttft s] [--slo-itl s]
   inspect   --config <name>
   bench     fig1 | table1 | fig6 | schedule | hotpath | serve | offload |
             vjp-count | max-context | tbar-sweep | chunk-size | topology
@@ -167,6 +170,18 @@ fn build_run_config(cli: &mut Cli) -> Result<RunConfig> {
         cli.usize_or("max-batch", 8, "serve: max sessions per batched decode step")?;
     let snap = cli.str_or("snapshot-dir", "", "serve: session snapshot directory ('' = off)");
     cfg.serve.snapshot_dir = (!snap.is_empty()).then(|| PathBuf::from(snap));
+    cfg.serve.prefill_chunk = cli.usize_or(
+        "prefill-chunk",
+        0,
+        "serve: prompt tokens per chunked-prefill call (0 = token-at-a-time; \
+         clamped to the artifact's compiled width)",
+    )?;
+    let page = cli.str_or(
+        "page-dir",
+        "",
+        "serve: page cold sessions to this directory under memory pressure ('' = defer instead)",
+    );
+    cfg.serve.page_dir = (!page.is_empty()).then(|| PathBuf::from(page));
     cfg.checkpoint_every = cli.usize_or(
         "checkpoint-every",
         0,
@@ -320,96 +335,254 @@ fn cmd_generate(cli: &mut Cli) -> Result<()> {
     Ok(())
 }
 
-/// Continuous-batching serving of a synthetic open-loop workload: S
-/// sessions with staggered arrivals, each `prompt-len` prompt tokens +
-/// `tokens` generated tokens, through the configured executor. Prints
-/// tokens/s and latency percentiles (p50/p95/p99); optionally records
-/// them as machine-readable JSON (EXPERIMENTS.md §Serve).
+/// Continuous-batching serving. Two workload drivers: a synthetic
+/// stagger (`--sessions`/`--arrival-every`) and the seeded open-loop
+/// load generator (`--loadgen`), which sweeps offered load across
+/// `--sweep` multipliers and emits the BENCH_serve.json capacity curve
+/// (EXPERIMENTS.md §Serve-Capacity). `--mock-backend` swaps in the
+/// host-only mock decode backend so the whole serving surface — paging,
+/// chunked prefill, the load generator — runs without artifacts or PJRT
+/// (the CI smoke path).
 fn cmd_serve(cli: &mut Cli) -> Result<()> {
+    use adjoint_sharding::config::{ModelDims, ServeCfg};
     use adjoint_sharding::memcost::ServeAdmission;
-    use adjoint_sharding::serve::{self, Request, ServeLoop};
+    use adjoint_sharding::serve::loadgen::{self, ArrivalMix, LoadGenCfg, Slo};
+    use adjoint_sharding::serve::{self, MockBackend, Request, ServeLoop};
+    use adjoint_sharding::util::bench::CapacityRow;
     use std::sync::Arc;
 
-    let cfg = build_run_config(cli)?;
-    let sessions = cli.usize_or("sessions", 8, "synthetic sessions to serve")?;
+    let mock = cli.bool_or(
+        "mock-backend",
+        false,
+        "serve through the host-only mock decode backend (no artifacts or PJRT needed)",
+    )?;
+    let sessions = cli.usize_or("sessions", 8, "sessions to serve (per sweep point)")?;
     let n_new = cli.usize_or("tokens", 32, "tokens to generate per session")?;
     let prompt_len = cli.usize_or("prompt-len", 4, "synthetic prompt length")?;
     let temperature = cli.f64_or("temperature", 0.8, "sampling temperature (0 = greedy)")? as f32;
     let arrival_every =
         cli.usize_or("arrival-every", 2, "one arrival becomes due every N loop steps")?;
-    let resume = cli.str_or("resume", "", "checkpoint to load ('' = fresh init)");
     let bench_json =
         cli.str_or("bench-json", "", "write BENCH_serve.json-style stats to this path ('' = none)");
+    let loadgen_on = cli.bool_or(
+        "loadgen",
+        false,
+        "drive the server with the seeded open-loop load generator (capacity sweep)",
+    )?;
+    let mix = ArrivalMix::parse(&cli.str_or(
+        "mix",
+        "mixed",
+        "loadgen arrival mix: short-chat|long-doc|bursty|mixed",
+    ))?;
+    let rate = cli.f64_or("rate", 25.0, "loadgen offered arrivals per 100 loop steps at 1x")?;
+    let sweep_s =
+        cli.str_or("sweep", "0.5,1,2", "loadgen offered-rate multipliers (comma-separated)");
+    let sweep: Vec<f64> = sweep_s
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--sweep: bad multiplier '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    if sweep.is_empty() {
+        bail!("--sweep needs at least one multiplier");
+    }
+    let slo = Slo {
+        ttft_s: cli.f64_or("slo-ttft", 1.0, "loadgen SLO: arrival → first token, seconds")?,
+        itl_s: cli.f64_or("slo-itl", 0.25, "loadgen SLO: worst inter-token gap, seconds")?,
+    };
     if prompt_len == 0 {
         bail!("serve needs --prompt-len ≥ 1 (sessions start from a prompt)");
     }
 
-    let params = if resume.is_empty() {
-        adjoint_sharding::model::ParamSet::init(&cfg.dims, cfg.seed)
+    // Resolve dims + a loop factory for the chosen backend. A factory,
+    // not a value: every loadgen sweep point measures a cold server.
+    let dims: ModelDims;
+    let serve_cfg: ServeCfg;
+    let seed: u64;
+    let trace_out: Option<PathBuf>;
+    let log_level: adjoint_sharding::obs::LogLevel;
+    let desc: String;
+    let mut make_loop: Box<dyn FnMut() -> Result<ServeLoop>>;
+    if mock {
+        seed = cli.usize_or("seed", 0, "rng seed")? as u64;
+        dims = ModelDims {
+            name: "mock".into(),
+            v: 64,
+            p: 16,
+            n: 16,
+            k: 2,
+            t: 32,
+            w: 32,
+            c: 16,
+            eps: 1e-6,
+        };
+        let page =
+            cli.str_or("page-dir", "", "page cold sessions to this directory ('' = defer)");
+        serve_cfg = ServeCfg {
+            max_batch: cli.usize_or("max-batch", 8, "max sessions per batched decode step")?,
+            snapshot_dir: None,
+            prefill_chunk: cli
+                .usize_or("prefill-chunk", 8, "prompt tokens per chunked-prefill call (0 = off)")?,
+            page_dir: (!page.is_empty()).then(|| PathBuf::from(page)),
+        };
+        let hbm_gb = cli.f64_or("hbm-gb", 0.0, "HBM cap in GiB (0 = uncapped for the mock)")?;
+        let hbm =
+            if hbm_gb > 0.0 { (hbm_gb * (1u64 << 30) as f64) as u64 } else { u64::MAX };
+        let trace = cli.str_or("trace", "", "write the run's Chrome trace here ('' = off)");
+        trace_out = (!trace.is_empty()).then(|| PathBuf::from(trace));
+        log_level = cli
+            .str_or("log-level", "info", "structured-log threshold: error|warn|info|debug")
+            .parse()?;
+        desc = format!(
+            "adjsh serve --mock-backend --sessions {sessions} --max-batch {} --prefill-chunk {}",
+            serve_cfg.max_batch, serve_cfg.prefill_chunk
+        );
+        let (d, sc) = (dims.clone(), serve_cfg.clone());
+        make_loop = Box::new(move || {
+            let backend = Box::new(MockBackend::new(&d, 8));
+            let admission = if sc.prefill_chunk > 0 {
+                ServeAdmission::with_prefill(&d, hbm, sc.prefill_chunk as u64)
+            } else {
+                ServeAdmission::new(&d, hbm)
+            };
+            ServeLoop::new(backend, &d, admission, &sc)
+        });
     } else {
-        let (p, step) = adjoint_sharding::model::ParamSet::load(std::path::Path::new(&resume))?;
-        println!("loaded checkpoint {resume} (step {step})");
-        p
-    };
-    let params = Arc::new(params);
-    let admission = ServeAdmission::new(&cfg.dims, cfg.topology.hbm_bytes);
-    let backend = serve::build_backend(
-        &cfg.exec,
-        &cfg.artifacts_dir,
-        &cfg.dims,
-        Arc::clone(&params),
-        cfg.serve.max_batch,
-    )?;
-    let mut sl = ServeLoop::new(backend, &cfg.dims, admission, &cfg.serve)?;
+        let cfg = build_run_config(cli)?;
+        let resume = cli.str_or("resume", "", "checkpoint to load ('' = fresh init)");
+        let params = if resume.is_empty() {
+            adjoint_sharding::model::ParamSet::init(&cfg.dims, cfg.seed)
+        } else {
+            let (p, step) =
+                adjoint_sharding::model::ParamSet::load(std::path::Path::new(&resume))?;
+            println!("loaded checkpoint {resume} (step {step})");
+            p
+        };
+        let params = Arc::new(params);
+        dims = cfg.dims.clone();
+        serve_cfg = cfg.serve.clone();
+        seed = cfg.seed;
+        trace_out = cfg.obs.trace.clone();
+        log_level = cfg.obs.log_level;
+        desc = format!(
+            "adjsh serve --config {} --sessions {sessions} --tokens {n_new} --max-batch {} \
+             --executor {} --prefill-chunk {}",
+            cfg.dims.name, cfg.serve.max_batch, cfg.exec.kind, cfg.serve.prefill_chunk
+        );
+        let (d, sc) = (dims.clone(), serve_cfg.clone());
+        let (exec, adir, hbm) = (cfg.exec, cfg.artifacts_dir.clone(), cfg.topology.hbm_bytes);
+        make_loop = Box::new(move || {
+            let backend = serve::build_backend(&exec, &adir, &d, Arc::clone(&params), sc.max_batch)?;
+            let admission = if sc.prefill_chunk > 0 {
+                ServeAdmission::with_prefill(&d, hbm, sc.prefill_chunk as u64)
+            } else {
+                ServeAdmission::new(&d, hbm)
+            };
+            ServeLoop::new(backend, &d, admission, &sc)
+        });
+    }
 
-    let mut wl_rng = adjoint_sharding::rng::Rng::new(cfg.seed ^ 0x5EED_F00D);
-    for i in 0..sessions {
-        let prompt = (0..prompt_len)
-            .map(|_| wl_rng.below(cfg.dims.v as u64) as i32)
-            .collect();
-        sl.submit(Request {
-            prompt,
-            n_new,
+    let mut capacity: Vec<CapacityRow> = Vec::new();
+    let last: ServeLoop;
+    if loadgen_on {
+        let lg = LoadGenCfg {
+            mix,
+            sessions,
+            per_100_steps: rate,
+            seed,
+            vocab: dims.v,
             temperature,
-            seed: cfg.seed.wrapping_add(i as u64 * 7919 + 1),
-            not_before_step: (i * arrival_every) as u64,
-        })?;
+            slo,
+        };
+        println!(
+            "loadgen: mix {}, {sessions} sessions/point, base rate {rate}/100 steps, sweep {sweep:?}",
+            mix.label()
+        );
+        let mut kept = None;
+        for &m in &sweep {
+            let label = format!("{}@{m}x", mix.label());
+            let mut sl = make_loop()?;
+            let row = loadgen::run_point(&mut sl, &lg, &label, rate * m)?;
+            println!(
+                "  {label}: attained {:.1} tok/s, p99 TTFT {:.2}ms, p99 ITL {:.2}ms, SLO {:.1}%",
+                row.attained_tok_s,
+                row.p99_ttft_s * 1e3,
+                row.p99_itl_s * 1e3,
+                row.slo_pct
+            );
+            capacity.push(row);
+            kept = Some(sl);
+        }
+        last = kept.expect("sweep is non-empty");
+    } else {
+        let mut sl = make_loop()?;
+        let mut wl_rng = adjoint_sharding::rng::Rng::new(seed ^ 0x5EED_F00D);
+        for i in 0..sessions {
+            let prompt =
+                (0..prompt_len).map(|_| wl_rng.below(dims.v as u64) as i32).collect();
+            sl.submit(Request {
+                prompt,
+                n_new,
+                temperature,
+                seed: seed.wrapping_add(i as u64 * 7919 + 1),
+                not_before_step: (i * arrival_every) as u64,
+            })?;
+        }
+        println!(
+            "serving '{}': {} sessions, max-batch {}, HBM cap admits {} sessions",
+            dims.name,
+            sessions,
+            serve_cfg.max_batch,
+            sl.admission().max_sessions()
+        );
+        sl.run_until_idle()?;
+        let finished = sl.take_finished();
+        if let Some(f) = finished.first() {
+            let shown = f.tokens.len().min(16);
+            println!("session {} stream (first {shown} tokens): {:?}", f.sid, &f.tokens[..shown]);
+        }
+        last = sl;
     }
-    println!(
-        "serving '{}': {} sessions, max-batch {}, executor {}, HBM cap admits {} sessions",
-        cfg.dims.name,
-        sessions,
-        cfg.serve.max_batch,
-        cfg.exec.kind,
-        sl.admission().max_sessions()
-    );
-    sl.run_until_idle()?;
-    let finished = sl.take_finished();
-    sl.metrics.print_report();
-    if let Some(f) = finished.first() {
-        let shown = f.tokens.len().min(16);
-        println!("session {} stream (first {shown} tokens): {:?}", f.sid, &f.tokens[..shown]);
+    last.metrics.print_report();
+    if !last.page_failures().is_empty() {
+        for (sid, err) in last.page_failures() {
+            eprintln!("page failure: session {sid} lost ({err})");
+        }
     }
-    if !sl.counters.is_empty() {
-        let logger = adjoint_sharding::obs::Logger::new(cfg.obs.log_level);
-        logger.info("metrics", &sl.counters.fields());
+    if !last.counters.is_empty() {
+        let logger = adjoint_sharding::obs::Logger::new(log_level);
+        logger.info("metrics", &last.counters.fields());
+    }
+    if let Some(tp) = &trace_out {
+        adjoint_sharding::obs::write_chrome_trace(tp, last.trace.events())?;
+        println!("wrote trace {}", tp.display());
     }
     if !bench_json.is_empty() {
         let path = std::path::PathBuf::from(&bench_json);
-        let desc = format!(
-            "adjsh serve --config {} --sessions {sessions} --tokens {n_new} --max-batch {} \
-             --executor {}",
-            cfg.dims.name, cfg.serve.max_batch, cfg.exec.kind
-        );
-        let prov = adjoint_sharding::util::bench::Provenance::collect(&desc, cfg.seed, "serve");
-        adjoint_sharding::util::bench::write_json(
-            &path,
-            "serve",
-            false,
-            &desc,
-            &prov,
-            &sl.metrics.to_bench_stats(),
-        )?;
+        let host_note = if mock { "serve (mock backend)" } else { "serve" };
+        let prov = adjoint_sharding::util::bench::Provenance::collect(&desc, seed, host_note);
+        if capacity.is_empty() {
+            adjoint_sharding::util::bench::write_json(
+                &path,
+                "serve",
+                false,
+                &desc,
+                &prov,
+                &last.metrics.to_bench_stats(),
+            )?;
+        } else {
+            adjoint_sharding::util::bench::write_json_capacity(
+                &path,
+                "serve",
+                false,
+                &desc,
+                &prov,
+                &last.metrics.to_bench_stats(),
+                &capacity,
+            )?;
+        }
         println!("wrote {}", path.display());
     }
     Ok(())

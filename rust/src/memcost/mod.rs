@@ -387,6 +387,14 @@ pub fn serve_step_bytes_per_session(d: &ModelDims) -> u64 {
     2 * (2 * d.p as u64 + d.n as u64) * F32
 }
 
+/// Transient bytes of one in-flight `layer_prefill_chunk` call at chunk
+/// width `pf`: the (pf, P) x̂/y input stacks and (pf, P)×2 + (pf, N)
+/// output stacks, plus the (N,) carry. Charged once (at most one prefill
+/// chunk is in flight per tick), not per session.
+pub fn serve_prefill_transient_bytes(d: &ModelDims, pf: u64) -> u64 {
+    (pf * (4 * d.p as u64 + d.n as u64) + d.n as u64) * F32
+}
+
 /// Memory-aware admission for the serving loop — the inference
 /// counterpart of the backward scheduler's HBM-headroom gate (§4): a
 /// session is admitted only while the modeled resident set (model +
@@ -397,6 +405,9 @@ pub struct ServeAdmission {
     pub model_bytes: u64,
     pub session_bytes: u64,
     pub step_bytes_per_session: u64,
+    /// Transient bytes of the (at most one) in-flight prefill chunk —
+    /// [`serve_prefill_transient_bytes`]; 0 with chunked prefill off.
+    pub prefill_bytes: u64,
 }
 
 impl ServeAdmission {
@@ -406,13 +417,23 @@ impl ServeAdmission {
             model_bytes: serve_model_bytes(d),
             session_bytes: serve_session_bytes(d),
             step_bytes_per_session: serve_step_bytes_per_session(d),
+            prefill_bytes: 0,
         }
     }
 
+    /// The same admission with the one-in-flight prefill chunk's
+    /// transients charged (chunked prefill on at width `pf`).
+    pub fn with_prefill(d: &ModelDims, hbm_bytes: u64, pf: u64) -> Self {
+        Self { prefill_bytes: serve_prefill_transient_bytes(d, pf), ..Self::new(d, hbm_bytes) }
+    }
+
     /// Modeled bytes with `active` sessions admitted, worst case (every
-    /// active session participates in the in-flight batch).
+    /// active session participates in the in-flight batch, plus the one
+    /// prefill chunk when chunked prefill is on).
     pub fn bytes_at(&self, active: u64) -> u64 {
-        self.model_bytes + active * (self.session_bytes + self.step_bytes_per_session)
+        self.model_bytes
+            + self.prefill_bytes
+            + active * (self.session_bytes + self.step_bytes_per_session)
     }
 
     /// Can one more session be admitted without exceeding the cap?
@@ -421,13 +442,13 @@ impl ServeAdmission {
     }
 
     /// Largest concurrent-session count under the cap (0 when the model
-    /// alone does not fit).
+    /// alone — plus the prefill transient, when on — does not fit).
     pub fn max_sessions(&self) -> u64 {
-        if self.model_bytes >= self.hbm_bytes {
+        let fixed = self.model_bytes + self.prefill_bytes;
+        if fixed >= self.hbm_bytes {
             return 0;
         }
-        (self.hbm_bytes - self.model_bytes)
-            / (self.session_bytes + self.step_bytes_per_session)
+        (self.hbm_bytes - fixed) / (self.session_bytes + self.step_bytes_per_session)
     }
 }
 

@@ -27,8 +27,9 @@ pub const COORD_LANE: usize = usize::MAX;
 /// `key` value meaning "no layer / session attached".
 pub const NO_KEY: usize = usize::MAX;
 
-/// What happened. The first seven kinds are *spans* (they have a
-/// duration); the rest are *instants* (a decision or a warning at a
+/// What happened. The first seven kinds plus the serve paging pair
+/// ([`TraceKind::PageOut`]/[`TraceKind::PageIn`]) are *spans* (they have
+/// a duration); the rest are *instants* (a decision or a warning at a
 /// point in time).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum TraceKind {
@@ -62,10 +63,16 @@ pub enum TraceKind {
     ServeAdmit,
     /// The serving loop evicted/retired a session from the batch.
     ServeEvict,
+    /// The serving loop paged a cold session's state to disk to admit
+    /// an arrival under memory pressure (`key` = session id).
+    PageOut,
+    /// The serving loop restored a paged session's state from disk
+    /// (`key` = session id).
+    PageIn,
 }
 
 impl TraceKind {
-    pub const ALL: [TraceKind; 15] = [
+    pub const ALL: [TraceKind; 17] = [
         TraceKind::Gather,
         TraceKind::Launch,
         TraceKind::Wait,
@@ -81,6 +88,8 @@ impl TraceKind {
         TraceKind::LaneRetire,
         TraceKind::ServeAdmit,
         TraceKind::ServeEvict,
+        TraceKind::PageOut,
+        TraceKind::PageIn,
     ];
 
     /// Stable single-byte wire code.
@@ -101,6 +110,8 @@ impl TraceKind {
             TraceKind::LaneRetire => 12,
             TraceKind::ServeAdmit => 13,
             TraceKind::ServeEvict => 14,
+            TraceKind::PageOut => 15,
+            TraceKind::PageIn => 16,
         }
     }
 
@@ -129,6 +140,8 @@ impl TraceKind {
             TraceKind::LaneRetire => "lane_retire",
             TraceKind::ServeAdmit => "serve_admit",
             TraceKind::ServeEvict => "serve_evict",
+            TraceKind::PageOut => "page_out",
+            TraceKind::PageIn => "page_in",
         }
     }
 
@@ -142,6 +155,7 @@ impl TraceKind {
     /// Spans have a duration; instants are points.
     pub fn is_span(self) -> bool {
         self.code() <= TraceKind::Checkpoint.code()
+            || matches!(self, TraceKind::PageOut | TraceKind::PageIn)
     }
 }
 
@@ -372,10 +386,13 @@ mod tests {
         }
         assert!(TraceKind::from_code(200).is_err());
         assert!(TraceKind::from_label("explode").is_err());
-        // Span/instant split is exactly the first seven codes.
+        // Span/instant split: the first seven codes plus the serve
+        // paging pair (disk I/O has a duration worth plotting).
         let spans: Vec<_> = TraceKind::ALL.into_iter().filter(|k| k.is_span()).collect();
-        assert_eq!(spans.len(), 7);
+        assert_eq!(spans.len(), 9);
         assert!(spans.contains(&TraceKind::Checkpoint));
+        assert!(spans.contains(&TraceKind::PageOut));
+        assert!(spans.contains(&TraceKind::PageIn));
         assert!(!TraceKind::ServeAdmit.is_span());
     }
 

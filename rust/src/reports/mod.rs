@@ -434,7 +434,11 @@ pub fn hotpath_profile(cli: &mut Cli) -> Result<()> {
 }
 
 /// Render a recorded serving profile (`BENCH_serve.json`; EXPERIMENTS.md
-/// §Serve). Placeholder files are refused, same as hotpath.
+/// §Serve, §Serve-Capacity). Placeholder files are refused, same as
+/// hotpath. Schema-3 recordings (written by `adjsh serve --loadgen`)
+/// additionally carry a `"capacity"` array — offered load vs attained
+/// throughput, tail latency, and SLO attainment — rendered as the
+/// capacity curve; schema-2 recordings render latency rows only.
 pub fn serve_profile(cli: &mut Cli) -> Result<()> {
     let path = PathBuf::from(cli.str_or(
         "bench-json",
@@ -448,6 +452,44 @@ pub fn serve_profile(cli: &mut Cli) -> Result<()> {
         "adjsh serve --bench-json BENCH_serve.json",
         opt_path(&compare),
     )?;
+    // The capacity curve (schema 3). Parsed from the already-validated
+    // file: render_bench_json has rejected placeholders by now.
+    let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+    if let Some(cap) = j.opt("capacity") {
+        let rows = cap.as_arr()?;
+        if rows.is_empty() {
+            bail!(
+                "{}: schema-3 capacity array is empty; rerun `adjsh serve --loadgen`",
+                path.display()
+            );
+        }
+        println!("\n== serve capacity curve (offered load vs delivered) ==\n");
+        let mut t = Table::new(&[
+            "point",
+            "offered/100 steps",
+            "attained tok/s",
+            "p99 TTFT",
+            "p99 ITL",
+            "SLO %",
+            "sessions",
+        ]);
+        for r in rows {
+            t.row(&[
+                r.get("label")?.as_str()?.to_string(),
+                format!("{:.2}", r.get("offered_per_100")?.as_f64()?),
+                format!("{:.1}", r.get("attained_tok_s")?.as_f64()?),
+                crate::util::bench::fmt_dur(r.get("p99_ttft_ns")?.as_f64()? * 1e-9),
+                crate::util::bench::fmt_dur(r.get("p99_itl_ns")?.as_f64()? * 1e-9),
+                format!("{:.1}", r.get("slo_pct")?.as_f64()?),
+                r.get("sessions")?.as_usize()?.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "\ncapacity = the highest offered rate whose SLO column holds; past the knee,\n\
+             attained throughput flattens while p99 TTFT grows with the queue."
+        );
+    }
     Ok(())
 }
 

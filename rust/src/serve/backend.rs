@@ -73,6 +73,21 @@ pub trait StepBackend {
     /// ascending by sid; returns (sid, logits) in the same order, plus
     /// the step's measured cost.
     fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)>;
+
+    /// Static token width of the chunked-prefill ABI (`None` = the
+    /// artifact set has no `layer_prefill_chunk` entry; [`Self::prefill`]
+    /// is unsupported).
+    fn prefill_width(&mut self) -> Result<Option<usize>> {
+        Ok(None)
+    }
+
+    /// Advance one session's recurrent state over `tokens` (a prompt
+    /// chunk, `1 ≤ len ≤ prefill_width`) in one per-layer chunk call;
+    /// returns the logits row after the *last* fed token, bit-identical
+    /// to feeding the same tokens through [`Self::step`] one at a time.
+    fn prefill(&mut self, _sid: u64, _tokens: &[i32]) -> Result<(Tensor, StepCost)> {
+        bail!("this backend has no chunked-prefill support")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -93,6 +108,19 @@ struct BatchedEntry {
     outs: Vec<Tensor>,
 }
 
+/// Staged state of the chunked-prefill entry: the compiled executable,
+/// its static token width, the once-staged parameter constants (cache
+/// hits on the same `ConstKey`s as [`BatchedEntry`]'s — no double
+/// staging), and the reusable row-stack buffers + output tensors.
+struct PrefillEntry {
+    entry: Arc<Compiled>,
+    width: usize,
+    consts: Vec<Vec<Arc<StagedConst>>>,
+    xhat: Vec<f32>, // (PF, P) stacked x̂ rows
+    y: Vec<f32>,    // (PF, P) stacked residual-stream rows
+    outs: Vec<Tensor>,
+}
+
 /// Per-lane store of live sessions' recurrent [`DecodeState`]s, keyed by
 /// session id (DESIGN.md §Serving: the backend half of a session; the
 /// stream half lives with the coordinator).
@@ -106,6 +134,7 @@ pub struct Stepper {
     params: Arc<ParamSet>,
     arts: ArtifactSet,
     batched: Option<BatchedEntry>,
+    prefill: Option<PrefillEntry>,
     sessions: SessionStore,
 }
 
@@ -150,12 +179,116 @@ impl Stepper {
             // compile per lane.
             arts.entry("layer_step")?;
         }
-        Ok(Self { dims: dims.clone(), params, arts, batched, sessions: SessionStore::new() })
+        let prefill = match arts.manifest.entries.get("layer_prefill_chunk") {
+            None => None,
+            Some(spec) => {
+                let spec = spec.clone();
+                // Inputs: 7 per-layer params, then xhat_c (PF, P),
+                // y_prev_c (PF, P), h0 (N,) — the chunk width is the
+                // first dim of the third-from-last input.
+                let pf = spec
+                    .inputs
+                    .len()
+                    .checked_sub(3)
+                    .and_then(|i| spec.inputs.get(i))
+                    .and_then(|s| s.shape.first().copied())
+                    .unwrap_or(0);
+                if pf == 0 {
+                    bail!("layer_prefill_chunk manifest entry has no chunk dimension");
+                }
+                let entry = arts.entry("layer_prefill_chunk")?;
+                let consts = stage_layer_consts(&arts, &params)?;
+                let outs = spec
+                    .outputs
+                    .iter()
+                    .map(|s| Tensor::zeros(&s.shape))
+                    .collect();
+                Some(PrefillEntry {
+                    entry,
+                    width: pf,
+                    consts,
+                    xhat: vec![0.0; pf * dims.p],
+                    y: vec![0.0; pf * dims.p],
+                    outs,
+                })
+            }
+        };
+        Ok(Self { dims: dims.clone(), params, arts, batched, prefill, sessions: SessionStore::new() })
     }
 
     /// Static batch width of the batched ABI (None = per-session fallback).
     pub(crate) fn batch_width(&self) -> Option<usize> {
         self.batched.as_ref().map(|b| b.batch)
+    }
+
+    /// Static token width of the chunked-prefill ABI (None = entry absent).
+    pub(crate) fn prefill_width(&self) -> Option<usize> {
+        self.prefill.as_ref().map(|p| p.width)
+    }
+
+    /// One session's prompt chunk through every layer, one PJRT call per
+    /// layer. The lowered entry is a `lax.scan` whose body is exactly
+    /// `layer_step`, and the host-side embed/RMSNorm/head math here is
+    /// the shared-row code path of [`Self::step_batched`] — so each fed
+    /// token's float sequence is bitwise the token-at-a-time one. Ragged
+    /// chunks (`len < width`) ride the scan's causality: the zero
+    /// padding rows sit *after* the real rows and can never reach them;
+    /// the state and logits are read at row `len-1`.
+    fn prefill(&mut self, sid: u64, tokens: &[i32]) -> Result<(Tensor, StepCost)> {
+        let pe = self
+            .prefill
+            .as_mut()
+            .context("artifact set has no layer_prefill_chunk entry")?;
+        let (p, n, pf) = (self.dims.p, self.dims.n, pe.width);
+        let len = tokens.len();
+        if len == 0 || len > pf {
+            bail!("prefill chunk must have 1..={pf} tokens, got {len}");
+        }
+        if !self.sessions.contains_key(&sid) {
+            bail!("prefilling unknown session {sid}");
+        }
+        // Stack the embedded prompt rows; padding rows stay zero.
+        pe.y.fill(0.0);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let t = tok as usize;
+            if tok < 0 || t >= self.dims.v {
+                bail!("session {sid}: token id {tok} out of vocab {}", self.dims.v);
+            }
+            pe.y[i * p..(i + 1) * p]
+                .copy_from_slice(&self.params.embed.data()[t * p..(t + 1) * p]);
+        }
+        // x̂ rows: the shared per-row RMSNorm — bitwise `rmsnorm` on each
+        // embedded row (zero padding rows normalize to zero).
+        pe.xhat.copy_from_slice(&pe.y);
+        rmsnorm_rows(&mut pe.xhat, p, self.dims.eps);
+        let mut cost = StepCost::default();
+        for k in 0..self.dims.k {
+            let st = self.sessions.get(&sid).expect("checked above");
+            let mut args: Vec<ArgRef> =
+                pe.consts[k].iter().map(|c| ArgRef::C(c.as_ref())).collect();
+            args.push(ArgRef::F(TensorView::new(&[pf, p], &pe.xhat)?));
+            args.push(ArgRef::F(TensorView::new(&[pf, p], &pe.y)?));
+            args.push(ArgRef::F(st.h[k].view()?));
+            let secs = pe.entry.run_timed_into(&args, &mut pe.outs)?;
+            drop(args);
+            cost.pjrt_s += secs;
+            cost.calls += 1;
+            // Next layer consumes this layer's full per-row output
+            // stacks; the carried state advances to row len-1 (the last
+            // real token's h — rows past it are padding garbage).
+            pe.y.copy_from_slice(pe.outs[0].data());
+            pe.xhat.copy_from_slice(pe.outs[1].data());
+            let h_rows = pe.outs[2].data();
+            let st = self.sessions.get_mut(&sid).expect("checked above");
+            st.h[k]
+                .data_mut()
+                .copy_from_slice(&h_rows[(len - 1) * n..len * n]);
+        }
+        // Head on the host at row len-1 — the same ops as step_token:
+        // logits = y_K Ω (1×P · P×V).
+        let y_row = Tensor::new(vec![1, p], pe.y[(len - 1) * p..len * p].to_vec())?;
+        let logits = y_row.matmul(&self.params.omega)?.reshape(&[self.dims.v])?;
+        Ok((logits, cost))
     }
 
     fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()> {
@@ -324,6 +457,14 @@ impl StepBackend for SimBackend {
     fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
         self.stepper.step(inputs)
     }
+
+    fn prefill_width(&mut self) -> Result<Option<usize>> {
+        Ok(self.stepper.prefill_width())
+    }
+
+    fn prefill(&mut self, sid: u64, tokens: &[i32]) -> Result<(Tensor, StepCost)> {
+        self.stepper.prefill(sid, tokens)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -337,6 +478,12 @@ enum LaneCmd {
     Step {
         inputs: Vec<(u64, i32)>,
         reply: mpsc::Sender<Result<(Vec<(u64, Tensor)>, StepCost)>>,
+    },
+    PrefillWidth { reply: mpsc::Sender<Result<Option<usize>>> },
+    Prefill {
+        sid: u64,
+        tokens: Vec<i32>,
+        reply: mpsc::Sender<Result<(Tensor, StepCost)>>,
     },
     Shutdown,
 }
@@ -389,6 +536,16 @@ fn lane_main(
                     .and_then(|s| s.step(&inputs));
                 let _ = reply.send(r);
             }
+            LaneCmd::PrefillWidth { reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .map(|s| s.prefill_width());
+                let _ = reply.send(r);
+            }
+            LaneCmd::Prefill { sid, tokens, reply } => {
+                let r = ensure(&mut stepper, &dir, &dims, &params)
+                    .and_then(|s| s.prefill(sid, &tokens));
+                let _ = reply.send(r);
+            }
             LaneCmd::Shutdown => break,
         }
     }
@@ -402,6 +559,9 @@ fn lane_main(
 /// [`SimBackend`]'s.
 pub struct ThreadedBackend {
     lanes: Vec<LaneHandle>,
+    /// Cached chunked-prefill width (all lanes open the same artifact
+    /// set, so any lane's answer holds for every lane).
+    prefill_width: Option<Option<usize>>,
 }
 
 impl ThreadedBackend {
@@ -421,7 +581,7 @@ impl ThreadedBackend {
                 .context("spawning serve lane")?;
             handles.push(LaneHandle { tx, join: Some(join) });
         }
-        Ok(Self { lanes: handles })
+        Ok(Self { lanes: handles, prefill_width: None })
     }
 
     pub fn lanes(&self) -> usize {
@@ -511,5 +671,20 @@ impl StepBackend for ThreadedBackend {
         }
         out.sort_by_key(|&(sid, _)| sid);
         Ok((out, cost))
+    }
+
+    fn prefill_width(&mut self) -> Result<Option<usize>> {
+        if let Some(w) = self.prefill_width {
+            return Ok(w);
+        }
+        let w = self.roundtrip(0, |reply| LaneCmd::PrefillWidth { reply })?;
+        self.prefill_width = Some(w);
+        Ok(w)
+    }
+
+    fn prefill(&mut self, sid: u64, tokens: &[i32]) -> Result<(Tensor, StepCost)> {
+        let lane = self.lane_of(sid);
+        let tokens = tokens.to_vec();
+        self.roundtrip(lane, move |reply| LaneCmd::Prefill { sid, tokens, reply })
     }
 }

@@ -1,0 +1,309 @@
+//! Seeded open-loop load generator (`adjsh serve --loadgen`,
+//! EXPERIMENTS.md §Serve-Capacity).
+//!
+//! Open-loop means arrivals do not wait for the server: every request's
+//! arrival step is drawn up front from the offered rate, so when the
+//! loop falls behind, the queue grows and TTFT degrades — exactly the
+//! failure mode a closed-loop driver (one request in flight per user)
+//! structurally hides. The generator is a pure function of
+//! [`LoadGenCfg`]: the same seed produces the same requests — prompts,
+//! lengths, sampler seeds, arrival steps — on every host, via dedicated
+//! [`Rng::split`] substreams per concern (arrival clock, session shape,
+//! prompt content, sampler seeds) so adding sessions never perturbs the
+//! arrival process.
+//!
+//! [`capacity_sweep`] replays the same mix at increasing rate
+//! multipliers against a fresh [`ServeLoop`] per point and reports one
+//! [`CapacityRow`] each — offered load vs attained throughput, tail
+//! latency, and SLO attainment. The knee of that curve is the serving
+//! capacity claim `adjsh bench serve` renders.
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+use crate::serve::{Request, ServeLoop};
+use crate::util::bench::CapacityRow;
+
+/// Workload shapes, chosen to stress different scheduler paths:
+/// short-chat is admission/decode-bound, long-doc is prefill-bound (the
+/// chunked-prefill case), bursty hammers the paging/deferral path with
+/// arrival clumps, and mixed interleaves chat with documents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalMix {
+    ShortChat,
+    LongDoc,
+    Bursty,
+    Mixed,
+}
+
+impl ArrivalMix {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "short-chat" => Self::ShortChat,
+            "long-doc" => Self::LongDoc,
+            "bursty" => Self::Bursty,
+            "mixed" => Self::Mixed,
+            other => bail!("unknown arrival mix '{other}' (short-chat|long-doc|bursty|mixed)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::ShortChat => "short-chat",
+            Self::LongDoc => "long-doc",
+            Self::Bursty => "bursty",
+            Self::Mixed => "mixed",
+        }
+    }
+}
+
+/// Per-session latency SLO: a completed session attains the SLO when its
+/// arrival-to-first-token time AND its worst inter-token gap are both
+/// under bound. The bounds are wall-clock, so attainment is a
+/// measurement, not a deterministic quantity.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub ttft_s: f64,
+    pub itl_s: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        // Interactive-serving defaults: first token within a second,
+        // no visible mid-stream stall.
+        Self { ttft_s: 1.0, itl_s: 0.25 }
+    }
+}
+
+/// Everything the generator needs to be reproducible.
+#[derive(Debug, Clone)]
+pub struct LoadGenCfg {
+    pub mix: ArrivalMix,
+    /// Total sessions to offer.
+    pub sessions: usize,
+    /// Offered arrival rate at 1×: mean sessions per 100 loop steps.
+    pub per_100_steps: f64,
+    pub seed: u64,
+    /// Vocabulary to draw prompt tokens from (the model's V).
+    pub vocab: usize,
+    pub temperature: f32,
+    pub slo: Slo,
+}
+
+/// A session shape drawn from the mix (split out so tests can assert the
+/// ranges without running a server).
+fn draw_shape(mix: ArrivalMix, shape_rng: &mut Rng) -> (usize, usize) {
+    match mix {
+        ArrivalMix::ShortChat => {
+            (2 + shape_rng.below(7) as usize, 8 + shape_rng.below(17) as usize)
+        }
+        ArrivalMix::LongDoc => {
+            (64 + shape_rng.below(193) as usize, 4 + shape_rng.below(13) as usize)
+        }
+        // Bursts are short-chat shaped; the burstiness is in the clock.
+        ArrivalMix::Bursty => {
+            (2 + shape_rng.below(7) as usize, 8 + shape_rng.below(17) as usize)
+        }
+        // 3:1 chat:document — the realistic serving blend.
+        ArrivalMix::Mixed => {
+            if shape_rng.below(4) < 3 {
+                draw_shape(ArrivalMix::ShortChat, shape_rng)
+            } else {
+                draw_shape(ArrivalMix::LongDoc, shape_rng)
+            }
+        }
+    }
+}
+
+/// Generate the full request list for one run: arrival steps are an
+/// exponential (Poisson) clock at the offered rate — clumped into
+/// geometric bursts for [`ArrivalMix::Bursty`] — and every request
+/// carries its own sampler seed so streams stay independent of arrival
+/// order.
+pub fn gen_requests(cfg: &LoadGenCfg) -> Result<Vec<Request>> {
+    if cfg.sessions == 0 {
+        bail!("load generator needs at least one session");
+    }
+    if cfg.per_100_steps <= 0.0 {
+        bail!("offered rate must be positive (got {} per 100 steps)", cfg.per_100_steps);
+    }
+    if cfg.vocab == 0 {
+        bail!("load generator needs a non-empty vocabulary");
+    }
+    let mut root = Rng::new(cfg.seed);
+    let mut clock_rng = root.split(1);
+    let mut shape_rng = root.split(2);
+    let mut prompt_rng = root.split(3);
+    let mut seed_rng = root.split(4);
+
+    let mean_gap = 100.0 / cfg.per_100_steps;
+    let mut reqs = Vec::with_capacity(cfg.sessions);
+    let mut step = 0u64;
+    let mut burst_left = 0u64;
+    while reqs.len() < cfg.sessions {
+        if burst_left == 0 {
+            // Exponential inter-arrival via inverse CDF; bursty mixes
+            // draw a clump size and stretch the gap to keep the offered
+            // rate equal across mixes.
+            let u = clock_rng.uniform();
+            let burst = if cfg.mix == ArrivalMix::Bursty { 2 + clock_rng.below(4) } else { 1 };
+            let gap = -(mean_gap * burst as f64) * (1.0 - u).ln();
+            step += gap.ceil() as u64;
+            burst_left = burst;
+        }
+        burst_left -= 1;
+        let (prompt_len, n_new) = draw_shape(cfg.mix, &mut shape_rng);
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|_| prompt_rng.below(cfg.vocab as u64) as i32).collect();
+        reqs.push(Request {
+            prompt,
+            n_new,
+            temperature: cfg.temperature,
+            seed: seed_rng.below(u64::MAX),
+            not_before_step: step,
+        });
+    }
+    Ok(reqs)
+}
+
+/// Offer one generated workload to a fresh loop, run it dry, and
+/// summarize the point. `offered` is the rate actually used (after any
+/// sweep multiplier), recorded in the row for the curve's x-axis.
+pub fn run_point(
+    serve_loop: &mut ServeLoop,
+    cfg: &LoadGenCfg,
+    label: &str,
+    offered_per_100: f64,
+) -> Result<CapacityRow> {
+    let mut point_cfg = cfg.clone();
+    point_cfg.per_100_steps = offered_per_100;
+    for req in gen_requests(&point_cfg)? {
+        serve_loop.submit(req)?;
+    }
+    serve_loop.run_until_idle()?;
+    let finished = serve_loop.take_finished();
+    if finished.len() != cfg.sessions {
+        bail!(
+            "load point '{label}': {} of {} sessions completed (page failures: {})",
+            finished.len(),
+            cfg.sessions,
+            serve_loop.page_failures().len()
+        );
+    }
+    let mut ttft = crate::metrics::Quantiles::default();
+    let mut itl = crate::metrics::Quantiles::default();
+    let mut attained = 0usize;
+    for f in &finished {
+        let t = f.ttft_s.unwrap_or(0.0);
+        ttft.push(t);
+        itl.push(f.itl_max_s);
+        if t <= cfg.slo.ttft_s && f.itl_max_s <= cfg.slo.itl_s {
+            attained += 1;
+        }
+    }
+    Ok(CapacityRow {
+        label: label.to_string(),
+        offered_per_100,
+        attained_tok_s: serve_loop.metrics.tokens_per_s(),
+        p99_ttft_s: ttft.sorted().p99(),
+        p99_itl_s: itl.sorted().p99(),
+        slo_pct: 100.0 * attained as f64 / finished.len() as f64,
+        sessions: finished.len(),
+    })
+}
+
+/// Sweep offered load across `multipliers` of the base rate. Each point
+/// gets a fresh [`ServeLoop`] from `make_loop` (capacity is a property
+/// of a cold server at a given rate, not of whatever the previous point
+/// left behind).
+pub fn capacity_sweep(
+    cfg: &LoadGenCfg,
+    multipliers: &[f64],
+    mut make_loop: impl FnMut() -> Result<ServeLoop>,
+) -> Result<Vec<CapacityRow>> {
+    let mut rows = Vec::with_capacity(multipliers.len());
+    for &m in multipliers {
+        let label = format!("{}@{m}x", cfg.mix.label());
+        let mut serve_loop = make_loop()?;
+        rows.push(run_point(&mut serve_loop, cfg, &label, cfg.per_100_steps * m)?);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDims, ServeCfg};
+    use crate::memcost::ServeAdmission;
+    use crate::serve::{MockBackend, ServeLoop};
+
+    fn cfg(mix: ArrivalMix) -> LoadGenCfg {
+        LoadGenCfg {
+            mix,
+            sessions: 24,
+            per_100_steps: 50.0,
+            seed: 7,
+            vocab: 32,
+            temperature: 0.0,
+            slo: Slo::default(),
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_open_loop() {
+        let a = gen_requests(&cfg(ArrivalMix::Mixed)).unwrap();
+        let b = gen_requests(&cfg(ArrivalMix::Mixed)).unwrap();
+        assert_eq!(a.len(), 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.n_new, y.n_new);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.not_before_step, y.not_before_step);
+        }
+        // Arrival steps are non-decreasing (an arrival clock, not jitter)
+        // and strictly positive rate ⇒ finite horizon.
+        assert!(a.windows(2).all(|w| w[0].not_before_step <= w[1].not_before_step));
+    }
+
+    #[test]
+    fn mixes_draw_their_documented_shapes() {
+        for r in gen_requests(&cfg(ArrivalMix::ShortChat)).unwrap() {
+            assert!((2..=8).contains(&r.prompt.len()));
+            assert!((8..=24).contains(&r.n_new));
+        }
+        for r in gen_requests(&cfg(ArrivalMix::LongDoc)).unwrap() {
+            assert!((64..=256).contains(&r.prompt.len()));
+            assert!((4..=16).contains(&r.n_new));
+        }
+        let mixed = gen_requests(&cfg(ArrivalMix::Mixed)).unwrap();
+        assert!(mixed.iter().any(|r| r.prompt.len() <= 8));
+        assert!(mixed.iter().any(|r| r.prompt.len() >= 64));
+        // Bursty clumps arrivals: some consecutive pair shares a step.
+        let bursty = gen_requests(&cfg(ArrivalMix::Bursty)).unwrap();
+        assert!(bursty.windows(2).any(|w| w[0].not_before_step == w[1].not_before_step));
+        for r in &bursty {
+            assert!(r.prompt.iter().all(|&t| (0..32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn sweep_runs_against_the_mock_backend() {
+        let dims =
+            ModelDims { name: "mock".into(), v: 32, p: 8, n: 8, k: 2, t: 16, w: 16, c: 8, eps: 1e-6 };
+        let mut c = cfg(ArrivalMix::ShortChat);
+        c.sessions = 6;
+        let rows = capacity_sweep(&c, &[1.0, 2.0], || {
+            let backend = Box::new(MockBackend::new(&dims, 4));
+            let admission = ServeAdmission::new(&dims, u64::MAX);
+            let serve_cfg = ServeCfg { max_batch: 4, prefill_chunk: 4, ..ServeCfg::default() };
+            ServeLoop::new(backend, &dims, admission, &serve_cfg)
+        })
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].sessions, 6);
+        assert!(rows[0].label.starts_with("short-chat@1"));
+        assert!(rows[1].offered_per_100 > rows[0].offered_per_100);
+        assert!(rows[0].attained_tok_s >= 0.0);
+        assert!((0.0..=100.0).contains(&rows[0].slo_pct));
+    }
+}

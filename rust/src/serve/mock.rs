@@ -1,0 +1,192 @@
+//! Host-only mock decode backend (`adjsh serve --mock-backend`).
+//!
+//! A [`StepBackend`] with no PJRT dependency: sessions advance through a
+//! cheap deterministic recurrence on the host, so the full serving
+//! surface — continuous batching, admission, paging, chunked prefill,
+//! the load generator, metrics, traces — runs on machines without
+//! `make artifacts` (the CI loadgen smoke, scheduler-logic tests). The
+//! recurrence is a pure function of (state, token): streams are
+//! reproducible across runs, across page-out/page-in roundtrips, and
+//! across chunked vs token-at-a-time prefill (the chunk path literally
+//! loops the single-token update, so bit identity is by construction —
+//! which is exactly what makes the mock useful for testing the
+//! *scheduler's* stream invariants in isolation from XLA).
+//!
+//! The model math is NOT the paper's SSM — logits are synthetic. Only
+//! the serving-loop contracts are real here.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelDims;
+use crate::exec::ExecutorKind;
+use crate::serve::backend::{StepBackend, StepCost};
+use crate::tensor::Tensor;
+
+/// Deterministic host-only decode backend. State layout matches the real
+/// backends (K rows of N f32 per session), so [`super::SessionSnapshot`]
+/// paging works unchanged.
+pub struct MockBackend {
+    dims: ModelDims,
+    prefill_width: usize,
+    sessions: BTreeMap<u64, Vec<Tensor>>,
+}
+
+impl MockBackend {
+    /// `prefill_width` = 0 disables the chunked-prefill ABI (models a
+    /// pre-chunking artifact set).
+    pub fn new(dims: &ModelDims, prefill_width: usize) -> Self {
+        Self { dims: dims.clone(), prefill_width, sessions: BTreeMap::new() }
+    }
+
+    /// One token through the mock recurrence: a decaying per-layer state
+    /// update folded from the token id, then synthetic logits from the
+    /// last layer's state. Pure in (state, token).
+    fn step_one(&mut self, sid: u64, tok: i32) -> Result<Tensor> {
+        let (n, v, k) = (self.dims.n, self.dims.v, self.dims.k);
+        if tok < 0 || tok as usize >= v {
+            bail!("session {sid}: token id {tok} out of vocab {v}");
+        }
+        let h = self
+            .sessions
+            .get_mut(&sid)
+            .with_context(|| format!("stepping unknown session {sid}"))?;
+        for (layer, row) in h.iter_mut().enumerate() {
+            let data = row.data_mut();
+            for (i, x) in data.iter_mut().enumerate() {
+                let inject =
+                    ((tok as f32) + 1.0) * 0.001 * ((i + 1) as f32 + (layer as f32) * 0.1);
+                *x = *x * 0.5 + inject;
+            }
+        }
+        let last = h[k - 1].data();
+        let logits: Vec<f32> = (0..v)
+            .map(|j| {
+                let s = last[j % n];
+                (s * 7.3 + (j as f32) * 0.01).sin() * 2.0
+            })
+            .collect();
+        Tensor::new(vec![v], logits)
+    }
+}
+
+impl StepBackend for MockBackend {
+    fn kind(&self) -> ExecutorKind {
+        ExecutorKind::Sim
+    }
+
+    fn admit(&mut self, sid: u64, h: Vec<Tensor>) -> Result<()> {
+        if self.sessions.contains_key(&sid) {
+            bail!("session {sid} already admitted");
+        }
+        if h.len() != self.dims.k {
+            bail!("state has {} layer rows, model has K={}", h.len(), self.dims.k);
+        }
+        for (i, row) in h.iter().enumerate() {
+            if row.shape() != [self.dims.n].as_slice() {
+                bail!("state row {i} has shape {:?}, want [{}]", row.shape(), self.dims.n);
+            }
+        }
+        self.sessions.insert(sid, h);
+        Ok(())
+    }
+
+    fn evict(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        self.sessions
+            .remove(&sid)
+            .with_context(|| format!("evicting unknown session {sid}"))
+    }
+
+    fn state(&mut self, sid: u64) -> Result<Vec<Tensor>> {
+        self.sessions
+            .get(&sid)
+            .cloned()
+            .with_context(|| format!("no state for session {sid}"))
+    }
+
+    fn step(&mut self, inputs: &[(u64, i32)]) -> Result<(Vec<(u64, Tensor)>, StepCost)> {
+        if inputs.windows(2).any(|w| w[0].0 >= w[1].0) {
+            bail!("step inputs must be ascending by sid");
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for &(sid, tok) in inputs {
+            out.push((sid, self.step_one(sid, tok)?));
+        }
+        Ok((out, StepCost::default()))
+    }
+
+    fn prefill_width(&mut self) -> Result<Option<usize>> {
+        Ok(if self.prefill_width > 0 { Some(self.prefill_width) } else { None })
+    }
+
+    fn prefill(&mut self, sid: u64, tokens: &[i32]) -> Result<(Tensor, StepCost)> {
+        let pf = self.prefill_width;
+        if pf == 0 {
+            bail!("this mock backend was built without chunked prefill");
+        }
+        if tokens.is_empty() || tokens.len() > pf {
+            bail!("prefill chunk must have 1..={pf} tokens, got {}", tokens.len());
+        }
+        // Chunked == token-at-a-time by construction: the chunk path IS
+        // the single-token path iterated.
+        let mut logits = None;
+        for &tok in tokens {
+            logits = Some(self.step_one(sid, tok)?);
+        }
+        Ok((logits.expect("non-empty chunk"), StepCost::default()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { name: "mock".into(), v: 32, p: 8, n: 8, k: 2, t: 16, w: 16, c: 8, eps: 1e-6 }
+    }
+
+    fn zeros(d: &ModelDims) -> Vec<Tensor> {
+        (0..d.k).map(|_| Tensor::zeros(&[d.n])).collect()
+    }
+
+    #[test]
+    fn mock_streams_are_deterministic_and_prefill_is_identical() {
+        let d = dims();
+        let toks = [3, 7, 1, 9, 2];
+        // Token-at-a-time.
+        let mut a = MockBackend::new(&d, 4);
+        a.admit(0, zeros(&d)).unwrap();
+        let mut last = None;
+        for &t in &toks {
+            let (outs, _) = a.step(&[(0, t)]).unwrap();
+            last = Some(outs.into_iter().next().unwrap().1);
+        }
+        // Chunked (ragged 4 + 1).
+        let mut b = MockBackend::new(&d, 4);
+        b.admit(0, zeros(&d)).unwrap();
+        b.prefill(0, &toks[..4]).unwrap();
+        let (logits, _) = b.prefill(0, &toks[4..]).unwrap();
+        assert_eq!(last.unwrap().data(), logits.data());
+        assert_eq!(a.evict(0).unwrap()[0].data(), b.evict(0).unwrap()[0].data());
+    }
+
+    #[test]
+    fn mock_state_roundtrips_through_evict_admit() {
+        let d = dims();
+        let mut m = MockBackend::new(&d, 0);
+        m.admit(5, zeros(&d)).unwrap();
+        m.step(&[(5, 1)]).unwrap();
+        let h = m.evict(5).unwrap();
+        m.admit(5, h.clone()).unwrap();
+        let (after_restore, _) = m.step(&[(5, 2)]).unwrap();
+        // Fresh run, same tokens: identical.
+        let mut f = MockBackend::new(&d, 0);
+        f.admit(5, zeros(&d)).unwrap();
+        f.step(&[(5, 1)]).unwrap();
+        let (fresh, _) = f.step(&[(5, 2)]).unwrap();
+        assert_eq!(after_restore[0].1.data(), fresh[0].1.data());
+        assert!(m.prefill_width().unwrap().is_none());
+        assert!(m.prefill(5, &[1]).is_err());
+    }
+}

@@ -15,19 +15,35 @@
 //!   [`StepBackend`], samples on the host, and retires completed
 //!   sessions — arrivals and evictions between steps never perturb other
 //!   sessions' streams (sessions share only immutable parameters).
+//! * **Chunked prefill** (`--prefill-chunk`): at most one prefilling
+//!   session per tick feeds a whole C-token prompt chunk through the
+//!   `layer_prefill_chunk` entry instead of one token through the decode
+//!   batch, so a long document streams its prompt ~C× faster without
+//!   blocking other sessions' decode steps.
+//! * **Session paging** (`--page-dir`): under memory pressure the
+//!   admission gate pages the coldest live session to disk (a
+//!   [`SessionSnapshot`] file), admits the arrival, and transparently
+//!   restores the paged session when headroom frees — page, don't defer
+//!   (the `--offload` philosophy applied to serving). Effective capacity
+//!   exceeds HBM; streams are unchanged.
 //! * [`SessionSnapshot`] — bit-exact pause/resume: the K×N state rows +
 //!   pending logits + sampler RNG + stream position serialize to a small
 //!   file; restore reproduces the identical remaining token stream
 //!   (asserted in rust/tests/serve.rs).
-//! * [`StepBackend`] ([`SimBackend`] | [`ThreadedBackend`]) — the
-//!   decode-step engines; see `backend`.
+//! * [`StepBackend`] ([`SimBackend`] | [`ThreadedBackend`] |
+//!   [`MockBackend`]) — the decode-step engines; see `backend`, `mock`.
+//! * [`loadgen`] — the seeded open-loop load generator behind
+//!   `adjsh serve --loadgen` and the BENCH_serve.json capacity curve.
 //!
 //! Determinism contract: a session's token stream depends only on
 //! (params, prompt, temperature, seed) — never on arrival interleaving,
-//! batch packing, lane placement, or wall-clock. Every stream equals
-//! `generate::generate` with the same inputs, bit for bit.
+//! batch packing, lane placement, chunked-vs-single prefill, paging, or
+//! wall-clock. Every stream equals `generate::generate` with the same
+//! inputs, bit for bit.
 
 pub mod backend;
+pub mod loadgen;
+pub mod mock;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
@@ -38,6 +54,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 pub use backend::{SimBackend, StepBackend, StepCost, ThreadedBackend};
+pub use mock::MockBackend;
 
 use crate::config::{ModelDims, ServeCfg};
 use crate::exec::{lane_count, ExecCfg, ExecutorKind};
@@ -103,6 +120,16 @@ pub struct FinishedSession {
     pub steps: u64,
     pub admitted_step: u64,
     pub completed_step: u64,
+    /// Arrival → first generated token: the user-visible TTFT, counting
+    /// any queue wait before admission (None only when nothing was
+    /// generated).
+    pub ttft_s: Option<f64>,
+    /// Admission → first generated token — the pre-capacity-era figure,
+    /// kept for comparability; excludes queue wait.
+    pub ttft_post_admit_s: Option<f64>,
+    /// Largest gap between consecutive generated tokens, including any
+    /// page-out stall in the middle of decode (0 with < 2 tokens).
+    pub itl_max_s: f64,
 }
 
 /// Coordinator-side session bookkeeping. The backend owns only the
@@ -117,9 +144,43 @@ struct Session {
     logits: Option<Tensor>,
     out: Vec<i32>,
     admitted_step: u64,
+    /// When the request came due — TTFT counts queue wait from here.
+    t_arrival: Instant,
     t_admit: Instant,
-    t_first: Option<Instant>,
+    /// Arrival → first generated token, frozen at sampling time so it
+    /// survives page-out/page-in unchanged.
+    ttft_s: Option<f64>,
+    /// Admission → first generated token (excludes queue wait).
+    ttft_post_admit_s: Option<f64>,
+    /// When the previous token was sampled — the inter-token clock. Kept
+    /// running across paging on purpose: a page stall IS a user-visible
+    /// inter-token gap.
+    t_last_token: Option<Instant>,
+    /// Largest inter-token gap observed so far (SLO input).
+    itl_max_s: f64,
     steps: u64,
+    /// Step index of the last admission or page-in — the LRU recency key
+    /// the pager uses to pick its victim.
+    last_hot: u64,
+}
+
+/// Coordinator-side remnant of a paged-out session: everything that must
+/// survive on the host (accumulated output, latency clocks) while the
+/// stream-defining state ([`SessionSnapshot`]) sits on disk. Restoring
+/// merges the two back into a [`Session`] under the *same* sid.
+struct PagedStub {
+    sid: u64,
+    out: Vec<i32>,
+    n_new: usize,
+    admitted_step: u64,
+    t_arrival: Instant,
+    t_admit: Instant,
+    ttft_s: Option<f64>,
+    ttft_post_admit_s: Option<f64>,
+    t_last_token: Option<Instant>,
+    itl_max_s: f64,
+    steps: u64,
+    path: PathBuf,
 }
 
 /// Serving-side latency/throughput accounting (p50/p95/p99).
@@ -129,8 +190,16 @@ pub struct ServeMetrics {
     pub step_s: Quantiles,
     /// Wall seconds a generated token waited on its decode step.
     pub token_latency_s: Quantiles,
-    /// Admission → first generated token, per session.
+    /// Arrival → first generated token, per session (the user-visible
+    /// TTFT: queue wait before admission counts).
     pub first_token_s: Quantiles,
+    /// Admission → first generated token, per session — what
+    /// `first_token_s` measured before arrivals could queue; kept so the
+    /// two are comparable side by side.
+    pub ttft_post_admit: Quantiles,
+    /// Gaps between consecutive generated tokens within a session
+    /// (page-out stalls included — they are real user-visible gaps).
+    pub inter_token_s: Quantiles,
     /// Per-session generated-token throughput.
     pub session_tokens_per_s: Quantiles,
     /// Sessions per batched step.
@@ -181,6 +250,8 @@ impl ServeMetrics {
             ("serve_step_wall", &self.step_s),
             ("serve_token_latency", &self.token_latency_s),
             ("serve_first_token_latency", &self.first_token_s),
+            ("serve_ttft_post_admit", &self.ttft_post_admit),
+            ("serve_inter_token", &self.inter_token_s),
         ]
         .into_iter()
         .filter(|(_, q)| !q.is_empty())
@@ -225,7 +296,9 @@ impl ServeMetrics {
         };
         push("step wall", &self.step_s);
         push("token latency", &self.token_latency_s);
-        push("first-token latency", &self.first_token_s);
+        push("TTFT (from arrival)", &self.first_token_s);
+        push("TTFT (post-admit)", &self.ttft_post_admit);
+        push("inter-token gap", &self.inter_token_s);
         t.print();
         if !self.session_tokens_per_s.is_empty() {
             println!(
@@ -254,8 +327,25 @@ pub struct ServeLoop {
     admission: ServeAdmission,
     max_batch: usize,
     snapshot_dir: Option<PathBuf>,
-    queue: VecDeque<(u64, Request)>,
+    /// Requested prompt-chunk width (0 = token-at-a-time prefill only);
+    /// the effective width is clamped to the artifact's compiled width.
+    prefill_chunk: usize,
+    /// Directory for LRU page files; None disables paging (the admission
+    /// gate defers instead).
+    page_dir: Option<PathBuf>,
+    /// Arrival queue: (sid, request, arrival stamp). The stamp is set the
+    /// first tick the request comes due, so TTFT counts queue wait even
+    /// when admission is deferred or paged.
+    queue: VecDeque<(u64, Request, Option<Instant>)>,
     sessions: BTreeMap<u64, Session>,
+    /// Paged-out sessions, oldest first — restored FIFO into headroom.
+    paged: VecDeque<PagedStub>,
+    /// Sessions dropped because their page file failed to load, with the
+    /// error text. Quarantined here precisely so one corrupt page file
+    /// cannot poison the sessions still being served.
+    page_failures: Vec<(u64, String)>,
+    /// Round-robin cursor over prefilling sessions for chunk selection.
+    next_prefill_sid: u64,
     next_sid: u64,
     step_idx: u64,
     finished: Vec<FinishedSession>,
@@ -286,8 +376,13 @@ impl ServeLoop {
             admission,
             max_batch: cfg.max_batch,
             snapshot_dir: cfg.snapshot_dir.clone(),
+            prefill_chunk: cfg.prefill_chunk,
+            page_dir: cfg.page_dir.clone(),
             queue: VecDeque::new(),
             sessions: BTreeMap::new(),
+            paged: VecDeque::new(),
+            page_failures: Vec::new(),
+            next_prefill_sid: 0,
             next_sid: 0,
             step_idx: 0,
             finished: Vec::new(),
@@ -305,7 +400,7 @@ impl ServeLoop {
         }
         let sid = self.next_sid;
         self.next_sid += 1;
-        self.queue.push_back((sid, req));
+        self.queue.push_back((sid, req, None));
         Ok(sid)
     }
 
@@ -315,6 +410,17 @@ impl ServeLoop {
 
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Sessions currently paged out to disk.
+    pub fn paged_sessions(&self) -> usize {
+        self.paged.len()
+    }
+
+    /// Sessions dropped because their page file failed to load (sid,
+    /// error). Non-empty means data was lost but serving continued.
+    pub fn page_failures(&self) -> &[(u64, String)] {
+        &self.page_failures
     }
 
     pub fn step_idx(&self) -> u64 {
@@ -334,12 +440,23 @@ impl ServeLoop {
         std::mem::take(&mut self.finished)
     }
 
-    /// Admit due arrivals in submission order until the batch or the
-    /// memory gate blocks. The gate is the acceptance invariant:
-    /// modeled bytes never exceed the HBM cap (checked, not assumed).
+    /// Admit due arrivals in submission order. Under pressure the
+    /// response depends on `--page-dir`: with one, page the coldest live
+    /// session to disk and admit anyway (spill over defer — the
+    /// `--offload` philosophy applied to serving); without one, defer.
+    /// After arrivals, restore paged sessions oldest-first into whatever
+    /// headroom remains. The admission gate stays the acceptance
+    /// invariant: modeled resident bytes never exceed the HBM cap.
     fn admit_ready(&mut self) -> Result<()> {
+        // Stamp arrival times the first tick a request comes due — TTFT
+        // is measured from here whether admission is instant or not.
+        for (_, req, arrival) in self.queue.iter_mut() {
+            if arrival.is_none() && req.not_before_step <= self.step_idx {
+                *arrival = Some(Instant::now());
+            }
+        }
         let mut blocked = false;
-        while let Some((_, req)) = self.queue.front() {
+        while let Some((_, req, _)) = self.queue.front() {
             if req.not_before_step > self.step_idx {
                 break;
             }
@@ -355,12 +472,19 @@ impl ServeLoop {
                         self.admission.hbm_bytes
                     );
                 }
+                if self.page_dir.is_some() {
+                    // Each page-out frees one slot, so this loop strictly
+                    // shrinks `active` and cannot spin.
+                    self.page_out_coldest()?;
+                    continue;
+                }
                 blocked = true;
                 break;
             }
-            let (sid, req) = self.queue.pop_front().expect("front checked");
+            let (sid, req, arrival) = self.queue.pop_front().expect("front checked");
             let h = (0..self.dims.k).map(|_| Tensor::zeros(&[self.dims.n])).collect();
             self.backend.admit(sid, h)?;
+            let now = Instant::now();
             self.sessions.insert(
                 sid,
                 Session {
@@ -371,9 +495,14 @@ impl ServeLoop {
                     logits: None,
                     out: Vec::with_capacity(req.n_new),
                     admitted_step: self.step_idx,
-                    t_admit: Instant::now(),
-                    t_first: None,
+                    t_arrival: arrival.unwrap_or(now),
+                    t_admit: now,
+                    ttft_s: None,
+                    ttft_post_admit_s: None,
+                    t_last_token: None,
+                    itl_max_s: 0.0,
                     steps: 0,
+                    last_hot: self.step_idx,
                 },
             );
             self.metrics.admitted += 1;
@@ -404,16 +533,156 @@ impl ServeLoop {
             ));
             self.counters.inc("serve_deferrals", 1);
         }
+        // Restore paged sessions oldest-first into leftover headroom.
+        // Deliberately after arrivals, so a fresh admission never pages a
+        // session back out the same tick it was restored.
+        while !self.paged.is_empty() {
+            let active = self.sessions.len();
+            if active >= self.max_batch || !self.admission.admits(active as u64) {
+                break;
+            }
+            let stub = self.paged.pop_front().expect("checked non-empty");
+            let sid = stub.sid;
+            if let Err(e) = self.page_in(stub) {
+                // Quarantine the failure: the session is lost, the loop —
+                // and every other session's stream — is not.
+                self.counters.inc("serve_page_failures", 1);
+                self.page_failures.push((sid, format!("{e:#}")));
+            }
+        }
         Ok(())
     }
 
-    /// One loop iteration: admissions, one batched decode step over every
-    /// active session, sampling, completions. Returns false when fully
-    /// idle (no active sessions and an empty queue).
+    /// Page the coldest live session to disk and evict its HBM state.
+    /// Victims are preferred among sessions done prefilling, then by
+    /// least-recently-hot (admission or last page-in), sid as tiebreak.
+    fn page_out_coldest(&mut self) -> Result<()> {
+        let dir = self.page_dir.clone().context("paging requires a page dir")?;
+        let victim = self
+            .sessions
+            .iter()
+            .map(|(&sid, s)| (!s.pending.is_empty(), s.last_hot, sid))
+            .min()
+            .map(|(_, _, sid)| sid)
+            .context("no live session to page out")?;
+        let path = dir.join(format!("session_{victim}.page"));
+        let wall0 = self.trace.wall_now_ns();
+        let t0 = Instant::now();
+        self.snapshot(victim, &path)?;
+        self.backend.evict(victim)?;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let sess = self.sessions.remove(&victim).expect("victim is live");
+        self.paged.push_back(PagedStub {
+            sid: victim,
+            out: sess.out,
+            n_new: sess.n_new,
+            admitted_step: sess.admitted_step,
+            t_arrival: sess.t_arrival,
+            t_admit: sess.t_admit,
+            ttft_s: sess.ttft_s,
+            ttft_post_admit_s: sess.ttft_post_admit_s,
+            t_last_token: sess.t_last_token,
+            itl_max_s: sess.itl_max_s,
+            steps: sess.steps,
+            path,
+        });
+        self.trace.push(TraceEvent::span_wall(
+            COORD_LANE,
+            TraceKind::PageOut,
+            wall0,
+            t0.elapsed().as_nanos() as u64,
+            victim as usize,
+            bytes,
+        ));
+        self.counters.inc("serve_pageouts", 1);
+        Ok(())
+    }
+
+    /// Restore a paged session under its original sid — transparent to
+    /// the stream: the snapshot resumes the sampler and state exactly
+    /// where page-out froze them, and the stub restores the accumulated
+    /// output and latency clocks. The page file is deleted on success.
+    fn page_in(&mut self, stub: PagedStub) -> Result<()> {
+        let wall0 = self.trace.wall_now_ns();
+        let t0 = Instant::now();
+        let snap = SessionSnapshot::load(&stub.path)
+            .with_context(|| format!("paging in session {}", stub.sid))?;
+        if snap.k != self.dims.k || snap.n != self.dims.n || snap.v != self.dims.v {
+            bail!(
+                "page file for session {} has dims (K={}, N={}, V={}), model has \
+                 (K={}, N={}, V={})",
+                stub.sid,
+                snap.k,
+                snap.n,
+                snap.v,
+                self.dims.k,
+                self.dims.n,
+                self.dims.v
+            );
+        }
+        let expect_remaining = (stub.n_new - stub.out.len().min(stub.n_new)) as u64;
+        if snap.remaining != expect_remaining {
+            bail!(
+                "page file for session {} is stale: {} tokens remaining on disk, {} expected",
+                stub.sid,
+                snap.remaining,
+                expect_remaining
+            );
+        }
+        let bytes = std::fs::metadata(&stub.path).map(|m| m.len()).unwrap_or(0);
+        let h = snap
+            .h
+            .iter()
+            .map(|row| Tensor::new(vec![self.dims.n], row.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        let logits = match &snap.logits {
+            Some(d) => Some(Tensor::new(vec![self.dims.v], d.clone())?),
+            None => None,
+        };
+        // Admit last: any failure above leaves the backend untouched.
+        self.backend.admit(stub.sid, h)?;
+        std::fs::remove_file(&stub.path).ok();
+        self.sessions.insert(
+            stub.sid,
+            Session {
+                pending: snap.pending.iter().copied().collect(),
+                n_new: stub.n_new,
+                temperature: snap.temperature,
+                rng: Rng::from_state(snap.rng_state, snap.rng_spare),
+                logits,
+                out: stub.out,
+                admitted_step: stub.admitted_step,
+                t_arrival: stub.t_arrival,
+                t_admit: stub.t_admit,
+                ttft_s: stub.ttft_s,
+                ttft_post_admit_s: stub.ttft_post_admit_s,
+                t_last_token: stub.t_last_token,
+                itl_max_s: stub.itl_max_s,
+                steps: stub.steps,
+                last_hot: self.step_idx,
+            },
+        );
+        self.trace.push(TraceEvent::span_wall(
+            COORD_LANE,
+            TraceKind::PageIn,
+            wall0,
+            t0.elapsed().as_nanos() as u64,
+            stub.sid as usize,
+            bytes,
+        ));
+        self.counters.inc("serve_pageins", 1);
+        self.metrics.peak_sessions = self.metrics.peak_sessions.max(self.sessions.len());
+        Ok(())
+    }
+
+    /// One loop iteration: admissions (with paging), at most one chunked
+    /// prefill, one batched decode step over the remaining active
+    /// sessions, sampling, completions. Returns false when fully idle
+    /// (no active sessions, no queued arrivals, nothing paged out).
     pub fn tick(&mut self) -> Result<bool> {
         self.admit_ready()?;
         if self.sessions.is_empty() {
-            if self.queue.is_empty() {
+            if self.queue.is_empty() && self.paged.is_empty() {
                 return Ok(false);
             }
             // Nothing active yet, but arrivals are pending: advance the
@@ -422,12 +691,68 @@ impl ServeLoop {
             return Ok(true);
         }
 
-        // Build the batch in ascending sid order: next prompt token while
-        // prefilling, else sample from the pending logits — the exact
-        // order of operations of `generate::generate`.
+        // Chunked prefill: at most one prefilling session per tick feeds
+        // a whole prompt chunk through the `layer_prefill_chunk` entry
+        // instead of one token through the decode batch (round-robin over
+        // sids so one long document cannot starve other prefills). The
+        // chunk entry's internal scan body IS the decode step, so the
+        // stream is unchanged — only the dispatch count drops.
+        let mut chunked: Option<u64> = None;
+        if self.prefill_chunk > 0 {
+            if let Some(width) = self.backend.prefill_width()? {
+                let eff = width.min(self.prefill_chunk);
+                let pick = self
+                    .sessions
+                    .range(self.next_prefill_sid..)
+                    .find(|(_, s)| !s.pending.is_empty())
+                    .map(|(&sid, _)| sid)
+                    .or_else(|| {
+                        self.sessions
+                            .range(..self.next_prefill_sid)
+                            .find(|(_, s)| !s.pending.is_empty())
+                            .map(|(&sid, _)| sid)
+                    });
+                if let Some(sid) = pick {
+                    self.next_prefill_sid = sid + 1;
+                    let sess = self.sessions.get_mut(&sid).expect("picked above");
+                    let take = eff.min(sess.pending.len());
+                    let chunk: Vec<i32> = sess.pending.drain(..take).collect();
+                    let wall0 = self.trace.wall_now_ns();
+                    let t0 = Instant::now();
+                    let (logits, cost) = self.backend.prefill(sid, &chunk)?;
+                    let dt = t0.elapsed();
+                    let sess = self.sessions.get_mut(&sid).expect("still live");
+                    sess.logits = Some(logits);
+                    sess.steps += 1;
+                    self.metrics.tokens_prefilled += take as u64;
+                    self.metrics.wall_s += dt.as_secs_f64();
+                    self.metrics.pjrt_s += cost.pjrt_s;
+                    self.metrics.calls += cost.calls;
+                    self.trace.push(TraceEvent::span_wall(
+                        COORD_LANE,
+                        TraceKind::Launch,
+                        wall0,
+                        dt.as_nanos() as u64,
+                        sid as usize,
+                        (take * 4) as u64,
+                    ));
+                    self.counters.inc("serve_prefill_chunks", 1);
+                    self.counters.inc("serve_prefill_tokens", take as u64);
+                    chunked = Some(sid);
+                }
+            }
+        }
+
+        // Build the decode batch in ascending sid order: next prompt
+        // token while prefilling, else sample from the pending logits —
+        // the exact order of operations of `generate::generate`. The
+        // session that took a prefill chunk already advanced this tick.
         let mut inputs = Vec::with_capacity(self.sessions.len());
         let mut sampled = 0u64;
         for (&sid, sess) in self.sessions.iter_mut() {
+            if chunked == Some(sid) {
+                continue;
+            }
             let tok = match sess.pending.pop_front() {
                 Some(t) => {
                     self.metrics.tokens_prefilled += 1;
@@ -441,81 +766,117 @@ impl ServeLoop {
                     let t = sample(logits, sess.temperature, &mut sess.rng);
                     sess.out.push(t);
                     sampled += 1;
-                    if sess.t_first.is_none() {
-                        let now = Instant::now();
-                        sess.t_first = Some(now);
-                        self.metrics
-                            .first_token_s
-                            .push(now.duration_since(sess.t_admit).as_secs_f64());
+                    let now = Instant::now();
+                    if sess.ttft_s.is_none() {
+                        let ttft = now.duration_since(sess.t_arrival).as_secs_f64();
+                        sess.ttft_s = Some(ttft);
+                        self.metrics.first_token_s.push(ttft);
+                        let post = now.duration_since(sess.t_admit).as_secs_f64();
+                        sess.ttft_post_admit_s = Some(post);
+                        self.metrics.ttft_post_admit.push(post);
                     }
+                    if let Some(prev) = sess.t_last_token {
+                        let gap = now.duration_since(prev).as_secs_f64();
+                        sess.itl_max_s = sess.itl_max_s.max(gap);
+                        self.metrics.inter_token_s.push(gap);
+                    }
+                    sess.t_last_token = Some(now);
                     t
                 }
             };
             inputs.push((sid, tok));
         }
         self.metrics.tokens_generated += sampled;
-        self.metrics.batch_occupancy.push(inputs.len() as f64);
 
-        let t0 = Instant::now();
-        let (outs, cost) = self.backend.step(&inputs)?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.step_s.push(dt);
-        self.metrics.wall_s += dt;
-        self.metrics.pjrt_s += cost.pjrt_s;
-        self.metrics.calls += cost.calls;
-        self.metrics.steps += 1;
-        for _ in 0..sampled {
-            self.metrics.token_latency_s.push(dt);
-        }
-        if outs.len() != inputs.len() {
-            bail!("backend returned {} logits for {} inputs", outs.len(), inputs.len());
-        }
-        for (sid, logits) in outs {
-            let sess = self
-                .sessions
-                .get_mut(&sid)
-                .context("backend returned an unknown session id")?;
-            sess.logits = Some(logits);
-            sess.steps += 1;
-        }
-
-        // Retire completed sessions (prompt fully fed, target reached).
-        // `generate` also steps the final sampled token, so completion is
-        // checked after the step — streams match exactly.
-        let done: Vec<u64> = self
-            .sessions
-            .iter()
-            .filter(|(_, s)| s.pending.is_empty() && s.out.len() >= s.n_new)
-            .map(|(&sid, _)| sid)
-            .collect();
-        for sid in done {
-            self.backend.evict(sid)?;
-            self.trace.push(TraceEvent::instant(
-                COORD_LANE,
-                TraceKind::ServeEvict,
-                sid as usize,
-                0,
-            ));
-            self.counters.inc("serve_evictions", 1);
-            let sess = self.sessions.remove(&sid).expect("session just listed");
-            let wall = sess.t_admit.elapsed().as_secs_f64();
-            if sess.n_new > 0 && wall > 0.0 {
-                self.metrics
-                    .session_tokens_per_s
-                    .push(sess.n_new as f64 / wall);
+        if !inputs.is_empty() {
+            self.metrics.batch_occupancy.push(inputs.len() as f64);
+            let t0 = Instant::now();
+            let (outs, cost) = self.backend.step(&inputs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.step_s.push(dt);
+            self.metrics.wall_s += dt;
+            self.metrics.pjrt_s += cost.pjrt_s;
+            self.metrics.calls += cost.calls;
+            for _ in 0..sampled {
+                self.metrics.token_latency_s.push(dt);
             }
-            self.metrics.completed += 1;
-            self.finished.push(FinishedSession {
-                sid,
-                tokens: sess.out,
-                wall_s: wall,
-                steps: sess.steps,
-                admitted_step: sess.admitted_step,
-                completed_step: self.step_idx,
-            });
+            if outs.len() != inputs.len() {
+                bail!("backend returned {} logits for {} inputs", outs.len(), inputs.len());
+            }
+            for (sid, logits) in outs {
+                let sess = self
+                    .sessions
+                    .get_mut(&sid)
+                    .context("backend returned an unknown session id")?;
+                sess.logits = Some(logits);
+                sess.steps += 1;
+            }
         }
+        self.metrics.steps += 1;
+
+        // Retire completed sessions (prompt fully fed, target reached) in
+        // place, ascending by sid — a range scan from a moving cursor, no
+        // intermediate Vec. `generate` also steps the final sampled
+        // token, so completion is checked after the step — streams match
+        // exactly. The count check pins the in-place scan to the
+        // snapshot-then-evict semantics it replaced: exactly the sessions
+        // complete at scan start get retired, no skips, no repeats.
+        let expect = self
+            .sessions
+            .values()
+            .filter(|s| s.pending.is_empty() && s.out.len() >= s.n_new)
+            .count();
+        let mut retired = 0usize;
+        let mut cursor = 0u64;
+        while let Some(sid) = self
+            .sessions
+            .range(cursor..)
+            .find(|(_, s)| s.pending.is_empty() && s.out.len() >= s.n_new)
+            .map(|(&sid, _)| sid)
+        {
+            self.retire(sid)?;
+            retired += 1;
+            cursor = sid + 1;
+        }
+        assert_eq!(
+            retired, expect,
+            "in-place retirement must cover exactly the sessions complete at scan start"
+        );
         self.step_idx += 1;
         Ok(true)
+    }
+
+    /// Evict one completed session from the backend and finalize its
+    /// [`FinishedSession`] record.
+    fn retire(&mut self, sid: u64) -> Result<()> {
+        self.backend.evict(sid)?;
+        self.trace.push(TraceEvent::instant(
+            COORD_LANE,
+            TraceKind::ServeEvict,
+            sid as usize,
+            0,
+        ));
+        self.counters.inc("serve_evictions", 1);
+        let sess = self.sessions.remove(&sid).expect("retiring a live session");
+        let wall = sess.t_admit.elapsed().as_secs_f64();
+        if sess.n_new > 0 && wall > 0.0 {
+            self.metrics
+                .session_tokens_per_s
+                .push(sess.n_new as f64 / wall);
+        }
+        self.metrics.completed += 1;
+        self.finished.push(FinishedSession {
+            sid,
+            tokens: sess.out,
+            wall_s: wall,
+            steps: sess.steps,
+            admitted_step: sess.admitted_step,
+            completed_step: self.step_idx,
+            ttft_s: sess.ttft_s,
+            ttft_post_admit_s: sess.ttft_post_admit_s,
+            itl_max_s: sess.itl_max_s,
+        });
+        Ok(())
     }
 
     /// Run until every submitted session has completed.
@@ -608,6 +969,7 @@ impl ServeLoop {
             Some(d) => Some(Tensor::new(vec![self.dims.v], d.clone())?),
             None => None,
         };
+        let now = Instant::now();
         self.sessions.insert(
             sid,
             Session {
@@ -618,9 +980,14 @@ impl ServeLoop {
                 logits,
                 out: Vec::with_capacity(snap.remaining as usize),
                 admitted_step: self.step_idx,
-                t_admit: Instant::now(),
-                t_first: None,
+                t_arrival: now,
+                t_admit: now,
+                ttft_s: None,
+                ttft_post_admit_s: None,
+                t_last_token: None,
+                itl_max_s: 0.0,
                 steps: 0,
+                last_hot: self.step_idx,
             },
         );
         self.metrics.admitted += 1;

@@ -45,6 +45,42 @@ impl BenchStats {
     }
 }
 
+/// One point on the serve capacity curve (the schema-3 `"capacity"`
+/// array in `BENCH_serve.json`): what load was offered vs what the loop
+/// actually delivered, and whether sessions met their latency SLOs.
+#[derive(Debug, Clone)]
+pub struct CapacityRow {
+    /// Sweep-point label, e.g. `"mixed@1.5x"`.
+    pub label: String,
+    /// Offered arrival rate, sessions per 100 loop steps.
+    pub offered_per_100: f64,
+    /// Achieved aggregate throughput (prefill + generated), tokens/s.
+    pub attained_tok_s: f64,
+    /// p99 time-to-first-token across completed sessions (from arrival).
+    pub p99_ttft_s: f64,
+    /// p99 worst inter-token gap across completed sessions.
+    pub p99_itl_s: f64,
+    /// Percent of completed sessions meeting both SLO bounds, 0–100.
+    pub slo_pct: f64,
+    /// Sessions completed at this sweep point.
+    pub sessions: usize,
+}
+
+impl CapacityRow {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"label\":{:?},\"offered_per_100\":{:.3},\"attained_tok_s\":{:.3},\"p99_ttft_ns\":{:.1},\"p99_itl_ns\":{:.1},\"slo_pct\":{:.2},\"sessions\":{}}}",
+            self.label,
+            self.offered_per_100,
+            self.attained_tok_s,
+            self.p99_ttft_s * 1e9,
+            self.p99_itl_s * 1e9,
+            self.slo_pct,
+            self.sessions,
+        )
+    }
+}
+
 /// Run provenance stamped into every `BENCH_*.json` (the `"provenance"`
 /// block): the commit that produced the numbers, a hash of the run
 /// config, the seed, and a free-form host note. `reports` prints it and
@@ -110,9 +146,39 @@ pub fn write_json(
     prov: &Provenance,
     results: &[BenchStats],
 ) -> anyhow::Result<()> {
+    write_json_impl(path, bench, placeholder, note, prov, results, None)
+}
+
+/// Schema-3 variant of [`write_json`]: the same envelope plus a
+/// `"capacity"` array of [`CapacityRow`]s — the serve capacity curve
+/// emitted by `adjsh serve --loadgen` and rendered by
+/// `adjsh bench serve`. Readers must accept schema 2 (no capacity) and
+/// 3 alike.
+pub fn write_json_capacity(
+    path: &Path,
+    bench: &str,
+    placeholder: bool,
+    note: &str,
+    prov: &Provenance,
+    results: &[BenchStats],
+    capacity: &[CapacityRow],
+) -> anyhow::Result<()> {
+    write_json_impl(path, bench, placeholder, note, prov, results, Some(capacity))
+}
+
+fn write_json_impl(
+    path: &Path,
+    bench: &str,
+    placeholder: bool,
+    note: &str,
+    prov: &Provenance,
+    results: &[BenchStats],
+    capacity: Option<&[CapacityRow]>,
+) -> anyhow::Result<()> {
+    let schema = if capacity.is_some() { 3 } else { 2 };
     let mut s = String::new();
     s.push_str(&format!(
-        "{{\n  \"bench\": {bench:?},\n  \"schema\": 2,\n  \"placeholder\": {placeholder},\n  \"note\": {note:?},\n  \"provenance\": {},\n  \"results\": [\n",
+        "{{\n  \"bench\": {bench:?},\n  \"schema\": {schema},\n  \"placeholder\": {placeholder},\n  \"note\": {note:?},\n  \"provenance\": {},\n  \"results\": [\n",
         prov.to_json(),
     ));
     for (i, r) in results.iter().enumerate() {
@@ -123,7 +189,20 @@ pub fn write_json(
         }
         s.push('\n');
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ]");
+    if let Some(rows) = capacity {
+        s.push_str(",\n  \"capacity\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(&r.to_json());
+            if i + 1 < rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]");
+    }
+    s.push_str("\n}\n");
     std::fs::write(path, s)?;
     Ok(())
 }
@@ -297,5 +376,50 @@ mod tests {
         assert!((rs[0].get("mean_ns").unwrap().as_f64().unwrap() - 1500.0).abs() < 0.2);
         assert!((rs[0].get("p99_ns").unwrap().as_f64().unwrap() - 2100.0).abs() < 0.2);
         assert!(rs[1].get("min_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn capacity_json_is_schema_3_and_round_trips() {
+        let rows = vec![
+            CapacityRow {
+                label: "mixed@1x".into(),
+                offered_per_100: 4.0,
+                attained_tok_s: 123.456,
+                p99_ttft_s: 0.25,
+                p99_itl_s: 0.01,
+                slo_pct: 87.5,
+                sessions: 16,
+            },
+            CapacityRow {
+                label: "mixed@2x".into(),
+                offered_per_100: 8.0,
+                attained_tok_s: 140.0,
+                p99_ttft_s: 1.5,
+                p99_itl_s: 0.03,
+                slo_pct: 50.0,
+                sessions: 32,
+            },
+        ];
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("bench_cap_test_{}.json", std::process::id()));
+        let prov = Provenance::collect("serve cap test", 1, "unit test host");
+        write_json_capacity(&path, "serve", false, "unit test", &prov, &[], &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 3);
+        let cap = j.get("capacity").unwrap().as_arr().unwrap();
+        assert_eq!(cap.len(), 2);
+        assert_eq!(cap[0].get("label").unwrap().as_str().unwrap(), "mixed@1x");
+        assert!((cap[0].get("p99_ttft_ns").unwrap().as_f64().unwrap() - 0.25e9).abs() < 1.0);
+        assert!((cap[1].get("slo_pct").unwrap().as_f64().unwrap() - 50.0).abs() < 1e-9);
+        assert_eq!(cap[1].get("sessions").unwrap().as_usize().unwrap(), 32);
+        // Capacity-free files stay schema 2 — readers accept both.
+        let path2 = dir.join(format!("bench_cap2_test_{}.json", std::process::id()));
+        write_json(&path2, "serve", true, "placeholder", &prov, &[]).unwrap();
+        let j2 = crate::util::json::Json::parse(&std::fs::read_to_string(&path2).unwrap()).unwrap();
+        std::fs::remove_file(&path2).ok();
+        assert_eq!(j2.get("schema").unwrap().as_usize().unwrap(), 2);
+        assert!(j2.get("capacity").is_err());
     }
 }

@@ -18,9 +18,12 @@ use adjoint_sharding::exec::{ExecCfg, ExecutorKind};
 use adjoint_sharding::generate::{self, DecodeState};
 use adjoint_sharding::memcost::ServeAdmission;
 use adjoint_sharding::model::ParamSet;
+use adjoint_sharding::obs::trace::TraceKind;
 use adjoint_sharding::rng::Rng;
 use adjoint_sharding::runtime::{ArtifactSet, Manifest, Runtime};
-use adjoint_sharding::serve::{build_backend, Request, ServeLoop, SimBackend, StepBackend};
+use adjoint_sharding::serve::{
+    build_backend, MockBackend, Request, ServeLoop, SimBackend, StepBackend,
+};
 use adjoint_sharding::tensor::Tensor;
 
 fn root() -> PathBuf {
@@ -52,9 +55,30 @@ fn mk_loop(
     max_batch: usize,
     admission: ServeAdmission,
 ) -> ServeLoop {
-    let backend = build_backend(&exec, dir, dims, Arc::clone(params), max_batch).unwrap();
-    let cfg = ServeCfg { max_batch, snapshot_dir: None };
-    ServeLoop::new(backend, dims, admission, &cfg).unwrap()
+    let cfg = ServeCfg { max_batch, ..ServeCfg::default() };
+    mk_loop_cfg(dir, dims, params, exec, &cfg, admission)
+}
+
+fn mk_loop_cfg(
+    dir: &Path,
+    dims: &ModelDims,
+    params: &Arc<ParamSet>,
+    exec: ExecCfg,
+    cfg: &ServeCfg,
+    admission: ServeAdmission,
+) -> ServeLoop {
+    let backend = build_backend(&exec, dir, dims, Arc::clone(params), cfg.max_batch).unwrap();
+    ServeLoop::new(backend, dims, admission, cfg).unwrap()
+}
+
+fn mock_dims() -> ModelDims {
+    ModelDims { name: "mock".into(), v: 32, p: 8, n: 8, k: 2, t: 16, w: 16, c: 8, eps: 1e-6 }
+}
+
+fn mk_mock_loop(cfg: &ServeCfg, admission: ServeAdmission) -> ServeLoop {
+    let dims = mock_dims();
+    let backend = Box::new(MockBackend::new(&dims, 8));
+    ServeLoop::new(backend, &dims, admission, cfg).unwrap()
 }
 
 fn default_admission(dims: &ModelDims) -> ServeAdmission {
@@ -72,11 +96,15 @@ fn workload() -> Vec<Request> {
     ]
 }
 
-fn solo_streams(dir: &Path, dims: &ModelDims, params: &ParamSet) -> Vec<Vec<i32>> {
+fn solo_for(
+    dir: &Path,
+    dims: &ModelDims,
+    params: &ParamSet,
+    reqs: &[Request],
+) -> Vec<Vec<i32>> {
     let rt = Runtime::shared().unwrap();
     let arts = ArtifactSet::load(rt, dir).unwrap();
-    workload()
-        .iter()
+    reqs.iter()
         .map(|r| {
             generate::generate(
                 &arts,
@@ -90,6 +118,28 @@ fn solo_streams(dir: &Path, dims: &ModelDims, params: &ParamSet) -> Vec<Vec<i32>
             .unwrap()
         })
         .collect()
+}
+
+fn solo_streams(dir: &Path, dims: &ModelDims, params: &ParamSet) -> Vec<Vec<i32>> {
+    solo_for(dir, dims, params, &workload())
+}
+
+/// Serve `reqs` through `sl` and return the per-session streams in sid
+/// order.
+fn run_streams(sl: &mut ServeLoop, reqs: &[Request]) -> Vec<Vec<i32>> {
+    for r in reqs {
+        sl.submit(r.clone()).unwrap();
+    }
+    sl.run_until_idle().unwrap();
+    let mut fin = sl.take_finished();
+    fin.sort_by_key(|f| f.sid);
+    fin.into_iter().map(|f| f.tokens).collect()
+}
+
+fn scratch_dir(label: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("serve_test_{}_{label}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
 }
 
 #[test]
@@ -294,4 +344,318 @@ fn serve_rejects_bad_inputs() {
     let missing = std::env::temp_dir().join("definitely_missing.snap");
     assert!(sl.restore(&missing).is_err());
     assert!(sl.snapshot(999, &missing).is_err(), "snapshot of unknown session errors");
+}
+
+/// Long-document workload: prompts big enough that chunked prefill takes
+/// several ragged chunks (13 tokens at chunk 5 → 5+5+3), mixed with a
+/// short-prompt session and a late arrival.
+fn long_doc_workload() -> Vec<Request> {
+    vec![
+        Request {
+            prompt: (1..14).collect(),
+            n_new: 6,
+            temperature: 0.8,
+            seed: 9,
+            not_before_step: 0,
+        },
+        Request { prompt: vec![5, 4], n_new: 8, temperature: 0.0, seed: 1, not_before_step: 0 },
+        Request {
+            prompt: (3..12).collect(),
+            n_new: 5,
+            temperature: 1.1,
+            seed: 33,
+            not_before_step: 4,
+        },
+    ]
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_across_executors() {
+    let Some((dir, dims)) = tiny() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    if !m.entries.contains_key("layer_prefill_chunk") {
+        eprintln!("SKIP: artifact set predates layer_prefill_chunk (re-run `make artifacts`)");
+        return;
+    }
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let reqs = long_doc_workload();
+    let want = solo_for(&dir, &dims, &params, &reqs);
+
+    // chunk 5 deliberately divides no prompt length: the last chunk of
+    // each prompt is ragged, exercising the scan-padding causality.
+    for exec in [
+        ExecCfg { kind: ExecutorKind::Sim, ..ExecCfg::default() },
+        ExecCfg { kind: ExecutorKind::Threaded, workers: 2, ..ExecCfg::default() },
+    ] {
+        let cfg = ServeCfg { max_batch: 3, prefill_chunk: 5, ..ServeCfg::default() };
+        let admission = ServeAdmission::with_prefill(&dims, 80 << 30, 5);
+        let mut sl = mk_loop_cfg(&dir, &dims, &params, exec, &cfg, admission);
+        let got = run_streams(&mut sl, &reqs);
+        assert_eq!(got, want, "{}: chunked prefill changed a token stream", exec.kind);
+        assert!(
+            sl.counters.get("serve_prefill_chunks") > 0,
+            "{}: prompts this long must have gone through the chunk path",
+            exec.kind
+        );
+        assert!(sl.counters.get("serve_prefill_tokens") > 0);
+        assert!(
+            sl.trace.events().iter().any(|e| e.kind == TraceKind::Launch),
+            "prefill chunks must emit Launch spans"
+        );
+    }
+}
+
+#[test]
+fn lru_paging_under_pressure_is_bit_identical_to_never_paged() {
+    let Some((dir, dims)) = tiny() else { return };
+    let params = Arc::new(ParamSet::init(&dims, 13));
+    let reqs: Vec<Request> = (0..5u64)
+        .map(|i| Request {
+            prompt: vec![1 + i as i32, 2],
+            n_new: 4 + (i as usize % 3) * 2,
+            temperature: if i == 2 { 0.0 } else { 0.9 },
+            seed: 100 + i,
+            not_before_step: i,
+        })
+        .collect();
+
+    // Never-paged baseline: roomy cap, everything resident.
+    let mut base =
+        mk_loop(&dir, &dims, &params, ExecCfg::default(), 8, default_admission(&dims));
+    let want = run_streams(&mut base, &reqs);
+
+    // Pressure: cap admits exactly two sessions; with a page dir the loop
+    // pages instead of deferring, so all five make progress via disk.
+    let tight = ServeAdmission::new(&dims, 0);
+    let per = tight.session_bytes + tight.step_bytes_per_session;
+    for exec in [
+        ExecCfg { kind: ExecutorKind::Sim, ..ExecCfg::default() },
+        ExecCfg { kind: ExecutorKind::Threaded, workers: 2, ..ExecCfg::default() },
+    ] {
+        let pages = scratch_dir(&format!("paging_{}", exec.kind));
+        let cfg = ServeCfg {
+            max_batch: 8,
+            page_dir: Some(pages.clone()),
+            ..ServeCfg::default()
+        };
+        let admission =
+            ServeAdmission { hbm_bytes: tight.model_bytes + 2 * per + per / 2, ..tight };
+        assert_eq!(admission.max_sessions(), 2);
+        let mut sl = mk_loop_cfg(&dir, &dims, &params, exec, &cfg, admission);
+        let got = run_streams(&mut sl, &reqs);
+        assert_eq!(got, want, "{}: paging changed a token stream", exec.kind);
+        assert!(sl.counters.get("serve_pageouts") > 0, "pressure must have paged");
+        assert!(sl.counters.get("serve_pageins") > 0, "paged sessions must restore");
+        assert_eq!(sl.counters.get("serve_page_failures"), 0);
+        assert_eq!(sl.paged_sessions(), 0);
+        let spans: Vec<TraceKind> = sl.trace.events().iter().map(|e| e.kind).collect();
+        assert!(spans.contains(&TraceKind::PageOut));
+        assert!(spans.contains(&TraceKind::PageIn));
+        // Retention: page files exist only while a session is on disk.
+        let leftover: Vec<_> = std::fs::read_dir(&pages)
+            .map(|rd| rd.filter_map(|e| e.ok()).collect())
+            .unwrap_or_default();
+        assert!(leftover.is_empty(), "{}: page files must be deleted on restore", exec.kind);
+        std::fs::remove_dir_all(&pages).ok();
+    }
+}
+
+/// Artifact-free paging roundtrip on the mock backend, so CI exercises
+/// the LRU/page/restore scheduler even without `make artifacts`.
+#[test]
+fn mock_paging_roundtrip_is_bit_identical_and_cleans_up() {
+    let dims = mock_dims();
+    let reqs: Vec<Request> = (0..5u64)
+        .map(|i| Request {
+            prompt: vec![1 + i as i32, 7, 2],
+            n_new: 5 + i as usize,
+            temperature: 0.8,
+            seed: 50 + i,
+            not_before_step: 2 * i,
+        })
+        .collect();
+
+    let roomy = ServeCfg { max_batch: 8, ..ServeCfg::default() };
+    let mut base = mk_mock_loop(&roomy, ServeAdmission::new(&dims, u64::MAX));
+    let want = run_streams(&mut base, &reqs);
+
+    let tight = ServeAdmission::new(&dims, 0);
+    let per = tight.session_bytes + tight.step_bytes_per_session;
+    let pages = scratch_dir("mock_paging");
+    let cfg = ServeCfg { max_batch: 8, page_dir: Some(pages.clone()), ..ServeCfg::default() };
+    let admission =
+        ServeAdmission { hbm_bytes: tight.model_bytes + 2 * per + per / 2, ..tight };
+    assert_eq!(admission.max_sessions(), 2);
+    let mut sl = mk_mock_loop(&cfg, admission);
+    let got = run_streams(&mut sl, &reqs);
+    assert_eq!(got, want, "paging changed a mock token stream");
+    assert!(sl.counters.get("serve_pageouts") > 0);
+    assert_eq!(sl.counters.get("serve_pageouts"), sl.counters.get("serve_pageins"));
+    assert_eq!(sl.paged_sessions(), 0);
+    let leftover: Vec<_> = std::fs::read_dir(&pages)
+        .map(|rd| rd.filter_map(|e| e.ok()).collect())
+        .unwrap_or_default();
+    assert!(leftover.is_empty(), "page files must be deleted once sessions complete");
+    std::fs::remove_dir_all(&pages).ok();
+}
+
+#[test]
+fn corrupt_page_file_fails_loudly_without_poisoning_other_sessions() {
+    let dims = mock_dims();
+    let reqs = vec![
+        Request { prompt: vec![1, 2], n_new: 12, temperature: 0.8, seed: 5, not_before_step: 0 },
+        Request { prompt: vec![3, 4], n_new: 6, temperature: 0.0, seed: 6, not_before_step: 0 },
+        Request { prompt: vec![5, 6], n_new: 6, temperature: 0.9, seed: 7, not_before_step: 4 },
+    ];
+
+    let roomy = ServeCfg { max_batch: 8, ..ServeCfg::default() };
+    let mut base = mk_mock_loop(&roomy, ServeAdmission::new(&dims, u64::MAX));
+    let want = run_streams(&mut base, &reqs);
+
+    let tight = ServeAdmission::new(&dims, 0);
+    let per = tight.session_bytes + tight.step_bytes_per_session;
+    let pages = scratch_dir("corrupt_page");
+    let cfg = ServeCfg { max_batch: 8, page_dir: Some(pages.clone()), ..ServeCfg::default() };
+    let admission =
+        ServeAdmission { hbm_bytes: tight.model_bytes + 2 * per + per / 2, ..tight };
+    let mut sl = mk_mock_loop(&cfg, admission);
+    for r in &reqs {
+        sl.submit(r.clone()).unwrap();
+    }
+    // Session 2 arrives at step 4 and pages out the coldest resident
+    // (sid 0: both candidates are past their prompts; sid breaks the tie).
+    for _ in 0..5 {
+        sl.tick().unwrap();
+    }
+    assert_eq!(sl.paged_sessions(), 1, "the step-4 arrival should have paged one session");
+    let page = pages.join("session_0.page");
+    assert!(page.exists(), "LRU victim should be sid 0");
+    // Torn write: flip a byte mid-file; the CRC frame must catch it.
+    let mut bytes = std::fs::read(&page).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&page, &bytes).unwrap();
+
+    sl.run_until_idle().unwrap();
+    let mut fin = sl.take_finished();
+    fin.sort_by_key(|f| f.sid);
+    assert_eq!(
+        fin.iter().map(|f| f.sid).collect::<Vec<_>>(),
+        vec![1, 2],
+        "only the corrupted session may be lost"
+    );
+    for f in &fin {
+        assert_eq!(f.tokens, want[f.sid as usize], "session {} was poisoned", f.sid);
+    }
+    assert_eq!(sl.counters.get("serve_page_failures"), 1);
+    let failures = sl.page_failures();
+    assert_eq!(failures.len(), 1);
+    assert_eq!(failures[0].0, 0, "the failure must name the corrupted session");
+    assert!(page.exists(), "a failed page file is kept on disk for postmortem");
+    std::fs::remove_dir_all(&pages).ok();
+}
+
+#[test]
+fn ttft_counts_queue_wait_for_deferred_arrivals() {
+    let dims = mock_dims();
+    let cfg = ServeCfg { max_batch: 1, ..ServeCfg::default() };
+    let mut sl = mk_mock_loop(&cfg, ServeAdmission::new(&dims, u64::MAX));
+    for seed in [11u64, 12] {
+        sl.submit(Request {
+            prompt: vec![1, 2, 3],
+            n_new: 6,
+            temperature: 0.7,
+            seed,
+            not_before_step: 0,
+        })
+        .unwrap();
+    }
+    sl.run_until_idle().unwrap();
+    let mut fin = sl.take_finished();
+    fin.sort_by_key(|f| f.sid);
+    assert_eq!(fin.len(), 2);
+    assert!(sl.metrics.deferred > 0, "batch cap 1 must defer the second arrival");
+    let (ttft, post) = (fin[1].ttft_s.unwrap(), fin[1].ttft_post_admit_s.unwrap());
+    assert!(
+        ttft > post,
+        "deferred session's TTFT ({ttft:.6}s) must include its queue wait \
+         (post-admit {post:.6}s)"
+    );
+    // The first session was admitted on arrival: both figures describe
+    // the same interval (modulo the admission bookkeeping between them).
+    assert!(fin[0].ttft_s.unwrap() >= fin[0].ttft_post_admit_s.unwrap());
+    assert_eq!(sl.metrics.first_token_s.len(), 2);
+    assert_eq!(sl.metrics.ttft_post_admit.len(), 2);
+}
+
+#[test]
+fn mid_stream_eviction_order_does_not_perturb_survivors() {
+    let dims = mock_dims();
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|i| Request {
+            prompt: vec![1 + i as i32, 4],
+            n_new: 12,
+            temperature: 0.8,
+            seed: 70 + i,
+            not_before_step: 0,
+        })
+        .collect();
+
+    let cfg = ServeCfg { max_batch: 8, ..ServeCfg::default() };
+    let mut base = mk_mock_loop(&cfg, ServeAdmission::new(&dims, u64::MAX));
+    let want = run_streams(&mut base, &reqs);
+
+    // Evict sids 0 and 2 mid-stream, in both orders: the surviving
+    // middle session's stream must be bit-identical to the quiet run.
+    for (label, order) in [("ascending", [0u64, 2]), ("descending", [2u64, 0])] {
+        let mut sl = mk_mock_loop(&cfg, ServeAdmission::new(&dims, u64::MAX));
+        for r in &reqs {
+            sl.submit(r.clone()).unwrap();
+        }
+        for _ in 0..6 {
+            sl.tick().unwrap();
+        }
+        for sid in order {
+            let snap = std::env::temp_dir()
+                .join(format!("serve_evict_{}_{label}_{sid}.snap", std::process::id()));
+            sl.evict_to_snapshot(sid, &snap).unwrap();
+            std::fs::remove_file(&snap).ok();
+        }
+        sl.run_until_idle().unwrap();
+        let fin = sl.take_finished();
+        assert_eq!(fin.len(), 1, "{label}: only the survivor retires");
+        assert_eq!(fin[0].sid, 1);
+        assert_eq!(
+            fin[0].tokens, want[1],
+            "{label}: mid-stream evictions perturbed the survivor's stream"
+        );
+        assert!(sl.counters.get("serve_evictions") >= 2);
+    }
+}
+
+/// Artifact-free chunked-prefill scheduling on the mock backend: the
+/// chunk interleave must be a pure scheduling change.
+#[test]
+fn mock_chunked_prefill_matches_plain_decode() {
+    let dims = mock_dims();
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|i| Request {
+            prompt: (0..11 + i as i32).map(|t| t % 9 + 1).collect(),
+            n_new: 5,
+            temperature: 0.8,
+            seed: 40 + i,
+            not_before_step: i,
+        })
+        .collect();
+
+    let plain = ServeCfg { max_batch: 4, ..ServeCfg::default() };
+    let mut base = mk_mock_loop(&plain, ServeAdmission::new(&dims, u64::MAX));
+    let want = run_streams(&mut base, &reqs);
+
+    let chunked = ServeCfg { max_batch: 4, prefill_chunk: 4, ..ServeCfg::default() };
+    let mut sl = mk_mock_loop(&chunked, ServeAdmission::new(&dims, u64::MAX));
+    let got = run_streams(&mut sl, &reqs);
+    assert_eq!(got, want, "chunked prefill changed a mock token stream");
+    assert!(sl.counters.get("serve_prefill_chunks") > 0);
+    assert!(sl.counters.get("serve_prefill_tokens") >= 11);
 }
